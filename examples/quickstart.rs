@@ -1,0 +1,62 @@
+//! Quickstart: load the AOT-compiled eps-model through PJRT, sample the
+//! 8-Gaussian ring with tAB3-DEIS at 10 NFE, score it against exact data,
+//! and draw an ascii density plot.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use deis::coordinator::{Coordinator, CoordinatorConfig, SampleRequest};
+use deis::exp::{default_registry, QualityEval};
+use deis::solvers::SolverKind;
+use deis::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let nfe = args.usize_or("nfe", 10);
+    let n = args.usize_or("n", 2000);
+    let solver = SolverKind::parse(&args.str_or("solver", "tab3")).expect("unknown solver");
+
+    // The serving path end to end: PJRT-compiled trained net behind the
+    // dynamic-batching coordinator.
+    let reg = default_registry(&["gmm2d".to_string()])?;
+    let coord = Coordinator::new(CoordinatorConfig::default(), reg);
+    let mut req = SampleRequest::new("gmm2d", solver, nfe, n);
+    req.seed = args.u64_or("seed", 0);
+
+    let t = std::time::Instant::now();
+    let res = coord.sample_blocking(req)?;
+    let ms = t.elapsed().as_secs_f64() * 1e3;
+
+    let eval = QualityEval::new("gmm2d", 20_000);
+    let q = eval.score(&res.samples);
+    println!(
+        "{} samples with {} @ {} NFE in {:.1} ms  |  SWDx1000 {:.2}  MMDx1000 {:.2}  energy {:.3}",
+        n, solver.name(), nfe, ms, q.swd1000, q.mmd1000, q.energy
+    );
+
+    ascii_density(&res.samples, 56, 28, 5.2);
+    coord.shutdown();
+    Ok(())
+}
+
+/// Terminal density plot over [-lim, lim]^2.
+fn ascii_density(samples: &[f64], w: usize, h: usize, lim: f64) {
+    let mut grid = vec![0usize; w * h];
+    for p in samples.chunks(2) {
+        let cx = ((p[0] + lim) / (2.0 * lim) * w as f64) as isize;
+        let cy = ((p[1] + lim) / (2.0 * lim) * h as f64) as isize;
+        if (0..w as isize).contains(&cx) && (0..h as isize).contains(&cy) {
+            grid[cy as usize * w + cx as usize] += 1;
+        }
+    }
+    let max = grid.iter().copied().max().unwrap_or(1).max(1);
+    let shades = [' ', '.', ':', '+', '*', '#', '@'];
+    for row in (0..h).rev() {
+        let line: String = (0..w)
+            .map(|c| {
+                let v = grid[row * w + c];
+                shades[(v * (shades.len() - 1) + max - 1) / max]
+            })
+            .collect();
+        println!("|{line}|");
+    }
+}

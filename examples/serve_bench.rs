@@ -1,0 +1,99 @@
+//! End-to-end serving driver (the §5-headline experiment; EXPERIMENTS.md):
+//! boots the coordinator over the PJRT-compiled model, fires a mixed
+//! request workload from concurrent clients, and reports throughput,
+//! latency percentiles, dynamic-batching effectiveness, and sample quality.
+//!
+//!     cargo run --release --example serve_bench -- --clients 16 --requests 8
+//!
+//! Flags: --clients N --requests M (per client) --n samples-per-request
+//!        --model gmm2d|gmm2d_exact --batching off (disables merging)
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use deis::coordinator::{Coordinator, CoordinatorConfig, SampleRequest};
+use deis::exp::{default_registry, QualityEval};
+use deis::solvers::SolverKind;
+use deis::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let clients = args.usize_or("clients", 16);
+    let per_client = args.usize_or("requests", 8);
+    let n = args.usize_or("n", 128);
+    let model = args.str_or("model", "gmm2d");
+    let batching = args.str_or("batching", "on") != "off";
+
+    let reg = default_registry(&[model.clone()])?;
+    let cfg = CoordinatorConfig {
+        workers: args.usize_or("workers", 4),
+        max_batch_samples: if batching { 1024 } else { 1 },
+    };
+    let coord = Arc::new(Coordinator::new(cfg, reg));
+
+    // Mixed solver/NFE workload: what a real sampling service sees.
+    let mix = [
+        (SolverKind::Tab(3), 10),
+        (SolverKind::Tab(0), 20),
+        (SolverKind::RhoHeun, 10),
+        (SolverKind::Tab(2), 15),
+    ];
+
+    println!(
+        "serve_bench: {clients} clients x {per_client} reqs x {n} samples, model={model}, \
+         batching={batching}"
+    );
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let coord = coord.clone();
+        let model = model.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut samples = Vec::new();
+            for r in 0..per_client {
+                let (solver, nfe) = mix[(c + r) % mix.len()];
+                let mut req = SampleRequest::new(&model, solver, nfe, n);
+                req.seed = (c * 1000 + r) as u64;
+                let res = coord.sample_blocking(req).expect("request failed");
+                if samples.len() < 4096 {
+                    samples.extend_from_slice(&res.samples);
+                }
+            }
+            samples
+        }));
+    }
+    let mut pool = Vec::new();
+    for h in handles {
+        pool.extend(h.join().unwrap());
+    }
+    let wall = t0.elapsed();
+
+    let total_requests = (clients * per_client) as f64;
+    let total_samples = total_requests * n as f64;
+    let stats = coord.stats();
+    println!("\n== throughput ==");
+    println!("wall time          {:>10.2} s", wall.as_secs_f64());
+    println!("requests/s         {:>10.1}", total_requests / wall.as_secs_f64());
+    println!("samples/s          {:>10.0}", total_samples / wall.as_secs_f64());
+    println!("\n== latency (per request, end to end) ==");
+    println!("p50                {:>10.1} ms", stats.p50_us as f64 / 1e3);
+    println!("p99                {:>10.1} ms", stats.p99_us as f64 / 1e3);
+    println!("mean               {:>10.1} ms", stats.mean_us / 1e3);
+    println!("\n== batching ==");
+    println!("solver runs        {:>10}", stats.batches);
+    println!("requests merged    {:>10}", stats.merged_requests);
+    println!(
+        "avg merge factor   {:>10.2}",
+        stats.merged_requests as f64 / stats.batches.max(1) as f64
+    );
+
+    if model.starts_with("gmm2d") {
+        let eval = QualityEval::new("gmm2d", 20_000);
+        let q = eval.score(&pool[..pool.len().min(8192)]);
+        println!("\n== quality (pooled samples vs exact data) ==");
+        println!("SWDx1000           {:>10.2}", q.swd1000);
+        println!("MMDx1000           {:>10.2}", q.mmd1000);
+    }
+    Arc::try_unwrap(coord).ok().map(|c| c.shutdown());
+    Ok(())
+}

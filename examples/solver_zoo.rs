@@ -1,0 +1,39 @@
+//! Paper Table 2: every DEIS variant x NFE grid on the trained model
+//! (rust-native backend for sweep speed; PJRT parity is pinned by tests).
+//!
+//!     cargo run --release --example solver_zoo -- --dataset gmm2d
+
+use deis::diffusion::Sde;
+use deis::exp::{print_table, run_solver, sweep_model, QualityEval};
+use deis::solvers::table2_kinds;
+use deis::timegrid::GridKind;
+use deis::util::cli::Args;
+
+fn main() {
+    let args = Args::parse_env();
+    let dataset = args.str_or("dataset", "gmm2d");
+    let n = args.usize_or("n", 4000);
+    let nfes = [5usize, 10, 15, 20, 50];
+
+    let model = sweep_model(&dataset);
+    let eval = QualityEval::new(&dataset, 20_000);
+    let sde = Sde::vp();
+
+    let header: Vec<String> = nfes.iter().map(|v| format!("NFE {v}")).collect();
+    let mut rows = Vec::new();
+    for kind in table2_kinds() {
+        let mut vals = Vec::new();
+        for &nfe in &nfes {
+            let (x, spent) =
+                run_solver(&*model, &sde, kind, GridKind::Quadratic, 1e-3, nfe, n, 7);
+            assert!(spent <= nfe, "{} overspent {spent}/{nfe}", kind.name());
+            vals.push(eval.score(&x).swd1000);
+        }
+        rows.push((kind.name(), vals));
+    }
+    print_table(
+        &format!("Table 2 (SWDx1000, {dataset}, quadratic grid, t0=1e-3)"),
+        &header,
+        &rows,
+    );
+}

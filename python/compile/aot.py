@@ -1,0 +1,191 @@
+"""AOT export: train the eps-nets and lower everything to HLO text.
+
+This is the ONLY python entry point on the build path (`make artifacts`);
+python never runs on the request path. For every (model, batch-size) we emit
+
+    artifacts/eps_<name>_b<B>.hlo.txt        pallas-kernel lowering (L1 path)
+    artifacts/eps_<name>_xla_b<B>.hlo.txt    pure-jnp oracle lowering (perf ablation)
+    artifacts/epsdiv_<name>_b<B>.hlo.txt     (eps, div_x eps) for NLL (App B.1)
+    artifacts/weights_<name>.json            weights for the rust-native backend
+    artifacts/checks_<name>.json             (x, t) -> eps parity vectors
+    artifacts/meta.json                      schedules, configs, training losses
+
+Interchange format is HLO *text*, NOT `.serialize()`: the image's
+xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction ids); the
+text parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import sde as sde_lib
+from .datasets import DATASETS, gmm2d_spec, make_sampler, toy1d_spec
+from .model import NetConfig, apply_eps, gmm_eps, params_to_pylist, train_eps_net
+
+T0_DEFAULT = 1e-3
+
+# Per-model export plan: (dataset, net config, training steps, batch sizes).
+MODELS = {
+    "toy1d": dict(cfg=NetConfig(dim=1, hidden=64, embed=32, n_blocks=2), steps=1500,
+                  batches=(16, 256)),
+    "gmm2d": dict(cfg=NetConfig(dim=2, hidden=128, embed=64, n_blocks=3), steps=4000,
+                  batches=(16, 64, 256, 1024)),
+    "spiral2d": dict(cfg=NetConfig(dim=2, hidden=128, embed=64, n_blocks=3), steps=4000,
+                     batches=(16, 256)),
+    "img8": dict(cfg=NetConfig(dim=64, hidden=256, embed=64, n_blocks=4), steps=4000,
+                 batches=(16, 256)),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowering -> XLA HLO text (the gotcha-free interchange, see module doc)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default ELIDES big weight tensors as
+    # `constant({...})`, which the HLO text parser silently zero-fills — the
+    # compiled net then ignores its inputs. (Cost: ~10x larger artifacts.)
+    text = comp.as_hlo_text(True)
+    assert "{...}" not in text, "HLO printer elided constants"
+    return text
+
+
+def lower_eps(fn, batch: int, dim: int) -> str:
+    x = jax.ShapeDtypeStruct((batch, dim), jnp.float32)
+    t = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(x, t))
+
+
+def eps_with_div(eps_fn, x, t):
+    """(eps, sum_d d eps_d / d x_d) — exact divergence via D forward-mode JVPs.
+
+    D <= 64 here, so the exact trace is affordable; this is what the paper's
+    likelihood evaluation (App B.1) needs for the augmented probability-flow
+    ODE. Returns (eps [B,D], div [B]).
+    """
+    dim = x.shape[1]
+    eps = eps_fn(x, t)
+
+    def one_dir(d):
+        v = jnp.zeros_like(x).at[:, d].set(1.0)
+        _, jv = jax.jvp(lambda xx: eps_fn(xx, t), (x,), (v,))
+        return jv[:, d]
+
+    div = jnp.stack([one_dir(d) for d in range(dim)], axis=0).sum(axis=0)
+    return eps, div
+
+
+def export_model(out: str, name: str, params, cfg: NetConfig, batches, meta: dict):
+    """Write the full artifact set for one trained eps-net."""
+    written = []
+    for use_pallas, tag in ((True, ""), (False, "_xla")):
+        fn = lambda x, t: apply_eps(params, x, t, cfg, use_pallas=use_pallas)
+        for b in batches:
+            path = f"eps_{name}{tag}_b{b}.hlo.txt"
+            with open(os.path.join(out, path), "w") as f:
+                f.write(lower_eps(fn, b, cfg.dim))
+            written.append(path)
+    # Divergence artifact (NLL) — xla path only (jvp through interpret-mode
+    # pallas is wasteful), smallest + default batch.
+    fn_xla = lambda x, t: apply_eps(params, x, t, cfg, use_pallas=False)
+    for b in (16, 256):
+        path = f"epsdiv_{name}_b{b}.hlo.txt"
+        with open(os.path.join(out, path), "w") as f:
+            f.write(lower_eps(lambda x, t: eps_with_div(fn_xla, x, t), b, cfg.dim))
+        written.append(path)
+
+    with open(os.path.join(out, f"weights_{name}.json"), "w") as f:
+        json.dump(
+            {"dim": cfg.dim, "hidden": cfg.hidden, "embed": cfg.embed,
+             "n_blocks": cfg.n_blocks, "params": params_to_pylist(params)},
+            f,
+        )
+
+    # Parity check vectors: rust PJRT + rust-native MLP must reproduce these.
+    key = jax.random.PRNGKey(1234)
+    kx, kt = jax.random.split(key)
+    x = 4.0 * jax.random.normal(kx, (16, cfg.dim), dtype=jnp.float32)
+    t = jax.random.uniform(kt, (16,), minval=T0_DEFAULT, maxval=1.0)
+    eps = fn_xla(x, t)
+    eps_pallas = apply_eps(params, x, t, cfg, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(eps), np.asarray(eps_pallas), atol=2e-4)
+    with open(os.path.join(out, f"checks_{name}.json"), "w") as f:
+        json.dump(
+            {"x": np.asarray(x, np.float64).tolist(),
+             "t": np.asarray(t, np.float64).tolist(),
+             "eps": np.asarray(eps, np.float64).tolist()},
+            f,
+        )
+    meta["models"][name] = {
+        "dim": cfg.dim, "hidden": cfg.hidden, "embed": cfg.embed,
+        "n_blocks": cfg.n_blocks, "batches": list(batches), "files": written,
+    }
+
+
+def export_analytic(out: str, meta: dict):
+    """Exact GMM eps as HLO (serving the oracle through the same PJRT path)."""
+    spec = gmm2d_spec()
+    for sde, tag in ((sde_lib.VP, ""), (sde_lib.VE, "_ve")):
+        fn = lambda x, t: gmm_eps(spec, sde, x, t)
+        for b in (16, 256, 1024):
+            path = f"eps_gmm2d_exact{tag}_b{b}.hlo.txt"
+            with open(os.path.join(out, path), "w") as f:
+                f.write(lower_eps(fn, b, 2))
+    meta["analytic"] = {
+        "gmm2d": {"means": spec.means.tolist(), "std": spec.std},
+        "toy1d": {"means": toy1d_spec().means.tolist(), "std": toy1d_spec().std},
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny training budget (CI smoke only)")
+    ap.add_argument("--models", default=",".join(MODELS),
+                    help="comma-separated subset of models to build")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    meta = {
+        "t0_default": T0_DEFAULT,
+        "t_max": sde_lib.T_MAX,
+        "vp": {"beta0": sde_lib.VP_BETA0, "beta1": sde_lib.VP_BETA1},
+        "ve": {"sigma_min": sde_lib.VE_SIGMA_MIN, "sigma_max": sde_lib.VE_SIGMA_MAX},
+        "models": {},
+        "losses": {},
+    }
+
+    for name in args.models.split(","):
+        plan = MODELS[name]
+        steps = 100 if args.quick else plan["steps"]
+        t_start = time.time()
+        key = jax.random.PRNGKey(sum(map(ord, name)))
+        params, losses = train_eps_net(
+            key, plan["cfg"], sde_lib.VP, make_sampler(name),
+            n_steps=steps, t0=T0_DEFAULT,
+        )
+        print(f"[aot] trained {name}: {steps} steps in {time.time()-t_start:.1f}s, "
+              f"final loss {losses[-1][1]:.4f}")
+        export_model(args.out, name, params, plan["cfg"], plan["batches"], meta)
+        meta["losses"][name] = losses
+
+    export_analytic(args.out, meta)
+
+    with open(os.path.join(args.out, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"[aot] wrote artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,234 @@
+"""Reference DEIS implementations in float64 numpy -> parity fixtures.
+
+An independent second implementation of the samplers (no jax, no shared
+code with the rust side) run on the *analytic* GMM eps oracle. The rust
+integration tests (rust/tests/parity.rs) replay the same grids from the same
+x_T draws and must match to ~1e-6 — this pins down every coefficient
+formula (Psi, C_ij, rho maps) across languages.
+
+Solvers fixtured: DDIM (== tAB0 == rhoAB0, Prop 2), tAB2, rhoAB2, rho-Heun
+(VP) and DDIM under VESDE.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# float64 schedule mirror (keep in sync with sde.py and rust/src/diffusion).
+# ---------------------------------------------------------------------------
+
+BETA0, BETA1 = 0.1, 20.0
+SIG_MIN, SIG_MAX = 0.01, 50.0
+
+
+def vp_log_abar(t):
+    return -0.5 * t * t * (BETA1 - BETA0) - t * BETA0
+
+
+def vp_abar(t):
+    return np.exp(vp_log_abar(t))
+
+
+def vp_beta(t):
+    return BETA0 + t * (BETA1 - BETA0)
+
+
+def vp_sigma(t):
+    return np.sqrt(1.0 - vp_abar(t))
+
+
+def vp_rho(t):
+    a = vp_abar(t)
+    return np.sqrt((1.0 - a) / a)
+
+
+def vp_t_of_rho(rho):
+    """Invert rho(t) in closed form (quadratic in t)."""
+    log_abar = -np.log1p(rho * rho)
+    a = 0.5 * (BETA1 - BETA0)
+    b = BETA0
+    return (-b + np.sqrt(b * b - 4.0 * a * log_abar)) / (2.0 * a)
+
+
+def ve_sigma(t):
+    return SIG_MIN * (SIG_MAX / SIG_MIN) ** t
+
+
+# ---------------------------------------------------------------------------
+# Analytic GMM eps (float64 mirror of model.gmm_eps).
+# ---------------------------------------------------------------------------
+
+
+def gmm2d_means(radius=4.0, n=8):
+    ang = 2.0 * np.pi * np.arange(n) / n
+    return radius * np.stack([np.cos(ang), np.sin(ang)], axis=1)
+
+
+def gmm_eps_np(means, std, x, t, kind="vp"):
+    if kind == "vp":
+        sq = np.sqrt(vp_abar(t))
+        sig = vp_sigma(t)
+    else:
+        sq = 1.0
+        sig = ve_sigma(t)
+    var = (sq * std) ** 2 + sig**2
+    diff = x[:, None, :] - sq * means[None, :, :]  # [B,M,D]
+    logw = -0.5 * np.sum(diff**2, axis=-1) / var
+    logw -= logw.max(axis=1, keepdims=True)
+    gamma = np.exp(logw)
+    gamma /= gamma.sum(axis=1, keepdims=True)
+    score = -np.einsum("bm,bmd->bd", gamma, diff) / var
+    return -sig * score
+
+
+# ---------------------------------------------------------------------------
+# Grids and quadrature.
+# ---------------------------------------------------------------------------
+
+
+def quadratic_grid(t0, t_max, n):
+    """t_i = (sqrt(t0) + i/N (sqrt(T)-sqrt(t0)))^2, i=0..N (Eq. 42, kappa=2)."""
+    s = np.sqrt(t0) + (np.arange(n + 1) / n) * (np.sqrt(t_max) - np.sqrt(t0))
+    return s**2
+
+
+_GL_X, _GL_W = np.polynomial.legendre.leggauss(32)
+
+
+def integrate(f, lo, hi):
+    mid, half = 0.5 * (lo + hi), 0.5 * (hi - lo)
+    return half * np.sum(_GL_W * f(mid + half * _GL_X))
+
+
+def lagrange_basis(nodes, j, tau):
+    out = np.ones_like(tau)
+    for k in range(len(nodes)):
+        if k != j:
+            out = out * (tau - nodes[k]) / (nodes[j] - nodes[k])
+    return out
+
+
+def tab_coeffs_vp(t_target, t_cur, nodes):
+    """C_ij Eq.(15) for VPSDE: signed integral from t_cur down to t_target."""
+    sq_t = np.sqrt(vp_abar(t_target))
+
+    def w(tau):
+        return 0.5 * sq_t / np.sqrt(vp_abar(tau)) * vp_beta(tau) / vp_sigma(tau)
+
+    return [integrate(lambda tau: w(tau) * lagrange_basis(nodes, j, tau), t_cur, t_target)
+            for j in range(len(nodes))]
+
+
+def rho_ab_coeffs(rho_target, rho_cur, rho_nodes):
+    """Exact Lagrange-basis integrals in rho-space (polynomial, 64 GL pts exact)."""
+    return [integrate(lambda r: lagrange_basis(rho_nodes, j, r), rho_cur, rho_target)
+            for j in range(len(rho_nodes))]
+
+
+# ---------------------------------------------------------------------------
+# Samplers (all take eps(x, t_scalar) -> [B,D]).
+# ---------------------------------------------------------------------------
+
+
+def sample_tab_vp(eps_fn, x_T, grid, order):
+    """tAB-DEIS of given order (0 == DDIM by Prop 2). grid[0]=t0, grid[-1]=T."""
+    n = len(grid) - 1
+    x = x_T.copy()
+    buf = []  # [(t_node, eps)] newest first
+    for i in range(n, 0, -1):
+        t_i, t_prev = grid[i], grid[i - 1]
+        buf.insert(0, (t_i, eps_fn(x, t_i)))
+        r_eff = min(order, len(buf) - 1)
+        nodes = [buf[j][0] for j in range(r_eff + 1)]
+        coefs = tab_coeffs_vp(t_prev, t_i, nodes)
+        psi = np.sqrt(vp_abar(t_prev) / vp_abar(t_i))
+        x = psi * x + sum(c * buf[j][1] for j, c in enumerate(coefs))
+        buf = buf[: order + 1]
+    return x
+
+
+def sample_rho_ab_vp(eps_fn, x_T, grid, order):
+    """rhoAB-DEIS: AB in the rescaled ODE dy/drho = eps(sqrt(abar) y, t(rho))."""
+    n = len(grid) - 1
+    rho = vp_rho(grid)
+    y = x_T / np.sqrt(vp_abar(grid[n]))
+    buf = []
+    for i in range(n, 0, -1):
+        x_cur = np.sqrt(vp_abar(grid[i])) * y
+        buf.insert(0, (rho[i], eps_fn(x_cur, grid[i])))
+        r_eff = min(order, len(buf) - 1)
+        nodes = [buf[j][0] for j in range(r_eff + 1)]
+        coefs = rho_ab_coeffs(rho[i - 1], rho[i], nodes)
+        y = y + sum(c * buf[j][1] for j, c in enumerate(coefs))
+        buf = buf[: order + 1]
+    return np.sqrt(vp_abar(grid[0])) * y
+
+
+def sample_rho_heun_vp(eps_fn, x_T, grid):
+    """rho2Heun: explicit trapezoidal rule in rho-space (Karras et al. special case)."""
+    n = len(grid) - 1
+    rho = vp_rho(grid)
+    y = x_T / np.sqrt(vp_abar(grid[n]))
+    for i in range(n, 0, -1):
+        h = rho[i - 1] - rho[i]
+        k1 = eps_fn(np.sqrt(vp_abar(grid[i])) * y, grid[i])
+        y_euler = y + h * k1
+        k2 = eps_fn(np.sqrt(vp_abar(grid[i - 1])) * y_euler, grid[i - 1])
+        y = y + 0.5 * h * (k1 + k2)
+    return np.sqrt(vp_abar(grid[0])) * y
+
+
+def sample_ddim_ve(eps_fn, x_T, grid):
+    """VE DDIM: x_{i-1} = x_i + (sigma_{i-1} - sigma_i) eps."""
+    n = len(grid) - 1
+    x = x_T.copy()
+    for i in range(n, 0, -1):
+        x = x + (ve_sigma(grid[i - 1]) - ve_sigma(grid[i])) * eps_fn(x, grid[i], "ve")
+    return x
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/fixtures")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    means = gmm2d_means()
+    std = 0.25
+    eps_vp = lambda x, t, kind="vp": gmm_eps_np(means, std, x, t, kind)
+
+    rng = np.random.default_rng(7)
+    x_T = rng.standard_normal((8, 2))
+    n, t0, t_max = 10, 1e-3, 1.0
+    grid = quadratic_grid(t0, t_max, n)
+
+    fx = {
+        "grid": grid.tolist(),
+        "x_T": x_T.tolist(),
+        "gmm": {"means": means.tolist(), "std": std},
+        "solvers": {
+            "vp_ddim": sample_tab_vp(eps_vp, x_T, grid, 0).tolist(),
+            "vp_tab2": sample_tab_vp(eps_vp, x_T, grid, 2).tolist(),
+            "vp_rho_ab2": sample_rho_ab_vp(eps_vp, x_T, grid, 2).tolist(),
+            "vp_rho_heun": sample_rho_heun_vp(eps_vp, x_T, grid).tolist(),
+            "ve_ddim": sample_ddim_ve(eps_vp, 50.0 * x_T, grid).tolist(),
+        },
+    }
+    # Sanity: Prop 2 closed form == quadrature C_i0 at a random step.
+    a_s, a_e = vp_abar(grid[5]), vp_abar(grid[4])
+    ddim_c = np.sqrt(1 - a_e) - np.sqrt(a_e / a_s) * np.sqrt(1 - a_s)
+    (quad_c,) = tab_coeffs_vp(grid[4], grid[5], [grid[5]])
+    assert abs(ddim_c - quad_c) < 1e-9, (ddim_c, quad_c)
+
+    with open(os.path.join(args.out, "solver_parity.json"), "w") as f:
+        json.dump(fx, f)
+    print(f"[fixtures] wrote {args.out}/solver_parity.json")
+
+
+if __name__ == "__main__":
+    main()

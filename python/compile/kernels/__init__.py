@@ -1,0 +1,20 @@
+"""Pallas kernels (L1) + pure-jnp oracles.
+
+All kernels run under ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls; real-TPU perf is estimated from BlockSpec
+footprints in DESIGN.md §Perf.
+"""
+
+from .deis_combine import deis_combine
+from .fused_block import fused_block
+from .ref import ref_deis_combine, ref_fused_block, ref_time_embed
+from .time_embed import time_embed
+
+__all__ = [
+    "deis_combine",
+    "fused_block",
+    "time_embed",
+    "ref_deis_combine",
+    "ref_fused_block",
+    "ref_time_embed",
+]

@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: fused time-conditioned residual MLP block.
+
+The per-step hot spot of DEIS sampling is the eps-net forward; its inner
+loop is this block. Fusing matmul -> bias+FiLM -> GELU -> matmul -> residual
+into one kernel keeps the (block_b, H) activation tile resident in VMEM for
+the whole chain: one HBM round-trip per tile instead of four kernel-boundary
+round-trips (the TPU re-think of the paper's GPU batching; DESIGN.md
+section "Hardware adaptation").
+
+Grid: one program per block_b rows of the batch. Weights (H*H etc.) are
+broadcast to every program (index_map pins them to block (0, 0)); for the
+model sizes here (H <= 256) w1+u+w2+biases fit VMEM comfortably:
+  VMEM bytes ~= 4 * (2*H*H + E*H + 2*H + 2*block_b*H + block_b*E).
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls (real-TPU perf is estimated, not measured — DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 128
+
+
+def _kernel(h_ref, e_ref, w1_ref, b1_ref, u_ref, w2_ref, b2_ref, o_ref):
+    h = h_ref[...]
+    z = h @ w1_ref[...] + b1_ref[...] + e_ref[...] @ u_ref[...]
+    o_ref[...] = h + jax.nn.gelu(z, approximate=True) @ w2_ref[...] + b2_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def fused_block(h, e, w1, b1, u, w2, b2, *, block_b: int = DEFAULT_BLOCK_B,
+                interpret: bool = True):
+    """o = h + gelu(h @ w1 + b1 + e @ u) @ w2 + b2, tiled over the batch.
+
+    h [B,H], e [B,E]; B need not divide block_b (pallas pads the tail tile).
+    """
+    bsz, hdim = h.shape
+    edim = e.shape[1]
+    bb = min(block_b, bsz)
+    grid = (pl.cdiv(bsz, bb),)
+    full = lambda shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, hdim), lambda i: (i, 0)),
+            pl.BlockSpec((bb, edim), lambda i: (i, 0)),
+            full((hdim, hdim)),
+            full((hdim,)),
+            full((edim, hdim)),
+            full((hdim, hdim)),
+            full((hdim,)),
+        ],
+        out_specs=pl.BlockSpec((bb, hdim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, hdim), h.dtype),
+        interpret=interpret,
+    )(h, e, w1, b1, u, w2, b2)

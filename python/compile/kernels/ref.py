@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness reference).
+
+Every Pallas kernel in this package must match its `ref_*` twin to float32
+tolerance; pytest + hypothesis sweep shapes/dtypes (python/tests/). The
+oracles are also what the training loop uses (plain XLA fusion is faster on
+CPU than interpret-mode Pallas), so the trained weights are shared by both
+lowering paths.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Time values live in [0, 1]; scale into the classic transformer range so the
+# sinusoidal embedding has non-degenerate frequencies.
+TIME_SCALE = 1000.0
+
+
+def ref_time_embed(t: jnp.ndarray, dim: int) -> jnp.ndarray:
+    """Sinusoidal embedding of t [B] -> [B, dim] (dim even)."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = TIME_SCALE * t[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+def ref_fused_block(h, e, w1, b1, u, w2, b2):
+    """Residual MLP block with FiLM-style time conditioning.
+
+    o = h + gelu(h @ w1 + b1 + e @ u) @ w2 + b2
+    shapes: h [B,H], e [B,E], w1 [H,H], b1 [H], u [E,H], w2 [H,H], b2 [H].
+    """
+    z = h @ w1 + b1 + e @ u
+    return h + jax.nn.gelu(z, approximate=True) @ w2 + b2
+
+
+def ref_deis_combine(x, eps_stack, coef):
+    """Fused DEIS-AB update Eq.(14): coef[0]*x + sum_j coef[1+j]*eps_j.
+
+    x [B,D], eps_stack [R,B,D], coef [R+1].
+    """
+    out = coef[0] * x
+    r = eps_stack.shape[0]
+    for j in range(r):
+        out = out + coef[1 + j] * eps_stack[j]
+    return out

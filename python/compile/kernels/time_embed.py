@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: sinusoidal time embedding t [B] -> [B, dim].
+
+Pure VPU elementwise work; tiled over the batch so the (block_b, dim) output
+tile is produced in VMEM in one pass. Must match kernels.ref.ref_time_embed
+bit-for-bit up to float32 rounding.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import TIME_SCALE
+
+DEFAULT_BLOCK_B = 256
+
+
+def _kernel(t_ref, freq_ref, o_ref, *, half: int):
+    t = t_ref[...]  # [bb]
+    freqs = freq_ref[...]  # [half]
+    ang = TIME_SCALE * t[:, None] * freqs[None, :]
+    o_ref[...] = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("dim", "block_b", "interpret"))
+def time_embed(t, dim: int, *, block_b: int = DEFAULT_BLOCK_B, interpret: bool = True):
+    assert dim % 2 == 0, "time_embed dim must be even"
+    half = dim // 2
+    bsz = t.shape[0]
+    bb = min(block_b, bsz)
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    return pl.pallas_call(
+        functools.partial(_kernel, half=half),
+        grid=(pl.cdiv(bsz, bb),),
+        in_specs=[
+            pl.BlockSpec((bb,), lambda i: (i,)),
+            pl.BlockSpec((half,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb, dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, dim), jnp.float32),
+        interpret=interpret,
+    )(t.astype(jnp.float32), freqs)

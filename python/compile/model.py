@@ -1,0 +1,212 @@
+"""L2: the eps-model (paper's score network) in JAX, calling the L1 kernels.
+
+Architecture (time-conditioned residual MLP — the laptop-scale stand-in for
+the paper's U-Nets, DESIGN.md section 1):
+
+    e   = time_embed(t, E)                      # L1 kernel
+    h   = x @ w_in + b_in
+    h   = fused_block(h, e, ...)  x n_blocks    # L1 kernel
+    eps = h @ w_out + b_out
+
+Both lowering paths share one weight pytree:
+  * ``use_pallas=True``  — L1 Pallas kernels (interpret=True), the faithful
+    three-layer path; exported to artifacts/eps_<ds>.hlo.txt.
+  * ``use_pallas=False`` — the pure-jnp oracle path (XLA fuses it); used for
+    training speed and exported as eps_<ds>_xla.hlo.txt for the L1-vs-XLA
+    perf ablation.
+
+Also here: the analytic GMM eps (exact score oracle — a GMM diffused by a
+scalar SDE stays a GMM), the eps-matching loss Eq.(9), and a manual Adam
+(optax is not available offline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import sde as sde_lib
+from .datasets import GmmSpec
+from .kernels import (
+    deis_combine,
+    fused_block,
+    ref_deis_combine,
+    ref_fused_block,
+    ref_time_embed,
+    time_embed,
+)
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class NetConfig:
+    dim: int
+    hidden: int = 128
+    embed: int = 64
+    n_blocks: int = 3
+
+
+def init_params(key, cfg: NetConfig) -> Params:
+    """He-style init; final-layer weights scaled down so eps(x,T) ~ 0 at init."""
+    ks = jax.random.split(key, 3 + 4 * cfg.n_blocks)
+    d, h, e = cfg.dim, cfg.hidden, cfg.embed
+
+    def dense(k, fan_in, shape, scale=1.0):
+        return scale * jax.random.normal(k, shape, dtype=jnp.float32) / jnp.sqrt(fan_in)
+
+    params: Params = {
+        "w_in": dense(ks[0], d, (d, h)),
+        "b_in": jnp.zeros((h,), jnp.float32),
+        "w_out": dense(ks[1], h, (h, d), scale=0.1),
+        "b_out": jnp.zeros((d,), jnp.float32),
+        "blocks": [],
+    }
+    for i in range(cfg.n_blocks):
+        k1, k2, k3, _ = ks[3 + 4 * i : 7 + 4 * i]
+        params["blocks"].append(
+            {
+                "w1": dense(k1, h, (h, h)),
+                "b1": jnp.zeros((h,), jnp.float32),
+                "u": dense(k2, e, (e, h)),
+                "w2": dense(k3, h, (h, h), scale=0.5),
+                "b2": jnp.zeros((h,), jnp.float32),
+            }
+        )
+    return params
+
+
+def apply_eps(params: Params, x, t, cfg: NetConfig, *, use_pallas: bool = False):
+    """Forward pass: x [B,D], t [B] -> eps [B,D]."""
+    if use_pallas:
+        e = time_embed(t, cfg.embed)
+    else:
+        e = ref_time_embed(t, cfg.embed)
+    h = x @ params["w_in"] + params["b_in"]
+    for blk in params["blocks"]:
+        if use_pallas:
+            h = fused_block(h, e, blk["w1"], blk["b1"], blk["u"], blk["w2"], blk["b2"])
+        else:
+            h = ref_fused_block(h, e, blk["w1"], blk["b1"], blk["u"], blk["w2"], blk["b2"])
+    return h @ params["w_out"] + params["b_out"]
+
+
+# ---------------------------------------------------------------------------
+# Analytic GMM eps oracle (exact score; isolates discretization error).
+# ---------------------------------------------------------------------------
+
+
+def gmm_eps(spec: GmmSpec, sde, x, t):
+    """Exact eps*(x, t) = -sigma_t * grad log p_t(x) for GMM data.
+
+    Under a scalar SDE, p_t = sum_m w_m N(sqrt_abar*mu_m, abar*s^2 + sigma^2).
+    x [B,D], t [B] (or scalar).
+    """
+    t = jnp.broadcast_to(jnp.asarray(t, jnp.float32), x.shape[:1])
+    sq = sde.sqrt_abar(t)[:, None]  # [B,1]
+    sig = sde.sigma(t)[:, None]  # marginal std, [B,1]
+    var = (sq * spec.std) ** 2 + sig**2  # [B,1]
+    mu = jnp.asarray(spec.means, jnp.float32)  # [M,D]
+    diff = x[:, None, :] - sq[:, :, None] * mu[None, :, :]  # [B,M,D]
+    logw = -0.5 * jnp.sum(diff**2, axis=-1) / var  # [B,M]
+    gamma = jax.nn.softmax(logw, axis=1)  # [B,M]
+    score = -jnp.einsum("bm,bmd->bd", gamma, diff) / var  # [B,D]
+    return -sig * score
+
+
+def gmm_logp(spec: GmmSpec, sde, x, t):
+    """Exact log p_t(x) for GMM data under a scalar SDE. x [B,D], t scalar/[B]."""
+    t = jnp.broadcast_to(jnp.asarray(t, jnp.float32), x.shape[:1])
+    sq = sde.sqrt_abar(t)[:, None]
+    sig = sde.sigma(t)[:, None]
+    var = (sq * spec.std) ** 2 + sig**2
+    mu = jnp.asarray(spec.means, jnp.float32)
+    d = x.shape[1]
+    diff = x[:, None, :] - sq[:, :, None] * mu[None, :, :]
+    logn = -0.5 * jnp.sum(diff**2, axis=-1) / var - 0.5 * d * jnp.log(
+        2.0 * jnp.pi * var[:, 0]
+    )[:, None]
+    return jax.nn.logsumexp(logn, axis=1) - jnp.log(spec.n_comp)
+
+
+# ---------------------------------------------------------------------------
+# Training: eps-matching loss Eq.(9) + manual Adam.
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, cfg: NetConfig, sde, x0, t, noise):
+    xt = sde.sqrt_abar(t)[:, None] * x0 + sde.sigma(t)[:, None] * noise
+    pred = apply_eps(params, xt, t, cfg, use_pallas=False)
+    return jnp.mean(jnp.sum((pred - noise) ** 2, axis=1))
+
+
+def adam_init(params):
+    zeros = lambda p: jax.tree_util.tree_map(jnp.zeros_like, p)
+    return {"m": zeros(params), "v": zeros(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    step = state["step"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    new = jax.tree_util.tree_map(
+        lambda p, m, v: p - lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps), params, m, v
+    )
+    return new, {"m": m, "v": v, "step": step}
+
+
+def train_eps_net(
+    key,
+    cfg: NetConfig,
+    sde,
+    sample_data,
+    *,
+    n_steps: int = 4000,
+    batch: int = 512,
+    lr: float = 1e-3,
+    t0: float = 1e-3,
+    t_max: float = sde_lib.T_MAX,
+    log_every: int = 1000,
+):
+    """Train an eps-net with the denoising loss Eq.(9). Returns (params, losses)."""
+    kinit, kloop = jax.random.split(key)
+    params = init_params(kinit, cfg)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, opt, k):
+        kd, kt, kn = jax.random.split(k, 3)
+        x0 = sample_data(kd, batch)
+        t = jax.random.uniform(kt, (batch,), minval=t0, maxval=t_max)
+        noise = jax.random.normal(kn, (batch, cfg.dim), dtype=jnp.float32)
+        loss, grads = jax.value_and_grad(loss_fn)(params, cfg, sde, x0, t, noise)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    losses = []
+    keys = jax.random.split(kloop, n_steps)
+    for i in range(n_steps):
+        params, opt, loss = step(params, opt, keys[i])
+        if i % log_every == 0 or i == n_steps - 1:
+            losses.append((i, float(loss)))
+    return params, losses
+
+
+def params_to_pylist(params: Params):
+    """Weight pytree -> JSON-friendly nested structure for the rust-native backend."""
+    arr = lambda a: np.asarray(a, dtype=np.float64).tolist()
+    return {
+        "w_in": arr(params["w_in"]),
+        "b_in": arr(params["b_in"]),
+        "w_out": arr(params["w_out"]),
+        "b_out": arr(params["b_out"]),
+        "blocks": [
+            {k: arr(v) for k, v in blk.items()} for blk in params["blocks"]
+        ],
+    }

@@ -1,0 +1,102 @@
+"""Scalar diffusion SDE schedules shared by training, AOT export and tests.
+
+Mirrors rust/src/diffusion/ exactly (same constants); any change here must be
+reflected there (parity fixtures in fixtures.py guard against drift).
+
+VPSDE (Ho et al. 2020 / Song et al. 2020b, linear beta):
+    beta(t)      = beta0 + t * (beta1 - beta0)
+    log abar(t)  = -0.25 t^2 (beta1 - beta0) - 0.5 t beta0
+    x_t | x_0 ~ N(sqrt(abar) x_0, (1 - abar) I)
+    rho(t)       = sqrt((1 - abar) / abar)      (DEIS time rescaling, Prop 3)
+
+VESDE (Song et al. 2020b, geometric sigma):
+    sigma(t) = sigma_min * (sigma_max / sigma_min)^t
+    x_t | x_0 ~ N(x_0, sigma(t)^2 I)            (abar == 1)
+    rho(t)   = sigma(t)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+# Default schedule constants (Song et al. 2020b).
+VP_BETA0 = 0.1
+VP_BETA1 = 20.0
+VE_SIGMA_MIN = 0.01
+VE_SIGMA_MAX = 50.0
+T_MAX = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class VpSde:
+    """Variance-preserving SDE with linear beta schedule."""
+
+    beta0: float = VP_BETA0
+    beta1: float = VP_BETA1
+
+    def beta(self, t):
+        return self.beta0 + t * (self.beta1 - self.beta0)
+
+    def log_abar(self, t):
+        # d log abar / dt = -beta(t)  =>  log abar = -(beta0 t + t^2 (beta1-beta0)/2)
+        return -0.5 * t * t * (self.beta1 - self.beta0) - t * self.beta0
+
+    def abar(self, t):
+        return jnp.exp(self.log_abar(t))
+
+    def sqrt_abar(self, t):
+        return jnp.exp(0.5 * self.log_abar(t))
+
+    def sigma(self, t):
+        """Marginal std of x_t | x_0 (the L_t of the paper, scalar case)."""
+        return jnp.sqrt(jnp.maximum(1.0 - self.abar(t), 1e-20))
+
+    def rho(self, t):
+        a = self.abar(t)
+        return jnp.sqrt(jnp.maximum((1.0 - a) / a, 0.0))
+
+    def f_scalar(self, t):
+        """Drift coefficient F_t (scalar; F_t = d log sqrt(abar) / dt)."""
+        return -0.5 * self.beta(t)
+
+    def g2(self, t):
+        """Squared diffusion coefficient G_t^2 = beta(t)."""
+        return self.beta(t)
+
+
+@dataclasses.dataclass(frozen=True)
+class VeSde:
+    """Variance-exploding SDE with geometric sigma schedule."""
+
+    sigma_min: float = VE_SIGMA_MIN
+    sigma_max: float = VE_SIGMA_MAX
+
+    def sigma(self, t):
+        r = self.sigma_max / self.sigma_min
+        return self.sigma_min * jnp.power(r, t)
+
+    def abar(self, t):
+        return jnp.ones_like(jnp.asarray(t, dtype=jnp.float32))
+
+    def sqrt_abar(self, t):
+        return jnp.ones_like(jnp.asarray(t, dtype=jnp.float32))
+
+    def log_abar(self, t):
+        return jnp.zeros_like(jnp.asarray(t, dtype=jnp.float32))
+
+    def rho(self, t):
+        return self.sigma(t)
+
+    def f_scalar(self, t):
+        return jnp.zeros_like(jnp.asarray(t, dtype=jnp.float32))
+
+    def g2(self, t):
+        """d sigma^2/dt for the geometric schedule."""
+        r = jnp.log(self.sigma_max / self.sigma_min)
+        return 2.0 * r * self.sigma(t) ** 2
+
+
+VP = VpSde()
+VE = VeSde()

@@ -1,0 +1,87 @@
+"""Consistency of the float64 reference samplers used for rust parity."""
+
+import numpy as np
+
+from compile.fixtures import (
+    gmm2d_means,
+    gmm_eps_np,
+    quadratic_grid,
+    sample_ddim_ve,
+    sample_rho_ab_vp,
+    sample_rho_heun_vp,
+    sample_tab_vp,
+    vp_abar,
+)
+
+MEANS = gmm2d_means()
+STD = 0.25
+
+
+def eps_fn(x, t, kind="vp"):
+    return gmm_eps_np(MEANS, STD, x, t, kind)
+
+
+def x_init(n=6, seed=0):
+    return np.random.default_rng(seed).standard_normal((n, 2))
+
+
+def test_tab0_equals_rho_ab0():
+    """Both r=0 variants are DDIM (Prop 2) — must agree to quadrature tol."""
+    grid = quadratic_grid(1e-3, 1.0, 10)
+    x = x_init()
+    a = sample_tab_vp(eps_fn, x, grid, 0)
+    b = sample_rho_ab_vp(eps_fn, x, grid, 0)
+    np.testing.assert_allclose(a, b, atol=1e-8)
+
+
+def test_solvers_converge_to_same_limit():
+    """With N=160 steps every solver lands on (nearly) the same x_0."""
+    x = x_init()
+    grid = quadratic_grid(1e-3, 1.0, 160)
+    sols = [
+        sample_tab_vp(eps_fn, x, grid, 0),
+        sample_tab_vp(eps_fn, x, grid, 3),
+        sample_rho_ab_vp(eps_fn, x, grid, 2),
+        sample_rho_heun_vp(eps_fn, x, grid),
+    ]
+    for s in sols[1:]:
+        assert np.max(np.abs(s - sols[0])) < 2e-2
+
+
+def test_high_order_beats_ddim_at_low_nfe():
+    """Paper Fig 4c: r=3 closer to the fine-grid limit than r=0 at N=10."""
+    x = x_init(32, seed=3)
+    ref = sample_tab_vp(eps_fn, x, quadratic_grid(1e-3, 1.0, 640), 0)
+    g10 = quadratic_grid(1e-3, 1.0, 10)
+    e0 = np.abs(sample_tab_vp(eps_fn, x, g10, 0) - ref).mean()
+    e3 = np.abs(sample_tab_vp(eps_fn, x, g10, 3) - ref).mean()
+    assert e3 < e0, (e0, e3)
+
+
+def test_heun_second_order_convergence():
+    """Error should shrink ~4x per halving of step size (order 2 in rho)."""
+    x = x_init(16, seed=5)
+    ref = sample_rho_heun_vp(eps_fn, x, quadratic_grid(1e-3, 1.0, 1024))
+    errs = []
+    for n in (16, 32, 64):
+        got = sample_rho_heun_vp(eps_fn, x, quadratic_grid(1e-3, 1.0, n))
+        errs.append(np.abs(got - ref).max())
+    rate = np.log2(errs[0] / errs[2]) / 2.0
+    assert rate > 1.5, (errs, rate)
+
+
+def test_ve_ddim_pulls_towards_data():
+    """VE DDIM from sigma_max*noise should land near the GMM ring (radius 4)."""
+    x = 50.0 * x_init(64, seed=9)
+    out = sample_ddim_ve(eps_fn, x, quadratic_grid(1e-5, 1.0, 50))
+    radii = np.linalg.norm(out, axis=1)
+    assert np.median(np.abs(radii - 4.0)) < 1.0
+
+
+def test_ddim_samples_near_modes():
+    """VP DDIM at N=50 produces points close to one of the 8 modes."""
+    rng = np.random.default_rng(11)
+    x = rng.standard_normal((128, 2))
+    out = sample_tab_vp(eps_fn, x, quadratic_grid(1e-3, 1.0, 50), 0)
+    d = np.linalg.norm(out[:, None, :] - MEANS[None], axis=2).min(axis=1)
+    assert np.median(d) < 3 * STD, np.median(d)

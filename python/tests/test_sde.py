@@ -1,0 +1,55 @@
+"""Schedule identities shared with the rust side (drift here == drift there)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import sde as sde_lib
+from compile.fixtures import (
+    quadratic_grid,
+    tab_coeffs_vp,
+    vp_abar,
+    vp_rho,
+    vp_t_of_rho,
+)
+
+ts = st.floats(1e-4, 1.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(t=ts)
+def test_rho_identity(t):
+    """rho * sqrt(abar) == sqrt(1 - abar) — the Prop 3 rescaling identity."""
+    sde = sde_lib.VP
+    lhs = float(sde.rho(t) * sde.sqrt_abar(t))
+    rhs = float(jnp.sqrt(1.0 - sde.abar(t)))
+    assert abs(lhs - rhs) < 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(t=ts)
+def test_t_of_rho_roundtrip(t):
+    assert abs(vp_t_of_rho(vp_rho(np.float64(t))) - t) < 1e-9
+
+
+def test_abar_boundaries():
+    assert float(sde_lib.VP.abar(0.0)) == 1.0
+    assert float(sde_lib.VP.abar(1.0)) < 1e-4  # alpha_T ~ 0 (paper Tab 1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(i=st.integers(1, 9))
+def test_tab0_coeff_equals_ddim_closed_form(i):
+    """Prop 2: the r=0 quadrature coefficient == DDIM's closed form."""
+    grid = quadratic_grid(1e-3, 1.0, 10)
+    t_s, t_e = grid[i], grid[i - 1]
+    a_s, a_e = vp_abar(t_s), vp_abar(t_e)
+    want = np.sqrt(1 - a_e) - np.sqrt(a_e / a_s) * np.sqrt(1 - a_s)
+    (got,) = tab_coeffs_vp(t_e, t_s, [t_s])
+    assert abs(got - want) < 1e-9
+
+
+def test_ve_schedule_boundaries():
+    sde = sde_lib.VE
+    assert abs(float(sde.sigma(0.0)) - sde.sigma_min) < 1e-8
+    assert abs(float(sde.sigma(1.0)) - sde.sigma_max) < 1e-4

@@ -1,0 +1,42 @@
+//! Fig. 7: quality-vs-NFE curves for the headline samplers across datasets
+//! (trained nets; CelebA/ImageNet stand-ins per DESIGN.md §1).
+
+use deis::diffusion::Sde;
+use deis::exp::{print_table, run_solver, sweep_model, QualityEval};
+use deis::solvers::SolverKind;
+use deis::timegrid::GridKind;
+use deis::util::bench::CsvSink;
+
+fn main() {
+    let sde = Sde::vp();
+    let nfes = [5usize, 10, 20, 50];
+    let kinds = [
+        SolverKind::Tab(0),
+        SolverKind::Tab(3),
+        SolverKind::Ipndm(3),
+        SolverKind::Dpm(2),
+        SolverKind::RhoHeun,
+    ];
+    let mut csv = CsvSink::new("fig7_curves.csv", "dataset,solver,nfe,swd1000");
+    for (dataset, n) in [("gmm2d", 4000), ("spiral2d", 4000), ("img8", 800)] {
+        let model = sweep_model(dataset);
+        let eval = QualityEval::new(dataset, if dataset == "img8" { 4000 } else { 20_000 });
+        let mut rows = Vec::new();
+        for kind in kinds {
+            let mut vals = Vec::new();
+            for &nfe in &nfes {
+                let (x, _) =
+                    run_solver(&*model, &sde, kind, GridKind::Quadratic, 1e-3, nfe, n, 7);
+                let q = eval.score(&x).swd1000;
+                csv.row(&format!("{dataset},{},{nfe},{q:.3}", kind.name()));
+                vals.push(q);
+            }
+            rows.push((kind.name(), vals));
+        }
+        print_table(
+            &format!("Fig 7: SWDx1000 vs NFE ({dataset})"),
+            &nfes.iter().map(|n| format!("NFE {n}")).collect::<Vec<_>>(),
+            &rows,
+        );
+    }
+}

@@ -1,0 +1,120 @@
+//! §Perf microbenches for the three layers (criterion-style, in-repo
+//! harness): PJRT dispatch (pallas vs xla lowering), native-MLP forward,
+//! the DEIS combine, coefficient precomputation, and coordinator overhead.
+//! Results feed EXPERIMENTS.md §Perf.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use deis::coordinator::{Coordinator, CoordinatorConfig, ModelRegistry, SampleRequest};
+use deis::diffusion::Sde;
+use deis::exp::sweep_model;
+use deis::gmm::Gmm;
+use deis::runtime::Runtime;
+use deis::score::{pjrt::PjrtEps, EpsModel, GmmEps};
+use deis::solvers::{self, SolverKind};
+use deis::timegrid::{build, GridKind};
+use deis::util::bench::{bench_for, black_box, CsvSink};
+use deis::util::rng::Rng;
+
+fn main() {
+    let mut csv = CsvSink::new("perf_hotpath.csv", "bench,mean_us,p50_us,p99_us");
+    let budget = Duration::from_millis(1500);
+    let mut log = |s: deis::util::bench::BenchStats| {
+        println!("{s}");
+        csv.row(&format!("{},{:.1},{:.1},{:.1}", s.name, s.mean_us(),
+            s.p50.as_secs_f64() * 1e6, s.p99.as_secs_f64() * 1e6));
+    };
+
+    let rt = Runtime::global();
+    let mut rng = Rng::new(1);
+
+    // --- L1/L2: PJRT execution, pallas-kernel vs plain-XLA lowering -------
+    for (name, label) in [("gmm2d", "pjrt eval b256 (pallas kernels)"),
+                          ("gmm2d_xla", "pjrt eval b256 (xla oracle)")] {
+        let model = PjrtEps::load(rt, name, &[256]).unwrap();
+        let x = rng.normal_vec(256 * 2);
+        let t: Vec<f64> = (0..256).map(|_| rng.uniform_in(0.01, 1.0)).collect();
+        let mut out = vec![0.0; 512];
+        log(bench_for(label, budget, || {
+            model.eval(&x, &t, 256, &mut out);
+            black_box(&out);
+        }));
+    }
+    // img8 is the heavier net.
+    {
+        let model = PjrtEps::load(rt, "img8", &[256]).unwrap();
+        let x = rng.normal_vec(256 * 64);
+        let t: Vec<f64> = (0..256).map(|_| rng.uniform_in(0.01, 1.0)).collect();
+        let mut out = vec![0.0; 256 * 64];
+        log(bench_for("pjrt eval b256 img8 (pallas)", budget, || {
+            model.eval(&x, &t, 256, &mut out);
+            black_box(&out);
+        }));
+    }
+
+    // --- L3: native MLP forward -------------------------------------------
+    for name in ["gmm2d", "img8"] {
+        let model = sweep_model(name);
+        let d = model.dim();
+        let x = rng.normal_vec(256 * d);
+        let t: Vec<f64> = (0..256).map(|_| rng.uniform_in(0.01, 1.0)).collect();
+        let mut out = vec![0.0; 256 * d];
+        log(bench_for(&format!("native mlp eval b256 {name}"), budget, || {
+            model.eval(&x, &t, 256, &mut out);
+            black_box(&out);
+        }));
+    }
+
+    // --- L3: analytic oracle (lower bound on eps cost) ----------------------
+    {
+        let model = GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp());
+        let x = rng.normal_vec(256 * 2);
+        let t: Vec<f64> = (0..256).map(|_| rng.uniform_in(0.01, 1.0)).collect();
+        let mut out = vec![0.0; 512];
+        log(bench_for("analytic gmm eps b256", budget, || {
+            model.eval(&x, &t, 256, &mut out);
+            black_box(&out);
+        }));
+    }
+
+    // --- L3: coefficient precompute + combine -------------------------------
+    {
+        let sde = Sde::vp();
+        log(bench_for("tab3 plan build (N=20)", budget, || {
+            let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, 20);
+            black_box(solvers::build(SolverKind::Tab(3), &sde, &grid));
+        }));
+        let mut x = rng.normal_vec(256 * 64);
+        let eps: Vec<Vec<f64>> = (0..4).map(|_| rng.normal_vec(256 * 64)).collect();
+        let eps_refs: Vec<&[f64]> = eps.iter().map(|e| e.as_slice()).collect();
+        log(bench_for("deis combine b256 d64 r3", budget, || {
+            deis_combine_pub(&mut x, 0.99, &[0.1, -0.2, 0.05, 0.01], &eps_refs);
+            black_box(&x);
+        }));
+    }
+
+    // --- L3: coordinator overhead (oracle model, tiny work) ----------------
+    {
+        let mut reg = ModelRegistry::new();
+        reg.insert("gmm2d", Arc::new(GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp())));
+        let coord = Coordinator::new(CoordinatorConfig::default(), reg);
+        log(bench_for("coordinator roundtrip (n=1, nfe=1)", budget, || {
+            let req = SampleRequest::new("gmm2d", SolverKind::Tab(0), 1, 1);
+            black_box(coord.sample_blocking(req).unwrap());
+        }));
+        coord.shutdown();
+    }
+}
+
+/// Re-implementation of the private solver combine for benching the loop.
+fn deis_combine_pub(x: &mut [f64], psi: f64, coefs: &[f64], eps: &[&[f64]]) {
+    for v in x.iter_mut() {
+        *v *= psi;
+    }
+    for (c, e) in coefs.iter().zip(eps) {
+        for (v, ev) in x.iter_mut().zip(e.iter()) {
+            *v += c * ev;
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! Table 13: the ImageNet32 stand-in (img8, 64-dim): iPNDM / DDIM / tAB1-3.
+
+use deis::diffusion::Sde;
+use deis::exp::{print_table, run_solver, sweep_model, QualityEval};
+use deis::solvers::SolverKind;
+use deis::timegrid::GridKind;
+use deis::util::bench::CsvSink;
+
+fn main() {
+    let sde = Sde::vp();
+    let model = sweep_model("img8");
+    let eval = QualityEval::new("img8", 4000);
+    let nfes = [5usize, 10, 20, 50];
+    let kinds = [
+        SolverKind::Ipndm(3),
+        SolverKind::Tab(0),
+        SolverKind::Tab(1),
+        SolverKind::Tab(2),
+        SolverKind::Tab(3),
+    ];
+    let mut csv = CsvSink::new("table13.csv", "solver,nfe,swd1000");
+    let mut rows = Vec::new();
+    for kind in kinds {
+        let mut vals = Vec::new();
+        for &nfe in &nfes {
+            let (x, _) = run_solver(&*model, &sde, kind, GridKind::Quadratic, 1e-3, nfe, 800, 7);
+            let q = eval.score(&x).swd1000;
+            csv.row(&format!("{},{nfe},{q:.3}", kind.name()));
+            vals.push(q);
+        }
+        rows.push((kind.name(), vals));
+    }
+    print_table("Table 13: img8 / 64-dim (SWDx1000)",
+        &nfes.iter().map(|n| format!("NFE {n}")).collect::<Vec<_>>(), &rows);
+}

@@ -1,0 +1,63 @@
+//! Tables 4/5 (+ Table 14 with --seeds): PNDM vs iPNDM vs DDIM vs tAB1-3 on
+//! the CIFAR10/CelebA stand-ins (gmm2d / spiral2d). PNDM only appears at
+//! NFE >= 13 (its pseudo-RK warmup needs 12 evals, App. H.1).
+
+use deis::diffusion::Sde;
+use deis::exp::{print_table, run_solver, sweep_model, QualityEval};
+use deis::solvers::SolverKind;
+use deis::timegrid::GridKind;
+use deis::util::bench::CsvSink;
+use deis::util::cli::Args;
+
+fn main() {
+    let args = Args::parse_env();
+    let seeds: Vec<u64> = (0..args.usize_or("seeds", 1) as u64).collect();
+    let sde = Sde::vp();
+    let nfes = [5usize, 10, 20, 50];
+    let kinds = [
+        SolverKind::Pndm,
+        SolverKind::Ipndm(3),
+        SolverKind::Tab(0),
+        SolverKind::Tab(1),
+        SolverKind::Tab(2),
+        SolverKind::Tab(3),
+    ];
+    let mut csv = CsvSink::new("table45.csv", "dataset,solver,nfe,seed,swd1000");
+    for dataset in ["gmm2d", "spiral2d"] {
+        let model = sweep_model(dataset);
+        let eval = QualityEval::new(dataset, 20_000);
+        let mut rows = Vec::new();
+        for kind in kinds {
+            let mut vals = Vec::new();
+            for &nfe in &nfes {
+                if kind == SolverKind::Pndm && nfe < 13 {
+                    vals.push(f64::NAN);
+                    continue;
+                }
+                let mut acc = Vec::new();
+                for &seed in &seeds {
+                    let (x, _) = run_solver(&*model, &sde, kind, GridKind::Quadratic, 1e-3,
+                        nfe, 4000, 7 + seed);
+                    let q = eval.score(&x).swd1000;
+                    csv.row(&format!("{dataset},{},{nfe},{seed},{q:.3}", kind.name()));
+                    acc.push(q);
+                }
+                let mean = acc.iter().sum::<f64>() / acc.len() as f64;
+                vals.push(mean);
+                if seeds.len() > 1 {
+                    let var = acc.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+                        / (acc.len() - 1) as f64;
+                    println!("  {dataset} {} NFE{nfe}: {mean:.2} ± {:.2}", kind.name(),
+                        var.sqrt());
+                }
+            }
+            rows.push((kind.name(), vals));
+        }
+        print_table(
+            &format!("Tables 4/5: PNDM family (SWDx1000, {dataset})"),
+            &nfes.iter().map(|n| format!("NFE {n}")).collect::<Vec<_>>(),
+            &rows,
+        );
+    }
+    println!("\npaper shape: iPNDM works below 12 NFE where PNDM cannot; tAB3 best overall");
+}

@@ -1,0 +1,56 @@
+//! Table 9 (quantitative Fig. 5): the ingredient ablation ladder on the
+//! trained model, Euler -> +EI -> +eps -> +poly -> +opt{t_i}, plus EM.
+
+use deis::diffusion::Sde;
+use deis::exp::{print_table, run_solver, sweep_model, QualityEval};
+use deis::solvers::SolverKind;
+use deis::timegrid::GridKind;
+use deis::util::bench::CsvSink;
+
+fn main() {
+    // Two substrates: the trained net (fitting + discretization error, the
+    // paper's setting) and the *concentrated* exact-score oracle, where the
+    // stiffness that separates the ladder lives (DESIGN.md §1 — image data
+    // is manifold-concentrated; smooth 2-D data alone is not stiff).
+    ladder_on("gmm2d", "gmm2d");
+    ladder_on("gmm2d_sharp_oracle", "gmm2d_sharp");
+}
+
+fn ladder_on(model_name: &str, dataset: &str) {
+    let sde = Sde::vp();
+    let model = sweep_model(model_name);
+    let eval = QualityEval::new(dataset, 20_000);
+    let nfes = [5usize, 10, 20, 30, 50, 100, 200];
+    let ladder: Vec<(&str, SolverKind, GridKind)> = vec![
+        ("euler", SolverKind::Euler, GridKind::Uniform),
+        ("+EI", SolverKind::EiScore, GridKind::Uniform),
+        ("+eps", SolverKind::Tab(0), GridKind::Uniform),
+        ("+poly", SolverKind::Tab(3), GridKind::Uniform),
+        ("+opt{t_i}", SolverKind::Tab(3), GridKind::Quadratic),
+        ("em", SolverKind::EulerMaruyama, GridKind::Uniform),
+    ];
+    let mut csv = CsvSink::new("table9.csv", "model,ingredient,nfe,swd1000");
+    let mut rows = Vec::new();
+    for (label, kind, grid) in &ladder {
+        let mut vals = Vec::new();
+        for &nfe in &nfes {
+            let (x, _) = run_solver(&*model, &sde, *kind, *grid, 1e-3, nfe, 4000, 7);
+            let q = eval.score(&x).swd1000;
+            csv.row(&format!("{model_name},{label},{nfe},{q:.3}"));
+            vals.push(q);
+        }
+        rows.push((label.to_string(), vals));
+    }
+    print_table(
+        &format!("Table 9: ingredient ablation (SWDx1000, {model_name})"),
+        &nfes.iter().map(|n| format!("NFE {n}")).collect::<Vec<_>>(),
+        &rows,
+    );
+    // Paper shape at NFE=10: EI(score) worse than Euler; each later
+    // ingredient improves.
+    let at10: Vec<f64> = rows.iter().map(|r| r.1[1]).collect();
+    println!(
+        "\nshape @ NFE=10: euler {:.1} | +EI {:.1} (worse!) | +eps {:.1} | +poly {:.1} | +opt {:.1}",
+        at10[0], at10[1], at10[2], at10[3], at10[4]
+    );
+}

@@ -1,0 +1,136 @@
+//! Dynamic batcher: groups queued requests with equal [`BatchKey`] into one
+//! solver run, bounded by a sample budget. FIFO across keys (the head of the
+//! queue picks the key), FIFO within a key — property-tested invariants:
+//! every submitted request is dispatched exactly once, merged requests
+//! always share a key, and no merged batch exceeds the budget unless a
+//! single oversized request forces it.
+
+use std::collections::VecDeque;
+
+use super::request::{BatchKey, SampleRequest};
+
+pub struct Pending<T> {
+    pub req: SampleRequest,
+    pub tag: T,
+    pub enqueued: std::time::Instant,
+}
+
+pub struct Batcher<T> {
+    queue: VecDeque<Pending<T>>,
+    pub max_batch_samples: usize,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(max_batch_samples: usize) -> Self {
+        Batcher { queue: VecDeque::new(), max_batch_samples: max_batch_samples.max(1) }
+    }
+
+    pub fn push(&mut self, req: SampleRequest, tag: T) {
+        self.queue.push_back(Pending { req, tag, enqueued: std::time::Instant::now() });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Pop the next merged batch: the oldest request plus every later
+    /// request with the same key, until the sample budget fills.
+    /// Returns (key, requests) or None if idle.
+    pub fn pop_batch(&mut self) -> Option<(BatchKey, Vec<Pending<T>>)> {
+        let head = self.queue.pop_front()?;
+        let key = head.req.batch_key();
+        let mut total = head.req.n_samples;
+        let mut group = vec![head];
+        let mut rest = VecDeque::with_capacity(self.queue.len());
+        while let Some(p) = self.queue.pop_front() {
+            if total < self.max_batch_samples
+                && p.req.batch_key() == key
+                && total + p.req.n_samples <= self.max_batch_samples
+            {
+                total += p.req.n_samples;
+                group.push(p);
+            } else {
+                rest.push_back(p);
+            }
+        }
+        self.queue = rest;
+        Some((key, group))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::SolverKind;
+    use crate::util::{prop::run_prop, rng::Rng};
+
+    fn req(model: &str, solver: SolverKind, nfe: usize, n: usize) -> SampleRequest {
+        SampleRequest::new(model, solver, nfe, n)
+    }
+
+    #[test]
+    fn merges_same_key_fifo() {
+        let mut b: Batcher<usize> = Batcher::new(1000);
+        b.push(req("m", SolverKind::Tab(3), 10, 10), 0);
+        b.push(req("m", SolverKind::Tab(2), 10, 10), 1);
+        b.push(req("m", SolverKind::Tab(3), 10, 20), 2);
+        let (_, g) = b.pop_batch().unwrap();
+        assert_eq!(g.iter().map(|p| p.tag).collect::<Vec<_>>(), vec![0, 2]);
+        let (_, g2) = b.pop_batch().unwrap();
+        assert_eq!(g2[0].tag, 1);
+        assert!(b.pop_batch().is_none());
+    }
+
+    #[test]
+    fn respects_sample_budget() {
+        let mut b: Batcher<usize> = Batcher::new(25);
+        for i in 0..5 {
+            b.push(req("m", SolverKind::Tab(3), 10, 10), i);
+        }
+        let (_, g) = b.pop_batch().unwrap();
+        assert_eq!(g.len(), 2, "10+10 fits, +10 would exceed 25");
+        // skipped requests retain order
+        let (_, g2) = b.pop_batch().unwrap();
+        assert_eq!(g2.iter().map(|p| p.tag).collect::<Vec<_>>(), vec![2, 3]);
+    }
+
+    #[test]
+    fn oversized_single_request_still_dispatches() {
+        let mut b: Batcher<usize> = Batcher::new(16);
+        b.push(req("m", SolverKind::Tab(3), 10, 1000), 0);
+        let (_, g) = b.pop_batch().unwrap();
+        assert_eq!(g.len(), 1);
+        assert_eq!(g[0].req.n_samples, 1000);
+    }
+
+    #[test]
+    fn prop_every_request_dispatched_once_with_matching_key() {
+        run_prop("batcher bijection", 29, 40, |rng: &mut Rng| {
+            let mut b: Batcher<usize> = Batcher::new(1 + rng.below(100));
+            let n = 1 + rng.below(40);
+            for i in 0..n {
+                let model = ["a", "b"][rng.below(2)];
+                let solver = [SolverKind::Tab(3), SolverKind::RhoHeun][rng.below(2)];
+                let nfe = [10, 20][rng.below(2)];
+                b.push(req(model, solver, nfe, 1 + rng.below(30)), i);
+            }
+            let mut seen = vec![false; n];
+            while let Some((key, group)) = b.pop_batch() {
+                let budget_ok = group.iter().map(|p| p.req.n_samples).sum::<usize>()
+                    <= b.max_batch_samples
+                    || group.len() == 1;
+                assert!(budget_ok, "budget violated by a merged batch");
+                for p in group {
+                    assert_eq!(p.req.batch_key(), key, "mixed keys in one batch");
+                    assert!(!seen[p.tag], "request {} dispatched twice", p.tag);
+                    seen[p.tag] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "some requests never dispatched");
+        });
+    }
+}

@@ -1,0 +1,328 @@
+//! L3 coordinator: the serving engine.
+//!
+//! Architecture (vLLM-router-shaped, scaled to a sampling service):
+//!
+//! ```text
+//!   submit() ──> bounded queue ──> Batcher (group by BatchKey)
+//!                                     │ merged batch
+//!                              worker thread pool
+//!                                     │ one solver run per batch
+//!                          per-request slices ──> response channels
+//! ```
+//!
+//! Requests that share (model, sde, solver, grid, t0, NFE) are stacked into
+//! one state matrix and integrated together — one ε-model call per solver
+//! step serves every merged request, which is exactly where DEIS's
+//! batch-reusable coefficients pay off. Python is never involved; the model
+//! registry maps names to [`EpsModel`] backends (PJRT / native / analytic).
+//!
+//! Offline-registry note: built on std::thread + channels (no tokio).
+
+pub mod batcher;
+pub mod request;
+pub mod stats;
+
+pub use request::{BatchKey, SampleRequest, SampleResult};
+pub use stats::{Stats, StatsSnapshot};
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::score::EpsModel;
+use crate::solvers;
+use crate::timegrid;
+use crate::util::rng::Rng;
+
+use batcher::Batcher;
+
+/// Model registry: name -> eps backend.
+#[derive(Default)]
+pub struct ModelRegistry {
+    models: HashMap<String, Arc<dyn EpsModel>>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: &str, model: Arc<dyn EpsModel>) {
+        self.models.insert(name.to_string(), model);
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<dyn EpsModel>> {
+        self.models.get(name).cloned()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.models.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub workers: usize,
+    /// Max merged samples per solver run (PJRT artifact cap is 1024; larger
+    /// batches chunk inside the backend anyway).
+    pub max_batch_samples: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { workers: 2, max_batch_samples: 1024 }
+    }
+}
+
+type Responder = SyncSender<anyhow::Result<SampleResult>>;
+
+struct Shared {
+    batcher: Mutex<Batcher<(Responder, Instant)>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    registry: ModelRegistry,
+    stats: Stats,
+}
+
+pub struct Coordinator {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    pub fn new(cfg: CoordinatorConfig, registry: ModelRegistry) -> Coordinator {
+        let shared = Arc::new(Shared {
+            batcher: Mutex::new(Batcher::new(cfg.max_batch_samples)),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            registry,
+            stats: Stats::default(),
+        });
+        let workers = (0..cfg.workers.max(1))
+            .map(|_| {
+                let sh = shared.clone();
+                std::thread::spawn(move || worker_loop(sh))
+            })
+            .collect();
+        Coordinator { shared, workers }
+    }
+
+    /// Non-blocking submit; the receiver yields the result.
+    pub fn submit(&self, req: SampleRequest) -> Receiver<anyhow::Result<SampleResult>> {
+        let (tx, rx) = sync_channel(1);
+        self.shared.stats.requests.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut b = self.shared.batcher.lock().unwrap();
+            b.push(req, (tx, Instant::now()));
+        }
+        self.shared.cv.notify_one();
+        rx
+    }
+
+    /// Submit and wait.
+    pub fn sample_blocking(&self, req: SampleRequest) -> anyhow::Result<SampleResult> {
+        self.submit(req).recv().expect("coordinator dropped response channel")
+    }
+
+    pub fn stats(&self) -> StatsSnapshot {
+        self.shared.stats.snapshot()
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        self.shared.registry.names()
+    }
+
+    pub fn shutdown(self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let popped = {
+            let mut guard = sh.batcher.lock().unwrap();
+            loop {
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(batch) = guard.pop_batch() {
+                    break Some(batch);
+                }
+                guard = sh.cv.wait(guard).unwrap();
+            }
+        };
+        let Some((_key, group)) = popped else { return };
+        run_batch(&sh, group);
+    }
+}
+
+fn run_batch(sh: &Shared, group: Vec<batcher::Pending<(Responder, Instant)>>) {
+    let spec = group[0].req.clone();
+    let merged = group.len();
+    sh.stats.batches.fetch_add(1, Ordering::Relaxed);
+    sh.stats.merged_requests.fetch_add(merged as u64, Ordering::Relaxed);
+
+    let model = match sh.registry.get(&spec.model) {
+        Some(m) => m,
+        None => {
+            for p in group {
+                let _ = p.tag.0.send(Err(anyhow::anyhow!("unknown model '{}'", spec.model)));
+            }
+            return;
+        }
+    };
+    let d = model.dim();
+    let total: usize = group.iter().map(|p| p.req.n_samples).sum();
+
+    // Build grid + solver once for the merged run.
+    let steps = spec.solver.steps_for_nfe(spec.nfe);
+    let grid = timegrid::build(spec.grid, &spec.sde, spec.t0, 1.0, steps);
+    let solver = solvers::build(spec.solver, &spec.sde, &grid);
+
+    // Per-request prior draws, deterministic in each request's seed.
+    let mut x = vec![0.0; total * d];
+    let prior = spec.sde.prior_std(1.0);
+    let mut offset = 0;
+    for p in &group {
+        let mut rng = Rng::new(p.req.seed);
+        for v in x[offset * d..(offset + p.req.n_samples) * d].iter_mut() {
+            *v = prior * rng.normal();
+        }
+        offset += p.req.n_samples;
+    }
+
+    let t_solve = Instant::now();
+    // One rng stream for stochastic solvers across the merged batch,
+    // deterministic in the head request's seed.
+    let mut srng = Rng::new(spec.seed ^ 0xD1F_F051);
+    solver.sample(model.as_ref(), &mut x, total, &mut srng);
+    let solve_us = t_solve.elapsed().as_micros() as u64;
+    sh.stats.samples.fetch_add(total as u64, Ordering::Relaxed);
+    sh.stats.model_evals.fetch_add(solver.nfe() as u64, Ordering::Relaxed);
+
+    let mut offset = 0;
+    for p in group {
+        let n = p.req.n_samples;
+        let res = SampleResult {
+            samples: x[offset * d..(offset + n) * d].to_vec(),
+            dim: d,
+            nfe: spec.nfe,
+            merged_with: merged,
+            queue_us: t_solve.duration_since(p.enqueued).as_micros() as u64,
+            solve_us,
+        };
+        offset += n;
+        sh.stats.completed.fetch_add(1, Ordering::Relaxed);
+        sh.stats.record_latency(p.tag.1.elapsed().as_micros() as u64);
+        let _ = p.tag.0.send(Ok(res));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diffusion::Sde;
+    use crate::gmm::Gmm;
+    use crate::score::GmmEps;
+    use crate::solvers::SolverKind;
+    use crate::util::prop::assert_close;
+
+    fn registry() -> ModelRegistry {
+        let mut r = ModelRegistry::new();
+        r.insert("gmm2d", Arc::new(GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp())));
+        r
+    }
+
+    #[test]
+    fn end_to_end_single_request() {
+        let c = Coordinator::new(CoordinatorConfig::default(), registry());
+        let res = c
+            .sample_blocking(SampleRequest::new("gmm2d", SolverKind::Tab(3), 10, 32))
+            .unwrap();
+        assert_eq!(res.samples.len(), 64);
+        assert_eq!(res.dim, 2);
+        assert!(res.samples.iter().all(|v| v.is_finite()));
+        c.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_is_an_error() {
+        let c = Coordinator::new(CoordinatorConfig::default(), registry());
+        let err = c.sample_blocking(SampleRequest::new("nope", SolverKind::Tab(0), 5, 4));
+        assert!(err.is_err());
+        c.shutdown();
+    }
+
+    #[test]
+    fn determinism_per_seed_even_when_merged() {
+        // The same (seed, n) request must yield identical samples whether it
+        // runs alone or merged with strangers — per-request RNG streams.
+        let c = Coordinator::new(
+            CoordinatorConfig { workers: 1, max_batch_samples: 4096 },
+            registry(),
+        );
+        let mk = |seed: u64| {
+            let mut r = SampleRequest::new("gmm2d", SolverKind::Tab(2), 10, 16);
+            r.seed = seed;
+            r
+        };
+        let solo = c.sample_blocking(mk(7)).unwrap();
+
+        // Saturate the queue so the three submissions merge.
+        let rx1 = c.submit(mk(1));
+        let rx2 = c.submit(mk(7));
+        let rx3 = c.submit(mk(3));
+        let merged = rx2.recv().unwrap().unwrap();
+        let _ = (rx1.recv(), rx3.recv());
+        assert_close(&solo.samples, &merged.samples, 1e-12, "seed determinism under merge");
+        c.shutdown();
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let c = Coordinator::new(CoordinatorConfig::default(), registry());
+        for _ in 0..3 {
+            c.sample_blocking(SampleRequest::new("gmm2d", SolverKind::Tab(0), 5, 8)).unwrap();
+        }
+        let s = c.stats();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.completed, 3);
+        assert_eq!(s.samples, 24);
+        assert!(s.p50_us > 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn concurrent_mixed_load() {
+        let c = Arc::new(Coordinator::new(
+            CoordinatorConfig { workers: 4, max_batch_samples: 256 },
+            registry(),
+        ));
+        let mut handles = Vec::new();
+        for i in 0..16 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                let solver = [SolverKind::Tab(3), SolverKind::RhoHeun, SolverKind::Tab(0)]
+                    [i % 3];
+                let mut req = SampleRequest::new("gmm2d", solver, 10, 8 + i);
+                req.seed = i as u64;
+                let res = c.sample_blocking(req).unwrap();
+                assert_eq!(res.samples.len(), (8 + i) * 2);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let stats = c.stats();
+        assert_eq!(stats.completed, 16);
+        Arc::try_unwrap(c).ok().map(|c| c.shutdown());
+    }
+}

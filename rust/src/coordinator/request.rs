@@ -1,0 +1,102 @@
+//! Request/response types and the batch-compatibility key.
+
+use crate::diffusion::Sde;
+use crate::solvers::SolverKind;
+use crate::timegrid::GridKind;
+
+/// A sampling request as submitted by a client.
+#[derive(Clone, Debug)]
+pub struct SampleRequest {
+    /// Model name in the registry ("gmm2d", "gmm2d_exact", "img8", ...).
+    pub model: String,
+    pub sde: Sde,
+    pub solver: SolverKind,
+    pub grid: GridKind,
+    /// Sampling end time (t0 > 0; see App. H.1).
+    pub t0: f64,
+    /// NFE budget; the solver's step count is derived from it.
+    pub nfe: usize,
+    pub n_samples: usize,
+    pub seed: u64,
+}
+
+impl SampleRequest {
+    pub fn new(model: &str, solver: SolverKind, nfe: usize, n_samples: usize) -> Self {
+        let sde = Sde::vp();
+        SampleRequest {
+            model: model.to_string(),
+            sde,
+            solver,
+            grid: GridKind::Quadratic,
+            t0: sde.t0_default(),
+            nfe,
+            n_samples,
+            seed: 0,
+        }
+    }
+
+    /// Two requests may share one solver run iff their keys match: same
+    /// model, dynamics, solver config and grid — then their states can be
+    /// stacked into one batch and stepped together.
+    pub fn batch_key(&self) -> BatchKey {
+        BatchKey {
+            model: self.model.clone(),
+            sde_bits: format!("{:?}", self.sde),
+            solver: self.solver,
+            grid_bits: format!("{:?}", self.grid),
+            t0_bits: self.t0.to_bits(),
+            nfe: self.nfe,
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct BatchKey {
+    pub model: String,
+    pub sde_bits: String,
+    pub solver: SolverKind,
+    pub grid_bits: String,
+    pub t0_bits: u64,
+    pub nfe: usize,
+}
+
+/// Result delivered to the requester.
+#[derive(Clone, Debug)]
+pub struct SampleResult {
+    /// Row-major [n_samples * dim].
+    pub samples: Vec<f64>,
+    pub dim: usize,
+    /// NFE actually spent by the merged run (per trajectory).
+    pub nfe: usize,
+    /// How many requests shared the solver run.
+    pub merged_with: usize,
+    pub queue_us: u64,
+    pub solve_us: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_key_groups_compatible_requests() {
+        let a = SampleRequest::new("gmm2d", SolverKind::Tab(3), 10, 100);
+        let mut b = a.clone();
+        b.n_samples = 7; // size may differ
+        b.seed = 99; // seed may differ
+        assert_eq!(a.batch_key(), b.batch_key());
+
+        let mut c = a.clone();
+        c.nfe = 20;
+        assert_ne!(a.batch_key(), c.batch_key());
+        let mut d = a.clone();
+        d.solver = SolverKind::Tab(2);
+        assert_ne!(a.batch_key(), d.batch_key());
+        let mut e = a.clone();
+        e.grid = GridKind::LogRho;
+        assert_ne!(a.batch_key(), e.batch_key());
+        let mut f = a.clone();
+        f.t0 = 1e-4;
+        assert_ne!(a.batch_key(), f.batch_key());
+    }
+}

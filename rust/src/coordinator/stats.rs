@@ -1,0 +1,78 @@
+//! Serving counters + latency aggregation (lock-free on the hot path).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+#[derive(Default)]
+pub struct Stats {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub samples: AtomicU64,
+    pub batches: AtomicU64,
+    pub merged_requests: AtomicU64,
+    pub model_evals: AtomicU64,
+    latencies_us: Mutex<Vec<u64>>, // end-to-end per request
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct StatsSnapshot {
+    pub requests: u64,
+    pub completed: u64,
+    pub samples: u64,
+    pub batches: u64,
+    pub merged_requests: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub mean_us: f64,
+}
+
+impl Stats {
+    pub fn record_latency(&self, us: u64) {
+        self.latencies_us.lock().unwrap().push(us);
+    }
+
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let mut lat = self.latencies_us.lock().unwrap().clone();
+        lat.sort_unstable();
+        let pct = |p: f64| -> u64 {
+            if lat.is_empty() {
+                0
+            } else {
+                lat[((lat.len() - 1) as f64 * p).ceil() as usize]
+            }
+        };
+        StatsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            samples: self.samples.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            merged_requests: self.merged_requests.load(Ordering::Relaxed),
+            p50_us: pct(0.5),
+            p99_us: pct(0.99),
+            mean_us: if lat.is_empty() {
+                0.0
+            } else {
+                lat.iter().sum::<u64>() as f64 / lat.len() as f64
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_percentiles() {
+        let s = Stats::default();
+        for v in [10, 20, 30, 40, 1000] {
+            s.record_latency(v);
+        }
+        s.requests.store(5, Ordering::Relaxed);
+        let snap = s.snapshot();
+        assert_eq!(snap.p50_us, 30);
+        assert_eq!(snap.p99_us, 1000);
+        assert_eq!(snap.requests, 5);
+        assert!((snap.mean_us - 220.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,208 @@
+//! Scalar diffusion SDEs (paper §2, Tab. 1) and the maps DEIS needs:
+//! ᾱ(t), marginal σ(t), transition Ψ(t,s), the ρ rescaling of Prop. 3 and
+//! its inverse, and the ε-form ODE integrand of Eq. (11)/(15).
+//!
+//! Mirrors python/compile/sde.py exactly; the cross-language parity fixtures
+//! (rust/tests/parity.rs) fail if the two drift apart.
+
+mod vesde;
+mod vpsde;
+
+pub use vesde::VeSde;
+pub use vpsde::VpSde;
+
+/// Default sampling end time: the score blows up at t = 0 (paper App. H.1),
+/// so trajectories stop at a small t0 > 0.
+pub const T0_VP: f64 = 1e-3;
+pub const T0_VE: f64 = 1e-5;
+pub const T_MAX: f64 = 1.0;
+
+/// A scalar (isotropic) diffusion SDE dx = f(t) x dt + g(t) dw.
+///
+/// Everything DEIS needs reduces to scalar functions of t for VP/VE; the
+/// matrix notation of the paper collapses to these maps.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sde {
+    Vp(VpSde),
+    Ve(VeSde),
+}
+
+impl Sde {
+    pub fn vp() -> Sde {
+        Sde::Vp(VpSde::default())
+    }
+
+    pub fn ve() -> Sde {
+        Sde::Ve(VeSde::default())
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Sde::Vp(_) => "vp",
+            Sde::Ve(_) => "ve",
+        }
+    }
+
+    /// log ᾱ(t) (0 for VE).
+    pub fn log_abar(&self, t: f64) -> f64 {
+        match self {
+            Sde::Vp(s) => s.log_abar(t),
+            Sde::Ve(_) => 0.0,
+        }
+    }
+
+    pub fn abar(&self, t: f64) -> f64 {
+        self.log_abar(t).exp()
+    }
+
+    pub fn sqrt_abar(&self, t: f64) -> f64 {
+        (0.5 * self.log_abar(t)).exp()
+    }
+
+    /// Marginal std of x_t | x_0 — the scalar L_t of the paper.
+    pub fn sigma(&self, t: f64) -> f64 {
+        match self {
+            Sde::Vp(s) => s.sigma(t),
+            Sde::Ve(s) => s.sigma(t),
+        }
+    }
+
+    /// Drift coefficient f(t) (x-multiplier).
+    pub fn f_scalar(&self, t: f64) -> f64 {
+        match self {
+            Sde::Vp(s) => -0.5 * s.beta(t),
+            Sde::Ve(_) => 0.0,
+        }
+    }
+
+    /// Squared diffusion coefficient g(t)^2.
+    pub fn g2(&self, t: f64) -> f64 {
+        match self {
+            Sde::Vp(s) => s.beta(t),
+            Sde::Ve(s) => s.g2(t),
+        }
+    }
+
+    /// Transition scalar Ψ(t, s) = exp(∫_s^t f). VP: √(ᾱ_t/ᾱ_s); VE: 1.
+    pub fn psi(&self, t_to: f64, t_from: f64) -> f64 {
+        match self {
+            Sde::Vp(s) => (0.5 * (s.log_abar(t_to) - s.log_abar(t_from))).exp(),
+            Sde::Ve(_) => 1.0,
+        }
+    }
+
+    /// DEIS time rescaling (Prop. 3): ρ = √((1−ᾱ)/ᾱ) for VP, σ for VE.
+    /// Monotone increasing in t; the transformed ODE is dŷ/dρ = ε̂(ŷ, ρ).
+    pub fn rho(&self, t: f64) -> f64 {
+        match self {
+            Sde::Vp(s) => s.rho(t),
+            Sde::Ve(s) => s.sigma(t),
+        }
+    }
+
+    /// Inverse of `rho` (closed form for both schedules).
+    pub fn t_of_rho(&self, rho: f64) -> f64 {
+        match self {
+            Sde::Vp(s) => s.t_of_rho(rho),
+            Sde::Ve(s) => s.t_of_sigma(rho),
+        }
+    }
+
+    /// The ε-form ODE weight of Eq. (11)/(15): ½ Ψ(t_target, τ) g²(τ)/σ(τ).
+    /// Integrating this (× a Lagrange basis) over [t_i, t_{i−1}] gives C_ij.
+    pub fn eps_integrand(&self, t_target: f64, tau: f64) -> f64 {
+        0.5 * self.psi(t_target, tau) * self.g2(tau) / self.sigma(tau)
+    }
+
+    /// Scale mapping state x to the ρ-ODE variable ŷ = x/√ᾱ (identity for VE).
+    pub fn y_of_x(&self, x: f64, t: f64) -> f64 {
+        x / self.sqrt_abar(t)
+    }
+
+    pub fn x_of_y(&self, y: f64, t: f64) -> f64 {
+        y * self.sqrt_abar(t)
+    }
+
+    /// Std of the prior π(x_T) the sampler starts from.
+    pub fn prior_std(&self, t_max: f64) -> f64 {
+        match self {
+            Sde::Vp(_) => 1.0,
+            Sde::Ve(s) => s.sigma(t_max),
+        }
+    }
+
+    pub fn t0_default(&self) -> f64 {
+        match self {
+            Sde::Vp(_) => T0_VP,
+            Sde::Ve(_) => T0_VE,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vp_boundaries() {
+        let sde = Sde::vp();
+        assert!((sde.abar(0.0) - 1.0).abs() < 1e-12);
+        assert!(sde.abar(1.0) < 1e-4, "abar(T) = {}", sde.abar(1.0));
+        assert!((sde.sigma(1.0) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rho_identity_vp() {
+        // ρ √ᾱ == √(1−ᾱ): the Prop 3 rescaling identity.
+        let sde = Sde::vp();
+        for i in 1..50 {
+            let t = i as f64 / 50.0;
+            let lhs = sde.rho(t) * sde.sqrt_abar(t);
+            assert!((lhs - sde.sigma(t)).abs() < 1e-10, "t={t}");
+        }
+    }
+
+    #[test]
+    fn t_of_rho_roundtrip_both() {
+        for sde in [Sde::vp(), Sde::ve()] {
+            for i in 1..40 {
+                let t = 0.001 + 0.999 * i as f64 / 40.0;
+                let back = sde.t_of_rho(sde.rho(t));
+                assert!((back - t).abs() < 1e-9, "{} t={t} back={back}", sde.name());
+            }
+        }
+    }
+
+    #[test]
+    fn psi_cocycle() {
+        let sde = Sde::vp();
+        let (a, b, c) = (0.9, 0.5, 0.2);
+        let direct = sde.psi(c, a);
+        let chained = sde.psi(c, b) * sde.psi(b, a);
+        assert!((direct - chained).abs() < 1e-12);
+        assert!((sde.psi(a, a) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn rho_monotone() {
+        for sde in [Sde::vp(), Sde::ve()] {
+            let mut last = sde.rho(1e-4);
+            for i in 1..100 {
+                let t = 1e-4 + i as f64 / 100.0 * (1.0 - 1e-4);
+                let r = sde.rho(t);
+                assert!(r > last, "{} rho not monotone at t={t}", sde.name());
+                last = r;
+            }
+        }
+    }
+
+    #[test]
+    fn f_g_consistent_with_abar_vp() {
+        // d log ᾱ/dt == -g²(t) == 2 f(t) (finite-difference check).
+        let sde = Sde::vp();
+        let (t, h) = (0.37, 1e-6);
+        let d = (sde.log_abar(t + h) - sde.log_abar(t - h)) / (2.0 * h);
+        assert!((d + sde.g2(t)).abs() < 1e-6);
+        assert!((d - 2.0 * sde.f_scalar(t)).abs() < 1e-6);
+    }
+}

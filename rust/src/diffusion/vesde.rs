@@ -1,0 +1,58 @@
+//! Variance-exploding SDE (Song et al. 2020b) with geometric σ schedule:
+//! σ(t) = σ_min (σ_max/σ_min)^t, g²(t) = dσ²/dt.
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct VeSde {
+    pub sigma_min: f64,
+    pub sigma_max: f64,
+}
+
+impl Default for VeSde {
+    fn default() -> Self {
+        VeSde { sigma_min: 0.01, sigma_max: 50.0 }
+    }
+}
+
+impl VeSde {
+    pub fn sigma(&self, t: f64) -> f64 {
+        self.sigma_min * (self.sigma_max / self.sigma_min).powf(t)
+    }
+
+    pub fn g2(&self, t: f64) -> f64 {
+        let s = self.sigma(t);
+        2.0 * (self.sigma_max / self.sigma_min).ln() * s * s
+    }
+
+    pub fn t_of_sigma(&self, sigma: f64) -> f64 {
+        (sigma / self.sigma_min).ln() / (self.sigma_max / self.sigma_min).ln()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoints() {
+        let s = VeSde::default();
+        assert!((s.sigma(0.0) - 0.01).abs() < 1e-12);
+        assert!((s.sigma(1.0) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn g2_is_dsigma2_dt() {
+        let s = VeSde::default();
+        let (t, h) = (0.6, 1e-7);
+        let fd = (s.sigma(t + h).powi(2) - s.sigma(t - h).powi(2)) / (2.0 * h);
+        assert!((fd / s.g2(t) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn t_of_sigma_inverts() {
+        let s = VeSde::default();
+        for i in 0..=10 {
+            let t = i as f64 / 10.0;
+            assert!((s.t_of_sigma(s.sigma(t)) - t).abs() < 1e-12);
+        }
+    }
+}

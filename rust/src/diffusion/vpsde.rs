@@ -1,0 +1,78 @@
+//! Variance-preserving SDE (Ho et al. 2020) with the linear-β schedule of
+//! Song et al. 2020b: β(t) = β₀ + t(β₁−β₀), log ᾱ(t) = −(β₀t + ½t²(β₁−β₀)).
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct VpSde {
+    pub beta0: f64,
+    pub beta1: f64,
+}
+
+impl Default for VpSde {
+    fn default() -> Self {
+        VpSde { beta0: 0.1, beta1: 20.0 }
+    }
+}
+
+impl VpSde {
+    pub fn beta(&self, t: f64) -> f64 {
+        self.beta0 + t * (self.beta1 - self.beta0)
+    }
+
+    pub fn log_abar(&self, t: f64) -> f64 {
+        -0.5 * t * t * (self.beta1 - self.beta0) - t * self.beta0
+    }
+
+    pub fn abar(&self, t: f64) -> f64 {
+        self.log_abar(t).exp()
+    }
+
+    /// Marginal std √(1−ᾱ(t)).
+    pub fn sigma(&self, t: f64) -> f64 {
+        // Stable for small t: 1−exp(x) = −expm1(x).
+        (-self.log_abar(t).exp_m1()).max(0.0).sqrt()
+    }
+
+    pub fn rho(&self, t: f64) -> f64 {
+        let a = self.abar(t);
+        ((1.0 - a) / a).max(0.0).sqrt()
+    }
+
+    /// Closed-form inverse of ρ(t): ᾱ = 1/(1+ρ²) then solve the quadratic
+    /// ½(β₁−β₀)t² + β₀ t + log ᾱ = 0 for its positive root.
+    pub fn t_of_rho(&self, rho: f64) -> f64 {
+        let log_abar = -(rho * rho).ln_1p();
+        let a = 0.5 * (self.beta1 - self.beta0);
+        let b = self.beta0;
+        ((b * b - 4.0 * a * log_abar).sqrt() - b) / (2.0 * a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beta_endpoints() {
+        let s = VpSde::default();
+        assert_eq!(s.beta(0.0), 0.1);
+        assert_eq!(s.beta(1.0), 20.0);
+    }
+
+    #[test]
+    fn sigma_small_t_stable() {
+        let s = VpSde::default();
+        let t = 1e-8;
+        // σ² ≈ β₀ t for tiny t.
+        let sig = s.sigma(t);
+        assert!((sig * sig / (0.1 * t) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn t_of_rho_inverts() {
+        let s = VpSde::default();
+        for i in 1..=20 {
+            let t = i as f64 / 20.0;
+            assert!((s.t_of_rho(s.rho(t)) - t).abs() < 1e-10);
+        }
+    }
+}

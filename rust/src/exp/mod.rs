@@ -1,0 +1,228 @@
+//! Experiment harness shared by examples/ and rust/benches/: dataset ground
+//! truth, model loading by name, solver-at-NFE runs, and quality rows.
+//! Every table/figure regenerator is a thin wrapper over this module
+//! (DESIGN.md §4 maps experiment ids to bench binaries).
+
+pub mod datasets;
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{ModelRegistry, SampleRequest};
+use crate::diffusion::Sde;
+use crate::gmm::Gmm;
+use crate::metrics;
+use crate::runtime::Runtime;
+use crate::score::{pjrt::PjrtEps, Counting, EpsModel, GmmEps, NativeMlp};
+use crate::solvers::{self, SolverKind};
+use crate::timegrid::{self, GridKind};
+use crate::util::rng::Rng;
+
+/// Build the standard serving registry. Backend per name:
+///   <ds>            PJRT artifact (the serving path)
+///   <ds>_native     rust-native MLP from weights json
+///   gmm2d_oracle    analytic GMM in rust (exact score)
+///   gmm2d_exact     analytic GMM via PJRT artifact
+pub fn default_registry(names: &[String]) -> Result<ModelRegistry> {
+    let mut reg = ModelRegistry::new();
+    for name in names {
+        match name.as_str() {
+            "gmm2d_oracle" => {
+                reg.insert(name, Arc::new(GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp())));
+            }
+            n if n.ends_with("_native") => {
+                let base = n.trim_end_matches("_native");
+                let rt = Runtime::global();
+                let path = rt.artifacts_dir().join(format!("weights_{base}.json"));
+                reg.insert(n, Arc::new(NativeMlp::load(&path.to_string_lossy())?));
+            }
+            "gmm2d_exact" => {
+                let rt = Runtime::global();
+                reg.insert(name, Arc::new(PjrtEps::load(rt, "gmm2d_exact", &[16, 256, 1024])?));
+            }
+            n => {
+                let rt = Runtime::global();
+                let batches: &[usize] =
+                    if n.starts_with("gmm2d") { &[16, 64, 256, 1024] } else { &[16, 256] };
+                reg.insert(n, Arc::new(PjrtEps::load(rt, n, batches)
+                    .with_context(|| format!("loading model '{n}'"))?));
+            }
+        }
+    }
+    Ok(reg)
+}
+
+/// Resolve a model backend by name for offline sweeps:
+///   "<ds>"         rust-native MLP (fast; used for the big tables)
+///   "gmm2d_oracle" exact analytic score
+/// PJRT variants are loaded by the serving paths (main.rs / serve_bench).
+pub fn sweep_model(name: &str) -> Box<dyn EpsModel> {
+    match name {
+        "gmm2d_oracle" | "toy1d_oracle" | "gmm2d_sharp_oracle" => {
+            let gmm = match name {
+                "toy1d_oracle" => Gmm::new(vec![vec![0.0]], 0.05),
+                "gmm2d_sharp_oracle" => Gmm::ring2d(4.0, 8, 0.02),
+                _ => Gmm::ring2d(4.0, 8, 0.25),
+            };
+            Box::new(GmmEps::new(gmm, Sde::vp()))
+        }
+        "gmm2d_oracle_ve" => Box::new(GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::ve())),
+        ds => Box::new(
+            NativeMlp::load(&format!("artifacts/weights_{ds}.json")).unwrap_or_else(|e| {
+                panic!("weights for '{ds}' missing — run `make artifacts` ({e:#})")
+            }),
+        ),
+    }
+}
+
+/// One sampling run: prior draw -> solver at the given NFE budget -> samples.
+/// Returns (samples, actual NFE spent).
+#[allow(clippy::too_many_arguments)]
+pub fn run_solver(
+    model: &dyn EpsModel,
+    sde: &Sde,
+    kind: SolverKind,
+    grid_kind: GridKind,
+    t0: f64,
+    nfe: usize,
+    n: usize,
+    seed: u64,
+) -> (Vec<f64>, usize) {
+    let steps = kind.steps_for_nfe(nfe);
+    let grid = timegrid::build(grid_kind, sde, t0, 1.0, steps);
+    let solver = solvers::build(kind, sde, &grid);
+    let counted = Counting::new(model);
+    let d = model.dim();
+    let mut rng = Rng::new(seed);
+    let mut x = vec![0.0; n * d];
+    let prior = sde.prior_std(1.0);
+    for v in x.iter_mut() {
+        *v = prior * rng.normal();
+    }
+    let mut srng = Rng::new(seed ^ 0xD1F_F051);
+    solver.sample(&counted, &mut x, n, &mut srng);
+    (x, counted.nfe())
+}
+
+/// Quality of a sample set vs dataset ground truth.
+#[derive(Clone, Copy, Debug)]
+pub struct Quality {
+    /// Sliced Wasserstein x1000 — the primary FID-substitute.
+    pub swd1000: f64,
+    pub mmd1000: f64,
+    pub energy: f64,
+}
+
+pub struct QualityEval {
+    truth: Vec<f64>,
+    /// Disjoint second truth draw for the finite-sample SWD baseline.
+    truth_b: Vec<f64>,
+    dim: usize,
+    /// Cache of same-distribution SWD^2 floor per generated-sample count.
+    floor: std::sync::Mutex<std::collections::HashMap<usize, f64>>,
+}
+
+impl QualityEval {
+    /// Ground truth for a dataset name ("gmm2d", "spiral2d", "img8", "toy1d").
+    pub fn new(dataset: &str, n_truth: usize) -> QualityEval {
+        let mut rng = Rng::new(0xDA7A);
+        let (truth, dim) = datasets::sample(dataset, n_truth, &mut rng);
+        let (truth_b, _) = datasets::sample(dataset, n_truth, &mut rng);
+        QualityEval { truth, truth_b, dim, floor: Default::default() }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Finite-sample SWD between n exact samples and the reference — the
+    /// same-distribution floor that would otherwise dominate high-NFE cells.
+    fn swd_floor(&self, n: usize) -> f64 {
+        let key = n.min(self.truth_b.len() / self.dim);
+        if let Some(&f) = self.floor.lock().unwrap().get(&key) {
+            return f;
+        }
+        let mut rng = Rng::new(0xF100);
+        let probe = &self.truth_b[..key * self.dim];
+        let f = metrics::sliced_wasserstein(probe, &self.truth, self.dim, 96, &mut rng);
+        self.floor.lock().unwrap().insert(key, f);
+        f
+    }
+
+    pub fn score(&self, samples: &[f64]) -> Quality {
+        let mut rng = Rng::new(0x5EED);
+        let raw = metrics::sliced_wasserstein(samples, &self.truth, self.dim, 96, &mut rng);
+        let floor = self.swd_floor(samples.len() / self.dim);
+        // Debias in squared space (independent error contributions add).
+        let swd = (raw * raw - floor * floor).max(0.0).sqrt();
+        Quality {
+            swd1000: 1000.0 * swd,
+            mmd1000: 1000.0 * metrics::mmd2_rbf(samples, &self.truth, self.dim, 384, &mut rng),
+            energy: metrics::energy_distance(samples, &self.truth, self.dim, 384, &mut rng),
+        }
+    }
+}
+
+/// Convenience: SampleRequest matching a sweep row (used by serving examples).
+pub fn request_for(model: &str, kind: SolverKind, nfe: usize, n: usize, seed: u64)
+    -> SampleRequest {
+    let mut req = SampleRequest::new(model, kind, nfe, n);
+    req.seed = seed;
+    req
+}
+
+/// Fixed-width table printing in the paper's layout.
+pub fn print_table(title: &str, header: &[String], rows: &[(String, Vec<f64>)]) {
+    println!("\n=== {title} ===");
+    print!("{:<12}", "");
+    for h in header {
+        print!("{h:>12}");
+    }
+    println!();
+    for (name, vals) in rows {
+        print!("{name:<12}");
+        for v in vals {
+            if v.is_nan() {
+                print!("{:>12}", "-");
+            } else {
+                print!("{v:>12.2}");
+            }
+        }
+        println!();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_solver_respects_nfe_budget() {
+        let model = sweep_model("gmm2d_oracle");
+        let sde = Sde::vp();
+        for kind in [SolverKind::Tab(3), SolverKind::RhoHeun, SolverKind::RhoRk4] {
+            let (x, nfe) = run_solver(&*model, &sde, kind, GridKind::Quadratic, 1e-3, 12, 8, 1);
+            assert_eq!(x.len(), 16);
+            assert!(nfe <= 12, "{:?} spent {nfe} > 12", kind);
+            assert!(nfe >= 12 - 3, "{:?} spent only {nfe}", kind);
+        }
+    }
+
+    #[test]
+    fn quality_improves_with_nfe() {
+        let model = sweep_model("gmm2d_oracle");
+        let sde = Sde::vp();
+        let eval = QualityEval::new("gmm2d", 4000);
+        // Energy distance: unbiased, so it discriminates even below the
+        // (debiased-to-zero) SWD floor.
+        let q = |nfe: usize| {
+            let (x, _) =
+                run_solver(&*model, &sde, SolverKind::Tab(3), GridKind::Quadratic, 1e-3, nfe,
+                    1500, 3);
+            eval.score(&x).energy
+        };
+        let (coarse, fine) = (q(3), q(40));
+        assert!(fine < coarse, "energy at nfe40 ({fine}) should beat nfe3 ({coarse})");
+    }
+}

@@ -1,0 +1,36 @@
+//! # DEIS — Diffusion Exponential Integrator Sampler
+//!
+//! Production-shaped reproduction of *"Fast Sampling of Diffusion Models
+//! with Exponential Integrator"* (Zhang & Chen, ICLR 2023) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the sampling service: solver library (every DEIS
+//!   variant + every baseline the paper compares), coefficient machinery,
+//!   time grids, dynamic-batching coordinator, PJRT runtime, metrics, NLL.
+//! * **L2 (python/compile, build-time only)** — the ε-model in JAX, trained
+//!   on synthetic datasets and AOT-lowered to HLO text artifacts.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the hot spots
+//!   (fused residual block, time embed, DEIS combine), interpret-mode.
+//!
+//! Python never runs on the request path: `Runtime` loads `artifacts/*.hlo.txt`
+//! through PJRT and the coordinator serves batched sampling requests from
+//! pure rust. See DESIGN.md for the experiment index and substitutions.
+
+pub mod coordinator;
+pub mod diffusion;
+pub mod exp;
+pub mod gmm;
+pub mod likelihood;
+pub mod metrics;
+pub mod quad;
+pub mod runtime;
+pub mod score;
+pub mod server;
+pub mod solvers;
+pub mod tensor;
+pub mod timegrid;
+pub mod util;
+
+pub use diffusion::Sde;
+pub use solvers::{Solver, SolverKind};
+pub use timegrid::GridKind;

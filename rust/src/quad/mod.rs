@@ -1,0 +1,204 @@
+//! Numerical machinery for the DEIS coefficients:
+//!   * Gauss–Legendre quadrature (for the C_ij integrals of Eq. (15) — the
+//!     paper: "1-dimensional integrations ... easy to evaluate numerically")
+//!   * Lagrange basis polynomials (the P_r(t) extrapolation of Eq. (13))
+//!
+//! Coefficients are computed once per (sde, grid, order) and reused across
+//! batches; this module is off the hot path.
+
+/// 32-point Gauss–Legendre nodes/weights on [-1, 1] (computed at first use by
+/// Newton iteration on P_32 — avoids a 64-constant table and is exact to
+/// f64 precision).
+pub fn gauss_legendre(n: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut nodes = vec![0.0; n];
+    let mut weights = vec![0.0; n];
+    let m = n.div_ceil(2);
+    for i in 0..m {
+        // Initial guess (Abramowitz & Stegun 25.4.30ish).
+        let mut x = (std::f64::consts::PI * (i as f64 + 0.75) / (n as f64 + 0.5)).cos();
+        for _ in 0..100 {
+            let (p, dp) = legendre_and_deriv(n, x);
+            let dx = p / dp;
+            x -= dx;
+            if dx.abs() < 1e-15 {
+                break;
+            }
+        }
+        let (_, dp) = legendre_and_deriv(n, x);
+        let w = 2.0 / ((1.0 - x * x) * dp * dp);
+        nodes[i] = -x;
+        nodes[n - 1 - i] = x;
+        weights[i] = w;
+        weights[n - 1 - i] = w;
+    }
+    (nodes, weights)
+}
+
+/// (P_n(x), P_n'(x)) by the three-term recurrence.
+fn legendre_and_deriv(n: usize, x: f64) -> (f64, f64) {
+    let (mut p0, mut p1) = (1.0, x);
+    for k in 2..=n {
+        let kf = k as f64;
+        let p2 = ((2.0 * kf - 1.0) * x * p1 - (kf - 1.0) * p0) / kf;
+        p0 = p1;
+        p1 = p2;
+    }
+    let dp = n as f64 * (x * p1 - p0) / (x * x - 1.0);
+    (p1, dp)
+}
+
+/// Precomputed quadrature rule on [-1, 1], mappable to any interval.
+#[derive(Clone, Debug)]
+pub struct Quadrature {
+    nodes: Vec<f64>,
+    weights: Vec<f64>,
+}
+
+impl Quadrature {
+    pub fn gauss(n: usize) -> Quadrature {
+        let (nodes, weights) = gauss_legendre(n);
+        Quadrature { nodes, weights }
+    }
+
+    /// Signed integral of f over [lo, hi] (hi < lo gives the negative).
+    pub fn integrate<F: Fn(f64) -> f64>(&self, f: F, lo: f64, hi: f64) -> f64 {
+        let mid = 0.5 * (lo + hi);
+        let half = 0.5 * (hi - lo);
+        let mut acc = 0.0;
+        for (x, w) in self.nodes.iter().zip(&self.weights) {
+            acc += w * f(mid + half * x);
+        }
+        half * acc
+    }
+
+    /// Panelled integration: split [lo, hi] into `panels` equal pieces (for
+    /// integrands with fast-varying weight near t -> 0).
+    pub fn integrate_panels<F: Fn(f64) -> f64>(&self, f: F, lo: f64, hi: f64, panels: usize) -> f64 {
+        let mut acc = 0.0;
+        let h = (hi - lo) / panels as f64;
+        for p in 0..panels {
+            let a = lo + p as f64 * h;
+            acc += self.integrate(&f, a, a + h);
+        }
+        acc
+    }
+}
+
+/// Evaluate the j-th Lagrange basis over `nodes` at `x` (Eq. (13) factor).
+pub fn lagrange_basis(nodes: &[f64], j: usize, x: f64) -> f64 {
+    let mut out = 1.0;
+    for (k, &nk) in nodes.iter().enumerate() {
+        if k != j {
+            out *= (x - nk) / (nodes[j] - nk);
+        }
+    }
+    out
+}
+
+/// Exact ∫_{lo}^{hi} ℓ_j(x) dx via the monomial expansion of the basis
+/// polynomial (degree ≤ 3 here, so this is well-conditioned). Used for the
+/// ρAB coefficients where the integrand is exactly polynomial.
+pub fn lagrange_basis_integral(nodes: &[f64], j: usize, lo: f64, hi: f64) -> f64 {
+    // Build the coefficients of ℓ_j as a polynomial (lowest degree first).
+    let mut coef = vec![1.0];
+    let mut denom = 1.0;
+    for (k, &nk) in nodes.iter().enumerate() {
+        if k == j {
+            continue;
+        }
+        denom *= nodes[j] - nk;
+        // multiply coef by (x - nk)
+        let mut next = vec![0.0; coef.len() + 1];
+        for (d, &c) in coef.iter().enumerate() {
+            next[d + 1] += c;
+            next[d] -= c * nk;
+        }
+        coef = next;
+    }
+    let mut acc = 0.0;
+    for (d, &c) in coef.iter().enumerate() {
+        let p = (d + 1) as f64;
+        acc += c / p * (hi.powf(p) - lo.powf(p));
+    }
+    acc / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    #[test]
+    fn gauss_exact_for_high_degree_polys() {
+        // n-point GL is exact for degree <= 2n-1.
+        let q = Quadrature::gauss(8);
+        // f = x^15 on [0, 1]: integral = 1/16.
+        let got = q.integrate(|x| x.powi(15), 0.0, 1.0);
+        assert!((got - 1.0 / 16.0).abs() < 1e-14, "{got}");
+    }
+
+    #[test]
+    fn gauss_weights_sum_to_two() {
+        for n in [4, 8, 16, 32] {
+            let (_, w) = gauss_legendre(n);
+            let s: f64 = w.iter().sum();
+            assert!((s - 2.0).abs() < 1e-13, "n={n} sum={s}");
+        }
+    }
+
+    #[test]
+    fn integrate_signed_direction() {
+        let q = Quadrature::gauss(8);
+        let a = q.integrate(|x| x * x, 0.0, 1.0);
+        let b = q.integrate(|x| x * x, 1.0, 0.0);
+        assert!((a + b).abs() < 1e-15);
+        assert!((a - 1.0 / 3.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn panels_match_single_for_smooth() {
+        let q = Quadrature::gauss(16);
+        let f = |x: f64| (5.0 * x).sin() * (-x).exp();
+        let one = q.integrate(f, 0.0, 2.0);
+        let four = q.integrate_panels(f, 0.0, 2.0, 4);
+        assert!((one - four).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lagrange_partition_of_unity() {
+        run_prop("lagrange unity", 3, 50, |rng| {
+            let n = 1 + rng.below(4);
+            let mut nodes: Vec<f64> = (0..=n).map(|i| i as f64 + 0.3 * rng.uniform()).collect();
+            nodes.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+            let x = rng.uniform_in(-1.0, (nodes.len() + 1) as f64);
+            let s: f64 = (0..nodes.len()).map(|j| lagrange_basis(&nodes, j, x)).sum();
+            assert!((s - 1.0).abs() < 1e-9, "sum {s}");
+        });
+    }
+
+    #[test]
+    fn lagrange_interpolates_nodes() {
+        let nodes = [0.1, 0.5, 0.9, 1.4];
+        for j in 0..4 {
+            for (k, &nk) in nodes.iter().enumerate() {
+                let v = lagrange_basis(&nodes, j, nk);
+                let want = if j == k { 1.0 } else { 0.0 };
+                assert!((v - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn basis_integral_matches_quadrature() {
+        run_prop("basis integral", 11, 50, |rng| {
+            let n = 1 + rng.below(4);
+            let nodes: Vec<f64> =
+                (0..n).map(|i| i as f64 * 0.7 + rng.uniform_in(0.01, 0.3)).collect();
+            let j = rng.below(n);
+            let (lo, hi) = (rng.uniform_in(-1.0, 0.5), rng.uniform_in(0.5, 2.0));
+            let exact = lagrange_basis_integral(&nodes, j, lo, hi);
+            let q = Quadrature::gauss(16).integrate(|x| lagrange_basis(&nodes, j, x), lo, hi);
+            assert!((exact - q).abs() < 1e-10, "{exact} vs {q}");
+        });
+    }
+}

@@ -1,0 +1,242 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from the L3
+//! hot path. Adapts /opt/xla-example/load_hlo — HLO *text* is the
+//! interchange format (xla_extension 0.5.1 rejects jax>=0.5 serialized
+//! protos with 64-bit instruction ids; the text parser reassigns ids).
+//!
+//! Threading: the `xla` crate's client/executable types are `!Send` (Rc +
+//! raw pointers), so a dedicated executor thread owns every xla object and
+//! the rest of the process talks to it over channels. Execution is thereby
+//! serialized at the dispatch level — fine on CPU, where PJRT parallelizes
+//! *inside* a single execute call via its own thread pool; the coordinator's
+//! dynamic batching keeps that one stream saturated.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{anyhow, bail, Result};
+
+enum Cmd {
+    Load { path: PathBuf, reply: Sender<Result<usize>> },
+    Run { id: usize, x: Vec<f32>, dims: [usize; 2], t: Vec<f32>, reply: Sender<Result<Vec<Vec<f32>>>> },
+    Platform { reply: Sender<String> },
+}
+
+/// Process-wide runtime handle (cheap to clone through `Arc`).
+pub struct Runtime {
+    tx: Mutex<Sender<Cmd>>,
+    cache: Mutex<HashMap<(PathBuf, usize), Arc<EpsExecutable>>>,
+    artifacts_dir: PathBuf,
+}
+
+static GLOBAL: OnceLock<Runtime> = OnceLock::new();
+
+impl Runtime {
+    pub fn new(artifacts_dir: &str) -> Result<Runtime> {
+        let (tx, rx) = channel();
+        let (ready_tx, ready_rx) = channel();
+        std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || executor_thread(rx, ready_tx))?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("pjrt executor died during init"))?
+            .map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Runtime {
+            tx: Mutex::new(tx),
+            cache: Mutex::new(HashMap::new()),
+            artifacts_dir: PathBuf::from(artifacts_dir),
+        })
+    }
+
+    /// Global runtime rooted at $DEIS_ARTIFACTS (default "artifacts").
+    pub fn global() -> &'static Runtime {
+        GLOBAL.get_or_init(|| {
+            let dir = std::env::var("DEIS_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+            Runtime::new(&dir).expect("PJRT CPU client init")
+        })
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    pub fn platform(&self) -> String {
+        let (reply, rx) = channel();
+        self.send(Cmd::Platform { reply });
+        rx.recv().unwrap_or_else(|_| "dead".into())
+    }
+
+    fn send(&self, cmd: Cmd) {
+        self.tx.lock().unwrap().send(cmd).expect("pjrt executor gone");
+    }
+
+    /// Load + compile an eps artifact (cached by path). `outputs` is the
+    /// tuple arity (1 for eps, 2 for epsdiv).
+    pub fn load_eps(&self, file: &str, batch: usize, dim: usize, outputs: usize)
+        -> Result<Arc<EpsExecutable>> {
+        let path = self.artifacts_dir.join(file);
+        let key = (path.clone(), outputs);
+        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            return Ok(hit.clone());
+        }
+        let (reply, rx) = channel();
+        self.send(Cmd::Load { path: path.clone(), reply });
+        let id = rx.recv().map_err(|_| anyhow!("pjrt executor gone"))??;
+        let wrapped = Arc::new(EpsExecutable {
+            rt_tx: Mutex::new(self.tx.lock().unwrap().clone()),
+            id,
+            batch,
+            dim,
+            outputs,
+            file: file.to_string(),
+        });
+        self.cache.lock().unwrap().insert(key, wrapped.clone());
+        Ok(wrapped)
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+fn executor_thread(rx: Receiver<Cmd>, ready: Sender<std::result::Result<(), String>>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:?}")));
+            return;
+        }
+    };
+    let mut exes: Vec<xla::PjRtLoadedExecutable> = Vec::new();
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Platform { reply } => {
+                let _ = reply.send(client.platform_name());
+            }
+            Cmd::Load { path, reply } => {
+                let result = (|| -> Result<usize> {
+                    let pstr = path.to_string_lossy().to_string();
+                    let proto = xla::HloModuleProto::from_text_file(&pstr)
+                        .map_err(|e| anyhow!("parsing HLO text {pstr}: {e:?}"))?;
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    let exe = client
+                        .compile(&comp)
+                        .map_err(|e| anyhow!("compiling {pstr}: {e:?}"))?;
+                    exes.push(exe);
+                    Ok(exes.len() - 1)
+                })();
+                let _ = reply.send(result);
+            }
+            Cmd::Run { id, x, dims, t, reply } => {
+                let result = (|| -> Result<Vec<Vec<f32>>> {
+                    let exe = exes.get(id).ok_or_else(|| anyhow!("bad exe id {id}"))?;
+                    let xl = xla::Literal::vec1(&x)
+                        .reshape(&[dims[0] as i64, dims[1] as i64])
+                        .map_err(|e| anyhow!("reshape x: {e:?}"))?;
+                    let tl = xla::Literal::vec1(&t);
+                    let out = exe
+                        .execute::<xla::Literal>(&[xl, tl])
+                        .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+                    // Lowered with return_tuple=True: unwrap the tuple.
+                    let parts = out.to_tuple().map_err(|e| anyhow!("tuple: {e:?}"))?;
+                    parts
+                        .into_iter()
+                        .map(|lit| lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+                        .collect()
+                })();
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+/// A compiled (model, batch-size) entry point: eps = f(x[B,D], t[B]).
+pub struct EpsExecutable {
+    /// Channel to the executor thread (std Sender is !Sync, hence the mutex).
+    rt_tx: Mutex<Sender<Cmd>>,
+    id: usize,
+    pub batch: usize,
+    pub dim: usize,
+    pub outputs: usize,
+    pub file: String,
+}
+
+impl EpsExecutable {
+    /// Execute on exactly `self.batch` rows (f32 at the PJRT boundary).
+    /// Returns `outputs` flat vectors (eps [B*D]; epsdiv adds div [B]).
+    pub fn run(&self, x: &[f32], t: &[f32]) -> Result<Vec<Vec<f32>>> {
+        if x.len() != self.batch * self.dim || t.len() != self.batch {
+            bail!(
+                "artifact {} expects x[{}x{}], t[{}]; got x[{}], t[{}]",
+                self.file, self.batch, self.dim, self.batch, x.len(), t.len()
+            );
+        }
+        let (reply, rx) = channel();
+        self.rt_tx
+            .lock()
+            .unwrap()
+            .send(Cmd::Run {
+                id: self.id,
+                x: x.to_vec(),
+                dims: [self.batch, self.dim],
+                t: t.to_vec(),
+                reply,
+            })
+            .map_err(|_| anyhow!("pjrt executor gone"))?;
+        let parts = rx.recv().map_err(|_| anyhow!("pjrt executor gone"))??;
+        if parts.len() != self.outputs {
+            bail!("artifact {}: expected {} outputs, got {}", self.file, self.outputs,
+                parts.len());
+        }
+        Ok(parts)
+    }
+
+    /// f64-boundary convenience used by the solvers (math runs in f64, the
+    /// network is f32 — conversion cost is measured in perf_hotpath).
+    pub fn run_f64(&self, x: &[f64], t: &[f64]) -> Result<Vec<Vec<f64>>> {
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let tf: Vec<f32> = t.iter().map(|&v| v as f32).collect();
+        Ok(self
+            .run(&xf, &tf)?
+            .into_iter()
+            .map(|v| v.into_iter().map(|x| x as f64).collect())
+            .collect())
+    }
+}
+
+/// Resolve the best artifact batch size >= n (or the max available).
+pub fn pick_batch(available: &[usize], n: usize) -> usize {
+    let mut sorted = available.to_vec();
+    sorted.sort_unstable();
+    for &b in &sorted {
+        if b >= n {
+            return b;
+        }
+    }
+    *sorted.last().expect("no batch sizes")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_batch_prefers_smallest_fit() {
+        let avail = [16, 64, 256, 1024];
+        assert_eq!(pick_batch(&avail, 1), 16);
+        assert_eq!(pick_batch(&avail, 16), 16);
+        assert_eq!(pick_batch(&avail, 17), 64);
+        assert_eq!(pick_batch(&avail, 1000), 1024);
+        assert_eq!(pick_batch(&avail, 5000), 1024);
+    }
+
+    // PJRT-touching tests live in rust/tests/pjrt_integration.rs (they need
+    // artifacts/ built).
+}

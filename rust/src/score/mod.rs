@@ -1,0 +1,118 @@
+//! The eps-model abstraction (the paper's ε_θ) and its backends.
+//!
+//! Solvers are written against `EpsModel` only; the same tAB-DEIS plan runs
+//! against the PJRT-compiled network (serving), the rust-native MLP
+//! (sweeps + cross-check), or the analytic GMM oracle (exact-score studies).
+
+mod native;
+pub mod pjrt;
+
+pub use native::NativeMlp;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::diffusion::Sde;
+use crate::gmm::Gmm;
+
+/// Batched ε_θ(x, t). `x` is row-major [b * dim], `t` is [b]; result is
+/// written into `out` ([b * dim]).
+pub trait EpsModel: Send + Sync {
+    fn dim(&self) -> usize;
+    fn eval(&self, x: &[f64], t: &[f64], b: usize, out: &mut [f64]);
+
+    /// Convenience allocating wrapper.
+    fn eval_vec(&self, x: &[f64], t: &[f64], b: usize) -> Vec<f64> {
+        let mut out = vec![0.0; b * self.dim()];
+        self.eval(x, t, b, &mut out);
+        out
+    }
+}
+
+/// Exact GMM oracle as an `EpsModel` (fixed SDE baked in).
+pub struct GmmEps {
+    pub gmm: Gmm,
+    pub sde: Sde,
+}
+
+impl GmmEps {
+    pub fn new(gmm: Gmm, sde: Sde) -> Self {
+        GmmEps { gmm, sde }
+    }
+}
+
+impl EpsModel for GmmEps {
+    fn dim(&self) -> usize {
+        self.gmm.dim()
+    }
+
+    fn eval(&self, x: &[f64], t: &[f64], b: usize, out: &mut [f64]) {
+        self.gmm.eps(&self.sde, x, t, b, out);
+    }
+}
+
+/// NFE-counting wrapper — every table in the paper is indexed by NFE, so the
+/// harness wraps models with this and asserts the budget was respected.
+pub struct Counting<'a> {
+    pub inner: &'a dyn EpsModel,
+    count: AtomicUsize,
+}
+
+impl<'a> Counting<'a> {
+    pub fn new(inner: &'a dyn EpsModel) -> Self {
+        Counting { inner, count: AtomicUsize::new(0) }
+    }
+
+    /// Number of *model calls* so far (one batched eval = 1 NFE, matching the
+    /// paper's counting: NFE is per-trajectory network evaluations).
+    pub fn nfe(&self) -> usize {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.count.store(0, Ordering::Relaxed);
+    }
+}
+
+impl EpsModel for Counting<'_> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn eval(&self, x: &[f64], t: &[f64], b: usize, out: &mut [f64]) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.inner.eval(x, t, b, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counting_counts() {
+        let gmm = Gmm::ring2d(4.0, 8, 0.25);
+        let model = GmmEps::new(gmm, Sde::vp());
+        let counted = Counting::new(&model);
+        let x = vec![0.5, -0.5, 1.0, 2.0];
+        let t = vec![0.5, 0.5];
+        let mut out = vec![0.0; 4];
+        counted.eval(&x, &t, 2, &mut out);
+        counted.eval(&x, &t, 2, &mut out);
+        assert_eq!(counted.nfe(), 2);
+        counted.reset();
+        assert_eq!(counted.nfe(), 0);
+    }
+
+    #[test]
+    fn gmm_eps_model_delegates() {
+        let gmm = Gmm::ring2d(4.0, 8, 0.25);
+        let sde = Sde::vp();
+        let model = GmmEps::new(gmm.clone(), sde);
+        let x = vec![1.0, 0.0];
+        let t = vec![0.3];
+        let got = model.eval_vec(&x, &t, 1);
+        let mut want = vec![0.0; 2];
+        gmm.eps(&sde, &x, &t, 1, &mut want);
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,206 @@
+//! Rust-native forward pass of the trained eps-net (weights_*.json).
+//!
+//! Mirrors python/compile/model.py::apply_eps exactly (same sinusoidal
+//! embedding, same tanh-GELU). Used to (a) cross-check PJRT numerics against
+//! an independent implementation (checks_*.json fixtures) and (b) drive the
+//! big table sweeps without PJRT dispatch overhead.
+
+use anyhow::{Context, Result};
+
+use crate::score::EpsModel;
+use crate::tensor::{add_bias_inplace, add_inplace, gelu_inplace, matmul_bias_into, Mat};
+use crate::util::json::Json;
+
+const TIME_SCALE: f64 = 1000.0; // keep in sync with kernels/ref.py
+
+struct Block {
+    w1: Mat,
+    b1: Vec<f64>,
+    u: Mat,
+    w2: Mat,
+    b2: Vec<f64>,
+}
+
+pub struct NativeMlp {
+    dim: usize,
+    embed: usize,
+    w_in: Mat,
+    b_in: Vec<f64>,
+    w_out: Mat,
+    b_out: Vec<f64>,
+    blocks: Vec<Block>,
+    freqs: Vec<f64>,
+}
+
+impl NativeMlp {
+    pub fn load(path: &str) -> Result<NativeMlp> {
+        let root = Json::from_file(path)?;
+        Self::from_json(&root).with_context(|| format!("weights file {path}"))
+    }
+
+    pub fn from_json(root: &Json) -> Result<NativeMlp> {
+        let dim = root.get("dim")?.as_usize()?;
+        let embed = root.get("embed")?.as_usize()?;
+        let p = root.get("params")?;
+        let mat = |v: &Json| -> Result<Mat> {
+            let (r, c, data) = v.as_matrix()?;
+            Ok(Mat::from_rows(r, c, data))
+        };
+        let mut blocks = Vec::new();
+        for blk in p.get("blocks")?.as_arr()? {
+            blocks.push(Block {
+                w1: mat(blk.get("w1")?)?,
+                b1: blk.get("b1")?.as_f64_vec()?,
+                u: mat(blk.get("u")?)?,
+                w2: mat(blk.get("w2")?)?,
+                b2: blk.get("b2")?.as_f64_vec()?,
+            });
+        }
+        let half = embed / 2;
+        let freqs = (0..half)
+            .map(|i| (-(10000.0f64).ln() * i as f64 / half as f64).exp())
+            .collect();
+        Ok(NativeMlp {
+            dim,
+            embed,
+            w_in: mat(p.get("w_in")?)?,
+            b_in: p.get("b_in")?.as_f64_vec()?,
+            w_out: mat(p.get("w_out")?)?,
+            b_out: p.get("b_out")?.as_f64_vec()?,
+            blocks,
+            freqs,
+        })
+    }
+
+    pub fn hidden(&self) -> usize {
+        self.w_in.cols
+    }
+
+    fn time_embed(&self, t: &[f64]) -> Mat {
+        let half = self.embed / 2;
+        let mut e = Mat::zeros(t.len(), self.embed);
+        for (r, &tv) in t.iter().enumerate() {
+            let row = e.row_mut(r);
+            for (i, &f) in self.freqs.iter().enumerate() {
+                let ang = TIME_SCALE * tv * f;
+                row[i] = ang.sin();
+                row[half + i] = ang.cos();
+            }
+        }
+        e
+    }
+}
+
+impl NativeMlp {
+    /// Full forward for a contiguous slice of the batch (single-threaded).
+    fn forward_rows(&self, x: &[f64], t: &[f64], b: usize, out: &mut [f64]) {
+        let xm = Mat::from_rows(b, self.dim, x.to_vec());
+        let e = self.time_embed(t);
+        let h_dim = self.hidden();
+        let mut h = Mat::zeros(b, h_dim);
+        matmul_bias_into(&xm, &self.w_in, &self.b_in, &mut h);
+        let zero_bias = vec![0.0; h_dim];
+        let mut z = Mat::zeros(b, h_dim);
+        let mut zu = Mat::zeros(b, h_dim);
+        let mut upd = Mat::zeros(b, h_dim);
+        for blk in &self.blocks {
+            // z = h @ w1 + b1 + e @ u
+            matmul_bias_into(&h, &blk.w1, &blk.b1, &mut z);
+            matmul_bias_into(&e, &blk.u, &zero_bias, &mut zu);
+            add_inplace(&mut z, &zu);
+            gelu_inplace(&mut z);
+            // h += gelu(z) @ w2 + b2
+            matmul_bias_into(&z, &blk.w2, &blk.b2, &mut upd);
+            add_inplace(&mut h, &upd);
+        }
+        let mut o = Mat::zeros(b, self.dim);
+        matmul_bias_into(&h, &self.w_out, &self.b_out, &mut o);
+        out.copy_from_slice(&o.data);
+        let _ = add_bias_inplace; // (kept for symmetry; bias handled in matmul)
+    }
+}
+
+impl EpsModel for NativeMlp {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn eval(&self, x: &[f64], t: &[f64], b: usize, out: &mut [f64]) {
+        // Batch rows are independent: fan the whole forward out across
+        // scoped threads ONCE per eval (one spawn set amortized over the
+        // full 9-matmul chain — §Perf iteration 2).
+        let d = self.dim;
+        let flops = 2 * b * self.hidden() * self.hidden() * (2 * self.blocks.len() + 1);
+        let threads = if flops > 1 << 22 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(8)
+        } else {
+            1
+        };
+        if threads <= 1 || b < 2 * threads {
+            self.forward_rows(x, t, b, out);
+            return;
+        }
+        let chunk_rows = b.div_ceil(threads);
+        std::thread::scope(|s| {
+            let mut rest = &mut *out;
+            let mut row0 = 0;
+            while row0 < b {
+                let rows = chunk_rows.min(b - row0);
+                let (head, tail) = rest.split_at_mut(rows * d);
+                rest = tail;
+                let xs = &x[row0 * d..(row0 + rows) * d];
+                let ts = &t[row0..row0 + rows];
+                s.spawn(move || self.forward_rows(xs, ts, rows, head));
+                row0 += rows;
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-built one-block net with identity-ish weights; oracle computed
+    /// by transcribing the python math by hand.
+    #[test]
+    fn forward_matches_hand_computation() {
+        let json = r#"{
+          "dim": 1, "hidden": 2, "embed": 2, "n_blocks": 1,
+          "params": {
+            "w_in": [[1.0, 2.0]], "b_in": [0.1, -0.1],
+            "w_out": [[1.0], [1.0]], "b_out": [0.5],
+            "blocks": [{
+              "w1": [[1.0, 0.0], [0.0, 1.0]], "b1": [0.0, 0.0],
+              "u":  [[0.0, 0.0], [0.0, 0.0]],
+              "w2": [[1.0, 0.0], [0.0, 1.0]], "b2": [0.0, 0.0]
+            }]
+          }
+        }"#;
+        let net = NativeMlp::from_json(&Json::parse(json).unwrap()).unwrap();
+        let x = [2.0];
+        let t = [0.0];
+        let mut out = [0.0];
+        net.eval(&x, &t, 1, &mut out);
+        // h = [2.1, 3.9]; block: h + gelu(h) = [2.1+gelu(2.1), 3.9+gelu(3.9)]
+        let g = |v: f64| crate::tensor::gelu(v);
+        let want = (2.1 + g(2.1)) + (3.9 + g(3.9)) + 0.5;
+        assert!((out[0] - want).abs() < 1e-12, "{} vs {}", out[0], want);
+    }
+
+    #[test]
+    fn time_embed_matches_formula() {
+        let json = r#"{
+          "dim": 1, "hidden": 1, "embed": 4, "n_blocks": 0,
+          "params": {"w_in": [[1.0]], "b_in": [0.0], "w_out": [[1.0]],
+                     "b_out": [0.0], "blocks": []}
+        }"#;
+        let net = NativeMlp::from_json(&Json::parse(json).unwrap()).unwrap();
+        let e = net.time_embed(&[0.001]);
+        // freqs = [1, exp(-ln(1e4)/2)] = [1, 0.01]; ang = [1.0, 0.01]
+        assert!((e.data[0] - 1.0f64.sin()).abs() < 1e-12);
+        assert!((e.data[1] - 0.01f64.sin()).abs() < 1e-12);
+        assert!((e.data[2] - 1.0f64.cos()).abs() < 1e-12);
+        assert!((e.data[3] - 0.01f64.cos()).abs() < 1e-12);
+    }
+}

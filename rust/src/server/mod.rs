@@ -1,0 +1,222 @@
+//! Line-JSON TCP front end for the coordinator (std::net; tokio is not in
+//! the offline registry — one thread per connection, which is plenty for a
+//! sampling service whose unit of work is a whole diffusion trajectory).
+//!
+//! Wire protocol, one JSON object per line:
+//!   -> {"model":"gmm2d","solver":"tab3","grid":"quadratic","nfe":10,
+//!       "n":256,"seed":1,"t0":1e-3,"sde":"vp","return_samples":false}
+//!   <- {"ok":true,"n":256,"dim":2,"nfe":10,"merged_with":3,
+//!       "queue_us":120,"solve_us":5300,"samples":[...]?}
+//!   -> {"cmd":"stats"}            <- {"ok":true,"requests":...}
+//!   -> {"cmd":"models"}           <- {"ok":true,"models":[...]}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{Coordinator, SampleRequest};
+use crate::diffusion::Sde;
+use crate::solvers::SolverKind;
+use crate::timegrid::GridKind;
+use crate::util::json::Json;
+
+/// Parse a request line into a SampleRequest.
+pub fn parse_request(v: &Json) -> Result<SampleRequest> {
+    let model = v.get("model")?.as_str()?.to_string();
+    let solver = SolverKind::parse(v.get("solver")?.as_str()?)
+        .with_context(|| "unknown solver")?;
+    let sde = match v.opt("sde").map(|s| s.as_str()).transpose()?.unwrap_or("vp") {
+        "vp" => Sde::vp(),
+        "ve" => Sde::ve(),
+        other => bail!("unknown sde '{other}'"),
+    };
+    let grid = match v.opt("grid") {
+        Some(g) => GridKind::parse(g.as_str()?).with_context(|| "unknown grid")?,
+        None => GridKind::Quadratic,
+    };
+    let mut req = SampleRequest::new(&model, solver, v.get("nfe")?.as_usize()?,
+        v.get("n")?.as_usize()?);
+    req.sde = sde;
+    req.grid = grid;
+    req.t0 = v.opt("t0").map(|x| x.as_f64()).transpose()?.unwrap_or(sde.t0_default());
+    req.seed = v.opt("seed").map(|x| x.as_f64()).transpose()?.unwrap_or(0.0) as u64;
+    Ok(req)
+}
+
+fn handle_line(coord: &Coordinator, line: &str) -> String {
+    let reply = (|| -> Result<Json> {
+        let v = Json::parse(line)?;
+        if let Some(cmd) = v.opt("cmd") {
+            return match cmd.as_str()? {
+                "stats" => {
+                    let s = coord.stats();
+                    Ok(Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("requests", Json::num(s.requests as f64)),
+                        ("completed", Json::num(s.completed as f64)),
+                        ("samples", Json::num(s.samples as f64)),
+                        ("batches", Json::num(s.batches as f64)),
+                        ("merged_requests", Json::num(s.merged_requests as f64)),
+                        ("p50_us", Json::num(s.p50_us as f64)),
+                        ("p99_us", Json::num(s.p99_us as f64)),
+                    ]))
+                }
+                "models" => Ok(Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    (
+                        "models",
+                        Json::Arr(coord.models().iter().map(|m| Json::str(m)).collect()),
+                    ),
+                ])),
+                other => bail!("unknown cmd '{other}'"),
+            };
+        }
+        let return_samples =
+            v.opt("return_samples").map(|b| b.as_bool()).transpose()?.unwrap_or(false);
+        let req = parse_request(&v)?;
+        let n = req.n_samples;
+        let res = coord.sample_blocking(req)?;
+        let mut fields = vec![
+            ("ok", Json::Bool(true)),
+            ("n", Json::num(n as f64)),
+            ("dim", Json::num(res.dim as f64)),
+            ("nfe", Json::num(res.nfe as f64)),
+            ("merged_with", Json::num(res.merged_with as f64)),
+            ("queue_us", Json::num(res.queue_us as f64)),
+            ("solve_us", Json::num(res.solve_us as f64)),
+        ];
+        if return_samples {
+            fields.push(("samples", Json::arr_f64(&res.samples)));
+        }
+        Ok(Json::obj(fields))
+    })();
+    match reply {
+        Ok(j) => j.to_string(),
+        Err(e) => Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("error", Json::str(&format!("{e:#}"))),
+        ])
+        .to_string(),
+    }
+}
+
+/// Serve until the process dies. Returns the bound address (port 0 allowed).
+pub fn serve(coord: Arc<Coordinator>, addr: &str) -> Result<std::net::SocketAddr> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    std::thread::spawn(move || {
+        for stream in listener.incoming().flatten() {
+            let coord = coord.clone();
+            std::thread::spawn(move || {
+                let _ = handle_conn(&coord, stream);
+            });
+        }
+    });
+    Ok(local)
+}
+
+fn handle_conn(coord: &Coordinator, stream: TcpStream) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = handle_line(coord, &line);
+        writer.write_all(reply.as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
+/// Minimal blocking client for tests/examples.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client { writer: stream.try_clone()?, reader: BufReader::new(stream) })
+    }
+
+    pub fn call(&mut self, req: &Json) -> Result<Json> {
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(&line)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{CoordinatorConfig, ModelRegistry};
+    use crate::gmm::Gmm;
+    use crate::score::GmmEps;
+
+    fn coord() -> Arc<Coordinator> {
+        let mut reg = ModelRegistry::new();
+        reg.insert("gmm2d", Arc::new(GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp())));
+        Arc::new(Coordinator::new(CoordinatorConfig::default(), reg))
+    }
+
+    #[test]
+    fn request_parsing_defaults() {
+        let v = Json::parse(r#"{"model":"gmm2d","solver":"tab3","nfe":10,"n":4}"#).unwrap();
+        let req = parse_request(&v).unwrap();
+        assert_eq!(req.model, "gmm2d");
+        assert_eq!(req.solver, SolverKind::Tab(3));
+        assert_eq!(req.t0, 1e-3);
+        assert_eq!(req.grid, GridKind::Quadratic);
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let c = coord();
+        let addr = serve(c, "127.0.0.1:0").unwrap();
+        let mut client = Client::connect(addr).unwrap();
+        let resp = client
+            .call(&Json::parse(
+                r#"{"model":"gmm2d","solver":"ddim","nfe":5,"n":4,"return_samples":true}"#,
+            ).unwrap())
+            .unwrap();
+        assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp:?}");
+        assert_eq!(resp.get("samples").unwrap().as_arr().unwrap().len(), 8);
+
+        let stats = client.call(&Json::parse(r#"{"cmd":"stats"}"#).unwrap()).unwrap();
+        assert_eq!(stats.get("completed").unwrap().as_f64().unwrap(), 1.0);
+
+        let models = client.call(&Json::parse(r#"{"cmd":"models"}"#).unwrap()).unwrap();
+        assert_eq!(models.get("models").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn bad_requests_report_errors() {
+        let c = coord();
+        let addr = serve(c, "127.0.0.1:0").unwrap();
+        let mut client = Client::connect(addr).unwrap();
+        for bad in [
+            r#"{"model":"gmm2d","solver":"bogus","nfe":5,"n":4}"#,
+            r#"{"model":"gmm2d","solver":"ddim","n":4}"#,
+            r#"not json"#,
+        ] {
+            let resp = client.call(&Json::parse(&format!("{:?}", bad)).unwrap_or(Json::str(bad)))
+                .unwrap_or_else(|_| {
+                    // raw invalid line path
+                    let mut cl = Client::connect(addr).unwrap();
+                    cl.writer.write_all(bad.as_bytes()).unwrap();
+                    cl.writer.write_all(b"\n").unwrap();
+                    let mut line = String::new();
+                    cl.reader.read_line(&mut line).unwrap();
+                    Json::parse(&line).unwrap()
+                });
+            assert!(!resp.get("ok").unwrap().as_bool().unwrap(), "{bad}");
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! DPM-Solver-1/2/3 (Lu et al. 2022) — the concurrent-work baseline of paper
+//! Tab. 3 / App. B Q5. Singlestep solvers built on Taylor expansion in
+//! λ = log(√ᾱ/σ) (half log-SNR). DPM-Solver-1 is algebraically DDIM.
+//!
+//! Update formulas (α̂ = √ᾱ, h = λ_e − λ_s > 0 going toward data):
+//!   1: x_e = (α̂_e/α̂_s) x − σ_e (e^h − 1) ε(x, s)
+//!   2: u   = (α̂_m/α̂_s) x − σ_m (e^{h/2} − 1) ε(x, s)          [λ-midpoint m]
+//!      x_e = (α̂_e/α̂_s) x − σ_e (e^h − 1) ε(u, m)
+//!   3: r1 = 1/3, r2 = 2/3 stages per Lu et al. Algorithm 2.
+
+use crate::diffusion::Sde;
+use crate::score::EpsModel;
+use crate::solvers::{fill_t, Solver};
+use crate::util::rng::Rng;
+
+pub struct DpmSolver {
+    sde: Sde,
+    grid: Vec<f64>,
+    order: usize,
+}
+
+impl DpmSolver {
+    pub fn new(sde: &Sde, grid: &[f64], order: usize) -> Self {
+        assert!((1..=3).contains(&order), "DPM-Solver order 1..3");
+        DpmSolver { sde: *sde, grid: grid.to_vec(), order }
+    }
+
+    /// λ(t) = log(√ᾱ(t)/σ(t)). For VE this is −log σ.
+    fn lambda(&self, t: f64) -> f64 {
+        (0.5 * self.sde.log_abar(t)) - self.sde.sigma(t).ln()
+    }
+
+    /// Invert λ via ρ: e^{−λ} = σ/√ᾱ = ρ exactly for both VP and VE.
+    fn t_of_lambda(&self, lam: f64) -> f64 {
+        self.sde.t_of_rho((-lam).exp())
+    }
+
+    /// x <- (α̂_e/α̂_s) x − σ_e (e^{λ_e−λ_s} − 1) eps
+    fn dpm1_update(&self, x: &mut [f64], eps: &[f64], t_s: f64, t_e: f64) {
+        let psi = self.sde.psi(t_e, t_s);
+        let h = self.lambda(t_e) - self.lambda(t_s);
+        let c = -self.sde.sigma(t_e) * (h.exp() - 1.0);
+        for (xv, ev) in x.iter_mut().zip(eps) {
+            *xv = psi * *xv + c * ev;
+        }
+    }
+}
+
+impl Solver for DpmSolver {
+    fn name(&self) -> String {
+        format!("dpm{}", self.order)
+    }
+
+    fn nfe(&self) -> usize {
+        (self.grid.len() - 1) * self.order
+    }
+
+    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, _rng: &mut Rng) {
+        let d = model.dim();
+        let n = self.grid.len() - 1;
+        let mut tb = Vec::new();
+        let mut e0 = vec![0.0; b * d];
+        for i in (1..=n).rev() {
+            let (t_s, t_e) = (self.grid[i], self.grid[i - 1]);
+            model.eval(x, fill_t(&mut tb, t_s, b), b, &mut e0);
+            match self.order {
+                1 => self.dpm1_update(x, &e0, t_s, t_e),
+                2 => {
+                    let (ls, le) = (self.lambda(t_s), self.lambda(t_e));
+                    let t_m = self.t_of_lambda(0.5 * (ls + le));
+                    let mut u = x.to_vec();
+                    self.dpm1_update(&mut u, &e0, t_s, t_m);
+                    let mut e1 = vec![0.0; b * d];
+                    model.eval(&u, fill_t(&mut tb, t_m, b), b, &mut e1);
+                    self.dpm1_update(x, &e1, t_s, t_e);
+                }
+                3 => {
+                    let (ls, le) = (self.lambda(t_s), self.lambda(t_e));
+                    let h = le - ls;
+                    let (r1, r2) = (1.0 / 3.0, 2.0 / 3.0);
+                    let t1 = self.t_of_lambda(ls + r1 * h);
+                    let t2 = self.t_of_lambda(ls + r2 * h);
+                    // u1 = DDIM-in-λ to s1 with e0
+                    let mut u1 = x.to_vec();
+                    self.dpm1_update(&mut u1, &e0, t_s, t1);
+                    let mut e1 = vec![0.0; b * d];
+                    model.eval(&u1, fill_t(&mut tb, t1, b), b, &mut e1);
+                    // u2 = (α̂2/α̂s)x − σ2(e^{r2h}−1)e0 − (σ2 r2/r1)((e^{r2h}−1)/(r2h) − 1)(e1−e0)
+                    let psi2 = self.sde.psi(t2, t_s);
+                    let s2 = self.sde.sigma(t2);
+                    let ex = (r2 * h).exp() - 1.0;
+                    let c0 = -s2 * ex;
+                    let c1 = -(s2 * r2 / r1) * (ex / (r2 * h) - 1.0);
+                    let mut u2 = vec![0.0; b * d];
+                    for idx in 0..b * d {
+                        u2[idx] = psi2 * x[idx] + c0 * e0[idx] + c1 * (e1[idx] - e0[idx]);
+                    }
+                    let mut e2 = vec![0.0; b * d];
+                    model.eval(&u2, fill_t(&mut tb, t2, b), b, &mut e2);
+                    // x_e = (α̂e/α̂s)x − σe(e^h−1)e0 − (σe/r2)((e^h−1)/h − 1)(e2−e0)
+                    let psie = self.sde.psi(t_e, t_s);
+                    let se = self.sde.sigma(t_e);
+                    let exh = h.exp() - 1.0;
+                    let d0 = -se * exh;
+                    let d1 = -(se / r2) * (exh / h - 1.0);
+                    for idx in 0..b * d {
+                        x[idx] = psie * x[idx] + d0 * e0[idx] + d1 * (e2[idx] - e0[idx]);
+                    }
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmm::Gmm;
+    use crate::score::GmmEps;
+    use crate::solvers::tab::TabDeis;
+    use crate::timegrid::{build, GridKind};
+    use crate::util::prop::assert_close;
+
+    fn model() -> GmmEps {
+        GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp())
+    }
+
+    #[test]
+    fn dpm1_is_ddim() {
+        // Lu et al. Prop 4.1 / our App B discussion: DPM-Solver-1 == DDIM.
+        let sde = Sde::vp();
+        let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, 10);
+        let m = model();
+        let b = 8;
+        let x0: Vec<f64> = Rng::new(6).normal_vec(b * 2);
+        let mut xa = x0.clone();
+        let mut xb = x0;
+        DpmSolver::new(&sde, &grid, 1).sample(&m, &mut xa, b, &mut Rng::new(0));
+        TabDeis::new(&sde, &grid, 0).sample(&m, &mut xb, b, &mut Rng::new(0));
+        assert_close(&xa, &xb, 1e-9, "dpm1 vs ddim");
+    }
+
+    #[test]
+    fn lambda_inversion_roundtrip() {
+        let sde = Sde::vp();
+        let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, 4);
+        let s = DpmSolver::new(&sde, &grid, 2);
+        for i in 1..=20 {
+            let t = 0.01 + 0.98 * i as f64 / 20.0;
+            let back = s.t_of_lambda(s.lambda(t));
+            assert!((back - t).abs() < 1e-8, "t={t} back={back}");
+        }
+    }
+
+    #[test]
+    fn higher_order_closer_to_limit() {
+        let sde = Sde::vp();
+        let m = model();
+        let b = 8;
+        let x0: Vec<f64> = Rng::new(7).normal_vec(b * 2);
+        let reference = {
+            let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, 512);
+            let mut x = x0.clone();
+            TabDeis::new(&sde, &grid, 0).sample(&m, &mut x, b, &mut Rng::new(0));
+            x
+        };
+        let err = |order: usize, steps: usize| -> f64 {
+            let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, steps);
+            let mut x = x0.clone();
+            DpmSolver::new(&sde, &grid, order).sample(&m, &mut x, b, &mut Rng::new(0));
+            x.iter().zip(&reference).map(|(a, r)| (a - r).abs()).sum::<f64>() / x.len() as f64
+        };
+        // Equal NFE=12 budget: dpm1@12, dpm2@6, dpm3@4.
+        let (e1, e2) = (err(1, 12), err(2, 6));
+        assert!(e2 < e1, "dpm2 ({e2}) should beat dpm1 ({e1}) at equal NFE");
+    }
+}

@@ -1,0 +1,94 @@
+//! Exponential Integrator with the *score* parameterization (paper Eq. 8) —
+//! the method Fig. 3a shows is WORSE than Euler: it freezes
+//! s_θ(x_t, t) = −ε_θ(x_t,t)/σ(t) over the whole step, so the rapidly
+//! changing 1/σ(τ) factor is mis-approximated near t → 0. Kept as a
+//! first-class solver because the ablation ladder (Fig. 5 / Tab. 9) needs it.
+//!
+//! Step: x_{i-1} = Ψ x_i + [∫ ½Ψ(t_{i-1},τ) g²(τ) dτ] · ε_i/σ(t_i).
+
+use crate::diffusion::Sde;
+use crate::quad::Quadrature;
+use crate::score::EpsModel;
+use crate::solvers::{deis_combine, fill_t, Solver};
+use crate::util::rng::Rng;
+
+pub struct EiScore {
+    grid: Vec<f64>,
+    /// Per step (i = N..1): (psi, coef) with coef already divided by σ(t_i).
+    plan: Vec<(f64, f64)>,
+}
+
+impl EiScore {
+    pub fn new(sde: &Sde, grid: &[f64]) -> Self {
+        let q = Quadrature::gauss(32);
+        let n = grid.len() - 1;
+        let mut plan = Vec::with_capacity(n);
+        for i in (1..=n).rev() {
+            let (t, t_prev) = (grid[i], grid[i - 1]);
+            let psi = sde.psi(t_prev, t);
+            // ∫_t^{t_prev} ½ Ψ(t_prev, τ) g²(τ) dτ — note σ frozen OUTSIDE.
+            let integral =
+                q.integrate_panels(|tau| 0.5 * sde.psi(t_prev, tau) * sde.g2(tau), t, t_prev, 8);
+            plan.push((psi, integral / sde.sigma(t)));
+        }
+        EiScore { grid: grid.to_vec(), plan }
+    }
+}
+
+impl Solver for EiScore {
+    fn name(&self) -> String {
+        "ei-score".into()
+    }
+
+    fn nfe(&self) -> usize {
+        self.grid.len() - 1
+    }
+
+    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, _rng: &mut Rng) {
+        let d = model.dim();
+        let mut tb = Vec::new();
+        let mut eps = vec![0.0; b * d];
+        let n = self.grid.len() - 1;
+        for (step, i) in (1..=n).rev().enumerate() {
+            model.eval(x, fill_t(&mut tb, self.grid[i], b), b, &mut eps);
+            let (psi, c) = self.plan[step];
+            deis_combine(x, psi, &[c], &[&eps]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timegrid::{build, GridKind};
+
+    #[test]
+    fn coefficient_sign_removes_noise() {
+        // The EI-score coefficient must be negative-ish relative to DDIM's:
+        // both scale eps to REDUCE noise; check sign matches DDIM's C < 0
+        // when sigma shrinks.
+        let sde = Sde::vp();
+        let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, 10);
+        let ei = EiScore::new(&sde, &grid);
+        for &(psi, c) in &ei.plan {
+            assert!(psi >= 1.0, "vp psi toward t=0 grows: {psi}");
+            assert!(c < 0.0, "coef should remove noise: {c}");
+        }
+    }
+
+    #[test]
+    fn differs_from_ddim_at_coarse_grid() {
+        // The whole point of Ingredient 2: frozen sigma != integrated sigma.
+        use crate::solvers::tab::TabDeis;
+        let sde = Sde::vp();
+        let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, 5);
+        let ei = EiScore::new(&sde, &grid);
+        let ddim = TabDeis::new(&sde, &grid, 0);
+        let c_ei = ei.plan[4].1; // final step, t -> t0, where sigma changes fast
+        let c_ddim = ddim.step_coef(4)[0];
+        assert!(
+            (c_ei - c_ddim).abs() > 0.01 * c_ddim.abs(),
+            "EI-score should misweight the last step: {c_ei} vs {c_ddim}"
+        );
+    }
+}

@@ -1,0 +1,295 @@
+//! The DEIS solver family and every baseline the paper compares against.
+//!
+//! All solvers integrate the probability-flow ODE (or SDE, for the
+//! stochastic ones) from t_N = T down to t_0 = t0 over a fixed `grid`,
+//! against an abstract [`EpsModel`]. Coefficients that depend only on
+//! (sde, grid, order) are precomputed in the constructor and reused across
+//! batches — the paper's point under Eq. (15).
+//!
+//! Map from paper names:
+//!   Euler (Eq. 7)              -> [`euler::EulerEps`] / [`euler::EulerScore`]
+//!   EI, s-param (Eq. 8)        -> [`ei::EiScore`]        (the Fig 3a "worse" one)
+//!   EI, eps-param (Eq. 11)     -> [`tab::TabDeis`] order 0 == DDIM (Prop 2)
+//!   tAB-DEIS (Eq. 14-15)       -> [`tab::TabDeis`] order 1..3
+//!   rhoAB-DEIS (Sec. 4)        -> [`rho_ab::RhoAbDeis`]
+//!   rhoRK-DEIS (Sec. 4)        -> [`rho_rk::RhoRk`] (midpoint/Heun/Kutta3/RK4)
+//!   RK45 blackbox (Tab. 11)    -> [`rk45::Rk45`]
+//!   PNDM / iPNDM (App. H.2)    -> [`pndm::Pndm`] / [`pndm::Ipndm`]
+//!   DPM-Solver-1/2/3 (App. B)  -> [`dpm::DpmSolver`]
+//!   Analytic-DDIM (Tab. 12)    -> [`sde_samplers::ADdim`]
+//!   Euler-Maruyama / sDDIM     -> [`sde_samplers::EulerMaruyama`] / [`sde_samplers::StochDdim`]
+
+pub mod dpm;
+pub mod ei;
+pub mod euler;
+pub mod pndm;
+pub mod rho_ab;
+pub mod rho_rk;
+pub mod rk45;
+pub mod sde_samplers;
+pub mod tab;
+
+use crate::diffusion::Sde;
+use crate::score::EpsModel;
+use crate::util::rng::Rng;
+
+/// A configured sampler over a fixed time grid.
+pub trait Solver: Send + Sync {
+    fn name(&self) -> String;
+
+    /// Integrate the batch `x` ([b * dim], row-major) from t = grid[N] down
+    /// to grid[0] in place. `rng` is consumed only by stochastic solvers.
+    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, rng: &mut Rng);
+
+    /// Model evaluations per trajectory for this configuration.
+    fn nfe(&self) -> usize;
+}
+
+/// Solver selector (string names are the CLI / wire format).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SolverKind {
+    Euler,
+    EulerScore,
+    EiScore,
+    Tab(usize),    // 0 == DDIM
+    RhoAb(usize),  // 0 == DDIM
+    RhoMidpoint,
+    RhoHeun,
+    RhoKutta3,
+    RhoRk4,
+    Rk45,
+    Pndm,
+    Ipndm(usize),
+    Dpm(usize), // 1..3
+    EulerMaruyama,
+    StochDdim, // eta = 1
+    ADdim,
+}
+
+impl SolverKind {
+    pub fn parse(s: &str) -> Option<SolverKind> {
+        use SolverKind::*;
+        Some(match s {
+            "euler" => Euler,
+            "euler-score" => EulerScore,
+            "ei-score" => EiScore,
+            "ddim" | "tab0" => Tab(0),
+            "tab1" => Tab(1),
+            "tab2" => Tab(2),
+            "tab3" => Tab(3),
+            "rho-ab0" => RhoAb(0),
+            "rho-ab1" => RhoAb(1),
+            "rho-ab2" => RhoAb(2),
+            "rho-ab3" => RhoAb(3),
+            "rho-midpoint" => RhoMidpoint,
+            "rho-heun" => RhoHeun,
+            "rho-kutta3" => RhoKutta3,
+            "rho-rk4" => RhoRk4,
+            "rk45" => Rk45,
+            "pndm" => Pndm,
+            "ipndm1" => Ipndm(1),
+            "ipndm2" => Ipndm(2),
+            "ipndm3" | "ipndm" => Ipndm(3),
+            "dpm1" => Dpm(1),
+            "dpm2" => Dpm(2),
+            "dpm3" => Dpm(3),
+            "em" | "euler-maruyama" => EulerMaruyama,
+            "sddim" => StochDdim,
+            "addim" => ADdim,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> String {
+        use SolverKind::*;
+        match self {
+            Euler => "euler".into(),
+            EulerScore => "euler-score".into(),
+            EiScore => "ei-score".into(),
+            Tab(0) => "ddim".into(),
+            Tab(r) => format!("tab{r}"),
+            RhoAb(r) => format!("rho-ab{r}"),
+            RhoMidpoint => "rho-midpoint".into(),
+            RhoHeun => "rho-heun".into(),
+            RhoKutta3 => "rho-kutta3".into(),
+            RhoRk4 => "rho-rk4".into(),
+            Rk45 => "rk45".into(),
+            Pndm => "pndm".into(),
+            Ipndm(r) => format!("ipndm{r}"),
+            Dpm(k) => format!("dpm{k}"),
+            EulerMaruyama => "em".into(),
+            StochDdim => "sddim".into(),
+            ADdim => "addim".into(),
+        }
+    }
+
+    /// NFE cost of one grid step (RK45 is adaptive: None).
+    pub fn nfe_per_step(&self) -> Option<usize> {
+        use SolverKind::*;
+        Some(match self {
+            Rk45 => return None,
+            RhoMidpoint | RhoHeun | Dpm(2) => 2,
+            RhoKutta3 | Dpm(3) => 3,
+            RhoRk4 => 4,
+            _ => 1,
+        })
+    }
+
+    /// Grid steps to spend for a target NFE budget (PNDM's pseudo-RK warmup
+    /// burns 3 extra evals on each of its first 3 steps).
+    pub fn steps_for_nfe(&self, nfe: usize) -> usize {
+        match self {
+            SolverKind::Pndm => nfe.saturating_sub(9).max(1),
+            _ => (nfe / self.nfe_per_step().unwrap_or(1)).max(1),
+        }
+    }
+}
+
+/// Instantiate a solver for (sde, grid). `grid` ascending, grid[0] = t0.
+pub fn build(kind: SolverKind, sde: &Sde, grid: &[f64]) -> Box<dyn Solver> {
+    use SolverKind::*;
+    match kind {
+        Euler => Box::new(euler::EulerEps::new(sde, grid)),
+        EulerScore => Box::new(euler::EulerScore::new(sde, grid)),
+        EiScore => Box::new(ei::EiScore::new(sde, grid)),
+        Tab(r) => Box::new(tab::TabDeis::new(sde, grid, r)),
+        RhoAb(r) => Box::new(rho_ab::RhoAbDeis::new(sde, grid, r)),
+        RhoMidpoint => Box::new(rho_rk::RhoRk::new(sde, grid, rho_rk::Scheme::Midpoint)),
+        RhoHeun => Box::new(rho_rk::RhoRk::new(sde, grid, rho_rk::Scheme::Heun)),
+        RhoKutta3 => Box::new(rho_rk::RhoRk::new(sde, grid, rho_rk::Scheme::Kutta3)),
+        RhoRk4 => Box::new(rho_rk::RhoRk::new(sde, grid, rho_rk::Scheme::Rk4)),
+        Rk45 => Box::new(rk45::Rk45::new(sde, grid, 1e-3, 1e-3)),
+        Pndm => Box::new(pndm::Pndm::new(sde, grid)),
+        Ipndm(r) => Box::new(pndm::Ipndm::new(sde, grid, r)),
+        Dpm(k) => Box::new(dpm::DpmSolver::new(sde, grid, k)),
+        EulerMaruyama => Box::new(sde_samplers::EulerMaruyama::new(sde, grid)),
+        StochDdim => Box::new(sde_samplers::StochDdim::new(sde, grid, 1.0)),
+        ADdim => Box::new(sde_samplers::ADdim::new(sde, grid)),
+    }
+}
+
+/// All deterministic DEIS variants of paper Table 2, in column order.
+pub fn table2_kinds() -> Vec<SolverKind> {
+    use SolverKind::*;
+    vec![
+        Tab(0),
+        RhoHeun,
+        RhoKutta3,
+        RhoRk4,
+        RhoAb(1),
+        RhoAb(2),
+        RhoAb(3),
+        Tab(1),
+        Tab(2),
+        Tab(3),
+    ]
+}
+
+// --------------------------------------------------------------------------
+// Shared step helpers
+// --------------------------------------------------------------------------
+
+/// Broadcast a scalar time into a reusable buffer.
+pub(crate) fn fill_t(buf: &mut Vec<f64>, t: f64, b: usize) -> &[f64] {
+    buf.clear();
+    buf.resize(b, t);
+    buf
+}
+
+/// x = psi * x + sum_j c_j * eps_j — the fused DEIS combine (Eq. 14). This is
+/// the rust twin of the L1 `deis_combine` Pallas kernel.
+pub(crate) fn deis_combine(x: &mut [f64], psi: f64, coefs: &[f64], eps: &[&[f64]]) {
+    debug_assert_eq!(coefs.len(), eps.len());
+    for v in x.iter_mut() {
+        *v *= psi;
+    }
+    for (c, e) in coefs.iter().zip(eps) {
+        debug_assert_eq!(e.len(), x.len());
+        for (v, ev) in x.iter_mut().zip(e.iter()) {
+            *v += c * ev;
+        }
+    }
+}
+
+/// Ring buffer of the last `cap` eps evaluations (newest first) used by the
+/// multistep solvers.
+pub(crate) struct EpsBuffer {
+    cap: usize,
+    entries: std::collections::VecDeque<(f64, Vec<f64>)>, // (t_node, eps)
+}
+
+impl EpsBuffer {
+    pub fn new(cap: usize) -> Self {
+        EpsBuffer { cap, entries: Default::default() }
+    }
+
+    pub fn push(&mut self, t: f64, eps: Vec<f64>) {
+        self.entries.push_front((t, eps));
+        while self.entries.len() > self.cap {
+            self.entries.pop_back();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    #[allow(dead_code)] // used by tests and kept for diagnostics
+    pub fn node(&self, j: usize) -> f64 {
+        self.entries[j].0
+    }
+
+    pub fn eps(&self, j: usize) -> &[f64] {
+        &self.entries[j].1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_name_roundtrip() {
+        let all = [
+            "euler", "euler-score", "ei-score", "ddim", "tab1", "tab2", "tab3", "rho-ab1",
+            "rho-ab2", "rho-ab3", "rho-midpoint", "rho-heun", "rho-kutta3", "rho-rk4", "rk45",
+            "pndm", "ipndm3", "dpm1", "dpm2", "dpm3", "em", "sddim", "addim",
+        ];
+        for s in all {
+            let k = SolverKind::parse(s).unwrap_or_else(|| panic!("parse {s}"));
+            assert_eq!(k.name(), s, "roundtrip {s}");
+            assert_eq!(SolverKind::parse(&k.name()), Some(k));
+        }
+        assert!(SolverKind::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn steps_for_nfe_accounting() {
+        assert_eq!(SolverKind::Tab(3).steps_for_nfe(10), 10);
+        assert_eq!(SolverKind::RhoHeun.steps_for_nfe(10), 5);
+        assert_eq!(SolverKind::RhoKutta3.steps_for_nfe(10), 3);
+        assert_eq!(SolverKind::RhoRk4.steps_for_nfe(10), 2);
+        assert_eq!(SolverKind::Pndm.steps_for_nfe(20), 11); // 3 warm steps cost 4 each
+        assert_eq!(SolverKind::Dpm(2).steps_for_nfe(10), 5);
+    }
+
+    #[test]
+    fn deis_combine_basic() {
+        let mut x = vec![1.0, 2.0];
+        let e1 = vec![10.0, 20.0];
+        let e2 = vec![1.0, 1.0];
+        deis_combine(&mut x, 2.0, &[0.5, -1.0], &[&e1, &e2]);
+        assert_eq!(x, vec![2.0 + 5.0 - 1.0, 4.0 + 10.0 - 1.0]);
+    }
+
+    #[test]
+    fn eps_buffer_evicts_oldest() {
+        let mut b = EpsBuffer::new(2);
+        b.push(3.0, vec![3.0]);
+        b.push(2.0, vec![2.0]);
+        b.push(1.0, vec![1.0]);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.node(0), 1.0);
+        assert_eq!(b.node(1), 2.0);
+    }
+}

@@ -1,0 +1,144 @@
+//! ρAB-DEIS (paper Sec. 4): Adams–Bashforth on the transformed, non-stiff
+//! ODE dŷ/dρ = ε̂(ŷ, ρ) of Prop. 3. The Lagrange-basis integrals are exactly
+//! polynomial in ρ, so coefficients are computed in closed form. Differs
+//! from tAB-DEIS in fitting polynomials in ρ rather than t (paper Sec. 4).
+
+use crate::diffusion::Sde;
+use crate::quad::lagrange_basis_integral;
+use crate::score::EpsModel;
+use crate::solvers::{fill_t, EpsBuffer, Solver};
+use crate::util::rng::Rng;
+
+pub struct RhoAbDeis {
+    sde: Sde,
+    grid: Vec<f64>,
+    rho: Vec<f64>,
+    order: usize,
+}
+
+impl RhoAbDeis {
+    pub fn new(sde: &Sde, grid: &[f64], order: usize) -> Self {
+        assert!(order <= 3);
+        let rho = grid.iter().map(|&t| sde.rho(t)).collect();
+        RhoAbDeis { sde: *sde, grid: grid.to_vec(), rho, order }
+    }
+
+    /// AB coefficients for step i with nodes ρ_{i+j}: exact basis integrals.
+    fn coefs(&self, i: usize, r_eff: usize) -> Vec<f64> {
+        let nodes: Vec<f64> = (0..=r_eff).map(|j| self.rho[i + j]).collect();
+        (0..=r_eff)
+            .map(|j| lagrange_basis_integral(&nodes, j, self.rho[i], self.rho[i - 1]))
+            .collect()
+    }
+}
+
+impl Solver for RhoAbDeis {
+    fn name(&self) -> String {
+        format!("rho-ab{}", self.order)
+    }
+
+    fn nfe(&self) -> usize {
+        self.grid.len() - 1
+    }
+
+    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, _rng: &mut Rng) {
+        let n = self.grid.len() - 1;
+        let d = model.dim();
+        let mut tb = Vec::new();
+        let mut buf = EpsBuffer::new(self.order + 1);
+        // Work in y = x / sqrt(abar).
+        let mut y: Vec<f64> = {
+            let s = self.sde.sqrt_abar(self.grid[n]);
+            x.iter().map(|&v| v / s).collect()
+        };
+        let mut xcur = vec![0.0; b * d];
+        for i in (1..=n).rev() {
+            let t = self.grid[i];
+            let s = self.sde.sqrt_abar(t);
+            for (xc, &yv) in xcur.iter_mut().zip(&y) {
+                *xc = s * yv;
+            }
+            let mut eps = vec![0.0; b * d];
+            model.eval(&xcur, fill_t(&mut tb, t, b), b, &mut eps);
+            buf.push(self.rho[i], eps);
+            let r_eff = self.order.min(buf.len() - 1);
+            let coefs = self.coefs(i, r_eff);
+            for (j, c) in coefs.iter().enumerate() {
+                let e = buf.eps(j);
+                for (yv, ev) in y.iter_mut().zip(e) {
+                    *yv += c * ev;
+                }
+            }
+        }
+        let s0 = self.sde.sqrt_abar(self.grid[0]);
+        for (xv, &yv) in x.iter_mut().zip(&y) {
+            *xv = s0 * yv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmm::Gmm;
+    use crate::score::GmmEps;
+    use crate::solvers::tab::TabDeis;
+    use crate::timegrid::{build, GridKind};
+    use crate::util::prop::assert_close;
+
+    fn model() -> GmmEps {
+        GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp())
+    }
+
+    #[test]
+    fn rho_ab0_equals_ddim() {
+        // Prop 2 again: r=0 in rho-space is DDIM, since sqrt(abar)*drho
+        // integrates to the DDIM coefficient.
+        let sde = Sde::vp();
+        let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, 10);
+        let m = model();
+        let b = 8;
+        let x0: Vec<f64> = Rng::new(2).normal_vec(b * 2);
+        let mut xa = x0.clone();
+        let mut xb = x0;
+        RhoAbDeis::new(&sde, &grid, 0).sample(&m, &mut xa, b, &mut Rng::new(0));
+        TabDeis::new(&sde, &grid, 0).sample(&m, &mut xb, b, &mut Rng::new(0));
+        assert_close(&xa, &xb, 1e-7, "rho-ab0 vs ddim");
+    }
+
+    #[test]
+    fn rho_ab0_equals_ddim_ve() {
+        let sde = Sde::ve();
+        let grid = build(GridKind::LogRho, &sde, 1e-5, 1.0, 10);
+        let m = GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), sde);
+        let b = 8;
+        let x0: Vec<f64> = Rng::new(2).normal_vec(b * 2).iter().map(|v| v * 50.0).collect();
+        let mut xa = x0.clone();
+        let mut xb = x0;
+        RhoAbDeis::new(&sde, &grid, 0).sample(&m, &mut xa, b, &mut Rng::new(0));
+        TabDeis::new(&sde, &grid, 0).sample(&m, &mut xb, b, &mut Rng::new(0));
+        assert_close(&xa, &xb, 1e-7, "rho-ab0 vs ddim (ve)");
+    }
+
+    #[test]
+    fn rho_ab2_converges_third_order_ish() {
+        // Self-convergence rate: halving steps shrinks error by ~2^(r+1).
+        let sde = Sde::vp();
+        let m = model();
+        let b = 8;
+        let x0: Vec<f64> = Rng::new(4).normal_vec(b * 2);
+        let run = |n: usize| {
+            let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, n);
+            let mut x = x0.clone();
+            RhoAbDeis::new(&sde, &grid, 2).sample(&m, &mut x, b, &mut Rng::new(0));
+            x
+        };
+        let reference = run(512);
+        let err = |x: &[f64]| {
+            x.iter().zip(&reference).map(|(a, r)| (a - r).abs()).fold(0.0_f64, f64::max)
+        };
+        let (e1, e2) = (err(&run(16)), err(&run(32)));
+        let rate = (e1 / e2).log2();
+        assert!(rate > 2.0, "rho-ab2 convergence rate {rate} (e16={e1}, e32={e2})");
+    }
+}

@@ -1,0 +1,217 @@
+//! ρRK-DEIS (paper Sec. 4): classical Runge–Kutta on the transformed ODE
+//! dŷ/dρ = ε̂(ŷ, ρ). ρ2Heun is the Karras et al. (2022) sampler (paper
+//! App. B Q4 proves the equivalence); Kutta3 and RK4 are the other variants
+//! of Table 2. Each stage costs one NFE.
+
+use crate::diffusion::Sde;
+use crate::score::EpsModel;
+use crate::solvers::{fill_t, Solver};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    Midpoint,
+    Heun,
+    Kutta3,
+    Rk4,
+}
+
+impl Scheme {
+    pub fn stages(&self) -> usize {
+        match self {
+            Scheme::Midpoint | Scheme::Heun => 2,
+            Scheme::Kutta3 => 3,
+            Scheme::Rk4 => 4,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Midpoint => "rho-midpoint",
+            Scheme::Heun => "rho-heun",
+            Scheme::Kutta3 => "rho-kutta3",
+            Scheme::Rk4 => "rho-rk4",
+        }
+    }
+
+    /// Butcher tableau (c offsets, per-stage a-rows, b weights).
+    fn tableau(&self) -> (Vec<f64>, Vec<Vec<f64>>, Vec<f64>) {
+        match self {
+            Scheme::Midpoint => (
+                vec![0.0, 0.5],
+                vec![vec![], vec![0.5]],
+                vec![0.0, 1.0],
+            ),
+            Scheme::Heun => (
+                vec![0.0, 1.0],
+                vec![vec![], vec![1.0]],
+                vec![0.5, 0.5],
+            ),
+            Scheme::Kutta3 => (
+                vec![0.0, 0.5, 1.0],
+                vec![vec![], vec![0.5], vec![-1.0, 2.0]],
+                vec![1.0 / 6.0, 2.0 / 3.0, 1.0 / 6.0],
+            ),
+            Scheme::Rk4 => (
+                vec![0.0, 0.5, 0.5, 1.0],
+                vec![vec![], vec![0.5], vec![0.0, 0.5], vec![0.0, 0.0, 1.0]],
+                vec![1.0 / 6.0, 1.0 / 3.0, 1.0 / 3.0, 1.0 / 6.0],
+            ),
+        }
+    }
+}
+
+pub struct RhoRk {
+    sde: Sde,
+    grid: Vec<f64>,
+    rho: Vec<f64>,
+    scheme: Scheme,
+}
+
+impl RhoRk {
+    pub fn new(sde: &Sde, grid: &[f64], scheme: Scheme) -> Self {
+        let rho = grid.iter().map(|&t| sde.rho(t)).collect();
+        RhoRk { sde: *sde, grid: grid.to_vec(), rho, scheme }
+    }
+
+    /// Evaluate ε̂(y, ρ) = ε_θ(√ᾱ(t(ρ)) y, t(ρ)).
+    fn eval_hat(
+        &self,
+        model: &dyn EpsModel,
+        y: &[f64],
+        rho: f64,
+        b: usize,
+        tb: &mut Vec<f64>,
+        xbuf: &mut [f64],
+        out: &mut [f64],
+    ) {
+        let t = self.sde.t_of_rho(rho).clamp(self.grid[0], self.grid[self.grid.len() - 1]);
+        let s = self.sde.sqrt_abar(t);
+        for (xv, &yv) in xbuf.iter_mut().zip(y) {
+            *xv = s * yv;
+        }
+        model.eval(xbuf, fill_t(tb, t, b), b, out);
+    }
+}
+
+impl Solver for RhoRk {
+    fn name(&self) -> String {
+        self.scheme.name().into()
+    }
+
+    fn nfe(&self) -> usize {
+        (self.grid.len() - 1) * self.scheme.stages()
+    }
+
+    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, _rng: &mut Rng) {
+        let n = self.grid.len() - 1;
+        let d = model.dim();
+        let (c, a, w) = self.scheme.tableau();
+        let stages = self.scheme.stages();
+        let mut tb = Vec::new();
+        let mut xbuf = vec![0.0; b * d];
+        let mut ybuf = vec![0.0; b * d];
+        let mut ks: Vec<Vec<f64>> = (0..stages).map(|_| vec![0.0; b * d]).collect();
+
+        let s_start = self.sde.sqrt_abar(self.grid[n]);
+        let mut y: Vec<f64> = x.iter().map(|&v| v / s_start).collect();
+
+        for i in (1..=n).rev() {
+            let h = self.rho[i - 1] - self.rho[i]; // negative (rho shrinks)
+            for s_idx in 0..stages {
+                // y_stage = y + h * sum_j a[s][j] k_j
+                ybuf.copy_from_slice(&y);
+                for (j, &aj) in a[s_idx].iter().enumerate() {
+                    if aj != 0.0 {
+                        for (yv, kv) in ybuf.iter_mut().zip(&ks[j]) {
+                            *yv += h * aj * kv;
+                        }
+                    }
+                }
+                let rho_s = self.rho[i] + c[s_idx] * h;
+                let (head, tail) = ks.split_at_mut(s_idx);
+                let _ = head;
+                self.eval_hat(model, &ybuf, rho_s, b, &mut tb, &mut xbuf, &mut tail[0]);
+            }
+            for (s_idx, ws) in w.iter().enumerate() {
+                if *ws != 0.0 {
+                    for (yv, kv) in y.iter_mut().zip(&ks[s_idx]) {
+                        *yv += h * ws * kv;
+                    }
+                }
+            }
+        }
+        let s0 = self.sde.sqrt_abar(self.grid[0]);
+        for (xv, &yv) in x.iter_mut().zip(&y) {
+            *xv = s0 * yv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmm::Gmm;
+    use crate::score::GmmEps;
+    use crate::timegrid::{build, GridKind};
+
+    fn model() -> GmmEps {
+        GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp())
+    }
+
+    fn run(scheme: Scheme, n: usize, x0: &[f64], b: usize) -> Vec<f64> {
+        let sde = Sde::vp();
+        let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, n);
+        let mut x = x0.to_vec();
+        RhoRk::new(&sde, &grid, scheme).sample(&model(), &mut x, b, &mut Rng::new(0));
+        x
+    }
+
+    #[test]
+    fn nfe_accounting() {
+        let sde = Sde::vp();
+        let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, 5);
+        assert_eq!(RhoRk::new(&sde, &grid, Scheme::Heun).nfe(), 10);
+        assert_eq!(RhoRk::new(&sde, &grid, Scheme::Rk4).nfe(), 20);
+    }
+
+    #[test]
+    fn schemes_converge_to_common_limit() {
+        let b = 4;
+        let x0: Vec<f64> = Rng::new(8).normal_vec(b * 2);
+        let reference = run(Scheme::Rk4, 256, &x0, b);
+        for scheme in [Scheme::Midpoint, Scheme::Heun, Scheme::Kutta3] {
+            let got = run(scheme, 128, &x0, b);
+            let err: f64 =
+                got.iter().zip(&reference).map(|(a, r)| (a - r).abs()).fold(0.0, f64::max);
+            assert!(err < 1e-3, "{:?} err {err}", scheme);
+        }
+    }
+
+    #[test]
+    fn heun_order_two() {
+        let b = 4;
+        let x0: Vec<f64> = Rng::new(8).normal_vec(b * 2);
+        let reference = run(Scheme::Rk4, 512, &x0, b);
+        let err = |x: &[f64]| -> f64 {
+            x.iter().zip(&reference).map(|(a, r)| (a - r).abs()).fold(0.0, f64::max)
+        };
+        let e16 = err(&run(Scheme::Heun, 16, &x0, b));
+        let e32 = err(&run(Scheme::Heun, 32, &x0, b));
+        let rate = (e16 / e32).log2();
+        assert!(rate > 1.5, "heun rate {rate} (e16={e16} e32={e32})");
+    }
+
+    #[test]
+    fn tableaus_are_consistent() {
+        // b-weights sum to 1, a-rows sum to c (standard RK consistency).
+        for scheme in [Scheme::Midpoint, Scheme::Heun, Scheme::Kutta3, Scheme::Rk4] {
+            let (c, a, w) = scheme.tableau();
+            assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12, "{scheme:?}");
+            for (s, row) in a.iter().enumerate() {
+                let sum: f64 = row.iter().sum();
+                assert!((sum - c[s]).abs() < 1e-12, "{scheme:?} stage {s}");
+            }
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! Blackbox adaptive RK45 (Dormand–Prince 5(4)) on the probability-flow ODE
+//! in t — the `scipy.integrate.solve_ivp` baseline of paper Tab. 11 / Fig. 5.
+//! It ignores the provided grid except for its endpoints, adapts its own
+//! step, and (like the paper notes) wastes NFE on rejected steps at tight
+//! tolerances. NFE is whatever the controller spends; wrap the model in
+//! `score::Counting` to measure it.
+
+use crate::diffusion::Sde;
+use crate::score::EpsModel;
+use crate::solvers::{fill_t, Solver};
+use crate::util::rng::Rng;
+
+// Dormand–Prince coefficients.
+const C: [f64; 7] = [0.0, 1.0 / 5.0, 3.0 / 10.0, 4.0 / 5.0, 8.0 / 9.0, 1.0, 1.0];
+const A: [[f64; 6]; 7] = [
+    [0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+    [1.0 / 5.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+    [3.0 / 40.0, 9.0 / 40.0, 0.0, 0.0, 0.0, 0.0],
+    [44.0 / 45.0, -56.0 / 15.0, 32.0 / 9.0, 0.0, 0.0, 0.0],
+    [19372.0 / 6561.0, -25360.0 / 2187.0, 64448.0 / 6561.0, -212.0 / 729.0, 0.0, 0.0],
+    [9017.0 / 3168.0, -355.0 / 33.0, 46732.0 / 5247.0, 49.0 / 176.0, -5103.0 / 18656.0, 0.0],
+    [35.0 / 384.0, 0.0, 500.0 / 1113.0, 125.0 / 192.0, -2187.0 / 6784.0, 11.0 / 84.0],
+];
+const B5: [f64; 7] = [35.0 / 384.0, 0.0, 500.0 / 1113.0, 125.0 / 192.0, -2187.0 / 6784.0, 11.0 / 84.0, 0.0];
+const B4: [f64; 7] = [
+    5179.0 / 57600.0,
+    0.0,
+    7571.0 / 16695.0,
+    393.0 / 640.0,
+    -92097.0 / 339200.0,
+    187.0 / 2100.0,
+    1.0 / 40.0,
+];
+
+pub struct Rk45 {
+    sde: Sde,
+    t0: f64,
+    t_max: f64,
+    pub rtol: f64,
+    pub atol: f64,
+}
+
+impl Rk45 {
+    pub fn new(sde: &Sde, grid: &[f64], rtol: f64, atol: f64) -> Self {
+        Rk45 { sde: *sde, t0: grid[0], t_max: grid[grid.len() - 1], rtol, atol }
+    }
+
+    /// dx/dt of the eps-form PF ODE (Eq. 10).
+    fn deriv(
+        &self,
+        model: &dyn EpsModel,
+        x: &[f64],
+        t: f64,
+        b: usize,
+        tb: &mut Vec<f64>,
+        out: &mut [f64],
+    ) {
+        model.eval(x, fill_t(tb, t, b), b, out);
+        let f = self.sde.f_scalar(t);
+        let w = 0.5 * self.sde.g2(t) / self.sde.sigma(t);
+        for (o, &xv) in out.iter_mut().zip(x) {
+            *o = f * xv + w * *o;
+        }
+    }
+}
+
+impl Solver for Rk45 {
+    fn name(&self) -> String {
+        format!("rk45[{:.0e}]", self.rtol)
+    }
+
+    fn nfe(&self) -> usize {
+        0 // adaptive — measured, not declared
+    }
+
+    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, _rng: &mut Rng) {
+        let d = model.dim();
+        let mut tb = Vec::new();
+        let mut k: Vec<Vec<f64>> = (0..7).map(|_| vec![0.0; b * d]).collect();
+        let mut xs = vec![0.0; b * d];
+        let mut x5 = vec![0.0; b * d];
+
+        let mut t = self.t_max;
+        let mut h = -(self.t_max - self.t0) * 0.02; // initial step, backward
+        let h_min = 1e-10;
+
+        self.deriv(model, x, t, b, &mut tb, &mut k[0]);
+        while t > self.t0 + 1e-12 {
+            if t + h < self.t0 {
+                h = self.t0 - t;
+            }
+            // Stages 1..6 (k[0] carried over, FSAL).
+            for s in 1..7 {
+                xs.copy_from_slice(x);
+                for (j, kj) in k.iter().enumerate().take(s) {
+                    let a = A[s][j];
+                    if a != 0.0 {
+                        for (xv, kv) in xs.iter_mut().zip(kj) {
+                            *xv += h * a * kv;
+                        }
+                    }
+                }
+                let (head, tail) = k.split_at_mut(s);
+                let _ = head;
+                self.deriv(model, &xs, t + C[s] * h, b, &mut tb, &mut tail[0]);
+            }
+            // 5th-order solution + embedded error estimate.
+            x5.copy_from_slice(x);
+            let mut err: f64 = 0.0;
+            for idx in 0..b * d {
+                let mut dx5 = 0.0;
+                let mut dx4 = 0.0;
+                for s in 0..7 {
+                    dx5 += B5[s] * k[s][idx];
+                    dx4 += B4[s] * k[s][idx];
+                }
+                x5[idx] += h * dx5;
+                let sc = self.atol + self.rtol * x[idx].abs().max(x5[idx].abs());
+                let e = h * (dx5 - dx4) / sc;
+                err += e * e;
+            }
+            err = (err / (b * d) as f64).sqrt();
+
+            if err <= 1.0 {
+                t += h;
+                x.copy_from_slice(&x5);
+                // FSAL: k7 of the accepted step is k1 of the next.
+                let last = k[6].clone();
+                k[0].copy_from_slice(&last);
+            }
+            // PI-ish controller.
+            let factor = (0.9 * err.powf(-0.2)).clamp(0.2, 5.0);
+            h *= factor;
+            if h.abs() < h_min {
+                h = -h_min;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmm::Gmm;
+    use crate::score::{Counting, GmmEps};
+    use crate::solvers::tab::TabDeis;
+    use crate::timegrid::{build, GridKind};
+
+    #[test]
+    fn rk45_matches_fine_ddim() {
+        let sde = Sde::vp();
+        let gmm = Gmm::ring2d(4.0, 8, 0.25);
+        let model = GmmEps::new(gmm, sde);
+        let b = 6;
+        let x0: Vec<f64> = Rng::new(12).normal_vec(b * 2);
+        let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, 640);
+
+        let mut x_ref = x0.clone();
+        TabDeis::new(&sde, &grid, 3).sample(&model, &mut x_ref, b, &mut Rng::new(0));
+
+        let mut x_rk = x0;
+        let counted = Counting::new(&model);
+        Rk45::new(&sde, &grid, 1e-6, 1e-6).sample(&counted, &mut x_rk, b, &mut Rng::new(0));
+        let err: f64 =
+            x_rk.iter().zip(&x_ref).map(|(a, r)| (a - r).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-3, "rk45 vs fine tab3: {err}");
+        assert!(counted.nfe() > 20, "adaptive solver did work: {}", counted.nfe());
+    }
+
+    #[test]
+    fn looser_tolerance_spends_fewer_nfe() {
+        let sde = Sde::vp();
+        let model = GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), sde);
+        let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, 10);
+        let b = 4;
+        let x0: Vec<f64> = Rng::new(3).normal_vec(b * 2);
+        let spend = |tol: f64| {
+            let counted = Counting::new(&model);
+            let mut x = x0.clone();
+            Rk45::new(&sde, &grid, tol, tol).sample(&counted, &mut x, b, &mut Rng::new(0));
+            counted.nfe()
+        };
+        assert!(spend(1e-2) < spend(1e-6));
+    }
+}

@@ -1,0 +1,233 @@
+//! Stochastic samplers (paper Eq. 4 with λ > 0 and App. C/G):
+//!   * Euler–Maruyama on the reverse SDE (λ = 1) — Fig. 5's "EM" baseline.
+//!   * Stochastic DDIM with hyperparameter η (Eq. 34; Prop. 4 shows its
+//!     continuous limit is Eq. 4 with λ = η).
+//!   * Analytic-DDIM (Bao et al. 2022, Tab. 12 baseline): DDPM-family mean
+//!     with the *analytically optimal* reverse variance. The paper's exact
+//!     Γ_n uses a precomputed dataset statistic; we estimate E‖ε‖²/d from
+//!     the current batch (documented substitution, DESIGN.md §1) and expose
+//!     the x̂0-clipping trick the paper says A-DDIM depends on.
+
+use crate::diffusion::Sde;
+use crate::score::EpsModel;
+use crate::solvers::{fill_t, Solver};
+use crate::util::rng::Rng;
+
+pub struct EulerMaruyama {
+    sde: Sde,
+    grid: Vec<f64>,
+}
+
+impl EulerMaruyama {
+    pub fn new(sde: &Sde, grid: &[f64]) -> Self {
+        EulerMaruyama { sde: *sde, grid: grid.to_vec() }
+    }
+}
+
+impl Solver for EulerMaruyama {
+    fn name(&self) -> String {
+        "em".into()
+    }
+
+    fn nfe(&self) -> usize {
+        self.grid.len() - 1
+    }
+
+    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, rng: &mut Rng) {
+        let d = model.dim();
+        let mut tb = Vec::new();
+        let mut eps = vec![0.0; b * d];
+        let n = self.grid.len() - 1;
+        for i in (1..=n).rev() {
+            let (t, t_prev) = (self.grid[i], self.grid[i - 1]);
+            let dt = t_prev - t; // negative
+            model.eval(x, fill_t(&mut tb, t, b), b, &mut eps);
+            let f = self.sde.f_scalar(t);
+            let g2 = self.sde.g2(t);
+            let w = g2 / self.sde.sigma(t); // (1+λ²)/2 · g²/σ with λ=1
+            let noise_scale = ((-dt).max(0.0)).sqrt() * g2.sqrt();
+            for (xv, ev) in x.iter_mut().zip(&eps) {
+                *xv += dt * (f * *xv + w * ev) + noise_scale * rng.normal();
+            }
+        }
+    }
+}
+
+pub struct StochDdim {
+    sde: Sde,
+    grid: Vec<f64>,
+    pub eta: f64,
+}
+
+impl StochDdim {
+    pub fn new(sde: &Sde, grid: &[f64], eta: f64) -> Self {
+        assert!(matches!(sde, Sde::Vp(_)), "stochastic DDIM is defined for VPSDE");
+        StochDdim { sde: *sde, grid: grid.to_vec(), eta }
+    }
+}
+
+impl Solver for StochDdim {
+    fn name(&self) -> String {
+        format!("sddim(eta={})", self.eta)
+    }
+
+    fn nfe(&self) -> usize {
+        self.grid.len() - 1
+    }
+
+    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, rng: &mut Rng) {
+        let d = model.dim();
+        let mut tb = Vec::new();
+        let mut eps = vec![0.0; b * d];
+        let n = self.grid.len() - 1;
+        for i in (1..=n).rev() {
+            let (t_s, t_e) = (self.grid[i], self.grid[i - 1]);
+            let (a_s, a_e) = (self.sde.abar(t_s), self.sde.abar(t_e));
+            let (sig_s, sig_e) = (self.sde.sigma(t_s), self.sde.sigma(t_e));
+            model.eval(x, fill_t(&mut tb, t_s, b), b, &mut eps);
+            // Eq. (34): sigma_eta^2 = eta^2 (1-a_e)/(1-a_s) (1 - a_s/a_e)
+            let var_eta =
+                self.eta * self.eta * (1.0 - a_e) / (1.0 - a_s) * (1.0 - a_s / a_e);
+            // No noise into the final state.
+            let var_eta = if i == 1 { 0.0 } else { var_eta.max(0.0) };
+            let coef_eps = (sig_e * sig_e - var_eta).max(0.0).sqrt();
+            let scale = (a_e / a_s).sqrt();
+            let sd = var_eta.sqrt();
+            for (xv, ev) in x.iter_mut().zip(&eps) {
+                let x0_dir = scale * (*xv - sig_s * ev);
+                *xv = x0_dir + coef_eps * ev + sd * rng.normal();
+            }
+        }
+    }
+}
+
+pub struct ADdim {
+    sde: Sde,
+    grid: Vec<f64>,
+    /// x̂0-clipping range (Bao et al.'s trick; None disables).
+    pub clip: Option<f64>,
+}
+
+impl ADdim {
+    pub fn new(sde: &Sde, grid: &[f64]) -> Self {
+        assert!(matches!(sde, Sde::Vp(_)), "A-DDIM is defined for VPSDE");
+        ADdim { sde: *sde, grid: grid.to_vec(), clip: Some(6.0) }
+    }
+}
+
+impl Solver for ADdim {
+    fn name(&self) -> String {
+        "addim".into()
+    }
+
+    fn nfe(&self) -> usize {
+        self.grid.len() - 1
+    }
+
+    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, rng: &mut Rng) {
+        let d = model.dim();
+        let mut tb = Vec::new();
+        let mut eps = vec![0.0; b * d];
+        let n = self.grid.len() - 1;
+        for i in (1..=n).rev() {
+            let (t_s, t_e) = (self.grid[i], self.grid[i - 1]);
+            let (a_s, a_e) = (self.sde.abar(t_s), self.sde.abar(t_e));
+            let (bb_s, bb_e) = (1.0 - a_s, 1.0 - a_e); // beta-bar
+            let alpha_step = a_s / a_e; // per-step alpha_n
+            let beta_step = 1.0 - alpha_step;
+            model.eval(x, fill_t(&mut tb, t_s, b), b, &mut eps);
+            // DDPM "small" posterior variance lambda_n^2.
+            let lam2 = bb_e / bb_s * beta_step;
+            // Batch MC estimate of Gamma = E[||eps||^2]/d  (dataset statistic
+            // in Bao et al.; see module doc for the substitution).
+            let mean_eps2: f64 =
+                eps.iter().map(|e| e * e).sum::<f64>() / (b as f64 * d as f64);
+            let gap = (bb_s / alpha_step).sqrt() - (bb_e - lam2).max(0.0).sqrt();
+            let var_opt = lam2 + gap * gap * (1.0 - mean_eps2).max(0.0);
+            let var_opt = if i == 1 { 0.0 } else { var_opt.max(0.0) };
+            let sd = var_opt.sqrt();
+            // Posterior mean mu(x, x0_hat) with optional clipping of x0_hat.
+            let c0 = a_e.sqrt() * beta_step / bb_s;
+            let cx = alpha_step.sqrt() * bb_e / bb_s;
+            let sig_s = bb_s.sqrt();
+            let sqrt_as = a_s.sqrt();
+            for (xv, ev) in x.iter_mut().zip(&eps) {
+                let mut x0 = (*xv - sig_s * ev) / sqrt_as;
+                if let Some(c) = self.clip {
+                    x0 = x0.clamp(-c, c);
+                }
+                *xv = c0 * x0 + cx * *xv + sd * rng.normal();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmm::Gmm;
+    use crate::score::GmmEps;
+    use crate::solvers::tab::TabDeis;
+    use crate::timegrid::{build, GridKind};
+    use crate::util::prop::assert_close;
+
+    fn model() -> GmmEps {
+        GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp())
+    }
+
+    #[test]
+    fn sddim_eta0_is_deterministic_ddim() {
+        let sde = Sde::vp();
+        let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, 10);
+        let m = model();
+        let b = 8;
+        let x0: Vec<f64> = Rng::new(5).normal_vec(b * 2);
+        let mut xa = x0.clone();
+        let mut xb = x0;
+        StochDdim::new(&sde, &grid, 0.0).sample(&m, &mut xa, b, &mut Rng::new(1));
+        TabDeis::new(&sde, &grid, 0).sample(&m, &mut xb, b, &mut Rng::new(2));
+        assert_close(&xa, &xb, 1e-9, "sddim(0) vs ddim");
+    }
+
+    #[test]
+    fn stochastic_solvers_land_near_modes_with_many_steps() {
+        let sde = Sde::vp();
+        let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, 200);
+        let m = model();
+        let gmm = Gmm::ring2d(4.0, 8, 0.25);
+        let b = 64;
+        for solver in [
+            &EulerMaruyama::new(&sde, &grid) as &dyn Solver,
+            &StochDdim::new(&sde, &grid, 1.0),
+            &ADdim::new(&sde, &grid),
+        ] {
+            let mut x = Rng::new(11).normal_vec(b * 2);
+            solver.sample(&m, &mut x, b, &mut Rng::new(42));
+            let mut dists: Vec<f64> = (0..b)
+                .map(|i| {
+                    gmm.means
+                        .iter()
+                        .map(|mu| {
+                            ((x[2 * i] - mu[0]).powi(2) + (x[2 * i + 1] - mu[1]).powi(2)).sqrt()
+                        })
+                        .fold(f64::INFINITY, f64::min)
+                })
+                .collect();
+            dists.sort_by(f64::total_cmp);
+            assert!(dists[b / 2] < 0.8, "{} median {}", solver.name(), dists[b / 2]);
+        }
+    }
+
+    #[test]
+    fn stochastic_paths_depend_on_rng_seed() {
+        let sde = Sde::vp();
+        let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, 20);
+        let m = model();
+        let x0: Vec<f64> = Rng::new(5).normal_vec(4);
+        let mut xa = x0.clone();
+        let mut xb = x0;
+        EulerMaruyama::new(&sde, &grid).sample(&m, &mut xa, 2, &mut Rng::new(1));
+        EulerMaruyama::new(&sde, &grid).sample(&m, &mut xb, 2, &mut Rng::new(2));
+        assert!(xa.iter().zip(&xb).any(|(a, b)| (a - b).abs() > 1e-6));
+    }
+}

@@ -1,0 +1,204 @@
+//! tAB-DEIS (paper Eq. 14–15): Exponential Integrator + Adams–Bashforth
+//! polynomial extrapolation of ε_θ in t. Order 0 is exactly deterministic
+//! DDIM (Prop. 2 — a property test pins the quadrature against the closed
+//! form). The C_ij are integrated once per (sde, grid, order) with panelled
+//! Gauss–Legendre and reused across batches.
+
+use crate::diffusion::Sde;
+use crate::quad::{lagrange_basis, Quadrature};
+use crate::score::EpsModel;
+use crate::solvers::{deis_combine, fill_t, EpsBuffer, Solver};
+use crate::util::rng::Rng;
+
+pub struct TabDeis {
+    grid: Vec<f64>,
+    order: usize,
+    /// Per step (index 0 = the i=N step): (psi, C_ij for j=0..r_eff).
+    plan: Vec<(f64, Vec<f64>)>,
+}
+
+impl TabDeis {
+    pub fn new(sde: &Sde, grid: &[f64], order: usize) -> Self {
+        assert!(order <= 3, "tAB order up to 3 (paper evaluates 0..3)");
+        let n = grid.len() - 1;
+        let q = Quadrature::gauss(32);
+        let mut plan = Vec::with_capacity(n);
+        for i in (1..=n).rev() {
+            let (t, t_prev) = (grid[i], grid[i - 1]);
+            // Warmup: only N-i previous evals exist at step i (paper: lower
+            // order for the first steps; App. B Q3).
+            let r_eff = order.min(n - i);
+            let nodes: Vec<f64> = (0..=r_eff).map(|j| grid[i + j]).collect();
+            let coefs: Vec<f64> = (0..=r_eff)
+                .map(|j| {
+                    q.integrate_panels(
+                        |tau| sde.eps_integrand(t_prev, tau) * lagrange_basis(&nodes, j, tau),
+                        t,
+                        t_prev,
+                        8,
+                    )
+                })
+                .collect();
+            plan.push((sde.psi(t_prev, t), coefs));
+        }
+        TabDeis { grid: grid.to_vec(), order, plan }
+    }
+
+    /// Closed-form DDIM coefficient for a VP step (Prop. 2) — test oracle.
+    pub fn ddim_coef_vp(sde: &Sde, t_from: f64, t_to: f64) -> f64 {
+        sde.sigma(t_to) - sde.psi(t_to, t_from) * sde.sigma(t_from)
+    }
+
+    /// Expose a step's coefficients (tests/diagnostics).
+    pub fn step_coef(&self, step: usize) -> &[f64] {
+        &self.plan[step].1
+    }
+}
+
+impl Solver for TabDeis {
+    fn name(&self) -> String {
+        if self.order == 0 {
+            "ddim".into()
+        } else {
+            format!("tab{}", self.order)
+        }
+    }
+
+    fn nfe(&self) -> usize {
+        self.grid.len() - 1
+    }
+
+    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, _rng: &mut Rng) {
+        let d = model.dim();
+        let mut tb = Vec::new();
+        let mut buf = EpsBuffer::new(self.order + 1);
+        let n = self.grid.len() - 1;
+        for (step, i) in (1..=n).rev().enumerate() {
+            let t = self.grid[i];
+            let mut eps = vec![0.0; b * d];
+            model.eval(x, fill_t(&mut tb, t, b), b, &mut eps);
+            buf.push(t, eps);
+            let (psi, coefs) = &self.plan[step];
+            let eps_refs: Vec<&[f64]> = (0..coefs.len()).map(|j| buf.eps(j)).collect();
+            deis_combine(x, *psi, coefs, &eps_refs);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gmm::Gmm;
+    use crate::score::GmmEps;
+    use crate::timegrid::{build, GridKind};
+    use crate::util::prop::{assert_close, run_prop};
+
+    #[test]
+    fn tab0_coef_matches_ddim_closed_form_vp() {
+        // Prop 2: quadrature C_i0 == closed form, to 1e-9, on random grids.
+        run_prop("tab0 == ddim", 21, 30, |rng| {
+            let sde = Sde::vp();
+            let n = 2 + rng.below(20);
+            let kind = match rng.below(3) {
+                0 => GridKind::Uniform,
+                1 => GridKind::Quadratic,
+                _ => GridKind::LogRho,
+            };
+            let grid = build(kind, &sde, 1e-3, 1.0, n);
+            let tab = TabDeis::new(&sde, &grid, 0);
+            for (step, i) in (1..=n).rev().enumerate() {
+                let want = TabDeis::ddim_coef_vp(&sde, grid[i], grid[i - 1]);
+                let got = tab.step_coef(step)[0];
+                assert!((got - want).abs() < 1e-9, "step {step}: {got} vs {want}");
+            }
+        });
+    }
+
+    #[test]
+    fn tab0_coef_matches_ddim_closed_form_ve() {
+        let sde = Sde::ve();
+        let grid = build(GridKind::LogRho, &sde, 1e-5, 1.0, 12);
+        let tab = TabDeis::new(&sde, &grid, 0);
+        for (step, i) in (1..=12).rev().enumerate() {
+            let want = sde.sigma(grid[i - 1]) - sde.sigma(grid[i]);
+            let got = tab.step_coef(step)[0];
+            assert!((got - want).abs() < 1e-9, "step {step}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn warmup_orders_ramp() {
+        let sde = Sde::vp();
+        let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, 10);
+        let tab = TabDeis::new(&sde, &grid, 3);
+        assert_eq!(tab.step_coef(0).len(), 1); // first step: zero order
+        assert_eq!(tab.step_coef(1).len(), 2);
+        assert_eq!(tab.step_coef(2).len(), 3);
+        assert_eq!(tab.step_coef(3).len(), 4);
+        assert_eq!(tab.step_coef(9).len(), 4);
+    }
+
+    #[test]
+    fn coefs_sum_to_ddim_coef() {
+        // sum_j C_ij == ∫ w(τ)·1 dτ == C^{DDIM}_i (partition of unity).
+        let sde = Sde::vp();
+        let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, 10);
+        let tab3 = TabDeis::new(&sde, &grid, 3);
+        let tab0 = TabDeis::new(&sde, &grid, 0);
+        for step in 0..10 {
+            let sum: f64 = tab3.step_coef(step).iter().sum();
+            let want = tab0.step_coef(step)[0];
+            assert!((sum - want).abs() < 1e-9, "step {step}: {sum} vs {want}");
+        }
+    }
+
+    #[test]
+    fn high_order_beats_ddim_at_n10() {
+        // Fig 4c shape: on the exact-score oracle, tab3 at N=10 is closer to
+        // the N=640 reference than ddim at N=10.
+        let sde = Sde::vp();
+        let model = GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), sde);
+        let b = 16;
+        let x0: Vec<f64> = Rng::new(5).normal_vec(b * 2);
+        let run = |order: usize, n: usize| {
+            let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, n);
+            let mut x = x0.clone();
+            TabDeis::new(&sde, &grid, order).sample(&model, &mut x, b, &mut Rng::new(0));
+            x
+        };
+        let reference = run(0, 640);
+        let err = |x: &[f64]| -> f64 {
+            x.iter().zip(&reference).map(|(a, b)| (a - b).abs()).sum::<f64>() / x.len() as f64
+        };
+        let e0 = err(&run(0, 10));
+        let e3 = err(&run(3, 10));
+        assert!(e3 < e0, "tab3 ({e3}) should beat ddim ({e0}) at N=10");
+    }
+
+    #[test]
+    fn ddim_closed_form_trajectory_matches_plan() {
+        // Integrating with the plan == integrating with the textbook DDIM
+        // update (Eq. 12) step by step.
+        let sde = Sde::vp();
+        let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, 8);
+        let model = GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), sde);
+        let b = 4;
+        let x0: Vec<f64> = Rng::new(9).normal_vec(b * 2);
+
+        let mut xa = x0.clone();
+        TabDeis::new(&sde, &grid, 0).sample(&model, &mut xa, b, &mut Rng::new(0));
+
+        let mut xb = x0;
+        let mut eps = vec![0.0; b * 2];
+        for i in (1..=8).rev() {
+            let (t, tp) = (grid[i], grid[i - 1]);
+            model.eval(&xb, &vec![t; b], b, &mut eps);
+            let psi = sde.psi(tp, t);
+            let c = TabDeis::ddim_coef_vp(&sde, t, tp);
+            for (xv, ev) in xb.iter_mut().zip(&eps) {
+                *xv = psi * *xv + c * ev;
+            }
+        }
+        assert_close(&xa, &xb, 1e-8, "plan vs closed-form DDIM");
+    }
+}

@@ -1,0 +1,221 @@
+//! Minimal dense row-major matrix ops for the rust-native eps backend.
+//!
+//! The native backend exists to (a) cross-check PJRT numerics against an
+//! independent implementation and (b) run the huge table sweeps without
+//! per-call PJRT overhead. Hot path: `matmul_bias_into` — a blocked ikj
+//! kernel the compiler auto-vectorizes (see EXPERIMENTS.md §Perf).
+
+/// Row-major matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+/// out[b, n] = x[b, k] @ w[k, n] + bias[n]; `out` is fully overwritten.
+///
+/// ikj order with a 4-way k-unrolled inner kernel (the compiler vectorizes
+/// the contiguous output-row accumulation). Single-threaded by design:
+/// batch-level parallelism lives one level up (`score::NativeMlp` splits
+/// rows across threads once per forward — §Perf in EXPERIMENTS.md showed
+/// per-matmul thread spawning eats its own gains).
+pub fn matmul_bias_into(x: &Mat, w: &Mat, bias: &[f64], out: &mut Mat) {
+    assert_eq!(x.cols, w.rows);
+    assert_eq!(w.cols, bias.len());
+    assert_eq!((out.rows, out.cols), (x.rows, w.cols));
+    matmul_rows(x, w, bias, 0, x.rows, &mut out.data);
+}
+
+/// Rows [r0, r1) of x @ w + bias into `out` (out covers exactly those rows).
+/// 2-row x 4-k register blocking: each loaded w row is used for two output
+/// rows, halving weight-stream bandwidth (the bottleneck on this 1-core box).
+fn matmul_rows(x: &Mat, w: &Mat, bias: &[f64], r0: usize, r1: usize, out: &mut [f64]) {
+    let n = w.cols;
+    let kdim = x.cols;
+    let mut r = r0;
+    while r + 2 <= r1 {
+        let (o_lo, o_hi) = out[(r - r0) * n..(r - r0 + 2) * n].split_at_mut(n);
+        o_lo.copy_from_slice(bias);
+        o_hi.copy_from_slice(bias);
+        let xa = x.row(r);
+        let xb = x.row(r + 1);
+        let mut k = 0;
+        while k + 4 <= kdim {
+            let (a0, a1, a2, a3) = (xa[k], xa[k + 1], xa[k + 2], xa[k + 3]);
+            let (b0, b1, b2, b3) = (xb[k], xb[k + 1], xb[k + 2], xb[k + 3]);
+            let w0 = &w.data[k * n..][..n];
+            let w1 = &w.data[(k + 1) * n..][..n];
+            let w2 = &w.data[(k + 2) * n..][..n];
+            let w3 = &w.data[(k + 3) * n..][..n];
+            for j in 0..n {
+                let (v0, v1, v2, v3) = (w0[j], w1[j], w2[j], w3[j]);
+                o_lo[j] += a0 * v0 + a1 * v1 + a2 * v2 + a3 * v3;
+                o_hi[j] += b0 * v0 + b1 * v1 + b2 * v2 + b3 * v3;
+            }
+            k += 4;
+        }
+        while k < kdim {
+            let (av, bv) = (xa[k], xb[k]);
+            let wrow = &w.data[k * n..][..n];
+            for j in 0..n {
+                o_lo[j] += av * wrow[j];
+                o_hi[j] += bv * wrow[j];
+            }
+            k += 1;
+        }
+        r += 2;
+    }
+    // Tail row (odd batch): plain 4-k unroll.
+    if r < r1 {
+        let orow = &mut out[(r - r0) * n..(r - r0 + 1) * n];
+        orow.copy_from_slice(bias);
+        let xrow = x.row(r);
+        let mut k = 0;
+        while k + 4 <= kdim {
+            let (x0, x1, x2, x3) = (xrow[k], xrow[k + 1], xrow[k + 2], xrow[k + 3]);
+            let w0 = &w.data[k * n..][..n];
+            let w1 = &w.data[(k + 1) * n..][..n];
+            let w2 = &w.data[(k + 2) * n..][..n];
+            let w3 = &w.data[(k + 3) * n..][..n];
+            for j in 0..n {
+                orow[j] += x0 * w0[j] + x1 * w1[j] + x2 * w2[j] + x3 * w3[j];
+            }
+            k += 4;
+        }
+        while k < kdim {
+            let xv = xrow[k];
+            let wrow = &w.data[k * n..][..n];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+            k += 1;
+        }
+    }
+}
+
+/// tanh-approximate GELU — must match jax.nn.gelu(approximate=True) used by
+/// both L1 kernels and the jnp oracle.
+#[inline]
+pub fn gelu(x: f64) -> f64 {
+    const C: f64 = 0.797_884_560_802_865_4; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+pub fn gelu_inplace(m: &mut Mat) {
+    for v in m.data.iter_mut() {
+        *v = gelu(*v);
+    }
+}
+
+/// out += a (elementwise).
+pub fn add_inplace(out: &mut Mat, a: &Mat) {
+    assert_eq!(out.data.len(), a.data.len());
+    for (o, &v) in out.data.iter_mut().zip(&a.data) {
+        *o += v;
+    }
+}
+
+/// out[r, :] += bias
+pub fn add_bias_inplace(out: &mut Mat, bias: &[f64]) {
+    for r in 0..out.rows {
+        for (o, &b) in out.row_mut(r).iter_mut().zip(bias) {
+            *o += b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop::run_prop, rng::Rng};
+
+    fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_rows(r, c, rng.normal_vec(r * c))
+    }
+
+    /// Naive triple loop as the oracle.
+    fn matmul_naive(x: &Mat, w: &Mat, bias: &[f64]) -> Mat {
+        let mut out = Mat::zeros(x.rows, w.cols);
+        for r in 0..x.rows {
+            for c in 0..w.cols {
+                let mut acc = bias[c];
+                for k in 0..x.cols {
+                    acc += x.data[r * x.cols + k] * w.data[k * w.cols + c];
+                }
+                out.data[r * w.cols + c] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        run_prop("matmul", 17, 30, |rng| {
+            let (b, k, n) = (1 + rng.below(9), 1 + rng.below(9), 1 + rng.below(9));
+            let x = rand_mat(rng, b, k);
+            let w = rand_mat(rng, k, n);
+            let bias = rng.normal_vec(n);
+            let mut got = Mat::zeros(b, n);
+            matmul_bias_into(&x, &w, &bias, &mut got);
+            let want = matmul_naive(&x, &w, &bias);
+            for (g, w_) in got.data.iter().zip(&want.data) {
+                assert!((g - w_).abs() < 1e-10);
+            }
+        });
+    }
+
+    #[test]
+    fn parallel_path_matches_serial() {
+        // Big enough to cross the threading threshold (2^21 flops).
+        let mut rng = Rng::new(42);
+        let (b, k, n) = (512, 64, 64); // 2*512*64*64 = 4.2M flops
+        let x = rand_mat(&mut rng, b, k);
+        let w = rand_mat(&mut rng, k, n);
+        let bias = rng.normal_vec(n);
+        let mut got = Mat::zeros(b, n);
+        matmul_bias_into(&x, &w, &bias, &mut got);
+        let want = matmul_naive(&x, &w, &bias);
+        for (g, w_) in got.data.iter().zip(&want.data) {
+            assert!((g - w_).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn gelu_reference_values() {
+        // Spot values from jax.nn.gelu(approximate=True).
+        assert!((gelu(0.0)).abs() < 1e-15);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-5);
+        assert!((gelu(-2.0) + 0.045402).abs() < 1e-5);
+        assert!((gelu(10.0) - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn add_ops() {
+        let mut a = Mat::from_rows(2, 2, vec![1., 2., 3., 4.]);
+        add_inplace(&mut a, &Mat::from_rows(2, 2, vec![10., 10., 10., 10.]));
+        add_bias_inplace(&mut a, &[1., -1.]);
+        assert_eq!(a.data, vec![12., 11., 14., 13.]);
+    }
+}

@@ -1,0 +1,159 @@
+//! Time discretizations {t_i}, i = 0..N, t_0 = t0 (end), t_N = T (start).
+//!
+//! The paper finds t0 and the grid shape dominate quality at low NFE
+//! (Ingredient 4, App. H.3); every scheme it sweeps is here:
+//!   * `Uniform`        — linear in t
+//!   * `Quadratic`      — DDIM's suggestion (== PowerT κ=2)
+//!   * `PowerT(κ)`      — Eq. (42): power function in t
+//!   * `PowerRho(κ)`    — Eq. (43): power function in ρ (κ=7 ≡ EDM/Karras)
+//!   * `LogRho`         — Eq. (44): uniform in log ρ (DPM-Solver's choice)
+
+use crate::diffusion::Sde;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GridKind {
+    Uniform,
+    Quadratic,
+    PowerT(f64),
+    PowerRho(f64),
+    LogRho,
+}
+
+impl GridKind {
+    pub fn name(&self) -> String {
+        match self {
+            GridKind::Uniform => "uniform-t".into(),
+            GridKind::Quadratic => "quadratic-t".into(),
+            GridKind::PowerT(k) => format!("t-power{k}"),
+            GridKind::PowerRho(k) => format!("rho-power{k}"),
+            GridKind::LogRho => "log-rho".into(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<GridKind> {
+        match s {
+            "uniform" | "uniform-t" => Some(GridKind::Uniform),
+            "quadratic" | "quadratic-t" => Some(GridKind::Quadratic),
+            "log-rho" | "logrho" => Some(GridKind::LogRho),
+            _ => {
+                if let Some(k) = s.strip_prefix("t-power") {
+                    k.parse().ok().map(GridKind::PowerT)
+                } else if let Some(k) = s.strip_prefix("rho-power") {
+                    k.parse().ok().map(GridKind::PowerRho)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+/// Build the grid: returns t_0..t_N ascending with t_0 = t0, t_N = t_max.
+pub fn build(kind: GridKind, sde: &Sde, t0: f64, t_max: f64, n: usize) -> Vec<f64> {
+    assert!(n >= 1 && t0 > 0.0 && t0 < t_max, "bad grid spec n={n} t0={t0}");
+    let frac = |i: usize| i as f64 / n as f64;
+    let mut grid: Vec<f64> = match kind {
+        GridKind::Uniform => (0..=n).map(|i| t0 + frac(i) * (t_max - t0)).collect(),
+        GridKind::Quadratic => power_t(2.0, t0, t_max, n),
+        GridKind::PowerT(k) => power_t(k, t0, t_max, n),
+        GridKind::PowerRho(k) => {
+            let (r0, r1) = (sde.rho(t0), sde.rho(t_max));
+            (0..=n)
+                .map(|i| {
+                    let r = ((1.0 - frac(i)) * r0.powf(1.0 / k) + frac(i) * r1.powf(1.0 / k))
+                        .powf(k);
+                    sde.t_of_rho(r)
+                })
+                .collect()
+        }
+        GridKind::LogRho => {
+            let (l0, l1) = (sde.rho(t0).ln(), sde.rho(t_max).ln());
+            (0..=n)
+                .map(|i| sde.t_of_rho(((1.0 - frac(i)) * l0 + frac(i) * l1).exp()))
+                .collect()
+        }
+    };
+    // Pin the endpoints exactly (inversion round-off otherwise leaks in).
+    grid[0] = t0;
+    grid[n] = t_max;
+    grid
+}
+
+fn power_t(k: f64, t0: f64, t_max: f64, n: usize) -> Vec<f64> {
+    (0..=n)
+        .map(|i| {
+            let f = i as f64 / n as f64;
+            ((1.0 - f) * t0.powf(1.0 / k) + f * t_max.powf(1.0 / k)).powf(k)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_valid(g: &[f64], t0: f64, t_max: f64) {
+        assert_eq!(g[0], t0);
+        assert_eq!(*g.last().unwrap(), t_max);
+        for w in g.windows(2) {
+            assert!(w[1] > w[0], "grid not strictly increasing: {w:?}");
+        }
+    }
+
+    #[test]
+    fn all_kinds_produce_valid_grids() {
+        let kinds = [
+            GridKind::Uniform,
+            GridKind::Quadratic,
+            GridKind::PowerT(3.0),
+            GridKind::PowerRho(7.0),
+            GridKind::LogRho,
+        ];
+        for sde in [Sde::vp(), Sde::ve()] {
+            let t0 = sde.t0_default();
+            for kind in kinds {
+                for n in [1, 2, 5, 10, 50] {
+                    let g = build(kind, &sde, t0, 1.0, n);
+                    assert_eq!(g.len(), n + 1);
+                    check_valid(&g, t0, 1.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quadratic_refines_near_zero() {
+        let g = build(GridKind::Quadratic, &Sde::vp(), 1e-3, 1.0, 10);
+        let first = g[1] - g[0];
+        let last = g[10] - g[9];
+        assert!(first < last / 3.0, "first {first} last {last}");
+    }
+
+    #[test]
+    fn quadratic_equals_power2() {
+        let a = build(GridKind::Quadratic, &Sde::vp(), 1e-3, 1.0, 7);
+        let b = build(GridKind::PowerT(2.0), &Sde::vp(), 1e-3, 1.0, 7);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["uniform", "quadratic", "t-power3", "rho-power7", "log-rho"] {
+            assert!(GridKind::parse(s).is_some(), "{s}");
+        }
+        assert!(GridKind::parse("nope").is_none());
+    }
+
+    #[test]
+    fn log_rho_uniform_in_log_rho() {
+        let sde = Sde::vp();
+        let g = build(GridKind::LogRho, &sde, 1e-3, 1.0, 8);
+        let logs: Vec<f64> = g.iter().map(|&t| sde.rho(t).ln()).collect();
+        let d0 = logs[1] - logs[0];
+        for w in logs.windows(2) {
+            assert!(((w[1] - w[0]) / d0 - 1.0).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Micro-benchmark harness (criterion is not in the offline registry).
+//!
+//! Warmup + timed iterations + percentile summary, plus a tiny CSV sink so
+//! `cargo bench` runs append machine-readable rows under results/.
+
+use std::io::Write as _;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn mean_us(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e6
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<42} {:>9.1}us mean  {:>9.1}us p50  {:>9.1}us p99  ({} iters)",
+            self.name,
+            self.mean.as_secs_f64() * 1e6,
+            self.p50.as_secs_f64() * 1e6,
+            self.p99.as_secs_f64() * 1e6,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` with `warmup` untimed runs then `iters` timed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    summarize(name, samples)
+}
+
+/// Time `f` repeatedly until `budget` elapses (at least 3 iterations).
+pub fn bench_for<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchStats {
+    f(); // warmup
+    let start = Instant::now();
+    let mut samples = Vec::new();
+    while start.elapsed() < budget || samples.len() < 3 {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    summarize(name, samples)
+}
+
+fn summarize(name: &str, mut samples: Vec<Duration>) -> BenchStats {
+    samples.sort();
+    let n = samples.len();
+    let total: Duration = samples.iter().sum();
+    let pct = |p: f64| samples[(((n - 1) as f64) * p) as usize];
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean: total / n as u32,
+        p50: pct(0.50),
+        p95: pct(0.95),
+        p99: pct(0.99),
+        min: samples[0],
+        max: samples[n - 1],
+    }
+}
+
+/// Prevent the optimizer from deleting a computation's result.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Append rows to results/<file>.csv, creating the header on first write.
+pub struct CsvSink {
+    path: std::path::PathBuf,
+    wrote_header: bool,
+}
+
+impl CsvSink {
+    pub fn new(file: &str, header: &str) -> Self {
+        let dir = std::path::Path::new("results");
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(file);
+        let exists = path.exists();
+        let mut sink = CsvSink { path, wrote_header: exists };
+        if !exists {
+            sink.row(header);
+            sink.wrote_header = true;
+        }
+        sink
+    }
+
+    pub fn row(&mut self, line: &str) {
+        if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&self.path)
+        {
+            let _ = writeln!(f, "{line}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_percentiles() {
+        let s = bench("noop", 2, 50, || {
+            black_box(1 + 1);
+        });
+        assert_eq!(s.iters, 50);
+        assert!(s.min <= s.p50 && s.p50 <= s.p99 && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn bench_for_respects_min_iters() {
+        let s = bench_for("fast", Duration::from_micros(1), || {
+            black_box(0);
+        });
+        assert!(s.iters >= 3);
+    }
+}

@@ -1,0 +1,95 @@
+//! Flag parsing for binaries/examples (clap is not in the offline registry).
+//!
+//! Supports `--key value`, `--key=value`, bare `--flag`, and positionals.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list.
+    pub fn list_or(&self, key: &str, default: &str) -> Vec<String> {
+        self.str_or(key, default).split(',').map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_all_forms() {
+        // NB: a bare flag must be followed by another --flag (or end of argv)
+        // to parse as boolean; `--verbose pos1` would consume the positional.
+        let a = args("--nfe 10 --solver=tab3 pos1 --verbose --seeds 1,2,3");
+        assert_eq!(a.usize_or("nfe", 0), 10);
+        assert_eq!(a.str_or("solver", ""), "tab3");
+        assert!(a.bool("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+        assert_eq!(a.list_or("seeds", ""), vec!["1", "2", "3"]);
+    }
+
+    #[test]
+    fn defaults_kick_in() {
+        let a = args("");
+        assert_eq!(a.f64_or("t0", 1e-3), 1e-3);
+        assert!(!a.bool("missing"));
+    }
+}

@@ -1,0 +1,8 @@
+//! In-repo substitutes for crates absent from the offline registry
+//! (rand, serde, clap, criterion, proptest) — see DESIGN.md §1.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,57 @@
+//! Tiny property-testing harness (proptest is not in the offline registry).
+//!
+//! `run_prop` generates `cases` random inputs through a user generator and
+//! asserts the property; on failure it reports the seed so the case replays
+//! deterministically. No shrinking — generators here produce small values to
+//! begin with. Used for coordinator/solver/quadrature invariants.
+
+use crate::util::rng::Rng;
+
+/// Run `prop(rng)` for `cases` independent seeds derived from `seed`.
+/// The closure should panic (assert!) on violation.
+pub fn run_prop<F: FnMut(&mut Rng)>(name: &str, seed: u64, cases: usize, mut prop: F) {
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(err) = result {
+            eprintln!("property '{name}' FAILED at case {case} (replay seed {case_seed:#x})");
+            std::panic::resume_unwind(err);
+        }
+    }
+}
+
+/// Assert two slices are element-wise close.
+#[track_caller]
+pub fn assert_close(a: &[f64], b: &[f64], atol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= atol + 1e-12 * y.abs().max(x.abs()),
+            "{what}: element {i}: {x} vs {y} (atol {atol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_prop_executes_all_cases() {
+        let mut n = 0;
+        run_prop("count", 1, 25, |_| n += 1);
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn run_prop_propagates_failure() {
+        run_prop("fail", 1, 10, |rng| assert!(rng.uniform() < -1.0));
+    }
+
+    #[test]
+    fn assert_close_tolerates_atol() {
+        assert_close(&[1.0, 2.0], &[1.0 + 1e-9, 2.0], 1e-8, "ok");
+    }
+}

@@ -1,0 +1,76 @@
+//! Cross-language parity: rust solvers vs the independent float64 numpy
+//! implementations in python/compile/fixtures.py, on the analytic GMM.
+//! Pins every coefficient formula (Psi, C_ij, rho maps) across the stack.
+//!
+//! Requires `make artifacts` (which also writes artifacts/fixtures/).
+
+use deis::diffusion::Sde;
+use deis::gmm::Gmm;
+use deis::score::GmmEps;
+use deis::solvers::{self, SolverKind};
+use deis::util::json::Json;
+use deis::util::rng::Rng;
+
+fn load_fixture() -> Json {
+    let path = "artifacts/fixtures/solver_parity.json";
+    Json::from_file(path).unwrap_or_else(|e| {
+        panic!("{path} missing — run `make artifacts` first ({e:#})")
+    })
+}
+
+struct Fixture {
+    grid: Vec<f64>,
+    x_t: Vec<f64>,
+    b: usize,
+    gmm: Gmm,
+}
+
+fn setup(fx: &Json) -> Fixture {
+    let grid = fx.get("grid").unwrap().as_f64_vec().unwrap();
+    let (b, _d, x_t) = fx.get("x_T").unwrap().as_matrix().unwrap();
+    let gm = fx.get("gmm").unwrap();
+    let (_, _, means_flat) = gm.get("means").unwrap().as_matrix().unwrap();
+    let means: Vec<Vec<f64>> = means_flat.chunks(2).map(|c| c.to_vec()).collect();
+    let gmm = Gmm::new(means, gm.get("std").unwrap().as_f64().unwrap());
+    Fixture { grid, x_t, b, gmm }
+}
+
+fn check(fx: &Json, solver_key: &str, kind: SolverKind, sde: Sde, scale_xt: f64, atol: f64) {
+    let f = setup(fx);
+    let model = GmmEps::new(f.gmm.clone(), sde);
+    let mut x: Vec<f64> = f.x_t.iter().map(|v| v * scale_xt).collect();
+    let solver = solvers::build(kind, &sde, &f.grid);
+    solver.sample(&model, &mut x, f.b, &mut Rng::new(0));
+    let (_, _, want) = fx.get("solvers").unwrap().get(solver_key).unwrap().as_matrix().unwrap();
+    for (i, (got, exp)) in x.iter().zip(&want).enumerate() {
+        assert!(
+            (got - exp).abs() < atol,
+            "{solver_key} element {i}: rust {got} vs python {exp}"
+        );
+    }
+}
+
+#[test]
+fn ddim_matches_python() {
+    check(&load_fixture(), "vp_ddim", SolverKind::Tab(0), Sde::vp(), 1.0, 1e-6);
+}
+
+#[test]
+fn tab2_matches_python() {
+    check(&load_fixture(), "vp_tab2", SolverKind::Tab(2), Sde::vp(), 1.0, 1e-6);
+}
+
+#[test]
+fn rho_ab2_matches_python() {
+    check(&load_fixture(), "vp_rho_ab2", SolverKind::RhoAb(2), Sde::vp(), 1.0, 1e-6);
+}
+
+#[test]
+fn rho_heun_matches_python() {
+    check(&load_fixture(), "vp_rho_heun", SolverKind::RhoHeun, Sde::vp(), 1.0, 1e-6);
+}
+
+#[test]
+fn ve_ddim_matches_python() {
+    check(&load_fixture(), "ve_ddim", SolverKind::Tab(0), Sde::ve(), 50.0, 1e-6);
+}

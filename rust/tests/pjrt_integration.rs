@@ -1,0 +1,149 @@
+//! End-to-end over the real PJRT runtime + AOT artifacts:
+//!   jax (training) -> HLO text -> rust PJRT execution == jax numerics,
+//!   and the full coordinator serving path on the compiled model.
+//!
+//! Requires `make artifacts`.
+
+use std::sync::Arc;
+
+use deis::coordinator::{Coordinator, CoordinatorConfig, ModelRegistry, SampleRequest};
+use deis::diffusion::Sde;
+use deis::gmm::Gmm;
+use deis::metrics;
+use deis::runtime::Runtime;
+use deis::score::{pjrt::PjrtEps, EpsModel, GmmEps, NativeMlp};
+use deis::solvers::SolverKind;
+use deis::util::json::Json;
+use deis::util::rng::Rng;
+
+fn runtime() -> &'static Runtime {
+    Runtime::global()
+}
+
+fn load_checks(name: &str) -> (Vec<f64>, Vec<f64>, Vec<f64>, usize, usize) {
+    let path = format!("artifacts/checks_{name}.json");
+    let v = Json::from_file(&path)
+        .unwrap_or_else(|e| panic!("{path} missing — run `make artifacts` ({e:#})"));
+    let (b, d, x) = v.get("x").unwrap().as_matrix().unwrap();
+    let t = v.get("t").unwrap().as_f64_vec().unwrap();
+    let (_, _, eps) = v.get("eps").unwrap().as_matrix().unwrap();
+    (x, t, eps, b, d)
+}
+
+#[test]
+fn pjrt_pallas_artifact_matches_jax() {
+    // The pallas-kernel lowering executed via rust PJRT == jax's own output.
+    let (x, t, want, b, d) = load_checks("gmm2d");
+    let model = PjrtEps::load(runtime(), "gmm2d", &[16]).unwrap();
+    assert_eq!(model.dim(), d);
+    let got = model.eval_vec(&x, &t, b);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!((g - w).abs() < 2e-4, "element {i}: pjrt {g} vs jax {w}");
+    }
+}
+
+#[test]
+fn pjrt_xla_variant_matches_jax() {
+    let (x, t, want, b, _d) = load_checks("gmm2d");
+    let model = PjrtEps::load(runtime(), "gmm2d_xla", &[16]).unwrap();
+    let got = model.eval_vec(&x, &t, b);
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() < 2e-4, "pjrt-xla {g} vs jax {w}");
+    }
+}
+
+#[test]
+fn native_mlp_matches_jax() {
+    // Independent rust reimplementation of the forward pass == jax.
+    for name in ["gmm2d", "toy1d", "spiral2d", "img8"] {
+        let (x, t, want, b, d) = load_checks(name);
+        let model = NativeMlp::load(&format!("artifacts/weights_{name}.json")).unwrap();
+        assert_eq!(model.dim(), d, "{name}");
+        let got = model.eval_vec(&x, &t, b);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() < 5e-4, "{name} element {i}: native {g} vs jax {w}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_exact_gmm_artifact_matches_rust_math() {
+    // The analytic GMM exported through jax->HLO->PJRT == the rust closed form.
+    let model = PjrtEps::load(runtime(), "gmm2d_exact", &[16]).unwrap();
+    let oracle = GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp());
+    let mut rng = Rng::new(77);
+    let x: Vec<f64> = (0..32).map(|_| 4.0 * rng.normal()).collect();
+    let t: Vec<f64> = (0..16).map(|_| rng.uniform_in(1e-3, 1.0)).collect();
+    let got = model.eval_vec(&x, &t, 16);
+    let want = oracle.eval_vec(&x, &t, 16);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!((g - w).abs() < 1e-3, "element {i}: pjrt {g} vs rust {w}");
+    }
+}
+
+#[test]
+fn pjrt_batch_padding_and_chunking() {
+    // Odd logical batch sizes route through padding; huge ones chunk.
+    let model = PjrtEps::load(runtime(), "gmm2d_exact", &[16, 256]).unwrap();
+    let oracle = GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp());
+    for b in [1, 3, 16, 17, 300] {
+        let mut rng = Rng::new(b as u64);
+        let x: Vec<f64> = (0..2 * b).map(|_| 3.0 * rng.normal()).collect();
+        let t: Vec<f64> = (0..b).map(|_| rng.uniform_in(0.01, 1.0)).collect();
+        let got = model.eval_vec(&x, &t, b);
+        let want = oracle.eval_vec(&x, &t, b);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3, "b={b}: {g} vs {w}");
+        }
+    }
+}
+
+#[test]
+fn coordinator_serves_pjrt_model_end_to_end() {
+    let mut reg = ModelRegistry::new();
+    reg.insert(
+        "gmm2d",
+        Arc::new(PjrtEps::load(runtime(), "gmm2d", &[16, 64, 256]).unwrap()),
+    );
+    let coord = Coordinator::new(CoordinatorConfig::default(), reg);
+    let mut req = SampleRequest::new("gmm2d", SolverKind::Tab(3), 10, 512);
+    req.seed = 4;
+    let res = coord.sample_blocking(req).unwrap();
+    assert_eq!(res.samples.len(), 1024);
+
+    // Quality gate: the trained net at NFE=10 should produce samples whose
+    // SWD to exact data is far below that of the prior.
+    let gmm = Gmm::ring2d(4.0, 8, 0.25);
+    let mut rng = Rng::new(123);
+    let truth = gmm.sample(&mut rng, 8192);
+    let swd = metrics::sliced_wasserstein(&res.samples, &truth, 2, 64, &mut rng);
+    let prior: Vec<f64> = Rng::new(5).normal_vec(1024);
+    let swd_prior = metrics::sliced_wasserstein(&prior, &truth, 2, 64, &mut rng);
+    assert!(
+        swd < 0.5 * swd_prior,
+        "sampled swd {swd} should beat prior swd {swd_prior}"
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn multithreaded_pjrt_access_is_safe() {
+    // Hammer the single executor thread from many workers.
+    let model = Arc::new(PjrtEps::load(runtime(), "gmm2d_exact", &[16]).unwrap());
+    let mut handles = Vec::new();
+    for k in 0..8 {
+        let m = model.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(k);
+            for _ in 0..5 {
+                let x: Vec<f64> = (0..32).map(|_| rng.normal()).collect();
+                let t: Vec<f64> = (0..16).map(|_| rng.uniform_in(0.1, 1.0)).collect();
+                let out = m.eval_vec(&x, &t, 16);
+                assert!(out.iter().all(|v| v.is_finite()));
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,71 @@
+//! Serving-layer integration: TCP server + client over the analytic oracle
+//! (no artifacts needed), exercising batching, merging and the wire format.
+
+use std::sync::Arc;
+
+use deis::coordinator::{Coordinator, CoordinatorConfig, ModelRegistry};
+use deis::diffusion::Sde;
+use deis::gmm::Gmm;
+use deis::score::GmmEps;
+use deis::server::{serve, Client};
+use deis::util::json::Json;
+
+fn boot(workers: usize) -> std::net::SocketAddr {
+    let mut reg = ModelRegistry::new();
+    reg.insert("gmm2d", Arc::new(GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp())));
+    let coord = Arc::new(Coordinator::new(
+        CoordinatorConfig { workers, max_batch_samples: 512 },
+        reg,
+    ));
+    serve(coord, "127.0.0.1:0").unwrap()
+}
+
+#[test]
+fn many_clients_merge_and_complete() {
+    let addr = boot(2);
+    let mut handles = Vec::new();
+    for i in 0..12 {
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            let req = format!(
+                r#"{{"model":"gmm2d","solver":"tab2","nfe":8,"n":32,"seed":{i}}}"#
+            );
+            let resp = c.call(&Json::parse(&req).unwrap()).unwrap();
+            assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp:?}");
+            resp.get("merged_with").unwrap().as_f64().unwrap() as usize
+        }));
+    }
+    let merges: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(merges.len(), 12);
+    // With 2 workers and 12 simultaneous identical requests, at least some
+    // runs must have merged more than one request.
+    assert!(merges.iter().any(|&m| m > 1), "no dynamic batching observed: {merges:?}");
+
+    let mut c = Client::connect(addr).unwrap();
+    let stats = c.call(&Json::parse(r#"{"cmd":"stats"}"#).unwrap()).unwrap();
+    assert_eq!(stats.get("completed").unwrap().as_f64().unwrap() as usize, 12);
+    let batches = stats.get("batches").unwrap().as_f64().unwrap() as usize;
+    assert!(batches < 12, "expected merging to reduce batch count, got {batches}");
+}
+
+#[test]
+fn mixed_solver_configs_do_not_cross_contaminate() {
+    let addr = boot(3);
+    let mut a = Client::connect(addr).unwrap();
+    let mut b = Client::connect(addr).unwrap();
+    // Same seed, different solver => different samples; same seed + same
+    // config => identical samples (determinism through the wire).
+    let q = |solver: &str| {
+        format!(
+            r#"{{"model":"gmm2d","solver":"{solver}","nfe":6,"n":8,"seed":3,"return_samples":true}}"#
+        )
+    };
+    let ra = a.call(&Json::parse(&q("ddim")).unwrap()).unwrap();
+    let rb = b.call(&Json::parse(&q("rho-heun")).unwrap()).unwrap();
+    let ra2 = a.call(&Json::parse(&q("ddim")).unwrap()).unwrap();
+    let sa = ra.get("samples").unwrap().as_f64_vec().unwrap();
+    let sb = rb.get("samples").unwrap().as_f64_vec().unwrap();
+    let sa2 = ra2.get("samples").unwrap().as_f64_vec().unwrap();
+    assert_eq!(sa, sa2, "determinism violated");
+    assert!(sa.iter().zip(&sb).any(|(x, y)| (x - y).abs() > 1e-9));
+}
