@@ -1,7 +1,9 @@
 //! §Perf microbenches for the three layers (criterion-style, in-repo
-//! harness): PJRT dispatch (pallas vs xla lowering), native-MLP forward,
-//! the DEIS combine, coefficient precomputation, and coordinator overhead.
-//! Results feed EXPERIMENTS.md §Perf.
+//! harness): PJRT dispatch (pallas vs xla lowering), native-MLP forward
+//! (generic-t and the solver-shaped uniform-t fast path), the DEIS combine,
+//! coefficient precomputation, and coordinator overhead. Results feed
+//! EXPERIMENTS.md §Perf, plus `BENCH_hotpath.json` at the repo root so
+//! future PRs can diff the perf trajectory mechanically.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -12,18 +14,25 @@ use deis::exp::sweep_model;
 use deis::gmm::Gmm;
 use deis::runtime::Runtime;
 use deis::score::{pjrt::PjrtEps, EpsModel, GmmEps};
-use deis::solvers::{self, SolverKind};
+use deis::solvers::{self, deis_combine, SolverKind};
 use deis::timegrid::{build, GridKind};
-use deis::util::bench::{bench_for, black_box, CsvSink};
+use deis::util::bench::{bench_for, black_box, CsvSink, JsonSink};
 use deis::util::rng::Rng;
 
 fn main() {
     let mut csv = CsvSink::new("perf_hotpath.csv", "bench,mean_us,p50_us,p99_us");
+    // Anchor the JSON at the repo root (one above the crate dir) regardless
+    // of the invocation cwd, so successive PRs diff the same file.
+    let json_path = option_env!("CARGO_MANIFEST_DIR")
+        .map(|d| format!("{d}/../BENCH_hotpath.json"))
+        .unwrap_or_else(|| "BENCH_hotpath.json".into());
+    let mut json = JsonSink::new(&json_path);
     let budget = Duration::from_millis(1500);
     let mut log = |s: deis::util::bench::BenchStats| {
         println!("{s}");
         csv.row(&format!("{},{:.1},{:.1},{:.1}", s.name, s.mean_us(),
             s.p50.as_secs_f64() * 1e6, s.p99.as_secs_f64() * 1e6));
+        json.add(&s);
     };
 
     let rt = Runtime::global();
@@ -54,6 +63,9 @@ fn main() {
     }
 
     // --- L3: native MLP forward -------------------------------------------
+    // Per-row random t exercises the generic path; the uniform-t variant is
+    // what every solver step actually issues (fill_t broadcasts a scalar)
+    // and takes the shared-embedding fast path.
     for name in ["gmm2d", "img8"] {
         let model = sweep_model(name);
         let d = model.dim();
@@ -62,6 +74,11 @@ fn main() {
         let mut out = vec![0.0; 256 * d];
         log(bench_for(&format!("native mlp eval b256 {name}"), budget, || {
             model.eval(&x, &t, 256, &mut out);
+            black_box(&out);
+        }));
+        let t_uni = vec![0.5; 256];
+        log(bench_for(&format!("native mlp eval b256 {name} uniform-t"), budget, || {
+            model.eval(&x, &t_uni, 256, &mut out);
             black_box(&out);
         }));
     }
@@ -89,7 +106,7 @@ fn main() {
         let eps: Vec<Vec<f64>> = (0..4).map(|_| rng.normal_vec(256 * 64)).collect();
         let eps_refs: Vec<&[f64]> = eps.iter().map(|e| e.as_slice()).collect();
         log(bench_for("deis combine b256 d64 r3", budget, || {
-            deis_combine_pub(&mut x, 0.99, &[0.1, -0.2, 0.05, 0.01], &eps_refs);
+            deis_combine(&mut x, 0.99, &[0.1, -0.2, 0.05, 0.01], &eps_refs);
             black_box(&x);
         }));
     }
@@ -105,16 +122,9 @@ fn main() {
         }));
         coord.shutdown();
     }
-}
 
-/// Re-implementation of the private solver combine for benching the loop.
-fn deis_combine_pub(x: &mut [f64], psi: f64, coefs: &[f64], eps: &[&[f64]]) {
-    for v in x.iter_mut() {
-        *v *= psi;
-    }
-    for (c, e) in coefs.iter().zip(eps) {
-        for (v, ev) in x.iter_mut().zip(e.iter()) {
-            *v += c * ev;
-        }
+    drop(log);
+    if let Err(e) = json.flush() {
+        eprintln!("warning: could not write BENCH_hotpath.json: {e}");
     }
 }

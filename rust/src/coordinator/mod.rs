@@ -146,6 +146,10 @@ impl Coordinator {
 }
 
 fn worker_loop(sh: Arc<Shared>) {
+    // Merged-batch state buffer, owned by this worker and reused across
+    // batches (sized to the largest merged batch seen; part of the
+    // zero-hot-loop-allocation discipline of EXPERIMENTS.md §Perf).
+    let mut xbuf: Vec<f64> = Vec::new();
     loop {
         let popped = {
             let mut guard = sh.batcher.lock().unwrap();
@@ -160,11 +164,15 @@ fn worker_loop(sh: Arc<Shared>) {
             }
         };
         let Some((_key, group)) = popped else { return };
-        run_batch(&sh, group);
+        run_batch(&sh, group, &mut xbuf);
     }
 }
 
-fn run_batch(sh: &Shared, group: Vec<batcher::Pending<(Responder, Instant)>>) {
+fn run_batch(
+    sh: &Shared,
+    group: Vec<batcher::Pending<(Responder, Instant)>>,
+    xbuf: &mut Vec<f64>,
+) {
     let spec = group[0].req.clone();
     let merged = group.len();
     sh.stats.batches.fetch_add(1, Ordering::Relaxed);
@@ -187,8 +195,11 @@ fn run_batch(sh: &Shared, group: Vec<batcher::Pending<(Responder, Instant)>>) {
     let grid = timegrid::build(spec.grid, &spec.sde, spec.t0, 1.0, steps);
     let solver = solvers::build(spec.solver, &spec.sde, &grid);
 
-    // Per-request prior draws, deterministic in each request's seed.
-    let mut x = vec![0.0; total * d];
+    // Per-request prior draws, deterministic in each request's seed, into
+    // the worker's recycled state buffer.
+    xbuf.clear();
+    xbuf.resize(total * d, 0.0);
+    let x = &mut xbuf[..total * d];
     let prior = spec.sde.prior_std(1.0);
     let mut offset = 0;
     for p in &group {
@@ -203,7 +214,7 @@ fn run_batch(sh: &Shared, group: Vec<batcher::Pending<(Responder, Instant)>>) {
     // One rng stream for stochastic solvers across the merged batch,
     // deterministic in the head request's seed.
     let mut srng = Rng::new(spec.seed ^ 0xD1F_F051);
-    solver.sample(model.as_ref(), &mut x, total, &mut srng);
+    solver.sample(model.as_ref(), x, total, &mut srng);
     let solve_us = t_solve.elapsed().as_micros() as u64;
     sh.stats.samples.fetch_add(total as u64, Ordering::Relaxed);
     sh.stats.model_evals.fetch_add(solver.nfe() as u64, Ordering::Relaxed);

@@ -117,8 +117,11 @@ pub fn lagrange_basis_integral(nodes: &[f64], j: usize, lo: f64, hi: f64) -> f64
     }
     let mut acc = 0.0;
     for (d, &c) in coef.iter().enumerate() {
-        let p = (d + 1) as f64;
-        acc += c / p * (hi.powf(p) - lo.powf(p));
+        // Integer exponent: powi is cheaper than powf and exactly
+        // representable (powf goes through exp/ln and can be off by an ulp
+        // even for integral powers).
+        let p = (d + 1) as i32;
+        acc += c / p as f64 * (hi.powi(p) - lo.powi(p));
     }
     acc / denom
 }

@@ -6,6 +6,7 @@
 
 mod native;
 pub mod pjrt;
+pub mod pool;
 
 pub use native::NativeMlp;
 

@@ -4,14 +4,40 @@
 //! embedding, same tanh-GELU). Used to (a) cross-check PJRT numerics against
 //! an independent implementation (checks_*.json fixtures) and (b) drive the
 //! big table sweeps without PJRT dispatch overhead.
+//!
+//! §Perf iteration 3 (EXPERIMENTS.md): the forward is now a zero-allocation
+//! engine in the steady state.
+//!
+//!   * Batch chunks fan out over the persistent [`crate::score::pool`]
+//!     worker pool instead of spawning a `thread::scope` thread set on
+//!     every eval (i.e. on every solver step of every batch).
+//!   * Every activation lives in a per-thread [`Scratch`] workspace reused
+//!     across solver steps (the old code did ~6 `Mat::zeros` plus an
+//!     `x.to_vec()` per chunk per eval).
+//!   * Uniform-t fast path: solver stepping broadcasts a scalar t, so the
+//!     time-embedding row and every per-block `e @ u` product are
+//!     row-identical. They are computed once per eval into a
+//!     [`UniformScratch`] and folded into each block's first bias, deleting
+//!     one of the two matmuls per residual block; the GELU epilogue is
+//!     fused into the remaining one (`matmul_rows::<false, true>`).
+//!
+//! `rust/tests/zero_alloc.rs` pins the no-steady-state-allocation claim
+//! with a counting global allocator.
+
+use std::cell::RefCell;
 
 use anyhow::{Context, Result};
 
+use crate::score::pool::WorkerPool;
 use crate::score::EpsModel;
-use crate::tensor::{add_bias_inplace, add_inplace, gelu_inplace, matmul_bias_into, Mat};
+use crate::tensor::{gelu_slice, matmul_rows, Mat};
 use crate::util::json::Json;
 
 const TIME_SCALE: f64 = 1000.0; // keep in sync with kernels/ref.py
+
+/// Flop threshold above which an eval fans out to the worker pool (below
+/// it, dispatch overhead dominates the matmul work).
+const PARALLEL_FLOPS: usize = 1 << 22;
 
 struct Block {
     w1: Mat,
@@ -30,7 +56,65 @@ pub struct NativeMlp {
     b_out: Vec<f64>,
     blocks: Vec<Block>,
     freqs: Vec<f64>,
+    /// All-zero [hidden] bias for accumulate-only matmuls (generic-t path).
+    zero_bias: Vec<f64>,
 }
+
+/// Per-thread activation arena. Buffers are length-adjusted in place (no
+/// reallocation once capacity covers the working shape) and fully written
+/// before they are read, so reuse across differing (b, dim) shapes can
+/// never leak stale data — a property test below pins that.
+#[derive(Default)]
+struct Scratch {
+    /// [b, hidden] residual stream.
+    h: Vec<f64>,
+    /// [b, hidden] block pre-activation.
+    z: Vec<f64>,
+    /// [b, embed] per-row time embedding (generic-t path only).
+    e: Vec<f64>,
+}
+
+/// Per-eval uniform-t precompute: one embedding row and one combined
+/// `b1 + e @ u` bias per block, shared read-only by every chunk task.
+#[derive(Default)]
+struct UniformScratch {
+    e_row: Vec<f64>,
+    /// [n_blocks, hidden], block-major.
+    block_bias: Vec<f64>,
+}
+
+/// Borrowed view of the uniform-t precompute handed to chunk tasks.
+#[derive(Clone, Copy)]
+struct UniformCtx<'a> {
+    /// [n_blocks, hidden] combined first-layer biases.
+    block_bias: &'a [f64],
+}
+
+thread_local! {
+    /// Chunk-forward workspace, owned by whichever thread runs the chunk
+    /// (pool workers and dispatching callers alike).
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::default());
+    /// Uniform-t precompute. Only the dispatching thread touches it; it is
+    /// a separate thread-local from SCRATCH because the dispatcher holds
+    /// the ctx borrow while itself executing chunk tasks (which need
+    /// SCRATCH mutably).
+    static UNIFORM: RefCell<UniformScratch> = RefCell::new(UniformScratch::default());
+}
+
+/// Adjust a workspace buffer's length, reusing capacity (new elements are
+/// zeroed; retained elements keep whatever the previous use left — callers
+/// fully overwrite before reading).
+#[inline]
+fn set_len(buf: &mut Vec<f64>, len: usize) {
+    buf.resize(len, 0.0);
+}
+
+/// `*mut f64` wrapper so chunk tasks can carve disjoint output windows
+/// through a shared `Fn` closure.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
 
 impl NativeMlp {
     pub fn load(path: &str) -> Result<NativeMlp> {
@@ -60,15 +144,18 @@ impl NativeMlp {
         let freqs = (0..half)
             .map(|i| (-(10000.0f64).ln() * i as f64 / half as f64).exp())
             .collect();
+        let w_in = mat(p.get("w_in")?)?;
+        let zero_bias = vec![0.0; w_in.cols];
         Ok(NativeMlp {
             dim,
             embed,
-            w_in: mat(p.get("w_in")?)?,
+            w_in,
             b_in: p.get("b_in")?.as_f64_vec()?,
             w_out: mat(p.get("w_out")?)?,
             b_out: p.get("b_out")?.as_f64_vec()?,
             blocks,
             freqs,
+            zero_bias,
         })
     }
 
@@ -76,47 +163,133 @@ impl NativeMlp {
         self.w_in.cols
     }
 
-    fn time_embed(&self, t: &[f64]) -> Mat {
+    /// Sinusoidal embedding of one scalar t into `row` ([embed]).
+    fn time_embed_row(&self, t: f64, row: &mut [f64]) {
         let half = self.embed / 2;
-        let mut e = Mat::zeros(t.len(), self.embed);
-        for (r, &tv) in t.iter().enumerate() {
-            let row = e.row_mut(r);
-            for (i, &f) in self.freqs.iter().enumerate() {
-                let ang = TIME_SCALE * tv * f;
-                row[i] = ang.sin();
-                row[half + i] = ang.cos();
+        for (i, &f) in self.freqs.iter().enumerate() {
+            let ang = TIME_SCALE * t * f;
+            row[i] = ang.sin();
+            row[half + i] = ang.cos();
+        }
+    }
+
+    /// Uniform-t precompute: embedding row once, then fold `e @ u` into each
+    /// block's first-layer bias (`bias_j = b1_j + e_row @ u_j`).
+    fn build_uniform_ctx<'a>(&self, t: f64, uni: &'a mut UniformScratch) -> UniformCtx<'a> {
+        set_len(&mut uni.e_row, self.embed);
+        if self.embed % 2 == 1 {
+            // Odd embed: the element past the sin/cos halves is never
+            // written by time_embed_row.
+            uni.e_row.fill(0.0);
+        }
+        self.time_embed_row(t, &mut uni.e_row);
+        let hd = self.hidden();
+        set_len(&mut uni.block_bias, self.blocks.len() * hd);
+        uni.block_bias.fill(0.0); // ACC kernel accumulates on top
+        let UniformScratch { e_row, block_bias } = uni;
+        for (j, blk) in self.blocks.iter().enumerate() {
+            matmul_rows::<true, false>(
+                &e_row[..],
+                self.embed,
+                &blk.u,
+                &blk.b1,
+                &mut block_bias[j * hd..(j + 1) * hd],
+            );
+        }
+        UniformCtx { block_bias: &block_bias[..] }
+    }
+
+    /// Forward for `b` contiguous rows on the current thread. With a
+    /// uniform-t `ctx` the per-block update is two fused matmuls
+    /// (`gelu(h @ w1 + bias_j)` and `h += z @ w2 + b2`); without it, the
+    /// per-row embedding and `e @ u` matmul run as in the generic math.
+    fn forward_rows(
+        &self,
+        x: &[f64],
+        t: Option<&[f64]>,
+        b: usize,
+        out: &mut [f64],
+        scr: &mut Scratch,
+        ctx: Option<UniformCtx<'_>>,
+    ) {
+        let hd = self.hidden();
+        set_len(&mut scr.h, b * hd);
+        matmul_rows::<false, false>(x, self.dim, &self.w_in, &self.b_in, &mut scr.h);
+        set_len(&mut scr.z, b * hd);
+        match ctx {
+            Some(c) => {
+                for (j, blk) in self.blocks.iter().enumerate() {
+                    let bias = &c.block_bias[j * hd..(j + 1) * hd];
+                    // z = gelu(h @ w1 + (b1 + e @ u)), GELU in the epilogue.
+                    matmul_rows::<false, true>(&scr.h, hd, &blk.w1, bias, &mut scr.z);
+                    // h += z @ w2 + b2, residual add in the epilogue.
+                    matmul_rows::<true, false>(&scr.z, hd, &blk.w2, &blk.b2, &mut scr.h);
+                }
+            }
+            None => {
+                let t = t.expect("generic path needs per-row t");
+                set_len(&mut scr.e, b * self.embed);
+                if self.embed % 2 == 1 {
+                    scr.e.fill(0.0);
+                }
+                for (r, &tv) in t.iter().enumerate() {
+                    self.time_embed_row(tv, &mut scr.e[r * self.embed..(r + 1) * self.embed]);
+                }
+                for blk in &self.blocks {
+                    // z = h @ w1 + b1 + e @ u, then GELU.
+                    matmul_rows::<false, false>(&scr.h, hd, &blk.w1, &blk.b1, &mut scr.z);
+                    matmul_rows::<true, false>(
+                        &scr.e,
+                        self.embed,
+                        &blk.u,
+                        &self.zero_bias,
+                        &mut scr.z,
+                    );
+                    gelu_slice(&mut scr.z);
+                    matmul_rows::<true, false>(&scr.z, hd, &blk.w2, &blk.b2, &mut scr.h);
+                }
             }
         }
-        e
+        matmul_rows::<false, false>(&scr.h, hd, &self.w_out, &self.b_out, out);
     }
-}
 
-impl NativeMlp {
-    /// Full forward for a contiguous slice of the batch (single-threaded).
-    fn forward_rows(&self, x: &[f64], t: &[f64], b: usize, out: &mut [f64]) {
-        let xm = Mat::from_rows(b, self.dim, x.to_vec());
-        let e = self.time_embed(t);
-        let h_dim = self.hidden();
-        let mut h = Mat::zeros(b, h_dim);
-        matmul_bias_into(&xm, &self.w_in, &self.b_in, &mut h);
-        let zero_bias = vec![0.0; h_dim];
-        let mut z = Mat::zeros(b, h_dim);
-        let mut zu = Mat::zeros(b, h_dim);
-        let mut upd = Mat::zeros(b, h_dim);
-        for blk in &self.blocks {
-            // z = h @ w1 + b1 + e @ u
-            matmul_bias_into(&h, &blk.w1, &blk.b1, &mut z);
-            matmul_bias_into(&e, &blk.u, &zero_bias, &mut zu);
-            add_inplace(&mut z, &zu);
-            gelu_inplace(&mut z);
-            // h += gelu(z) @ w2 + b2
-            matmul_bias_into(&z, &blk.w2, &blk.b2, &mut upd);
-            add_inplace(&mut h, &upd);
+    /// Split the batch into `n_chunks` row ranges and run them across the
+    /// pool (the calling thread participates; with `n_chunks == 1` it runs
+    /// the whole batch inline).
+    fn run_chunks(
+        &self,
+        x: &[f64],
+        t: Option<&[f64]>,
+        b: usize,
+        out: &mut [f64],
+        n_chunks: usize,
+        ctx: Option<UniformCtx<'_>>,
+        pool: &WorkerPool,
+    ) {
+        let d = self.dim;
+        if n_chunks <= 1 {
+            SCRATCH.with(|s| {
+                let scr = &mut *s.borrow_mut();
+                self.forward_rows(x, t, b, out, scr, ctx);
+            });
+            return;
         }
-        let mut o = Mat::zeros(b, self.dim);
-        matmul_bias_into(&h, &self.w_out, &self.b_out, &mut o);
-        out.copy_from_slice(&o.data);
-        let _ = add_bias_inplace; // (kept for symmetry; bias handled in matmul)
+        let chunk_rows = b.div_ceil(n_chunks);
+        let nc = b.div_ceil(chunk_rows);
+        let optr = SendPtr(out.as_mut_ptr());
+        let task = move |ci: usize| {
+            let row0 = ci * chunk_rows;
+            let rows = chunk_rows.min(b - row0);
+            // Disjoint window: chunk ci owns rows [row0, row0 + rows).
+            let o = unsafe { std::slice::from_raw_parts_mut(optr.0.add(row0 * d), rows * d) };
+            let xs = &x[row0 * d..(row0 + rows) * d];
+            let ts = t.map(|tt| &tt[row0..row0 + rows]);
+            SCRATCH.with(|s| {
+                let scr = &mut *s.borrow_mut();
+                self.forward_rows(xs, ts, rows, o, scr, ctx);
+            });
+        };
+        pool.run(nc, &task);
     }
 }
 
@@ -126,40 +299,36 @@ impl EpsModel for NativeMlp {
     }
 
     fn eval(&self, x: &[f64], t: &[f64], b: usize, out: &mut [f64]) {
-        // Batch rows are independent: fan the whole forward out across
-        // scoped threads ONCE per eval (one spawn set amortized over the
-        // full 9-matmul chain — §Perf iteration 2).
         let d = self.dim;
-        let flops = 2 * b * self.hidden() * self.hidden() * (2 * self.blocks.len() + 1);
-        let threads = if flops > 1 << 22 {
-            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(8)
-        } else {
-            1
-        };
-        if threads <= 1 || b < 2 * threads {
-            self.forward_rows(x, t, b, out);
+        assert_eq!(x.len(), b * d);
+        assert_eq!(t.len(), b);
+        assert_eq!(out.len(), b * d);
+        if b == 0 {
             return;
         }
-        let chunk_rows = b.div_ceil(threads);
-        std::thread::scope(|s| {
-            let mut rest = &mut *out;
-            let mut row0 = 0;
-            while row0 < b {
-                let rows = chunk_rows.min(b - row0);
-                let (head, tail) = rest.split_at_mut(rows * d);
-                rest = tail;
-                let xs = &x[row0 * d..(row0 + rows) * d];
-                let ts = &t[row0..row0 + rows];
-                s.spawn(move || self.forward_rows(xs, ts, rows, head));
-                row0 += rows;
-            }
-        });
+        let pool = WorkerPool::global();
+        let flops = 2 * b * self.hidden() * self.hidden() * (2 * self.blocks.len() + 1);
+        let par = if flops > PARALLEL_FLOPS { pool.threads() } else { 1 };
+        let n_chunks = if par <= 1 || b < 2 * par { 1 } else { par };
+        // Solver stepping broadcasts a scalar t; detect it and take the
+        // shared-embedding fast path.
+        if t.iter().all(|&tv| tv == t[0]) {
+            UNIFORM.with(|u| {
+                let uni = &mut *u.borrow_mut();
+                let ctx = self.build_uniform_ctx(t[0], uni);
+                self.run_chunks(x, None, b, out, n_chunks, Some(ctx), pool);
+            });
+        } else {
+            self.run_chunks(x, Some(t), b, out, n_chunks, None, pool);
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::{assert_close, run_prop};
+    use crate::util::rng::Rng;
 
     /// Hand-built one-block net with identity-ish weights; oracle computed
     /// by transcribing the python math by hand.
@@ -196,11 +365,124 @@ mod tests {
                      "b_out": [0.0], "blocks": []}
         }"#;
         let net = NativeMlp::from_json(&Json::parse(json).unwrap()).unwrap();
-        let e = net.time_embed(&[0.001]);
+        let mut e = [0.0; 4];
+        net.time_embed_row(0.001, &mut e);
         // freqs = [1, exp(-ln(1e4)/2)] = [1, 0.01]; ang = [1.0, 0.01]
-        assert!((e.data[0] - 1.0f64.sin()).abs() < 1e-12);
-        assert!((e.data[1] - 0.01f64.sin()).abs() < 1e-12);
-        assert!((e.data[2] - 1.0f64.cos()).abs() < 1e-12);
-        assert!((e.data[3] - 0.01f64.cos()).abs() < 1e-12);
+        assert!((e[0] - 1.0f64.sin()).abs() < 1e-12);
+        assert!((e[1] - 0.01f64.sin()).abs() < 1e-12);
+        assert!((e[2] - 1.0f64.cos()).abs() < 1e-12);
+        assert!((e[3] - 0.01f64.cos()).abs() < 1e-12);
+    }
+
+    fn rand_block(rng: &mut Rng, hidden: usize, embed: usize) -> Block {
+        Block {
+            w1: Mat::from_rows(hidden, hidden, rng.normal_vec(hidden * hidden)),
+            b1: rng.normal_vec(hidden),
+            u: Mat::from_rows(embed, hidden, rng.normal_vec(embed * hidden)),
+            w2: Mat::from_rows(hidden, hidden, rng.normal_vec(hidden * hidden)),
+            b2: rng.normal_vec(hidden),
+        }
+    }
+
+    fn rand_net(rng: &mut Rng, dim: usize, hidden: usize, embed: usize, n_blocks: usize)
+        -> NativeMlp {
+        let half = embed / 2;
+        NativeMlp {
+            dim,
+            embed,
+            w_in: Mat::from_rows(dim, hidden, rng.normal_vec(dim * hidden)),
+            b_in: rng.normal_vec(hidden),
+            w_out: Mat::from_rows(hidden, dim, rng.normal_vec(hidden * dim)),
+            b_out: rng.normal_vec(dim),
+            blocks: (0..n_blocks).map(|_| rand_block(rng, hidden, embed)).collect(),
+            freqs: (0..half)
+                .map(|i| (-(10000.0f64).ln() * i as f64 / half as f64).exp())
+                .collect(),
+            zero_bias: vec![0.0; hidden],
+        }
+    }
+
+    /// Reference forward with a brand-new workspace (no shared state).
+    fn fresh_forward(net: &NativeMlp, x: &[f64], t: &[f64], b: usize) -> Vec<f64> {
+        let mut out = vec![0.0; b * net.dim];
+        let mut scr = Scratch::default();
+        net.forward_rows(x, Some(t), b, &mut out, &mut scr, None);
+        out
+    }
+
+    #[test]
+    fn pooled_matches_single_thread() {
+        let mut rng = Rng::new(11);
+        let net = rand_net(&mut rng, 3, 9, 6, 2);
+        let b = 37; // odd: exercises the tail-row kernel and ragged chunks
+        let x = rng.normal_vec(b * 3);
+        let t: Vec<f64> = (0..b).map(|_| rng.uniform_in(0.01, 1.0)).collect();
+        let pool = WorkerPool::global();
+        let mut single = vec![0.0; b * 3];
+        net.run_chunks(&x, Some(&t), b, &mut single, 1, None, pool);
+        for n_chunks in [2, 3, 4, 7] {
+            let mut pooled = vec![0.0; b * 3];
+            net.run_chunks(&x, Some(&t), b, &mut pooled, n_chunks, None, pool);
+            assert_close(&pooled, &single, 1e-12, "pooled vs single-thread forward");
+        }
+    }
+
+    #[test]
+    fn uniform_fast_path_matches_generic() {
+        let mut rng = Rng::new(13);
+        for (dim, hidden, embed, n_blocks) in [(2, 8, 4, 1), (3, 7, 5, 3), (1, 4, 2, 0)] {
+            let net = rand_net(&mut rng, dim, hidden, embed, n_blocks);
+            let b = 19;
+            let x = rng.normal_vec(b * dim);
+            let tv = rng.uniform_in(0.01, 1.0);
+            let t = vec![tv; b];
+            // eval() auto-detects the uniform t and takes the fast path.
+            let mut fast = vec![0.0; b * dim];
+            net.eval(&x, &t, b, &mut fast);
+            let generic = fresh_forward(&net, &x, &t, b);
+            assert_close(&fast, &generic, 1e-12, "uniform fast path vs generic");
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_across_shapes_never_aliases_stale_data() {
+        // Interleave evals of different (b, dim, hidden, embed) shapes on
+        // one thread; the shared thread-local workspace must always produce
+        // the same output as a fresh workspace.
+        run_prop("workspace reuse", 29, 20, |rng| {
+            let mut nets = Vec::new();
+            for _ in 0..3 {
+                let dim = 1 + rng.below(4);
+                let hidden = 1 + rng.below(12);
+                let embed = 2 + rng.below(7); // odd embeds included
+                let n_blocks = rng.below(3);
+                nets.push(rand_net(rng, dim, hidden, embed, n_blocks));
+            }
+            for _ in 0..6 {
+                let net = &nets[rng.below(nets.len())];
+                let b = 1 + rng.below(24);
+                let x = rng.normal_vec(b * net.dim);
+                let uniform = rng.below(2) == 0;
+                let t: Vec<f64> = if uniform {
+                    vec![rng.uniform_in(0.01, 1.0); b]
+                } else {
+                    (0..b).map(|_| rng.uniform_in(0.01, 1.0)).collect()
+                };
+                let mut got = vec![0.0; b * net.dim];
+                net.eval(&x, &t, b, &mut got);
+                let want = if uniform {
+                    // Fresh uniform-path reference (fresh ctx + workspace).
+                    let mut uni = UniformScratch::default();
+                    let ctx = net.build_uniform_ctx(t[0], &mut uni);
+                    let mut out = vec![0.0; b * net.dim];
+                    let mut scr = Scratch::default();
+                    net.forward_rows(&x, None, b, &mut out, &mut scr, Some(ctx));
+                    out
+                } else {
+                    fresh_forward(net, &x, &t, b)
+                };
+                assert_close(&got, &want, 1e-12, "workspace reuse parity");
+            }
+        });
     }
 }

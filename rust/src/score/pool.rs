@@ -1,0 +1,334 @@
+//! Persistent worker pool for the native inference engine.
+//!
+//! `NativeMlp::eval` used to `std::thread::scope` + spawn a fresh set of OS
+//! threads on every call — i.e. on every solver step of every batch, which
+//! is exactly the per-step cost DEIS says should be all network math. This
+//! pool is created once (lazily, like `Runtime::global()`) and fans fixed
+//! index ranges out to long-lived threads with nothing but a mutex hand-off
+//! and two condvar signals per job: no spawn, no join, and — deliberately —
+//! no channel sends, because `std::sync::mpsc` heap-allocates a node per
+//! message and the engine's contract is zero steady-state allocation
+//! (verified by `rust/tests/zero_alloc.rs`).
+//!
+//! Design notes:
+//!   * One job at a time (`run_lock`); concurrent callers serialize. That is
+//!     the right trade here: a job already spans every worker, so a second
+//!     concurrent job could only time-slice the same cores.
+//!   * The job lives on the caller's stack. Workers receive a raw pointer
+//!     through the mutex-protected slot; the caller cannot return (or unwind)
+//!     before every worker has checked back in, so the pointer never
+//!     outlives the job (see `run` for the unwind guard).
+//!   * Work stealing is unnecessary: tasks are claimed one index at a time
+//!     from a shared atomic counter, which is already perfectly balanced for
+//!     the homogeneous row-chunk tasks the engine submits.
+
+use std::cell::Cell;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+thread_local! {
+    /// True while this thread is executing a pool task. A nested `run`
+    /// would deadlock on `run_lock` (the outer job holds it until every
+    /// worker checks in), so re-entrant calls degrade to inline execution.
+    static IN_TASK: Cell<bool> = const { Cell::new(false) };
+}
+
+/// A dispatched job: lifetime-erased task closure + claim counter.
+struct Job {
+    /// The task, `fn(index)`. Only dereferenced for successfully claimed
+    /// indices, all of which complete before `run` returns.
+    task: *const (dyn Fn(usize) + Sync),
+    next: AtomicUsize,
+    total: usize,
+    panicked: AtomicBool,
+}
+
+/// Mutex-protected dispatch slot shared by all workers.
+struct Slot {
+    /// Bumped once per job; workers wait for it to move past their last seen
+    /// value, so every worker joins every job exactly once.
+    seq: u64,
+    job: *const Job,
+    /// Workers that have not yet finished the current job.
+    remaining: usize,
+    shutdown: bool,
+}
+
+// The raw pointers are only dereferenced between dispatch and completion,
+// both of which happen inside `run`'s critical section (see module doc).
+unsafe impl Send for Slot {}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    cv_workers: Condvar,
+    cv_done: Condvar,
+}
+
+/// Persistent thread pool; `global()` is the process-wide instance the
+/// native engine uses.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    /// Serializes jobs (one active job at a time).
+    run_lock: Mutex<()>,
+    workers: usize,
+}
+
+static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+
+impl WorkerPool {
+    /// Pool with `workers` extra threads (the calling thread always
+    /// participates, so total parallelism is `workers + 1`).
+    pub fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot { seq: 0, job: std::ptr::null(), remaining: 0, shutdown: false }),
+            cv_workers: Condvar::new(),
+            cv_done: Condvar::new(),
+        });
+        let mut spawned = 0;
+        for i in 0..workers {
+            let sh = shared.clone();
+            let ok = std::thread::Builder::new()
+                .name(format!("deis-pool-{i}"))
+                .spawn(move || worker_loop(&sh))
+                .is_ok();
+            // Count only live workers: `run` waits for exactly this many
+            // check-ins per job, so a failed spawn must not be counted.
+            if ok {
+                spawned += 1;
+            }
+        }
+        WorkerPool { shared, run_lock: Mutex::new(()), workers: spawned }
+    }
+
+    /// Process-wide pool sized to the machine (capped at 8, matching the old
+    /// per-eval spawn cap; override with `DEIS_POOL_THREADS` = total
+    /// parallelism including the caller).
+    pub fn global() -> &'static WorkerPool {
+        GLOBAL.get_or_init(|| {
+            let par = std::env::var("DEIS_POOL_THREADS")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or_else(|| {
+                    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(8)
+                })
+                .max(1);
+            WorkerPool::new(par - 1)
+        })
+    }
+
+    /// Total parallelism of a `run` call (workers + the caller).
+    pub fn threads(&self) -> usize {
+        self.workers + 1
+    }
+
+    /// Execute `task(i)` for every `i in 0..total`, fanning indices across
+    /// the pool. Blocks until all indices are done. Panics in any task are
+    /// re-raised here after the job fully drains (so the pool stays usable).
+    pub fn run(&self, total: usize, task: &(dyn Fn(usize) + Sync)) {
+        if self.workers == 0 || total <= 1 || IN_TASK.with(|t| t.get()) {
+            for i in 0..total {
+                task(i);
+            }
+            return;
+        }
+        let guard = self.run_lock.lock().unwrap();
+        // Erase the task's borrow lifetime so it can sit in the (plain-type)
+        // job slot; sound because `run` does not return (or unwind) until
+        // every participant has finished with it.
+        let task_erased: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(task)
+        };
+        let job = Job {
+            task: task_erased as *const (dyn Fn(usize) + Sync),
+            next: AtomicUsize::new(0),
+            total,
+            panicked: AtomicBool::new(false),
+        };
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.seq = slot.seq.wrapping_add(1);
+            slot.job = &job as *const Job;
+            slot.remaining = self.workers;
+            self.shared.cv_workers.notify_all();
+        }
+        // The caller participates too; catch panics so we never unwind past
+        // the worker check-in barrier while they still hold `&job`.
+        let caller_result = std::panic::catch_unwind(AssertUnwindSafe(|| loop {
+            let i = job.next.fetch_add(1, Ordering::Relaxed);
+            if i >= job.total {
+                break;
+            }
+            IN_TASK.with(|t| t.set(true));
+            let r = std::panic::catch_unwind(AssertUnwindSafe(|| task(i)));
+            IN_TASK.with(|t| t.set(false));
+            if let Err(p) = r {
+                std::panic::resume_unwind(p);
+            }
+        }));
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            while slot.remaining > 0 {
+                slot = self.shared.cv_done.wait(slot).unwrap();
+            }
+            slot.job = std::ptr::null();
+        }
+        drop(guard);
+        if let Err(p) = caller_result {
+            std::panic::resume_unwind(p);
+        }
+        if job.panicked.load(Ordering::Relaxed) {
+            panic!("worker pool task panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        let mut slot = self.shared.slot.lock().unwrap();
+        slot.shutdown = true;
+        slot.seq = slot.seq.wrapping_add(1);
+        slot.job = std::ptr::null();
+        self.shared.cv_workers.notify_all();
+    }
+}
+
+fn worker_loop(sh: &Shared) {
+    let mut last_seq = 0u64;
+    loop {
+        let job_ptr = {
+            let mut slot = sh.slot.lock().unwrap();
+            while slot.seq == last_seq {
+                slot = sh.cv_workers.wait(slot).unwrap();
+            }
+            last_seq = slot.seq;
+            if slot.shutdown {
+                return;
+            }
+            slot.job
+        };
+        // Safe: the dispatching `run` call blocks until this worker checks
+        // back in below, so `job` (on that caller's stack) is alive.
+        let job = unsafe { &*job_ptr };
+        let task = unsafe { &*job.task };
+        loop {
+            let i = job.next.fetch_add(1, Ordering::Relaxed);
+            if i >= job.total {
+                break;
+            }
+            IN_TASK.with(|t| t.set(true));
+            let r = std::panic::catch_unwind(AssertUnwindSafe(|| task(i)));
+            IN_TASK.with(|t| t.set(false));
+            if r.is_err() {
+                job.panicked.store(true, Ordering::Relaxed);
+            }
+        }
+        let mut slot = sh.slot.lock().unwrap();
+        slot.remaining -= 1;
+        if slot.remaining == 0 {
+            sh.cv_done.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_index_exactly_once() {
+        let pool = WorkerPool::new(3);
+        for total in [0, 1, 2, 7, 64, 1000] {
+            let hits: Vec<AtomicU64> = (0..total).map(|_| AtomicU64::new(0)).collect();
+            pool.run(total, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "index {i} of {total}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = WorkerPool::new(0);
+        let count = AtomicUsize::new(0);
+        pool.run(17, &|_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 17);
+    }
+
+    #[test]
+    fn sequential_jobs_reuse_workers() {
+        let pool = WorkerPool::new(2);
+        for round in 0..50 {
+            let sum = AtomicUsize::new(0);
+            pool.run(10, &|i| {
+                sum.fetch_add(i + 1, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 55, "round {round}");
+        }
+    }
+
+    #[test]
+    fn concurrent_callers_serialize_correctly() {
+        let pool = std::sync::Arc::new(WorkerPool::new(2));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let p = pool.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..25 {
+                    let sum = AtomicUsize::new(0);
+                    p.run(8, &|i| {
+                        sum.fetch_add(i, Ordering::Relaxed);
+                    });
+                    assert_eq!(sum.load(Ordering::Relaxed), 28);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn task_panic_propagates_but_pool_survives() {
+        let pool = WorkerPool::new(1);
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(4, &|i| {
+                if i == 2 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err());
+        // Pool still functional afterwards.
+        let count = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn nested_run_degrades_to_inline() {
+        let pool = WorkerPool::new(2);
+        let count = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            pool.run(3, &|_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 12);
+    }
+
+    #[test]
+    fn global_pool_is_shared() {
+        let a = WorkerPool::global() as *const _;
+        let b = WorkerPool::global() as *const _;
+        assert_eq!(a, b);
+        assert!(WorkerPool::global().threads() >= 1);
+    }
+}

@@ -60,6 +60,12 @@ impl Solver for DpmSolver {
         let n = self.grid.len() - 1;
         let mut tb = Vec::new();
         let mut e0 = vec![0.0; b * d];
+        // Stage buffers, sized once and reused every step (orders 2/3 only).
+        let (mut u, mut e1, mut e2) = if self.order >= 2 {
+            (vec![0.0; b * d], vec![0.0; b * d], vec![0.0; b * d])
+        } else {
+            (Vec::new(), Vec::new(), Vec::new())
+        };
         for i in (1..=n).rev() {
             let (t_s, t_e) = (self.grid[i], self.grid[i - 1]);
             model.eval(x, fill_t(&mut tb, t_s, b), b, &mut e0);
@@ -68,9 +74,8 @@ impl Solver for DpmSolver {
                 2 => {
                     let (ls, le) = (self.lambda(t_s), self.lambda(t_e));
                     let t_m = self.t_of_lambda(0.5 * (ls + le));
-                    let mut u = x.to_vec();
+                    u.copy_from_slice(x);
                     self.dpm1_update(&mut u, &e0, t_s, t_m);
-                    let mut e1 = vec![0.0; b * d];
                     model.eval(&u, fill_t(&mut tb, t_m, b), b, &mut e1);
                     self.dpm1_update(x, &e1, t_s, t_e);
                 }
@@ -81,22 +86,19 @@ impl Solver for DpmSolver {
                     let t1 = self.t_of_lambda(ls + r1 * h);
                     let t2 = self.t_of_lambda(ls + r2 * h);
                     // u1 = DDIM-in-λ to s1 with e0
-                    let mut u1 = x.to_vec();
-                    self.dpm1_update(&mut u1, &e0, t_s, t1);
-                    let mut e1 = vec![0.0; b * d];
-                    model.eval(&u1, fill_t(&mut tb, t1, b), b, &mut e1);
+                    u.copy_from_slice(x);
+                    self.dpm1_update(&mut u, &e0, t_s, t1);
+                    model.eval(&u, fill_t(&mut tb, t1, b), b, &mut e1);
                     // u2 = (α̂2/α̂s)x − σ2(e^{r2h}−1)e0 − (σ2 r2/r1)((e^{r2h}−1)/(r2h) − 1)(e1−e0)
                     let psi2 = self.sde.psi(t2, t_s);
                     let s2 = self.sde.sigma(t2);
                     let ex = (r2 * h).exp() - 1.0;
                     let c0 = -s2 * ex;
                     let c1 = -(s2 * r2 / r1) * (ex / (r2 * h) - 1.0);
-                    let mut u2 = vec![0.0; b * d];
                     for idx in 0..b * d {
-                        u2[idx] = psi2 * x[idx] + c0 * e0[idx] + c1 * (e1[idx] - e0[idx]);
+                        u[idx] = psi2 * x[idx] + c0 * e0[idx] + c1 * (e1[idx] - e0[idx]);
                     }
-                    let mut e2 = vec![0.0; b * d];
-                    model.eval(&u2, fill_t(&mut tb, t2, b), b, &mut e2);
+                    model.eval(&u, fill_t(&mut tb, t2, b), b, &mut e2);
                     // x_e = (α̂e/α̂s)x − σe(e^h−1)e0 − (σe/r2)((e^h−1)/h − 1)(e2−e0)
                     let psie = self.sde.psi(t_e, t_s);
                     let se = self.sde.sigma(t_e);

@@ -198,35 +198,93 @@ pub(crate) fn fill_t(buf: &mut Vec<f64>, t: f64, b: usize) -> &[f64] {
 
 /// x = psi * x + sum_j c_j * eps_j — the fused DEIS combine (Eq. 14). This is
 /// the rust twin of the L1 `deis_combine` Pallas kernel.
-pub(crate) fn deis_combine(x: &mut [f64], psi: f64, coefs: &[f64], eps: &[&[f64]]) {
-    debug_assert_eq!(coefs.len(), eps.len());
-    for v in x.iter_mut() {
-        *v *= psi;
+///
+/// Up to four histories (the tAB-DEIS maximum, order 3) are combined in a
+/// single pass over `x` — one load/store per element instead of one per
+/// history — with the multiply-adds laid out back-to-back so the compiler
+/// can contract them into FMAs where the target supports it.
+pub fn deis_combine(x: &mut [f64], psi: f64, coefs: &[f64], eps: &[&[f64]]) {
+    assert_eq!(coefs.len(), eps.len());
+    for e in eps {
+        assert_eq!(e.len(), x.len());
     }
-    for (c, e) in coefs.iter().zip(eps) {
-        debug_assert_eq!(e.len(), x.len());
-        for (v, ev) in x.iter_mut().zip(e.iter()) {
-            *v += c * ev;
+    match eps.len() {
+        0 => {
+            for v in x.iter_mut() {
+                *v *= psi;
+            }
+        }
+        1 => {
+            let (c0, e0) = (coefs[0], eps[0]);
+            for (i, v) in x.iter_mut().enumerate() {
+                *v = psi * *v + c0 * e0[i];
+            }
+        }
+        2 => {
+            let (c0, c1) = (coefs[0], coefs[1]);
+            let (e0, e1) = (eps[0], eps[1]);
+            for (i, v) in x.iter_mut().enumerate() {
+                *v = psi * *v + c0 * e0[i] + c1 * e1[i];
+            }
+        }
+        3 => {
+            let (c0, c1, c2) = (coefs[0], coefs[1], coefs[2]);
+            let (e0, e1, e2) = (eps[0], eps[1], eps[2]);
+            for (i, v) in x.iter_mut().enumerate() {
+                *v = psi * *v + c0 * e0[i] + c1 * e1[i] + c2 * e2[i];
+            }
+        }
+        4 => {
+            let (c0, c1, c2, c3) = (coefs[0], coefs[1], coefs[2], coefs[3]);
+            let (e0, e1, e2, e3) = (eps[0], eps[1], eps[2], eps[3]);
+            for (i, v) in x.iter_mut().enumerate() {
+                *v = psi * *v + c0 * e0[i] + c1 * e1[i] + c2 * e2[i] + c3 * e3[i];
+            }
+        }
+        _ => {
+            for v in x.iter_mut() {
+                *v *= psi;
+            }
+            for (c, e) in coefs.iter().zip(eps) {
+                for (v, ev) in x.iter_mut().zip(e.iter()) {
+                    *v += c * ev;
+                }
+            }
         }
     }
 }
 
 /// Ring buffer of the last `cap` eps evaluations (newest first) used by the
-/// multistep solvers.
+/// multistep solvers. Evicted vectors are recycled through [`Self::checkout`]
+/// so the per-step `vec![0.0; b*d]` disappears after warmup: in the steady
+/// state `cap + 1` buffers circulate with zero heap traffic
+/// (`rust/tests/zero_alloc.rs` pins this).
 pub(crate) struct EpsBuffer {
     cap: usize,
     entries: std::collections::VecDeque<(f64, Vec<f64>)>, // (t_node, eps)
+    free: Vec<Vec<f64>>,
 }
 
 impl EpsBuffer {
     pub fn new(cap: usize) -> Self {
-        EpsBuffer { cap, entries: Default::default() }
+        EpsBuffer { cap, entries: Default::default(), free: Vec::new() }
+    }
+
+    /// A zeroed length-`len` vector, reusing an evicted buffer when one is
+    /// available. Intended pattern: checkout -> model.eval into it -> push.
+    pub fn checkout(&mut self, len: usize) -> Vec<f64> {
+        let mut v = self.free.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0.0);
+        v
     }
 
     pub fn push(&mut self, t: f64, eps: Vec<f64>) {
         self.entries.push_front((t, eps));
         while self.entries.len() > self.cap {
-            self.entries.pop_back();
+            if let Some((_, v)) = self.entries.pop_back() {
+                self.free.push(v);
+            }
         }
     }
 
@@ -291,5 +349,50 @@ mod tests {
         assert_eq!(b.len(), 2);
         assert_eq!(b.node(0), 1.0);
         assert_eq!(b.node(1), 2.0);
+    }
+
+    #[test]
+    fn eps_buffer_recycles_evicted_storage() {
+        let mut b = EpsBuffer::new(1);
+        // Seed a large buffer, evict it, and check the next checkout reuses
+        // its storage (capacity survives even at a smaller length).
+        b.push(2.0, Vec::with_capacity(64));
+        b.push(1.0, vec![0.0; 4]); // evicts the 64-cap vec into the free list
+        let v = b.checkout(8);
+        assert_eq!(v.len(), 8);
+        assert!(v.iter().all(|&x| x == 0.0), "checkout must hand back zeroed data");
+        assert!(v.capacity() >= 64, "evicted storage was not recycled");
+    }
+
+    #[test]
+    fn deis_combine_unrolled_matches_reference() {
+        use crate::util::prop::run_prop;
+        use crate::util::rng::Rng;
+        let reference = |x: &mut [f64], psi: f64, coefs: &[f64], eps: &[&[f64]]| {
+            for v in x.iter_mut() {
+                *v *= psi;
+            }
+            for (c, e) in coefs.iter().zip(eps) {
+                for (v, ev) in x.iter_mut().zip(e.iter()) {
+                    *v += c * ev;
+                }
+            }
+        };
+        run_prop("deis_combine unroll", 31, 40, |rng: &mut Rng| {
+            let n = 1 + rng.below(40);
+            let r = rng.below(7); // 0..6 covers every specialization + fallback
+            let x0 = rng.normal_vec(n);
+            let psi = rng.normal();
+            let coefs = rng.normal_vec(r);
+            let eps: Vec<Vec<f64>> = (0..r).map(|_| rng.normal_vec(n)).collect();
+            let eps_refs: Vec<&[f64]> = eps.iter().map(|e| e.as_slice()).collect();
+            let mut got = x0.clone();
+            deis_combine(&mut got, psi, &coefs, &eps_refs);
+            let mut want = x0;
+            reference(&mut want, psi, &coefs, &eps_refs);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-12, "{g} vs {w}");
+            }
+        });
     }
 }

@@ -15,12 +15,12 @@ use crate::solvers::{fill_t, EpsBuffer, Solver};
 use crate::util::rng::Rng;
 
 /// Classical AB weights for uniform steps, newest first (Eqs. 36, 38–40).
-pub fn ab_weights(order: usize) -> Vec<f64> {
+pub fn ab_weights(order: usize) -> &'static [f64] {
     match order {
-        0 => vec![1.0],
-        1 => vec![3.0 / 2.0, -1.0 / 2.0],
-        2 => vec![23.0 / 12.0, -16.0 / 12.0, 5.0 / 12.0],
-        3 => vec![55.0 / 24.0, -59.0 / 24.0, 37.0 / 24.0, -9.0 / 24.0],
+        0 => &[1.0],
+        1 => &[3.0 / 2.0, -1.0 / 2.0],
+        2 => &[23.0 / 12.0, -16.0 / 12.0, 5.0 / 12.0],
+        3 => &[55.0 / 24.0, -59.0 / 24.0, 37.0 / 24.0, -9.0 / 24.0],
         _ => panic!("AB order up to 3"),
     }
 }
@@ -34,14 +34,14 @@ fn transfer(sde: &Sde, x: &mut [f64], e: &[f64], s: f64, t: f64) {
     }
 }
 
-fn combine(weights: &[f64], buf: &EpsBuffer, len: usize) -> Vec<f64> {
-    let mut out = vec![0.0; len];
+/// out = sum_j weights[j] * buf.eps(j), into a caller-reused buffer.
+fn combine_into(out: &mut [f64], weights: &[f64], buf: &EpsBuffer) {
+    out.fill(0.0);
     for (j, w) in weights.iter().enumerate() {
         for (o, &e) in out.iter_mut().zip(buf.eps(j)) {
             *o += w * e;
         }
     }
-    out
 }
 
 pub struct Ipndm {
@@ -71,13 +71,14 @@ impl Solver for Ipndm {
         let n = self.grid.len() - 1;
         let mut tb = Vec::new();
         let mut buf = EpsBuffer::new(self.order + 1);
+        let mut e_hat = vec![0.0; b * d];
         for i in (1..=n).rev() {
             let t = self.grid[i];
-            let mut eps = vec![0.0; b * d];
+            let mut eps = buf.checkout(b * d);
             model.eval(x, fill_t(&mut tb, t, b), b, &mut eps);
             buf.push(t, eps);
             let ord = self.order.min(buf.len() - 1); // warmup ramps 0,1,..,order
-            let e_hat = combine(&ab_weights(ord), &buf, b * d);
+            combine_into(&mut e_hat, ab_weights(ord), &buf);
             transfer(&self.sde, x, &e_hat, t, self.grid[i - 1]);
         }
     }
@@ -95,39 +96,53 @@ impl Pndm {
     }
 
     /// Pseudo-RK warmup step (Liu et al. 2022): 4 evals, Runge–Kutta-weighted
-    /// eps fed through the DDIM transfer.
+    /// eps fed through the DDIM transfer. `ws` buffers are reused across the
+    /// three warmup steps; the returned eps at t (checked out of `buf`'s
+    /// recycler by the caller) seeds the multistep buffer.
+    #[allow(clippy::too_many_arguments)]
     fn prk_step(
         &self,
         model: &dyn EpsModel,
         x: &mut [f64],
+        e1: &mut [f64],
         b: usize,
         t: f64,
         t_prev: f64,
         tb: &mut Vec<f64>,
-    ) -> Vec<f64> {
-        let d = model.dim();
+        ws: &mut PrkScratch,
+    ) {
         let mid = 0.5 * (t + t_prev);
-        let mut e1 = vec![0.0; b * d];
-        model.eval(x, fill_t(tb, t, b), b, &mut e1);
-        let mut x1 = x.to_vec();
-        transfer(&self.sde, &mut x1, &e1, t, mid);
-        let mut e2 = vec![0.0; b * d];
-        model.eval(&x1, fill_t(tb, mid, b), b, &mut e2);
-        let mut x2 = x.to_vec();
-        transfer(&self.sde, &mut x2, &e2, t, mid);
-        let mut e3 = vec![0.0; b * d];
-        model.eval(&x2, fill_t(tb, mid, b), b, &mut e3);
-        let mut x3 = x.to_vec();
-        transfer(&self.sde, &mut x3, &e3, t, t_prev);
-        let mut e4 = vec![0.0; b * d];
-        model.eval(&x3, fill_t(tb, t_prev, b), b, &mut e4);
-        let mut e = vec![0.0; b * d];
-        for i in 0..b * d {
-            e[i] = (e1[i] + 2.0 * e2[i] + 2.0 * e3[i] + e4[i]) / 6.0;
+        model.eval(x, fill_t(tb, t, b), b, e1);
+        // xtmp is reused for all three stage states: each stage's input is
+        // rebuilt from x before its transfer.
+        ws.xtmp.copy_from_slice(x);
+        transfer(&self.sde, &mut ws.xtmp, e1, t, mid);
+        model.eval(&ws.xtmp, fill_t(tb, mid, b), b, &mut ws.etmp);
+        // acc accumulates the RK-weighted eps: (e1 + 2 e2 + 2 e3 + e4) / 6.
+        for (a, (&e1v, &e2v)) in ws.acc.iter_mut().zip(e1.iter().zip(&ws.etmp)) {
+            *a = (e1v + 2.0 * e2v) / 6.0;
         }
-        transfer(&self.sde, x, &e, t, t_prev);
-        e1 // the plain eps at t seeds the multistep buffer
+        ws.xtmp.copy_from_slice(x);
+        transfer(&self.sde, &mut ws.xtmp, &ws.etmp, t, mid);
+        model.eval(&ws.xtmp, fill_t(tb, mid, b), b, &mut ws.etmp);
+        for (a, &e3v) in ws.acc.iter_mut().zip(&ws.etmp) {
+            *a += 2.0 * e3v / 6.0;
+        }
+        ws.xtmp.copy_from_slice(x);
+        transfer(&self.sde, &mut ws.xtmp, &ws.etmp, t, t_prev);
+        model.eval(&ws.xtmp, fill_t(tb, t_prev, b), b, &mut ws.etmp);
+        for (a, &e4v) in ws.acc.iter_mut().zip(&ws.etmp) {
+            *a += e4v / 6.0;
+        }
+        transfer(&self.sde, x, &ws.acc, t, t_prev);
     }
+}
+
+/// Reused stage buffers for the pseudo-RK warmup.
+struct PrkScratch {
+    xtmp: Vec<f64>,
+    etmp: Vec<f64>,
+    acc: Vec<f64>,
 }
 
 impl Solver for Pndm {
@@ -146,16 +161,23 @@ impl Solver for Pndm {
         let n = self.grid.len() - 1;
         let mut tb = Vec::new();
         let mut buf = EpsBuffer::new(4);
+        let mut e_hat = vec![0.0; b * d];
+        let mut ws = PrkScratch {
+            xtmp: vec![0.0; b * d],
+            etmp: vec![0.0; b * d],
+            acc: vec![0.0; b * d],
+        };
         for i in (1..=n).rev() {
             let (t, t_prev) = (self.grid[i], self.grid[i - 1]);
             if buf.len() < 3 {
-                let e = self.prk_step(model, x, b, t, t_prev, &mut tb);
-                buf.push(t, e);
+                let mut e1 = buf.checkout(b * d);
+                self.prk_step(model, x, &mut e1, b, t, t_prev, &mut tb, &mut ws);
+                buf.push(t, e1);
             } else {
-                let mut eps = vec![0.0; b * d];
+                let mut eps = buf.checkout(b * d);
                 model.eval(x, fill_t(&mut tb, t, b), b, &mut eps);
                 buf.push(t, eps);
-                let e_hat = combine(&ab_weights(3), &buf, b * d);
+                combine_into(&mut e_hat, ab_weights(3), &buf);
                 transfer(&self.sde, x, &e_hat, t, t_prev);
             }
         }

@@ -14,21 +14,30 @@ pub struct RhoAbDeis {
     grid: Vec<f64>,
     rho: Vec<f64>,
     order: usize,
+    /// Per step (index 0 = the i=N step): AB coefficients for the warmup-
+    /// ramped effective order. Precomputed once per (sde, grid, order) so
+    /// the sampling loop does no coefficient work (paper Eq. 15 remark).
+    plan: Vec<Vec<f64>>,
 }
 
 impl RhoAbDeis {
     pub fn new(sde: &Sde, grid: &[f64], order: usize) -> Self {
         assert!(order <= 3);
-        let rho = grid.iter().map(|&t| sde.rho(t)).collect();
-        RhoAbDeis { sde: *sde, grid: grid.to_vec(), rho, order }
-    }
-
-    /// AB coefficients for step i with nodes ρ_{i+j}: exact basis integrals.
-    fn coefs(&self, i: usize, r_eff: usize) -> Vec<f64> {
-        let nodes: Vec<f64> = (0..=r_eff).map(|j| self.rho[i + j]).collect();
-        (0..=r_eff)
-            .map(|j| lagrange_basis_integral(&nodes, j, self.rho[i], self.rho[i - 1]))
-            .collect()
+        let rho: Vec<f64> = grid.iter().map(|&t| sde.rho(t)).collect();
+        let n = grid.len() - 1;
+        let plan = (1..=n)
+            .rev()
+            .enumerate()
+            .map(|(step, i)| {
+                // Warmup: only `step` previous evals exist at step `step`.
+                let r_eff = order.min(step);
+                let nodes: Vec<f64> = (0..=r_eff).map(|j| rho[i + j]).collect();
+                (0..=r_eff)
+                    .map(|j| lagrange_basis_integral(&nodes, j, rho[i], rho[i - 1]))
+                    .collect()
+            })
+            .collect();
+        RhoAbDeis { sde: *sde, grid: grid.to_vec(), rho, order, plan }
     }
 }
 
@@ -52,17 +61,17 @@ impl Solver for RhoAbDeis {
             x.iter().map(|&v| v / s).collect()
         };
         let mut xcur = vec![0.0; b * d];
-        for i in (1..=n).rev() {
+        for (step, i) in (1..=n).rev().enumerate() {
             let t = self.grid[i];
             let s = self.sde.sqrt_abar(t);
             for (xc, &yv) in xcur.iter_mut().zip(&y) {
                 *xc = s * yv;
             }
-            let mut eps = vec![0.0; b * d];
+            let mut eps = buf.checkout(b * d);
             model.eval(&xcur, fill_t(&mut tb, t, b), b, &mut eps);
             buf.push(self.rho[i], eps);
-            let r_eff = self.order.min(buf.len() - 1);
-            let coefs = self.coefs(i, r_eff);
+            let coefs = &self.plan[step];
+            debug_assert_eq!(coefs.len(), self.order.min(buf.len() - 1) + 1);
             for (j, c) in coefs.iter().enumerate() {
                 let e = buf.eps(j);
                 for (yv, ev) in y.iter_mut().zip(e) {

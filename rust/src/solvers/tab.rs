@@ -75,12 +75,16 @@ impl Solver for TabDeis {
         let n = self.grid.len() - 1;
         for (step, i) in (1..=n).rev().enumerate() {
             let t = self.grid[i];
-            let mut eps = vec![0.0; b * d];
+            let mut eps = buf.checkout(b * d);
             model.eval(x, fill_t(&mut tb, t, b), b, &mut eps);
             buf.push(t, eps);
             let (psi, coefs) = &self.plan[step];
-            let eps_refs: Vec<&[f64]> = (0..coefs.len()).map(|j| buf.eps(j)).collect();
-            deis_combine(x, *psi, coefs, &eps_refs);
+            // Fixed-size ref array: order <= 3 means at most 4 histories.
+            let mut eps_refs: [&[f64]; 4] = [&[]; 4];
+            for (j, r) in eps_refs.iter_mut().enumerate().take(coefs.len()) {
+                *r = buf.eps(j);
+            }
+            deis_combine(x, *psi, coefs, &eps_refs[..coefs.len()]);
         }
     }
 }

@@ -2,8 +2,19 @@
 //!
 //! The native backend exists to (a) cross-check PJRT numerics against an
 //! independent implementation and (b) run the huge table sweeps without
-//! per-call PJRT overhead. Hot path: `matmul_bias_into` — a blocked ikj
-//! kernel the compiler auto-vectorizes (see EXPERIMENTS.md §Perf).
+//! per-call PJRT overhead. Hot path: `matmul_rows` — a blocked ikj kernel
+//! the compiler auto-vectorizes (see EXPERIMENTS.md §Perf), parameterized
+//! by two compile-time epilogues so the engine never takes a second pass
+//! over its activations:
+//!
+//!   * `ACC`  — accumulate into `out` instead of overwriting it, fusing the
+//!     residual `h += gelu(z) @ w2 + b2` update (was matmul + add_inplace).
+//!   * `GELU` — apply tanh-GELU to each finished output row while it is
+//!     still hot in cache (was matmul + a second full sweep).
+//!
+//! The kernel takes raw slices, not `Mat`, so callers can feed workspace
+//! arenas and batch sub-ranges without copying; `Mat` wrappers remain for
+//! coefficient storage and tests.
 
 /// Row-major matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -35,32 +46,55 @@ impl Mat {
 }
 
 /// out[b, n] = x[b, k] @ w[k, n] + bias[n]; `out` is fully overwritten.
-///
-/// ikj order with a 4-way k-unrolled inner kernel (the compiler vectorizes
-/// the contiguous output-row accumulation). Single-threaded by design:
-/// batch-level parallelism lives one level up (`score::NativeMlp` splits
-/// rows across threads once per forward — §Perf in EXPERIMENTS.md showed
-/// per-matmul thread spawning eats its own gains).
+/// Thin `Mat` wrapper over [`matmul_rows`].
 pub fn matmul_bias_into(x: &Mat, w: &Mat, bias: &[f64], out: &mut Mat) {
-    assert_eq!(x.cols, w.rows);
-    assert_eq!(w.cols, bias.len());
     assert_eq!((out.rows, out.cols), (x.rows, w.cols));
-    matmul_rows(x, w, bias, 0, x.rows, &mut out.data);
+    matmul_rows::<false, false>(&x.data, x.cols, w, bias, &mut out.data);
 }
 
-/// Rows [r0, r1) of x @ w + bias into `out` (out covers exactly those rows).
-/// 2-row x 4-k register blocking: each loaded w row is used for two output
-/// rows, halving weight-stream bandwidth (the bottleneck on this 1-core box).
-fn matmul_rows(x: &Mat, w: &Mat, bias: &[f64], r0: usize, r1: usize, out: &mut [f64]) {
+/// x[rows, kdim] @ w + bias into `out[rows, w.cols]` (rows inferred from
+/// `out`). Compile-time epilogues:
+///   ACC  = false: out_row  = bias + x_row @ w
+///   ACC  = true:  out_row += bias + x_row @ w
+///   GELU = true:  out_row  = gelu(out_row)   (applied per finished row)
+///
+/// ikj order with 2-row x 4-k register blocking: each loaded w row is used
+/// for two output rows, halving weight-stream bandwidth (the bottleneck on
+/// narrow boxes). Single-threaded by design: batch-level parallelism lives
+/// one level up (`score::NativeMlp` fans row chunks across the persistent
+/// `score::pool::WorkerPool` once per forward — §Perf in EXPERIMENTS.md
+/// showed per-matmul threading eats its own gains).
+pub fn matmul_rows<const ACC: bool, const GELU: bool>(
+    x: &[f64],
+    kdim: usize,
+    w: &Mat,
+    bias: &[f64],
+    out: &mut [f64],
+) {
     let n = w.cols;
-    let kdim = x.cols;
-    let mut r = r0;
-    while r + 2 <= r1 {
-        let (o_lo, o_hi) = out[(r - r0) * n..(r - r0 + 2) * n].split_at_mut(n);
-        o_lo.copy_from_slice(bias);
-        o_hi.copy_from_slice(bias);
-        let xa = x.row(r);
-        let xb = x.row(r + 1);
+    assert_eq!(w.rows, kdim);
+    assert_eq!(bias.len(), n);
+    assert!(kdim > 0 && n > 0, "degenerate matmul shape");
+    let rows = out.len() / n;
+    assert_eq!(out.len(), rows * n);
+    assert_eq!(x.len(), rows * kdim);
+
+    let mut r = 0;
+    while r + 2 <= rows {
+        let (o_lo, o_hi) = out[r * n..(r + 2) * n].split_at_mut(n);
+        if ACC {
+            for (o, &bv) in o_lo.iter_mut().zip(bias) {
+                *o += bv;
+            }
+            for (o, &bv) in o_hi.iter_mut().zip(bias) {
+                *o += bv;
+            }
+        } else {
+            o_lo.copy_from_slice(bias);
+            o_hi.copy_from_slice(bias);
+        }
+        let xa = &x[r * kdim..(r + 1) * kdim];
+        let xb = &x[(r + 1) * kdim..(r + 2) * kdim];
         let mut k = 0;
         while k + 4 <= kdim {
             let (a0, a1, a2, a3) = (xa[k], xa[k + 1], xa[k + 2], xa[k + 3]);
@@ -85,13 +119,27 @@ fn matmul_rows(x: &Mat, w: &Mat, bias: &[f64], r0: usize, r1: usize, out: &mut [
             }
             k += 1;
         }
+        if GELU {
+            for v in o_lo.iter_mut() {
+                *v = gelu(*v);
+            }
+            for v in o_hi.iter_mut() {
+                *v = gelu(*v);
+            }
+        }
         r += 2;
     }
     // Tail row (odd batch): plain 4-k unroll.
-    if r < r1 {
-        let orow = &mut out[(r - r0) * n..(r - r0 + 1) * n];
-        orow.copy_from_slice(bias);
-        let xrow = x.row(r);
+    if r < rows {
+        let orow = &mut out[r * n..(r + 1) * n];
+        if ACC {
+            for (o, &bv) in orow.iter_mut().zip(bias) {
+                *o += bv;
+            }
+        } else {
+            orow.copy_from_slice(bias);
+        }
+        let xrow = &x[r * kdim..(r + 1) * kdim];
         let mut k = 0;
         while k + 4 <= kdim {
             let (x0, x1, x2, x3) = (xrow[k], xrow[k + 1], xrow[k + 2], xrow[k + 3]);
@@ -112,6 +160,11 @@ fn matmul_rows(x: &Mat, w: &Mat, bias: &[f64], r0: usize, r1: usize, out: &mut [
             }
             k += 1;
         }
+        if GELU {
+            for v in orow.iter_mut() {
+                *v = gelu(*v);
+            }
+        }
     }
 }
 
@@ -124,7 +177,12 @@ pub fn gelu(x: f64) -> f64 {
 }
 
 pub fn gelu_inplace(m: &mut Mat) {
-    for v in m.data.iter_mut() {
+    gelu_slice(&mut m.data);
+}
+
+/// GELU over a raw slice (workspace form of [`gelu_inplace`]).
+pub fn gelu_slice(xs: &mut [f64]) {
+    for v in xs.iter_mut() {
         *v = gelu(*v);
     }
 }
@@ -187,10 +245,9 @@ mod tests {
     }
 
     #[test]
-    fn parallel_path_matches_serial() {
-        // Big enough to cross the threading threshold (2^21 flops).
+    fn blocked_kernel_matches_naive_on_larger_shapes() {
         let mut rng = Rng::new(42);
-        let (b, k, n) = (512, 64, 64); // 2*512*64*64 = 4.2M flops
+        let (b, k, n) = (512, 64, 64);
         let x = rand_mat(&mut rng, b, k);
         let w = rand_mat(&mut rng, k, n);
         let bias = rng.normal_vec(n);
@@ -200,6 +257,46 @@ mod tests {
         for (g, w_) in got.data.iter().zip(&want.data) {
             assert!((g - w_).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn gelu_epilogue_matches_two_pass() {
+        run_prop("matmul gelu epilogue", 19, 30, |rng| {
+            let (b, k, n) = (1 + rng.below(7), 1 + rng.below(7), 1 + rng.below(7));
+            let x = rand_mat(rng, b, k);
+            let w = rand_mat(rng, k, n);
+            let bias = rng.normal_vec(n);
+            let mut fused = Mat::zeros(b, n);
+            matmul_rows::<false, true>(&x.data, k, &w, &bias, &mut fused.data);
+            let mut two_pass = Mat::zeros(b, n);
+            matmul_bias_into(&x, &w, &bias, &mut two_pass);
+            gelu_inplace(&mut two_pass);
+            for (f, t) in fused.data.iter().zip(&two_pass.data) {
+                assert!((f - t).abs() < 1e-14, "{f} vs {t}");
+            }
+        });
+    }
+
+    #[test]
+    fn acc_epilogue_matches_matmul_plus_add() {
+        run_prop("matmul acc epilogue", 23, 30, |rng| {
+            let (b, k, n) = (1 + rng.below(7), 1 + rng.below(7), 1 + rng.below(7));
+            let x = rand_mat(rng, b, k);
+            let w = rand_mat(rng, k, n);
+            let bias = rng.normal_vec(n);
+            let base = rand_mat(rng, b, n);
+            // Fused: out starts at `base`, accumulates bias + x@w.
+            let mut fused = base.clone();
+            matmul_rows::<true, false>(&x.data, k, &w, &bias, &mut fused.data);
+            // Reference: separate matmul then add.
+            let mut tmp = Mat::zeros(b, n);
+            matmul_bias_into(&x, &w, &bias, &mut tmp);
+            let mut want = base;
+            add_inplace(&mut want, &tmp);
+            for (f, t) in fused.data.iter().zip(&want.data) {
+                assert!((f - t).abs() < 1e-12, "{f} vs {t}");
+            }
+        });
     }
 
     #[test]

@@ -119,6 +119,45 @@ impl CsvSink {
     }
 }
 
+/// Machine-readable bench summary: collects [`BenchStats`] and writes one
+/// JSON object `{name: {mean_us, p50_us, p99_us}}` so successive PRs can
+/// diff the perf trajectory (`BENCH_hotpath.json` at the repo root).
+pub struct JsonSink {
+    path: std::path::PathBuf,
+    entries: Vec<(String, f64, f64, f64)>,
+}
+
+impl JsonSink {
+    pub fn new(path: &str) -> Self {
+        JsonSink { path: std::path::PathBuf::from(path), entries: Vec::new() }
+    }
+
+    pub fn add(&mut self, s: &BenchStats) {
+        self.entries.push((
+            s.name.clone(),
+            s.mean_us(),
+            s.p50.as_secs_f64() * 1e6,
+            s.p99.as_secs_f64() * 1e6,
+        ));
+    }
+
+    /// Write the collected entries (overwrites; call once at the end).
+    pub fn flush(&self) -> std::io::Result<()> {
+        let mut out = String::from("{\n");
+        for (i, (name, mean, p50, p99)) in self.entries.iter().enumerate() {
+            // Bench names are plain ASCII (no quotes/backslashes); escape
+            // the two JSON-significant characters anyway for safety.
+            let esc = name.replace('\\', "\\\\").replace('"', "\\\"");
+            out.push_str(&format!(
+                "  \"{esc}\": {{\"mean_us\": {mean:.2}, \"p50_us\": {p50:.2}, \"p99_us\": {p99:.2}}}{}\n",
+                if i + 1 < self.entries.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("}\n");
+        std::fs::write(&self.path, out)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,5 +177,25 @@ mod tests {
             black_box(0);
         });
         assert!(s.iters >= 3);
+    }
+
+    #[test]
+    fn json_sink_emits_parseable_object() {
+        let dir = std::env::temp_dir().join("deis_bench_test");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("sink.json");
+        let mut sink = JsonSink::new(&path.to_string_lossy());
+        for name in ["a bench", "b bench"] {
+            sink.add(&bench(name, 1, 5, || {
+                black_box(1 + 1);
+            }));
+        }
+        sink.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        let a = parsed.get("a bench").unwrap();
+        assert!(a.get("mean_us").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(a.get("p99_us").unwrap().as_f64().unwrap() >= 0.0);
+        let _ = std::fs::remove_file(&path);
     }
 }

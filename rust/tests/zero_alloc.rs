@@ -1,0 +1,202 @@
+//! Zero-allocation discipline of the native inference engine
+//! (EXPERIMENTS.md §Perf iteration 3), pinned with a counting global
+//! allocator:
+//!
+//!   1. After warmup, `NativeMlp::eval` performs ZERO heap allocations —
+//!      uniform-t fast path and generic path, pooled and single-threaded.
+//!   2. A solver trajectory's allocation count is independent of the number
+//!      of steps: every per-step buffer (eps history, stage states,
+//!      broadcast t) is recycled, so 30 steps allocate exactly as much as
+//!      6 (the per-call constant: first-touch buffer sizing).
+//!
+//! Everything lives in ONE #[test] so no concurrent test pollutes the
+//! counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use deis::diffusion::Sde;
+use deis::score::{EpsModel, NativeMlp};
+use deis::solvers::{self, SolverKind};
+use deis::timegrid::{build, GridKind};
+use deis::util::json::Json;
+use deis::util::rng::Rng;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Tiny deterministic value stream for synthetic weights ([-0.3, 0.3],
+/// small enough that a 30-step solver trajectory through the net cannot
+/// overflow to inf).
+fn lcg_next(state: &mut u64) -> f64 {
+    *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    ((*state >> 33) % 13) as f64 / 20.0 - 0.3
+}
+
+fn json_matrix(state: &mut u64, r: usize, c: usize) -> String {
+    let rows: Vec<String> = (0..r)
+        .map(|_| {
+            let vals: Vec<String> = (0..c).map(|_| format!("{:.2}", lcg_next(state))).collect();
+            format!("[{}]", vals.join(","))
+        })
+        .collect();
+    format!("[{}]", rows.join(","))
+}
+
+fn json_vector(state: &mut u64, n: usize) -> String {
+    let vals: Vec<String> = (0..n).map(|_| format!("{:.2}", lcg_next(state))).collect();
+    format!("[{}]", vals.join(","))
+}
+
+/// Deterministic synthetic weights JSON (values small enough that stacked
+/// blocks stay finite).
+fn weights_json(dim: usize, hidden: usize, embed: usize, n_blocks: usize) -> String {
+    let mut st = 0x9E3779B97F4A7C15u64;
+    let blocks: Vec<String> = (0..n_blocks)
+        .map(|_| {
+            format!(
+                r#"{{"w1": {}, "b1": {}, "u": {}, "w2": {}, "b2": {}}}"#,
+                json_matrix(&mut st, hidden, hidden),
+                json_vector(&mut st, hidden),
+                json_matrix(&mut st, embed, hidden),
+                json_matrix(&mut st, hidden, hidden),
+                json_vector(&mut st, hidden)
+            )
+        })
+        .collect();
+    format!(
+        r#"{{"dim": {dim}, "hidden": {hidden}, "embed": {embed}, "n_blocks": {n_blocks},
+            "params": {{"w_in": {}, "b_in": {}, "w_out": {}, "b_out": {},
+                        "blocks": [{}]}}}}"#,
+        json_matrix(&mut st, dim, hidden),
+        json_vector(&mut st, hidden),
+        json_matrix(&mut st, hidden, dim),
+        json_vector(&mut st, dim),
+        blocks.join(",")
+    )
+}
+
+#[test]
+fn native_engine_is_allocation_free_in_steady_state() {
+    // hidden=32, blocks=2 => 2*b*32*32*5 flops: b=512 crosses the pool
+    // threshold (2^22), so the pooled path is exercised too.
+    let net = NativeMlp::from_json(&Json::parse(&weights_json(4, 32, 8, 2)).unwrap()).unwrap();
+    let mut rng = Rng::new(7);
+
+    // ---- 1. eval steady state: zero allocations --------------------------
+    let b = 512;
+    let x = rng.normal_vec(b * 4);
+    let t_uniform = vec![0.5; b];
+    let t_generic: Vec<f64> = (0..b).map(|_| rng.uniform_in(0.01, 1.0)).collect();
+    let mut out = vec![0.0; b * 4];
+    // Warmup. Which pool participant claims which chunk is racy, so warm
+    // every participant's thread-local workspace explicitly: fan out more
+    // sleep-padded tasks than threads, each running a chunk-sized forward
+    // inline (b=256 is below the pool threshold, so no nested fan-out).
+    let pool = deis::score::pool::WorkerPool::global();
+    {
+        let xw = &x[..256 * 4];
+        let tw_u = &t_uniform[..256];
+        let tw_g = &t_generic[..256];
+        pool.run(pool.threads() * 4, &|_| {
+            let mut o = vec![0.0; 256 * 4];
+            net.eval(xw, tw_u, 256, &mut o);
+            net.eval(xw, tw_g, 256, &mut o);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+    }
+    // Belt and braces: repeat full pooled evals until a round is clean.
+    let mut warm_rounds = 0;
+    loop {
+        let before = allocs();
+        net.eval(&x, &t_uniform, b, &mut out);
+        net.eval(&x, &t_generic, b, &mut out);
+        if allocs() == before {
+            break;
+        }
+        warm_rounds += 1;
+        assert!(warm_rounds < 50, "eval still allocating after 50 warmup rounds");
+    }
+    for (label, t) in [("uniform-t", &t_uniform), ("generic-t", &t_generic)] {
+        let before = allocs();
+        for _ in 0..5 {
+            net.eval(&x, t, b, &mut out);
+        }
+        let n = allocs() - before;
+        assert_eq!(n, 0, "{label} eval allocated {n} times in steady state");
+    }
+    assert!(out.iter().all(|v| v.is_finite()));
+
+    // Small batch (single-threaded path), different shape than the pooled
+    // runs — workspaces resize within capacity, still zero allocations.
+    let bs = 16;
+    let xs = rng.normal_vec(bs * 4);
+    let ts = vec![0.25; bs];
+    let mut outs = vec![0.0; bs * 4];
+    net.eval(&xs, &ts, bs, &mut outs);
+    let before = allocs();
+    net.eval(&xs, &ts, bs, &mut outs);
+    assert_eq!(allocs() - before, 0, "small-batch eval allocated in steady state");
+
+    // ---- 2. solver trajectories: allocations independent of step count ---
+    let sde = Sde::vp();
+    let b = 8;
+    let d = 4;
+    let x0 = rng.normal_vec(b * d);
+    for kind in [
+        SolverKind::Tab(3),
+        SolverKind::RhoAb(2),
+        SolverKind::Ipndm(3),
+        SolverKind::Dpm(3),
+        SolverKind::Pndm,
+    ] {
+        let steps_short = 8;
+        let steps_long = 30;
+        let short = solvers::build(kind, &sde, &build(GridKind::Quadratic, &sde, 1e-3, 1.0, steps_short));
+        let long = solvers::build(kind, &sde, &build(GridKind::Quadratic, &sde, 1e-3, 1.0, steps_long));
+        let run = |solver: &dyn solvers::Solver| {
+            let mut x = x0.clone();
+            let mut srng = Rng::new(3);
+            let before = allocs();
+            solver.sample(&net, &mut x, b, &mut srng);
+            let spent = allocs() - before;
+            assert!(x.iter().all(|v| v.is_finite()), "{} diverged", solver.name());
+            spent
+        };
+        // Warm both (sizes the per-shape workspaces for this b*d).
+        run(short.as_ref());
+        run(long.as_ref());
+        let a_short = run(short.as_ref());
+        let a_long = run(long.as_ref());
+        assert_eq!(
+            a_long, a_short,
+            "{}: {steps_long}-step trajectory allocated {a_long} vs {a_short} for \
+             {steps_short} steps — a per-step allocation survives",
+            short.name()
+        );
+    }
+}
