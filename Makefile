@@ -1,0 +1,51 @@
+# Local entry points that match CI (.github/workflows/ci.yml) exactly —
+# the toolchain is pinned by rust-toolchain.toml, so `make verify` passing
+# here means the `verify` job passes there.
+
+CARGO = cd rust && cargo
+
+.PHONY: verify build test lint fmt clippy bench bench-quick serve-demo artifacts ci
+
+## Tier-1 verify (ROADMAP): release build + full test suite.
+verify:
+	$(CARGO) build --release
+	$(CARGO) test -q
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+## Lint job: formatting + clippy, warnings are errors.
+lint: fmt clippy
+
+fmt:
+	$(CARGO) fmt --check
+
+clippy:
+	$(CARGO) clippy -- -D warnings
+
+## Full perf run: populates results/perf_hotpath.csv + BENCH_hotpath.json.
+bench:
+	$(CARGO) bench --bench perf_hotpath
+
+## CI bench-smoke equivalent: every bench executes on a tiny budget.
+bench-quick:
+	$(CARGO) bench --bench perf_hotpath -- --quick
+
+## Boot the sampling service on the analytic oracle (no artifacts needed)
+## and show the step-level scheduler stats after a quick client burst:
+##   printf '%s\n' '{"cmd":"stats"}' | nc 127.0.0.1 7878
+serve-demo:
+	$(CARGO) run --release -- serve --models gmm2d_oracle --workers 4
+
+## Build-time artifacts (JAX training + AOT lowering; needs the python env).
+## Written to rust/artifacts: cargo runs tests/benches with cwd = rust/, and
+## that is where the integration tests and the runtime default look.
+artifacts:
+	python3 python/compile/aot.py --out rust/artifacts
+	python3 python/compile/fixtures.py --out rust/artifacts/fixtures
+
+## Everything CI runs.
+ci: verify lint bench-quick

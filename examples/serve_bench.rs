@@ -28,6 +28,7 @@ fn main() -> anyhow::Result<()> {
     let cfg = CoordinatorConfig {
         workers: args.usize_or("workers", 4),
         max_batch_samples: if batching { 1024 } else { 1 },
+        ..Default::default()
     };
     let coord = Arc::new(Coordinator::new(cfg, reg));
 
@@ -86,6 +87,10 @@ fn main() -> anyhow::Result<()> {
         "avg merge factor   {:>10.2}",
         stats.merged_requests as f64 / stats.batches.max(1) as f64
     );
+    println!("\n== step-level scheduler ==");
+    println!("merged evals       {:>10}", stats.sched_evals);
+    println!("eval occupancy     {:>10.2}", stats.eval_occupancy);
+    println!("peak occupancy     {:>10}", stats.max_occupancy);
 
     if model.starts_with("gmm2d") {
         let eval = QualityEval::new("gmm2d", 20_000);

@@ -1,22 +1,29 @@
 //! §Perf microbenches for the three layers (criterion-style, in-repo
 //! harness): PJRT dispatch (pallas vs xla lowering), native-MLP forward
 //! (generic-t and the solver-shaped uniform-t fast path), the DEIS combine,
-//! coefficient precomputation, and coordinator overhead. Results feed
-//! EXPERIMENTS.md §Perf, plus `BENCH_hotpath.json` at the repo root so
-//! future PRs can diff the perf trajectory mechanically.
+//! coefficient precomputation, and coordinator overhead — including the
+//! step-level scheduler's co-batched serving path. Results feed
+//! EXPERIMENTS.md §Perf/§Serving, plus `BENCH_hotpath.json` at the repo
+//! root so future PRs (and the CI bench-smoke artifact) can diff the perf
+//! trajectory mechanically.
+//!
+//! `-- --quick` (or DEIS_BENCH_QUICK=1) runs every bench on a smoke budget:
+//! CI uses it to prove the harness executes end-to-end. Sections whose
+//! backend is unavailable in the current environment (PJRT without the xla
+//! crate, native nets without `make artifacts`) are skipped with a notice
+//! instead of panicking, so the bench is runnable everywhere.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use deis::coordinator::{Coordinator, CoordinatorConfig, ModelRegistry, SampleRequest};
 use deis::diffusion::Sde;
-use deis::exp::sweep_model;
 use deis::gmm::Gmm;
 use deis::runtime::Runtime;
-use deis::score::{pjrt::PjrtEps, EpsModel, GmmEps};
+use deis::score::{pjrt::PjrtEps, EpsModel, GmmEps, NativeMlp};
 use deis::solvers::{self, deis_combine, SolverKind};
 use deis::timegrid::{build, GridKind};
-use deis::util::bench::{bench_for, black_box, CsvSink, JsonSink};
+use deis::util::bench::{bench_for, black_box, budget_or_quick, CsvSink, JsonSink};
 use deis::util::rng::Rng;
 
 fn main() {
@@ -27,7 +34,7 @@ fn main() {
         .map(|d| format!("{d}/../BENCH_hotpath.json"))
         .unwrap_or_else(|| "BENCH_hotpath.json".into());
     let mut json = JsonSink::new(&json_path);
-    let budget = Duration::from_millis(1500);
+    let budget = budget_or_quick(Duration::from_millis(1500));
     let mut log = |s: deis::util::bench::BenchStats| {
         println!("{s}");
         csv.row(&format!("{},{:.1},{:.1},{:.1}", s.name, s.mean_us(),
@@ -39,24 +46,22 @@ fn main() {
     let mut rng = Rng::new(1);
 
     // --- L1/L2: PJRT execution, pallas-kernel vs plain-XLA lowering -------
-    for (name, label) in [("gmm2d", "pjrt eval b256 (pallas kernels)"),
-                          ("gmm2d_xla", "pjrt eval b256 (xla oracle)")] {
-        let model = PjrtEps::load(rt, name, &[256]).unwrap();
-        let x = rng.normal_vec(256 * 2);
+    for (name, label, d) in [
+        ("gmm2d", "pjrt eval b256 (pallas kernels)", 2),
+        ("gmm2d_xla", "pjrt eval b256 (xla oracle)", 2),
+        ("img8", "pjrt eval b256 img8 (pallas)", 64),
+    ] {
+        let model = match PjrtEps::load(rt, name, &[256]) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("skipping '{label}': {e:#}");
+                continue;
+            }
+        };
+        let x = rng.normal_vec(256 * d);
         let t: Vec<f64> = (0..256).map(|_| rng.uniform_in(0.01, 1.0)).collect();
-        let mut out = vec![0.0; 512];
+        let mut out = vec![0.0; 256 * d];
         log(bench_for(label, budget, || {
-            model.eval(&x, &t, 256, &mut out);
-            black_box(&out);
-        }));
-    }
-    // img8 is the heavier net.
-    {
-        let model = PjrtEps::load(rt, "img8", &[256]).unwrap();
-        let x = rng.normal_vec(256 * 64);
-        let t: Vec<f64> = (0..256).map(|_| rng.uniform_in(0.01, 1.0)).collect();
-        let mut out = vec![0.0; 256 * 64];
-        log(bench_for("pjrt eval b256 img8 (pallas)", budget, || {
             model.eval(&x, &t, 256, &mut out);
             black_box(&out);
         }));
@@ -64,10 +69,25 @@ fn main() {
 
     // --- L3: native MLP forward -------------------------------------------
     // Per-row random t exercises the generic path; the uniform-t variant is
-    // what every solver step actually issues (fill_t broadcasts a scalar)
-    // and takes the shared-embedding fast path.
+    // what every solver step actually issues (cursor evals broadcast a
+    // scalar) and takes the shared-embedding fast path.
+    // DEIS_ARTIFACTS-aware, cwd-independent resolution: artifacts live in
+    // <crate dir>/artifacts (where `make artifacts` writes and where the
+    // integration tests, which run with cwd = crate dir, expect them).
+    let art_dir = std::env::var("DEIS_ARTIFACTS").unwrap_or_else(|_| {
+        option_env!("CARGO_MANIFEST_DIR")
+            .map(|d| format!("{d}/artifacts"))
+            .unwrap_or_else(|| "artifacts".into())
+    });
     for name in ["gmm2d", "img8"] {
-        let model = sweep_model(name);
+        let path = format!("{art_dir}/weights_{name}.json");
+        let model = match NativeMlp::load(&path) {
+            Ok(m) => Box::new(m) as Box<dyn EpsModel>,
+            Err(e) => {
+                eprintln!("skipping 'native mlp eval b256 {name}': {e:#}");
+                continue;
+            }
+        };
         let d = model.dim();
         let x = rng.normal_vec(256 * d);
         let t: Vec<f64> = (0..256).map(|_| rng.uniform_in(0.01, 1.0)).collect();
@@ -119,6 +139,21 @@ fn main() {
         log(bench_for("coordinator roundtrip (n=1, nfe=1)", budget, || {
             let req = SampleRequest::new("gmm2d", SolverKind::Tab(0), 1, 1);
             black_box(coord.sample_blocking(req).unwrap());
+        }));
+        // Step-level scheduler: 8 concurrent same-config clients; their
+        // per-step evals co-batch into one model call each (occupancy 8),
+        // which is the headline serving win of the scheduler refactor.
+        log(bench_for("scheduler 8-way co-batched (n=32, nfe=10)", budget, || {
+            let rxs: Vec<_> = (0..8)
+                .map(|i| {
+                    let mut req = SampleRequest::new("gmm2d", SolverKind::Tab(2), 10, 32);
+                    req.seed = i;
+                    coord.submit(req)
+                })
+                .collect();
+            for rx in rxs {
+                black_box(rx.recv().unwrap().unwrap());
+            }
         }));
         coord.shutdown();
     }

@@ -1,25 +1,36 @@
 //! L3 coordinator: the serving engine.
 //!
-//! Architecture (vLLM-router-shaped, scaled to a sampling service):
+//! Architecture (continuous-batching-shaped, scaled to a sampling service):
 //!
 //! ```text
-//!   submit() ──> bounded queue ──> Batcher (group by BatchKey)
-//!                                     │ merged batch
+//!   submit() ──> bounded queue ──> admission (group by BatchKey)
+//!                                     │ trajectory groups (StepCursor each)
+//!                             step-level scheduler
+//!                      (bucket pending evals by (model, t))
+//!                                     │ one merged ε-eval per bucket
 //!                              worker thread pool
-//!                                     │ one solver run per batch
+//!                                     │ scatter eps, advance cursors
 //!                          per-request slices ──> response channels
 //! ```
 //!
-//! Requests that share (model, sde, solver, grid, t0, NFE) are stacked into
-//! one state matrix and integrated together — one ε-model call per solver
-//! step serves every merged request, which is exactly where DEIS's
-//! batch-reusable coefficients pay off. Python is never involved; the model
-//! registry maps names to [`EpsModel`] backends (PJRT / native / analytic).
+//! Two merging layers. At **admission**, requests that share (model, sde,
+//! solver, grid, t0, NFE) are stacked into one state matrix — DEIS's
+//! batch-reusable coefficients make the extra rows nearly free. At the
+//! **step level** (`scheduler` module), every in-flight trajectory group
+//! yields its pending ε-evaluation through the resumable [`StepCursor`]
+//! API, and evals that land on the same `(model, t)` are dispatched as one
+//! merged network call — amortizing the dominant per-step cost across
+//! requests that admission-time keying could never merge. Python is never
+//! involved; the model registry maps names to [`EpsModel`] backends
+//! (PJRT / native / analytic).
+//!
+//! [`StepCursor`]: crate::solvers::StepCursor
 //!
 //! Offline-registry note: built on std::thread + channels (no tokio).
 
 pub mod batcher;
 pub mod request;
+mod scheduler;
 pub mod stats;
 
 pub use request::{BatchKey, SampleRequest, SampleResult};
@@ -29,14 +40,9 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::score::EpsModel;
-use crate::solvers;
-use crate::timegrid;
-use crate::util::rng::Rng;
-
-use batcher::Batcher;
 
 /// Model registry: name -> eps backend.
 #[derive(Default)]
@@ -67,25 +73,35 @@ impl ModelRegistry {
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
     pub workers: usize,
-    /// Max merged samples per solver run (PJRT artifact cap is 1024; larger
-    /// batches chunk inside the backend anyway).
+    /// Max merged samples per solver run / merged ε-eval (PJRT artifact cap
+    /// is 1024; larger batches chunk inside the backend anyway).
     pub max_batch_samples: usize,
+    /// Backpressure bound: submissions beyond this many unanswered requests
+    /// are rejected immediately with an "overloaded" error instead of
+    /// growing the queue without limit.
+    pub max_inflight_requests: usize,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { workers: 2, max_batch_samples: 1024 }
+        CoordinatorConfig { workers: 2, max_batch_samples: 1024, max_inflight_requests: 4096 }
     }
 }
 
-type Responder = SyncSender<anyhow::Result<SampleResult>>;
+pub(crate) type Responder = SyncSender<anyhow::Result<SampleResult>>;
 
-struct Shared {
-    batcher: Mutex<Batcher<(Responder, Instant)>>,
-    cv: Condvar,
-    shutdown: AtomicBool,
-    registry: ModelRegistry,
-    stats: Stats,
+pub(crate) struct Shared {
+    pub(crate) state: Mutex<scheduler::SchedState>,
+    pub(crate) cv: Condvar,
+    pub(crate) shutdown: AtomicBool,
+    pub(crate) registry: ModelRegistry,
+    pub(crate) stats: Stats,
+    pub(crate) max_batch_samples: usize,
+    pub(crate) max_inflight: usize,
+    /// Requests currently executing on the legacy blocking path — they
+    /// leave `state` (queue + flights) for the duration of the solver run
+    /// but must still count against `max_inflight`.
+    pub(crate) legacy_inflight: std::sync::atomic::AtomicUsize,
 }
 
 pub struct Coordinator {
@@ -96,28 +112,43 @@ pub struct Coordinator {
 impl Coordinator {
     pub fn new(cfg: CoordinatorConfig, registry: ModelRegistry) -> Coordinator {
         let shared = Arc::new(Shared {
-            batcher: Mutex::new(Batcher::new(cfg.max_batch_samples)),
+            state: Mutex::new(scheduler::SchedState::new(cfg.max_batch_samples)),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             registry,
             stats: Stats::default(),
+            max_batch_samples: cfg.max_batch_samples.max(1),
+            max_inflight: cfg.max_inflight_requests.max(1),
+            legacy_inflight: std::sync::atomic::AtomicUsize::new(0),
         });
         let workers = (0..cfg.workers.max(1))
             .map(|_| {
                 let sh = shared.clone();
-                std::thread::spawn(move || worker_loop(sh))
+                std::thread::spawn(move || scheduler::worker_loop(sh))
             })
             .collect();
         Coordinator { shared, workers }
     }
 
-    /// Non-blocking submit; the receiver yields the result.
+    /// Non-blocking submit; the receiver yields the result. Overload and
+    /// pre-expired deadlines are reported through the receiver as errors.
     pub fn submit(&self, req: SampleRequest) -> Receiver<anyhow::Result<SampleResult>> {
         let (tx, rx) = sync_channel(1);
         self.shared.stats.requests.fetch_add(1, Ordering::Relaxed);
+        let deadline = req.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
         {
-            let mut b = self.shared.batcher.lock().unwrap();
-            b.push(req, (tx, Instant::now()));
+            let mut st = self.shared.state.lock().unwrap();
+            let inflight = st.inflight_requests()
+                + self.shared.legacy_inflight.load(Ordering::Relaxed);
+            if inflight >= self.shared.max_inflight {
+                self.shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(Err(anyhow::anyhow!(
+                    "coordinator overloaded: {inflight} requests in flight (max {}); retry later",
+                    self.shared.max_inflight
+                )));
+                return rx;
+            }
+            st.queue.push(req, (tx, Instant::now(), deadline));
         }
         self.shared.cv.notify_one();
         rx
@@ -142,98 +173,6 @@ impl Coordinator {
         for w in self.workers {
             let _ = w.join();
         }
-    }
-}
-
-fn worker_loop(sh: Arc<Shared>) {
-    // Merged-batch state buffer, owned by this worker and reused across
-    // batches (sized to the largest merged batch seen; part of the
-    // zero-hot-loop-allocation discipline of EXPERIMENTS.md §Perf).
-    let mut xbuf: Vec<f64> = Vec::new();
-    loop {
-        let popped = {
-            let mut guard = sh.batcher.lock().unwrap();
-            loop {
-                if sh.shutdown.load(Ordering::SeqCst) {
-                    return;
-                }
-                if let Some(batch) = guard.pop_batch() {
-                    break Some(batch);
-                }
-                guard = sh.cv.wait(guard).unwrap();
-            }
-        };
-        let Some((_key, group)) = popped else { return };
-        run_batch(&sh, group, &mut xbuf);
-    }
-}
-
-fn run_batch(
-    sh: &Shared,
-    group: Vec<batcher::Pending<(Responder, Instant)>>,
-    xbuf: &mut Vec<f64>,
-) {
-    let spec = group[0].req.clone();
-    let merged = group.len();
-    sh.stats.batches.fetch_add(1, Ordering::Relaxed);
-    sh.stats.merged_requests.fetch_add(merged as u64, Ordering::Relaxed);
-
-    let model = match sh.registry.get(&spec.model) {
-        Some(m) => m,
-        None => {
-            for p in group {
-                let _ = p.tag.0.send(Err(anyhow::anyhow!("unknown model '{}'", spec.model)));
-            }
-            return;
-        }
-    };
-    let d = model.dim();
-    let total: usize = group.iter().map(|p| p.req.n_samples).sum();
-
-    // Build grid + solver once for the merged run.
-    let steps = spec.solver.steps_for_nfe(spec.nfe);
-    let grid = timegrid::build(spec.grid, &spec.sde, spec.t0, 1.0, steps);
-    let solver = solvers::build(spec.solver, &spec.sde, &grid);
-
-    // Per-request prior draws, deterministic in each request's seed, into
-    // the worker's recycled state buffer.
-    xbuf.clear();
-    xbuf.resize(total * d, 0.0);
-    let x = &mut xbuf[..total * d];
-    let prior = spec.sde.prior_std(1.0);
-    let mut offset = 0;
-    for p in &group {
-        let mut rng = Rng::new(p.req.seed);
-        for v in x[offset * d..(offset + p.req.n_samples) * d].iter_mut() {
-            *v = prior * rng.normal();
-        }
-        offset += p.req.n_samples;
-    }
-
-    let t_solve = Instant::now();
-    // One rng stream for stochastic solvers across the merged batch,
-    // deterministic in the head request's seed.
-    let mut srng = Rng::new(spec.seed ^ 0xD1F_F051);
-    solver.sample(model.as_ref(), x, total, &mut srng);
-    let solve_us = t_solve.elapsed().as_micros() as u64;
-    sh.stats.samples.fetch_add(total as u64, Ordering::Relaxed);
-    sh.stats.model_evals.fetch_add(solver.nfe() as u64, Ordering::Relaxed);
-
-    let mut offset = 0;
-    for p in group {
-        let n = p.req.n_samples;
-        let res = SampleResult {
-            samples: x[offset * d..(offset + n) * d].to_vec(),
-            dim: d,
-            nfe: spec.nfe,
-            merged_with: merged,
-            queue_us: t_solve.duration_since(p.enqueued).as_micros() as u64,
-            solve_us,
-        };
-        offset += n;
-        sh.stats.completed.fetch_add(1, Ordering::Relaxed);
-        sh.stats.record_latency(p.tag.1.elapsed().as_micros() as u64);
-        let _ = p.tag.0.send(Ok(res));
     }
 }
 
@@ -277,7 +216,7 @@ mod tests {
         // The same (seed, n) request must yield identical samples whether it
         // runs alone or merged with strangers — per-request RNG streams.
         let c = Coordinator::new(
-            CoordinatorConfig { workers: 1, max_batch_samples: 4096 },
+            CoordinatorConfig { workers: 1, max_batch_samples: 4096, ..Default::default() },
             registry(),
         );
         let mk = |seed: u64| {
@@ -314,7 +253,7 @@ mod tests {
     #[test]
     fn concurrent_mixed_load() {
         let c = Arc::new(Coordinator::new(
-            CoordinatorConfig { workers: 4, max_batch_samples: 256 },
+            CoordinatorConfig { workers: 4, max_batch_samples: 256, ..Default::default() },
             registry(),
         ));
         let mut handles = Vec::new();
@@ -334,6 +273,143 @@ mod tests {
         }
         let stats = c.stats();
         assert_eq!(stats.completed, 16);
-        Arc::try_unwrap(c).ok().map(|c| c.shutdown());
+        if let Ok(c) = Arc::try_unwrap(c) {
+            c.shutdown();
+        }
+    }
+
+    #[test]
+    fn backpressure_rejects_over_limit() {
+        // Two in-flight slots: the burst beyond them must be rejected, and
+        // the rejection must be immediate (error through the receiver).
+        let c = Coordinator::new(
+            CoordinatorConfig { workers: 1, max_batch_samples: 1, max_inflight_requests: 2 },
+            registry(),
+        );
+        let reqs: Vec<_> = (0..24)
+            .map(|i| {
+                let mut r = SampleRequest::new("gmm2d", SolverKind::Tab(1), 20, 64);
+                r.seed = i;
+                c.submit(r)
+            })
+            .collect();
+        let results: Vec<_> = reqs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        let rejected = results.iter().filter(|r| r.is_err()).count();
+        assert!(rejected > 0, "no submission was rejected under a 2-request cap");
+        assert!(results.iter().any(|r| r.is_ok()), "everything was rejected");
+        let s = c.stats();
+        assert_eq!(s.rejected as usize, rejected);
+        assert_eq!(s.completed + s.rejected, 24);
+        c.shutdown();
+    }
+
+    #[test]
+    fn zero_deadline_expires_instead_of_sampling() {
+        let c = Coordinator::new(CoordinatorConfig::default(), registry());
+        let mut req = SampleRequest::new("gmm2d", SolverKind::Tab(2), 10, 8);
+        req.deadline_ms = Some(0); // already expired on arrival
+        let res = c.sample_blocking(req);
+        assert!(res.is_err(), "expired request must not return samples");
+        // Generous deadlines behave normally.
+        let mut req = SampleRequest::new("gmm2d", SolverKind::Tab(2), 10, 8);
+        req.deadline_ms = Some(60_000);
+        assert!(c.sample_blocking(req).is_ok());
+        let s = c.stats();
+        assert_eq!(s.expired, 1);
+        assert_eq!(s.completed, 1);
+        c.shutdown();
+    }
+
+    /// Wrapper that stalls every ε-eval — lets a test deterministically
+    /// queue a burst of requests while the (single) worker is mid-eval, so
+    /// the burst is admitted in one tick.
+    struct SlowEps<M>(M, std::time::Duration);
+
+    impl<M: crate::score::EpsModel> crate::score::EpsModel for SlowEps<M> {
+        fn dim(&self) -> usize {
+            self.0.dim()
+        }
+
+        fn eval(&self, x: &[f64], t: &[f64], b: usize, out: &mut [f64]) {
+            std::thread::sleep(self.1);
+            self.0.eval(x, t, b, out);
+        }
+    }
+
+    fn slow_registry(stall: std::time::Duration) -> ModelRegistry {
+        let mut r = ModelRegistry::new();
+        r.insert(
+            "slow",
+            Arc::new(SlowEps(GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp()), stall)),
+        );
+        r
+    }
+
+    #[test]
+    fn scheduler_reports_occupancy_for_merged_evals() {
+        // Identical requests admitted in one tick form one trajectory group;
+        // every one of its evals serves all 4 requests in a single model
+        // call, which must be visible through the occupancy counters.
+        let c = Coordinator::new(
+            CoordinatorConfig { workers: 1, max_batch_samples: 4096, ..Default::default() },
+            slow_registry(std::time::Duration::from_millis(25)),
+        );
+        // Stall the single worker inside the warm request's first eval; the
+        // burst queues during the stall and is admitted together. (If the
+        // worker is slow to wake, warm + burst admit in one tick instead —
+        // also fine: the burst still forms a single group.)
+        let warm = c.submit(SampleRequest::new("slow", SolverKind::Tab(0), 2, 4));
+        std::thread::sleep(std::time::Duration::from_millis(8));
+        let rxs: Vec<_> = (0..4)
+            .map(|i| {
+                let mut r = SampleRequest::new("slow", SolverKind::Tab(2), 4, 8);
+                r.seed = i;
+                c.submit(r)
+            })
+            .collect();
+        let _ = warm.recv().unwrap().unwrap();
+        for rx in rxs {
+            let res = rx.recv().unwrap().unwrap();
+            assert_eq!(res.merged_with, 4, "burst should tick-merge into one group");
+            assert!(res.co_batched >= res.merged_with);
+        }
+        let s = c.stats();
+        assert!(s.sched_evals > 0, "scheduled solver ran no merged evals");
+        assert!(
+            s.max_occupancy >= 4,
+            "4 merged requests should co-batch (max occupancy {})",
+            s.max_occupancy
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn cross_solver_same_grid_requests_share_evals() {
+        // ddim and tab3 at the same (grid kind, nfe, t0) visit identical t
+        // nodes: admitted in the same tick, the scheduler must co-batch
+        // their evals even though their batch keys differ — the merge the
+        // old admission-keyed batcher could never do.
+        let c = Coordinator::new(
+            CoordinatorConfig { workers: 1, max_batch_samples: 4096, ..Default::default() },
+            slow_registry(std::time::Duration::from_millis(25)),
+        );
+        // Same stall-window guard as above: a and b must be admitted in one
+        // tick so their grids stay in lockstep from t_N on.
+        let warm = c.submit(SampleRequest::new("slow", SolverKind::Tab(0), 2, 4));
+        std::thread::sleep(std::time::Duration::from_millis(8));
+        let rx_a = c.submit(SampleRequest::new("slow", SolverKind::Tab(0), 4, 8));
+        let rx_b = c.submit(SampleRequest::new("slow", SolverKind::Tab(3), 4, 8));
+        let _ = warm.recv().unwrap().unwrap();
+        let a = rx_a.recv().unwrap().unwrap();
+        let b = rx_b.recv().unwrap().unwrap();
+        assert_eq!(a.merged_with, 1, "different keys must not admission-merge");
+        assert_eq!(b.merged_with, 1);
+        assert!(
+            a.co_batched >= 2 && b.co_batched >= 2,
+            "cross-solver evals did not co-batch (a {}, b {})",
+            a.co_batched,
+            b.co_batched
+        );
+        c.shutdown();
     }
 }

@@ -18,6 +18,11 @@ pub struct SampleRequest {
     pub nfe: usize,
     pub n_samples: usize,
     pub seed: u64,
+    /// Optional per-request deadline, relative to submission. A request
+    /// still queued (or still integrating) when it expires receives an
+    /// error instead of samples, and its trajectory is aborted if no other
+    /// request shares it. Not part of the batch key.
+    pub deadline_ms: Option<u64>,
 }
 
 impl SampleRequest {
@@ -32,6 +37,7 @@ impl SampleRequest {
             nfe,
             n_samples,
             seed: 0,
+            deadline_ms: None,
         }
     }
 
@@ -68,8 +74,12 @@ pub struct SampleResult {
     pub dim: usize,
     /// NFE actually spent by the merged run (per trajectory).
     pub nfe: usize,
-    /// How many requests shared the solver run.
+    /// How many requests shared the solver run (admission-time merge).
     pub merged_with: usize,
+    /// Peak number of requests whose ε-evaluations were co-batched with
+    /// this one by the step-level scheduler (>= merged_with for scheduled
+    /// solvers; 1 for the blocking fallback path).
+    pub co_batched: usize,
     pub queue_us: u64,
     pub solve_us: u64,
 }

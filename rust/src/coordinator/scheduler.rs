@@ -1,0 +1,524 @@
+//! Step-level cross-request batching scheduler.
+//!
+//! The old coordinator merged requests only at admission: requests that
+//! arrived in the same tick with an identical batch key were stacked into
+//! one solver run, and every trajectory otherwise paid for its ε-evaluations
+//! alone. This module keeps that admission-time merge (it is what makes
+//! bursts of identical requests cheap) and adds the step-level layer the
+//! paper's cost model actually calls for: solvers are resumable
+//! [`StepCursor`] machines that *yield* their pending ε-evals, and the
+//! scheduler collects pending evals across **all** in-flight trajectory
+//! groups, buckets them by `(model, t)`, and dispatches one merged network
+//! call per bucket.
+//!
+//! Why `(model, t)`: every cursor eval broadcasts one scalar t, so a merged
+//! bucket is uniform-t and takes the native engine's shared-embedding fast
+//! path (one time-embedding fold per call, `score/native.rs`). Because grid
+//! nodes are a pure function of (grid kind, NFE, t0, sde), trajectory groups
+//! admitted in the same tick with the same grid stay in lockstep and merge
+//! on *every* step — including across different solvers (e.g. ddim and tab3
+//! at the same NFE share all their nodes), which admission-keyed merging
+//! could never do. All trajectories also share their very first node
+//! t_N = T, so even different-NFE groups admitted together merge their first
+//! eval.
+//!
+//! Scheduling policy: pick the bucket containing the longest-waiting
+//! trajectory group (FIFO fairness keeps lockstep groups together), cap it
+//! at `max_batch_samples`, run the eval outside the lock, then scatter the
+//! eps slices back through each cursor and advance it. Solvers without a
+//! cursor (adaptive RK45, stochastic samplers, ρRK, s-param EI) fall back to
+//! a whole-trajectory blocking run, preserving the old behavior exactly.
+//!
+//! Determinism: a request's samples depend only on its (seed, n, config) —
+//! per-request prior RNG streams, and per-row model math independent of
+//! batch composition — so scheduled, admission-merged and solo runs are
+//! bit-identical (`rust/tests/scheduler.rs` pins this).
+//!
+//! Known tradeoff: the post-eval scatter + `advance()` (the solver's linear
+//! combination, O(rows·dim)) runs under the coordinator mutex. That is 2–3
+//! orders of magnitude cheaper than the network eval it follows
+//! (O(rows·dim·hidden²)), but it does serialize across workers; if profiles
+//! ever show contention here, the fix is to take the member flights out of
+//! their slots (they are already marked busy), advance outside the lock,
+//! and reinsert — tracked in ROADMAP.md.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::batcher::{Batcher, Pending};
+use super::request::{SampleRequest, SampleResult};
+use super::{Responder, Shared};
+use crate::score::EpsModel;
+use crate::solvers::{self, Solver, StepCursor};
+use crate::timegrid;
+use crate::util::rng::Rng;
+
+/// Queue tag carried through admission: response channel, enqueue time,
+/// absolute deadline (if the request set one).
+pub(super) type Tag = (Responder, Instant, Option<Instant>);
+
+/// One client request inside a trajectory group.
+struct FlightPart {
+    n: usize,
+    /// First row of this request inside the flight's stacked state matrix.
+    /// Fixed at admission: expiring another part must not shift the rows a
+    /// surviving request receives.
+    row0: usize,
+    responder: Responder,
+    enqueued: Instant,
+    deadline: Option<Instant>,
+}
+
+/// An in-flight trajectory group: requests admitted together under one
+/// batch key, integrating as one cursor over a stacked state matrix.
+struct Flight {
+    model_name: String,
+    model: Arc<dyn EpsModel>,
+    cursor: Box<dyn StepCursor>,
+    parts: Vec<FlightPart>,
+    nfe: usize,
+    dim: usize,
+    /// Total sample rows (sum of part n's).
+    rows: usize,
+    /// Peak number of requests co-batched with this flight's evals.
+    co_batched_peak: usize,
+    /// True while a worker holds this flight's rows in a merged eval.
+    busy: bool,
+    /// First eval dispatch (queue_us / solve_us split point).
+    started: Option<Instant>,
+    /// Earliest enqueue time over parts — the FIFO fairness key.
+    oldest: Instant,
+}
+
+/// Scheduler state under the coordinator mutex.
+pub(super) struct SchedState {
+    /// Admission queue: key-merged by the [`Batcher`] exactly as before.
+    pub(super) queue: Batcher<Tag>,
+    flights: Vec<Option<Flight>>,
+}
+
+impl SchedState {
+    pub(super) fn new(max_batch_samples: usize) -> SchedState {
+        SchedState { queue: Batcher::new(max_batch_samples), flights: Vec::new() }
+    }
+
+    /// Requests not yet responded to (backpressure accounting).
+    pub(super) fn inflight_requests(&self) -> usize {
+        self.queue.len()
+            + self
+                .flights
+                .iter()
+                .flatten()
+                .map(|f| f.parts.len())
+                .sum::<usize>()
+    }
+}
+
+/// A blocking whole-trajectory job (solver without cursor support).
+struct LegacyJob {
+    spec: SampleRequest,
+    model: Arc<dyn EpsModel>,
+    solver: Box<dyn Solver>,
+    x: Vec<f64>,
+    rows: usize,
+    dim: usize,
+    parts: Vec<FlightPart>,
+}
+
+/// A merged ε-eval covering every flight in `idx` at scalar time `t`.
+struct GroupJob {
+    idx: Vec<usize>,
+    model: Arc<dyn EpsModel>,
+    t: f64,
+    rows: usize,
+    dim: usize,
+}
+
+enum Work {
+    Legacy(LegacyJob),
+    Group(GroupJob),
+}
+
+/// Scheduler worker: admit -> pick merged eval (or legacy run) -> execute.
+pub(super) fn worker_loop(sh: Arc<Shared>) {
+    // Worker-owned buffers reused across evals (gathered states, merged
+    // eps output, broadcast t) — no steady-state allocation on the loop.
+    let mut xbuf: Vec<f64> = Vec::new();
+    let mut outbuf: Vec<f64> = Vec::new();
+    let mut tb: Vec<f64> = Vec::new();
+    loop {
+        let work = {
+            let mut st = sh.state.lock().unwrap();
+            loop {
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                expire_deadlines(&mut st, &sh);
+                if let Some(job) = admit(&mut st, &sh) {
+                    break Work::Legacy(job);
+                }
+                if let Some(job) = pick_group(&mut st, &sh, &mut xbuf) {
+                    break Work::Group(job);
+                }
+                st = sh.cv.wait(st).unwrap();
+            }
+        };
+        match work {
+            Work::Legacy(job) => run_legacy(&sh, job),
+            Work::Group(job) => run_group(&sh, job, &xbuf, &mut outbuf, &mut tb),
+        }
+        // Completed or unblocked flights may be schedulable again, and a
+        // waiting worker may now find work.
+        sh.cv.notify_all();
+    }
+}
+
+/// Per-request prior draws, deterministic in each request's seed, stacked
+/// into one state matrix in part order.
+fn draw_priors(group: &[Pending<Tag>], spec: &SampleRequest, d: usize, rows: usize) -> Vec<f64> {
+    let mut x = vec![0.0; rows * d];
+    let prior = spec.sde.prior_std(1.0);
+    let mut offset = 0;
+    for p in group {
+        let mut rng = Rng::new(p.req.seed);
+        for v in x[offset * d..(offset + p.req.n_samples) * d].iter_mut() {
+            *v = prior * rng.normal();
+        }
+        offset += p.req.n_samples;
+    }
+    x
+}
+
+/// Drain the admission queue into flights. Returns the first key group
+/// whose solver has no cursor — the caller runs it as a blocking job (the
+/// rest of the queue is handled on subsequent passes).
+fn admit(st: &mut SchedState, sh: &Shared) -> Option<LegacyJob> {
+    while let Some((_key, group)) = st.queue.pop_batch() {
+        // Deadline check at admission: a request that expired while queued
+        // gets an error instead of occupying a solver run.
+        let now = Instant::now();
+        let mut live: Vec<Pending<Tag>> = Vec::with_capacity(group.len());
+        for p in group {
+            if p.tag.2.is_some_and(|d| d <= now) {
+                sh.stats.expired.fetch_add(1, Ordering::Relaxed);
+                let _ = p
+                    .tag
+                    .0
+                    .send(Err(anyhow::anyhow!("deadline exceeded while queued")));
+            } else {
+                live.push(p);
+            }
+        }
+        if live.is_empty() {
+            continue;
+        }
+        let spec = live[0].req.clone();
+        let model = match sh.registry.get(&spec.model) {
+            Some(m) => m,
+            None => {
+                for p in live {
+                    let _ = p
+                        .tag
+                        .0
+                        .send(Err(anyhow::anyhow!("unknown model '{}'", spec.model)));
+                }
+                continue;
+            }
+        };
+        let d = model.dim();
+        // Grid/solver constructors assert on malformed configs (t0 out of
+        // range, too few steps for PNDM, ...). A panic here would poison the
+        // coordinator mutex and brick the service for every client, so turn
+        // construction panics into per-request errors instead.
+        let built = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let steps = spec.solver.steps_for_nfe(spec.nfe);
+            let grid = timegrid::build(spec.grid, &spec.sde, spec.t0, 1.0, steps);
+            solvers::build(spec.solver, &spec.sde, &grid)
+        }));
+        let solver = match built {
+            Ok(s) => s,
+            Err(_) => {
+                for p in live {
+                    let _ = p.tag.0.send(Err(anyhow::anyhow!(
+                        "invalid sampling configuration for solver '{}' (nfe {}, t0 {}): \
+                         grid/solver constraints violated",
+                        spec.solver.name(),
+                        spec.nfe,
+                        spec.t0
+                    )));
+                }
+                continue;
+            }
+        };
+        let rows: usize = live.iter().map(|p| p.req.n_samples).sum();
+        let x = draw_priors(&live, &spec, d, rows);
+        let mut oldest = live[0].tag.1;
+        let mut row0 = 0;
+        let parts: Vec<FlightPart> = live
+            .into_iter()
+            .map(|p| {
+                oldest = oldest.min(p.tag.1);
+                let part = FlightPart {
+                    n: p.req.n_samples,
+                    row0,
+                    responder: p.tag.0,
+                    enqueued: p.tag.1,
+                    deadline: p.tag.2,
+                };
+                row0 += p.req.n_samples;
+                part
+            })
+            .collect();
+        sh.stats.batches.fetch_add(1, Ordering::Relaxed);
+        sh.stats.merged_requests.fetch_add(parts.len() as u64, Ordering::Relaxed);
+        match solver.cursor(&x, rows) {
+            Some(cursor) => {
+                let flight = Flight {
+                    model_name: spec.model.clone(),
+                    model,
+                    cursor,
+                    parts,
+                    nfe: spec.nfe,
+                    dim: d,
+                    rows,
+                    co_batched_peak: 0,
+                    busy: false,
+                    started: None,
+                    oldest,
+                };
+                match st.flights.iter_mut().find(|s| s.is_none()) {
+                    Some(slot) => *slot = Some(flight),
+                    None => st.flights.push(Some(flight)),
+                }
+            }
+            None => {
+                // Keep the parts visible to backpressure while they execute
+                // outside `state`; run_legacy decrements after responding.
+                sh.legacy_inflight.fetch_add(parts.len(), Ordering::Relaxed);
+                return Some(LegacyJob { spec, model, solver, x, rows, dim: d, parts });
+            }
+        }
+    }
+    None
+}
+
+/// Drop expired waiting requests; abort flights nobody is waiting on.
+/// In-place (`retain`): the common no-deadline sweep allocates nothing —
+/// this runs on every scheduler tick under the coordinator mutex.
+fn expire_deadlines(st: &mut SchedState, sh: &Shared) {
+    let now = Instant::now();
+    for slot in st.flights.iter_mut() {
+        if let Some(f) = slot {
+            if f.busy {
+                continue;
+            }
+            f.parts.retain(|part| {
+                if part.deadline.is_some_and(|d| d <= now) {
+                    sh.stats.expired.fetch_add(1, Ordering::Relaxed);
+                    let _ = part.responder.send(Err(anyhow::anyhow!(
+                        "deadline exceeded before sampling completed"
+                    )));
+                    false
+                } else {
+                    true
+                }
+            });
+            if f.parts.is_empty() {
+                // No live requester left: abort the trajectory, reclaiming
+                // its remaining eval budget.
+                *slot = None;
+            }
+        }
+    }
+}
+
+/// Choose the next merged eval: the `(model, t)` bucket containing the
+/// longest-waiting ready flight, filled in FIFO order up to the sample
+/// budget. Marks members busy and gathers their input rows into `xbuf`.
+fn pick_group(st: &mut SchedState, sh: &Shared, xbuf: &mut Vec<f64>) -> Option<GroupJob> {
+    let mut anchor: Option<usize> = None;
+    for (i, f) in st.flights.iter().enumerate() {
+        if let Some(f) = f {
+            if !f.busy && f.cursor.pending_t().is_some() {
+                let better = match anchor {
+                    Some(a) => f.oldest < st.flights[a].as_ref().unwrap().oldest,
+                    None => true,
+                };
+                if better {
+                    anchor = Some(i);
+                }
+            }
+        }
+    }
+    let a = anchor?;
+    let (name, t, model, dim) = {
+        let f = st.flights[a].as_ref().unwrap();
+        (f.model_name.clone(), f.cursor.pending_t().unwrap(), f.model.clone(), f.dim)
+    };
+    // Every ready flight pending the same (model, t), oldest first.
+    let mut members: Vec<(usize, Instant)> = st
+        .flights
+        .iter()
+        .enumerate()
+        .filter_map(|(i, f)| f.as_ref().map(|f| (i, f)))
+        .filter(|(_, f)| {
+            !f.busy
+                && f.model_name == name
+                && f.cursor.pending_t().map(f64::to_bits) == Some(t.to_bits())
+        })
+        .map(|(i, f)| (i, f.oldest))
+        .collect();
+    members.sort_by_key(|&(_, oldest)| oldest);
+    let budget = sh.max_batch_samples;
+    let mut idx = Vec::with_capacity(members.len());
+    let mut rows = 0;
+    for (i, _) in members {
+        let f_rows = st.flights[i].as_ref().unwrap().rows;
+        // The anchor always dispatches, even oversized; later members must
+        // fit the remaining budget.
+        if !idx.is_empty() && rows + f_rows > budget {
+            continue;
+        }
+        idx.push(i);
+        rows += f_rows;
+        if rows >= budget {
+            break;
+        }
+    }
+    let started = Instant::now();
+    xbuf.clear();
+    xbuf.reserve(rows * dim);
+    for &i in &idx {
+        let f = st.flights[i].as_mut().unwrap();
+        f.busy = true;
+        if f.started.is_none() {
+            f.started = Some(started);
+        }
+        let (x_in, _) = f.cursor.io();
+        xbuf.extend_from_slice(x_in);
+    }
+    Some(GroupJob { idx, model, t, rows, dim })
+}
+
+/// Execute one merged ε-eval and scatter the results back through the
+/// member cursors.
+fn run_group(sh: &Shared, job: GroupJob, xbuf: &[f64], outbuf: &mut Vec<f64>, tb: &mut Vec<f64>) {
+    let d = job.dim;
+    tb.clear();
+    tb.resize(job.rows, job.t);
+    outbuf.clear();
+    outbuf.resize(job.rows * d, 0.0);
+    job.model.eval(&xbuf[..job.rows * d], tb, job.rows, outbuf);
+    sh.stats.model_evals.fetch_add(1, Ordering::Relaxed);
+
+    let mut finished: Vec<Flight> = Vec::new();
+    {
+        let mut st = sh.state.lock().unwrap();
+        let group_reqs: usize =
+            job.idx.iter().map(|&i| st.flights[i].as_ref().unwrap().parts.len()).sum();
+        sh.stats.record_sched_eval(group_reqs as u64);
+        let mut offset = 0;
+        for &i in &job.idx {
+            let f = st.flights[i].as_mut().unwrap();
+            let rows = f.rows;
+            {
+                let (_x, out) = f.cursor.io();
+                out.copy_from_slice(&outbuf[offset * d..(offset + rows) * d]);
+            }
+            f.cursor.advance();
+            f.busy = false;
+            f.co_batched_peak = f.co_batched_peak.max(group_reqs);
+            offset += rows;
+            if f.cursor.pending_t().is_none() {
+                finished.push(st.flights[i].take().unwrap());
+            }
+        }
+    }
+    for flight in finished {
+        complete_flight(sh, flight);
+    }
+}
+
+/// Deliver a finished flight: slice the stacked samples back into
+/// per-request results.
+fn complete_flight(sh: &Shared, mut flight: Flight) {
+    let samples = flight.cursor.take_samples();
+    let d = flight.dim;
+    let solve_end = Instant::now();
+    let started = flight.started.unwrap_or(solve_end);
+    let merged = flight.parts.len();
+    sh.stats.samples.fetch_add(flight.rows as u64, Ordering::Relaxed);
+    for part in flight.parts {
+        // Slice by the admission-time row offset, not cumulatively: parts
+        // expired mid-flight leave holes, and surviving requests must still
+        // get exactly their own rows.
+        let res = SampleResult {
+            samples: samples[part.row0 * d..(part.row0 + part.n) * d].to_vec(),
+            dim: d,
+            nfe: flight.nfe,
+            merged_with: merged,
+            co_batched: flight.co_batched_peak,
+            queue_us: started.duration_since(part.enqueued).as_micros() as u64,
+            solve_us: solve_end.duration_since(started).as_micros() as u64,
+        };
+        sh.stats.completed.fetch_add(1, Ordering::Relaxed);
+        sh.stats.record_latency(part.enqueued.elapsed().as_micros() as u64);
+        let _ = part.responder.send(Ok(res));
+    }
+}
+
+/// Whole-trajectory blocking run for solvers without cursor support —
+/// the pre-scheduler sampling behavior, kept bit-identical, plus the
+/// deadline contract: the run cannot be interrupted mid-integration, but
+/// a part whose deadline has fired by delivery time gets an error rather
+/// than late samples (and an all-expired job skips the solve entirely).
+fn run_legacy(sh: &Shared, job: LegacyJob) {
+    let LegacyJob { spec, model, solver, mut x, rows, dim, parts } = job;
+    let n_parts = parts.len();
+    let expire = |part: &FlightPart| {
+        sh.stats.expired.fetch_add(1, Ordering::Relaxed);
+        let _ = part
+            .responder
+            .send(Err(anyhow::anyhow!("deadline exceeded before sampling completed")));
+    };
+    let expired_by =
+        |part: &FlightPart, now: Instant| part.deadline.is_some_and(|d| d <= now);
+    let now = Instant::now();
+    if parts.iter().all(|p| expired_by(p, now)) {
+        for part in &parts {
+            expire(part);
+        }
+        sh.legacy_inflight.fetch_sub(n_parts, Ordering::Relaxed);
+        return;
+    }
+    let t_solve = now;
+    // One rng stream for stochastic solvers across the merged batch,
+    // deterministic in the head request's seed.
+    let mut srng = Rng::new(spec.seed ^ 0xD1F_F051);
+    solver.sample(model.as_ref(), &mut x, rows, &mut srng);
+    let solve_us = t_solve.elapsed().as_micros() as u64;
+    sh.stats.samples.fetch_add(rows as u64, Ordering::Relaxed);
+    sh.stats.model_evals.fetch_add(solver.nfe() as u64, Ordering::Relaxed);
+    let merged = parts.len();
+    let delivery = Instant::now();
+    for part in parts {
+        if expired_by(&part, delivery) {
+            expire(&part);
+            continue;
+        }
+        let res = SampleResult {
+            samples: x[part.row0 * dim..(part.row0 + part.n) * dim].to_vec(),
+            dim,
+            nfe: spec.nfe,
+            merged_with: merged,
+            co_batched: 1,
+            queue_us: t_solve.duration_since(part.enqueued).as_micros() as u64,
+            solve_us,
+        };
+        sh.stats.completed.fetch_add(1, Ordering::Relaxed);
+        sh.stats.record_latency(part.enqueued.elapsed().as_micros() as u64);
+        let _ = part.responder.send(Ok(res));
+    }
+    sh.legacy_inflight.fetch_sub(n_parts, Ordering::Relaxed);
+}

@@ -1,4 +1,19 @@
 //! Serving counters + latency aggregation (lock-free on the hot path).
+//!
+//! Counter glossary (see also the wire-protocol doc in `server`):
+//!   * `requests` / `completed` / `rejected` / `expired` — request lifecycle.
+//!     `rejected` counts backpressure refusals at submit; `expired` counts
+//!     per-request deadlines that fired before completion.
+//!   * `batches` / `merged_requests` — admission-time merging: one batch is
+//!     one trajectory group (requests stacked into a shared state matrix).
+//!   * `model_evals` — ε-model calls actually dispatched. For scheduled
+//!     solvers one merged call can serve many trajectory groups at once; for
+//!     the blocking fallback it counts the solver's per-trajectory NFE.
+//!   * `sched_evals` / `sched_eval_requests` — the step-level scheduler's
+//!     merged dispatches and how many client requests each one served.
+//!     Their ratio (`eval_occupancy` in the snapshot) is the headline
+//!     cross-request batching win: occupancy k means each network call was
+//!     amortized over k requests. `max_occupancy` is the observed peak.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -7,10 +22,15 @@ use std::sync::Mutex;
 pub struct Stats {
     pub requests: AtomicU64,
     pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub expired: AtomicU64,
     pub samples: AtomicU64,
     pub batches: AtomicU64,
     pub merged_requests: AtomicU64,
     pub model_evals: AtomicU64,
+    pub sched_evals: AtomicU64,
+    pub sched_eval_requests: AtomicU64,
+    pub max_occupancy: AtomicU64,
     latencies_us: Mutex<Vec<u64>>, // end-to-end per request
 }
 
@@ -18,9 +38,17 @@ pub struct Stats {
 pub struct StatsSnapshot {
     pub requests: u64,
     pub completed: u64,
+    pub rejected: u64,
+    pub expired: u64,
     pub samples: u64,
     pub batches: u64,
     pub merged_requests: u64,
+    pub model_evals: u64,
+    pub sched_evals: u64,
+    pub sched_eval_requests: u64,
+    /// Mean requests served per scheduled ε-eval (0 if none ran yet).
+    pub eval_occupancy: f64,
+    pub max_occupancy: u64,
     pub p50_us: u64,
     pub p99_us: u64,
     pub mean_us: f64,
@@ -29,6 +57,14 @@ pub struct StatsSnapshot {
 impl Stats {
     pub fn record_latency(&self, us: u64) {
         self.latencies_us.lock().unwrap().push(us);
+    }
+
+    /// Record one scheduler-merged ε-eval that served `requests` client
+    /// requests in a single model call.
+    pub fn record_sched_eval(&self, requests: u64) {
+        self.sched_evals.fetch_add(1, Ordering::Relaxed);
+        self.sched_eval_requests.fetch_add(requests, Ordering::Relaxed);
+        self.max_occupancy.fetch_max(requests, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> StatsSnapshot {
@@ -41,12 +77,25 @@ impl Stats {
                 lat[((lat.len() - 1) as f64 * p).ceil() as usize]
             }
         };
+        let sched_evals = self.sched_evals.load(Ordering::Relaxed);
+        let sched_eval_requests = self.sched_eval_requests.load(Ordering::Relaxed);
         StatsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
             samples: self.samples.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             merged_requests: self.merged_requests.load(Ordering::Relaxed),
+            model_evals: self.model_evals.load(Ordering::Relaxed),
+            sched_evals,
+            sched_eval_requests,
+            eval_occupancy: if sched_evals == 0 {
+                0.0
+            } else {
+                sched_eval_requests as f64 / sched_evals as f64
+            },
+            max_occupancy: self.max_occupancy.load(Ordering::Relaxed),
             p50_us: pct(0.5),
             p99_us: pct(0.99),
             mean_us: if lat.is_empty() {
@@ -74,5 +123,19 @@ mod tests {
         assert_eq!(snap.p99_us, 1000);
         assert_eq!(snap.requests, 5);
         assert!((snap.mean_us - 220.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn occupancy_aggregates() {
+        let s = Stats::default();
+        assert_eq!(s.snapshot().eval_occupancy, 0.0);
+        s.record_sched_eval(1);
+        s.record_sched_eval(3);
+        s.record_sched_eval(2);
+        let snap = s.snapshot();
+        assert_eq!(snap.sched_evals, 3);
+        assert_eq!(snap.sched_eval_requests, 6);
+        assert!((snap.eval_occupancy - 2.0).abs() < 1e-12);
+        assert_eq!(snap.max_occupancy, 3);
     }
 }

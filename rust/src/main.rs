@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   serve   --addr 127.0.0.1:7878 --workers 4 --models gmm2d,gmm2d_exact
+//!           [--max-batch 1024] [--max-inflight 4096]
 //!   sample  --model gmm2d_exact --solver tab3 --nfe 10 --n 1000 [--metric]
 //!   info    (artifact + platform inventory)
 
@@ -42,6 +43,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = CoordinatorConfig {
         workers: args.usize_or("workers", 4),
         max_batch_samples: args.usize_or("max-batch", 1024),
+        max_inflight_requests: args.usize_or("max-inflight", 4096),
     };
     let coord = Arc::new(Coordinator::new(cfg, reg));
     let addr = server::serve(coord, &args.str_or("addr", "127.0.0.1:7878"))?;

@@ -1,0 +1,93 @@
+//! API-compatible stand-in for the `xla` crate, compiled when the `pjrt`
+//! feature is off (the default: the real crate needs a vendored
+//! xla_extension C++ toolchain that neither CI nor the offline registry
+//! ships). The stub keeps the whole `runtime`/`score::pjrt` layer compiling
+//! and lets `Runtime::global()` initialize, but every artifact load fails
+//! with a clear error, so callers (benches, `default_registry`) can detect
+//! the missing backend at runtime and fall back to the native / analytic
+//! models. Only the surface `runtime/mod.rs` actually touches is mirrored.
+
+pub struct Error(pub String);
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+fn unavailable() -> Error {
+    Error(
+        "PJRT backend unavailable: built without the `pjrt` feature (the \
+         `xla` crate is not vendored in this environment); use a *_native or \
+         *_oracle model instead"
+            .to_string(),
+    )
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub (pjrt feature disabled)".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable())
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(unavailable())
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable())
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Ok(Literal)
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable())
+    }
+}

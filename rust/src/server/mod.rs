@@ -2,13 +2,38 @@
 //! the offline registry — one thread per connection, which is plenty for a
 //! sampling service whose unit of work is a whole diffusion trajectory).
 //!
-//! Wire protocol, one JSON object per line:
+//! Wire protocol, one JSON object per line.
+//!
+//! Sampling request:
 //!   -> {"model":"gmm2d","solver":"tab3","grid":"quadratic","nfe":10,
-//!       "n":256,"seed":1,"t0":1e-3,"sde":"vp","return_samples":false}
-//!   <- {"ok":true,"n":256,"dim":2,"nfe":10,"merged_with":3,
+//!       "n":256,"seed":1,"t0":1e-3,"sde":"vp","return_samples":false,
+//!       "deadline_ms":500}
+//!   <- {"ok":true,"n":256,"dim":2,"nfe":10,"merged_with":3,"co_batched":5,
 //!       "queue_us":120,"solve_us":5300,"samples":[...]?}
+//!
+//! `deadline_ms` (optional) is a relative per-request deadline: if the
+//! request is still queued or still integrating when it fires, the reply is
+//! {"ok":false,"error":"deadline exceeded ..."} instead of samples, and the
+//! trajectory is aborted when no other request shares it. Overload
+//! (backpressure: more than the coordinator's max in-flight requests) is
+//! likewise reported immediately as {"ok":false,"error":"coordinator
+//! overloaded ..."} — clients should back off and retry.
+//!
+//! In the reply, `merged_with` counts requests stacked into the same
+//! trajectory group at admission, and `co_batched` is the peak number of
+//! requests whose ε-evaluations the step-level scheduler dispatched in a
+//! single model call with this one (1 on the blocking fallback path).
+//!
+//! Introspection:
 //!   -> {"cmd":"stats"}            <- {"ok":true,"requests":...}
 //!   -> {"cmd":"models"}           <- {"ok":true,"models":[...]}
+//!
+//! Stats keys: request lifecycle (`requests`, `completed`, `rejected`,
+//! `expired`, `samples`), admission merging (`batches`, `merged_requests`),
+//! scheduler effectiveness (`model_evals`, `sched_evals`,
+//! `sched_eval_requests`, `eval_occupancy`, `max_occupancy` — occupancy k
+//! means each scheduled network call served k requests on average), and
+//! latency (`p50_us`, `p99_us`, `mean_us`).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -42,6 +67,7 @@ pub fn parse_request(v: &Json) -> Result<SampleRequest> {
     req.grid = grid;
     req.t0 = v.opt("t0").map(|x| x.as_f64()).transpose()?.unwrap_or(sde.t0_default());
     req.seed = v.opt("seed").map(|x| x.as_f64()).transpose()?.unwrap_or(0.0) as u64;
+    req.deadline_ms = v.opt("deadline_ms").map(|x| x.as_usize()).transpose()?.map(|ms| ms as u64);
     Ok(req)
 }
 
@@ -56,11 +82,19 @@ fn handle_line(coord: &Coordinator, line: &str) -> String {
                         ("ok", Json::Bool(true)),
                         ("requests", Json::num(s.requests as f64)),
                         ("completed", Json::num(s.completed as f64)),
+                        ("rejected", Json::num(s.rejected as f64)),
+                        ("expired", Json::num(s.expired as f64)),
                         ("samples", Json::num(s.samples as f64)),
                         ("batches", Json::num(s.batches as f64)),
                         ("merged_requests", Json::num(s.merged_requests as f64)),
+                        ("model_evals", Json::num(s.model_evals as f64)),
+                        ("sched_evals", Json::num(s.sched_evals as f64)),
+                        ("sched_eval_requests", Json::num(s.sched_eval_requests as f64)),
+                        ("eval_occupancy", Json::num(s.eval_occupancy)),
+                        ("max_occupancy", Json::num(s.max_occupancy as f64)),
                         ("p50_us", Json::num(s.p50_us as f64)),
                         ("p99_us", Json::num(s.p99_us as f64)),
+                        ("mean_us", Json::num(s.mean_us)),
                     ]))
                 }
                 "models" => Ok(Json::obj(vec![
@@ -84,6 +118,7 @@ fn handle_line(coord: &Coordinator, line: &str) -> String {
             ("dim", Json::num(res.dim as f64)),
             ("nfe", Json::num(res.nfe as f64)),
             ("merged_with", Json::num(res.merged_with as f64)),
+            ("co_batched", Json::num(res.co_batched as f64)),
             ("queue_us", Json::num(res.queue_us as f64)),
             ("solve_us", Json::num(res.solve_us as f64)),
         ];

@@ -10,8 +10,29 @@
 
 use crate::diffusion::Sde;
 use crate::score::EpsModel;
-use crate::solvers::{fill_t, Solver};
+use crate::solvers::plan::{sample_via_cursor, StepCursor};
+use crate::solvers::Solver;
 use crate::util::rng::Rng;
+
+/// λ(t) = log(√ᾱ(t)/σ(t)). For VE this is −log σ.
+fn lambda(sde: &Sde, t: f64) -> f64 {
+    (0.5 * sde.log_abar(t)) - sde.sigma(t).ln()
+}
+
+/// Invert λ via ρ: e^{−λ} = σ/√ᾱ = ρ exactly for both VP and VE.
+fn t_of_lambda(sde: &Sde, lam: f64) -> f64 {
+    sde.t_of_rho((-lam).exp())
+}
+
+/// x <- (α̂_e/α̂_s) x − σ_e (e^{λ_e−λ_s} − 1) eps
+fn dpm1_update(sde: &Sde, x: &mut [f64], eps: &[f64], t_s: f64, t_e: f64) {
+    let psi = sde.psi(t_e, t_s);
+    let h = lambda(sde, t_e) - lambda(sde, t_s);
+    let c = -sde.sigma(t_e) * (h.exp() - 1.0);
+    for (xv, ev) in x.iter_mut().zip(eps) {
+        *xv = psi * *xv + c * ev;
+    }
+}
 
 pub struct DpmSolver {
     sde: Sde,
@@ -25,24 +46,141 @@ impl DpmSolver {
         DpmSolver { sde: *sde, grid: grid.to_vec(), order }
     }
 
-    /// λ(t) = log(√ᾱ(t)/σ(t)). For VE this is −log σ.
-    fn lambda(&self, t: f64) -> f64 {
-        (0.5 * self.sde.log_abar(t)) - self.sde.sigma(t).ln()
+    /// λ(t) for this solver's SDE (tests/diagnostics).
+    pub fn lambda(&self, t: f64) -> f64 {
+        lambda(&self.sde, t)
     }
 
-    /// Invert λ via ρ: e^{−λ} = σ/√ᾱ = ρ exactly for both VP and VE.
-    fn t_of_lambda(&self, lam: f64) -> f64 {
-        self.sde.t_of_rho((-lam).exp())
+    /// Inverse of [`Self::lambda`] (tests/diagnostics).
+    pub fn t_of_lambda(&self, lam: f64) -> f64 {
+        t_of_lambda(&self.sde, lam)
     }
+}
 
-    /// x <- (α̂_e/α̂_s) x − σ_e (e^{λ_e−λ_s} − 1) eps
-    fn dpm1_update(&self, x: &mut [f64], eps: &[f64], t_s: f64, t_e: f64) {
-        let psi = self.sde.psi(t_e, t_s);
-        let h = self.lambda(t_e) - self.lambda(t_s);
-        let c = -self.sde.sigma(t_e) * (h.exp() - 1.0);
-        for (xv, ev) in x.iter_mut().zip(eps) {
-            *xv = psi * *xv + c * ev;
+/// Resumable DPM-Solver step machine: each grid step runs `order` stages,
+/// each stage one ε-evaluation. State = (grid index i, stage). This is the
+/// single copy of the Lu et al. update formulas, driven by both
+/// `Solver::sample` and the coordinator's scheduler.
+pub struct DpmCursor {
+    sde: Sde,
+    grid: Vec<f64>,
+    order: usize,
+    x: Vec<f64>,
+    /// Intermediate stage state (orders 2/3 only).
+    u: Vec<f64>,
+    e0: Vec<f64>,
+    e1: Vec<f64>,
+    e2: Vec<f64>,
+    /// Integrating grid[i] -> grid[i-1]; done at i == 0.
+    i: usize,
+    /// 0..order-1 within the current step.
+    stage: usize,
+    b: usize,
+}
+
+impl StepCursor for DpmCursor {
+    fn pending_t(&self) -> Option<f64> {
+        if self.i == 0 {
+            return None;
         }
+        let t_s = self.grid[self.i];
+        Some(match (self.order, self.stage) {
+            (_, 0) => t_s,
+            (2, 1) => {
+                let (ls, le) = (lambda(&self.sde, t_s), lambda(&self.sde, self.grid[self.i - 1]));
+                t_of_lambda(&self.sde, 0.5 * (ls + le))
+            }
+            (3, s) => {
+                let (ls, le) = (lambda(&self.sde, t_s), lambda(&self.sde, self.grid[self.i - 1]));
+                let h = le - ls;
+                let r = if s == 1 { 1.0 / 3.0 } else { 2.0 / 3.0 };
+                t_of_lambda(&self.sde, ls + r * h)
+            }
+            _ => unreachable!("dpm stage out of range"),
+        })
+    }
+
+    fn io(&mut self) -> (&[f64], &mut [f64]) {
+        match self.stage {
+            0 => (&self.x, &mut self.e0),
+            1 => (&self.u, &mut self.e1),
+            _ => (&self.u, &mut self.e2),
+        }
+    }
+
+    fn advance(&mut self) {
+        let (t_s, t_e) = (self.grid[self.i], self.grid[self.i - 1]);
+        match (self.order, self.stage) {
+            (1, 0) => {
+                dpm1_update(&self.sde, &mut self.x, &self.e0, t_s, t_e);
+                self.i -= 1;
+            }
+            (2, 0) => {
+                let (ls, le) = (lambda(&self.sde, t_s), lambda(&self.sde, t_e));
+                let t_m = t_of_lambda(&self.sde, 0.5 * (ls + le));
+                self.u.copy_from_slice(&self.x);
+                dpm1_update(&self.sde, &mut self.u, &self.e0, t_s, t_m);
+                self.stage = 1;
+            }
+            (2, 1) => {
+                dpm1_update(&self.sde, &mut self.x, &self.e1, t_s, t_e);
+                self.stage = 0;
+                self.i -= 1;
+            }
+            (3, 0) => {
+                let (ls, le) = (lambda(&self.sde, t_s), lambda(&self.sde, t_e));
+                let h = le - ls;
+                let r1 = 1.0 / 3.0;
+                let t1 = t_of_lambda(&self.sde, ls + r1 * h);
+                // u1 = DDIM-in-λ to s1 with e0
+                self.u.copy_from_slice(&self.x);
+                dpm1_update(&self.sde, &mut self.u, &self.e0, t_s, t1);
+                self.stage = 1;
+            }
+            (3, 1) => {
+                let (ls, le) = (lambda(&self.sde, t_s), lambda(&self.sde, t_e));
+                let h = le - ls;
+                let (r1, r2) = (1.0 / 3.0, 2.0 / 3.0);
+                let t2 = t_of_lambda(&self.sde, ls + r2 * h);
+                // u2 = (α̂2/α̂s)x − σ2(e^{r2h}−1)e0 − (σ2 r2/r1)((e^{r2h}−1)/(r2h) − 1)(e1−e0)
+                let psi2 = self.sde.psi(t2, t_s);
+                let s2 = self.sde.sigma(t2);
+                let ex = (r2 * h).exp() - 1.0;
+                let c0 = -s2 * ex;
+                let c1 = -(s2 * r2 / r1) * (ex / (r2 * h) - 1.0);
+                for idx in 0..self.x.len() {
+                    self.u[idx] = psi2 * self.x[idx] + c0 * self.e0[idx]
+                        + c1 * (self.e1[idx] - self.e0[idx]);
+                }
+                self.stage = 2;
+            }
+            (3, 2) => {
+                let (ls, le) = (lambda(&self.sde, t_s), lambda(&self.sde, t_e));
+                let h = le - ls;
+                let r2 = 2.0 / 3.0;
+                // x_e = (α̂e/α̂s)x − σe(e^h−1)e0 − (σe/r2)((e^h−1)/h − 1)(e2−e0)
+                let psie = self.sde.psi(t_e, t_s);
+                let se = self.sde.sigma(t_e);
+                let exh = h.exp() - 1.0;
+                let d0 = -se * exh;
+                let d1 = -(se / r2) * (exh / h - 1.0);
+                for idx in 0..self.x.len() {
+                    self.x[idx] = psie * self.x[idx] + d0 * self.e0[idx]
+                        + d1 * (self.e2[idx] - self.e0[idx]);
+                }
+                self.stage = 0;
+                self.i -= 1;
+            }
+            _ => unreachable!("dpm (order, stage) out of range"),
+        }
+    }
+
+    fn batch(&self) -> usize {
+        self.b
+    }
+
+    fn take_samples(&mut self) -> Vec<f64> {
+        std::mem::take(&mut self.x)
     }
 }
 
@@ -56,62 +194,29 @@ impl Solver for DpmSolver {
     }
 
     fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, _rng: &mut Rng) {
-        let d = model.dim();
-        let n = self.grid.len() - 1;
-        let mut tb = Vec::new();
-        let mut e0 = vec![0.0; b * d];
-        // Stage buffers, sized once and reused every step (orders 2/3 only).
-        let (mut u, mut e1, mut e2) = if self.order >= 2 {
-            (vec![0.0; b * d], vec![0.0; b * d], vec![0.0; b * d])
+        sample_via_cursor(self, model, x, b);
+    }
+
+    fn cursor(&self, x: &[f64], b: usize) -> Option<Box<dyn StepCursor>> {
+        // Stage buffers only exist for the multi-stage orders.
+        let (u, e1, e2) = if self.order >= 2 {
+            (vec![0.0; x.len()], vec![0.0; x.len()], vec![0.0; x.len()])
         } else {
             (Vec::new(), Vec::new(), Vec::new())
         };
-        for i in (1..=n).rev() {
-            let (t_s, t_e) = (self.grid[i], self.grid[i - 1]);
-            model.eval(x, fill_t(&mut tb, t_s, b), b, &mut e0);
-            match self.order {
-                1 => self.dpm1_update(x, &e0, t_s, t_e),
-                2 => {
-                    let (ls, le) = (self.lambda(t_s), self.lambda(t_e));
-                    let t_m = self.t_of_lambda(0.5 * (ls + le));
-                    u.copy_from_slice(x);
-                    self.dpm1_update(&mut u, &e0, t_s, t_m);
-                    model.eval(&u, fill_t(&mut tb, t_m, b), b, &mut e1);
-                    self.dpm1_update(x, &e1, t_s, t_e);
-                }
-                3 => {
-                    let (ls, le) = (self.lambda(t_s), self.lambda(t_e));
-                    let h = le - ls;
-                    let (r1, r2) = (1.0 / 3.0, 2.0 / 3.0);
-                    let t1 = self.t_of_lambda(ls + r1 * h);
-                    let t2 = self.t_of_lambda(ls + r2 * h);
-                    // u1 = DDIM-in-λ to s1 with e0
-                    u.copy_from_slice(x);
-                    self.dpm1_update(&mut u, &e0, t_s, t1);
-                    model.eval(&u, fill_t(&mut tb, t1, b), b, &mut e1);
-                    // u2 = (α̂2/α̂s)x − σ2(e^{r2h}−1)e0 − (σ2 r2/r1)((e^{r2h}−1)/(r2h) − 1)(e1−e0)
-                    let psi2 = self.sde.psi(t2, t_s);
-                    let s2 = self.sde.sigma(t2);
-                    let ex = (r2 * h).exp() - 1.0;
-                    let c0 = -s2 * ex;
-                    let c1 = -(s2 * r2 / r1) * (ex / (r2 * h) - 1.0);
-                    for idx in 0..b * d {
-                        u[idx] = psi2 * x[idx] + c0 * e0[idx] + c1 * (e1[idx] - e0[idx]);
-                    }
-                    model.eval(&u, fill_t(&mut tb, t2, b), b, &mut e2);
-                    // x_e = (α̂e/α̂s)x − σe(e^h−1)e0 − (σe/r2)((e^h−1)/h − 1)(e2−e0)
-                    let psie = self.sde.psi(t_e, t_s);
-                    let se = self.sde.sigma(t_e);
-                    let exh = h.exp() - 1.0;
-                    let d0 = -se * exh;
-                    let d1 = -(se / r2) * (exh / h - 1.0);
-                    for idx in 0..b * d {
-                        x[idx] = psie * x[idx] + d0 * e0[idx] + d1 * (e2[idx] - e0[idx]);
-                    }
-                }
-                _ => unreachable!(),
-            }
-        }
+        Some(Box::new(DpmCursor {
+            sde: self.sde,
+            grid: self.grid.clone(),
+            order: self.order,
+            x: x.to_vec(),
+            u,
+            e0: vec![0.0; x.len()],
+            e1,
+            e2,
+            i: self.grid.len() - 1,
+            stage: 0,
+            b,
+        }))
     }
 }
 

@@ -8,8 +8,79 @@
 
 use crate::diffusion::Sde;
 use crate::score::EpsModel;
-use crate::solvers::{fill_t, Solver};
+use crate::solvers::plan::{sample_via_cursor, StepCursor};
+use crate::solvers::Solver;
 use crate::util::rng::Rng;
+
+/// Resumable Euler step machine; `score_param` selects Eq. 5 vs Eq. 10.
+/// This is the single copy of the Euler step math — both `Solver::sample`
+/// paths drive it (see `solvers::plan`).
+pub struct EulerCursor {
+    sde: Sde,
+    grid: Vec<f64>,
+    score_param: bool,
+    x: Vec<f64>,
+    eps: Vec<f64>,
+    b: usize,
+    /// Current grid index: the pending eval is at grid[i]; done at i == 0.
+    i: usize,
+}
+
+impl EulerCursor {
+    fn new(sde: &Sde, grid: &[f64], score_param: bool, x: &[f64], b: usize) -> EulerCursor {
+        EulerCursor {
+            sde: *sde,
+            grid: grid.to_vec(),
+            score_param,
+            x: x.to_vec(),
+            eps: vec![0.0; x.len()],
+            b,
+            i: grid.len() - 1,
+        }
+    }
+}
+
+impl StepCursor for EulerCursor {
+    fn pending_t(&self) -> Option<f64> {
+        if self.i >= 1 {
+            Some(self.grid[self.i])
+        } else {
+            None
+        }
+    }
+
+    fn io(&mut self) -> (&[f64], &mut [f64]) {
+        (&self.x, &mut self.eps)
+    }
+
+    fn advance(&mut self) {
+        let (t, t_prev) = (self.grid[self.i], self.grid[self.i - 1]);
+        let dt = t_prev - t; // negative
+        let f = self.sde.f_scalar(t);
+        if self.score_param {
+            let g2 = self.sde.g2(t);
+            let sig = self.sde.sigma(t);
+            for (xv, ev) in self.x.iter_mut().zip(&self.eps) {
+                let s = -ev / sig; // score from eps
+                *xv += dt * (f * *xv - 0.5 * g2 * s);
+            }
+        } else {
+            let w = 0.5 * self.sde.g2(t) / self.sde.sigma(t);
+            for (xv, ev) in self.x.iter_mut().zip(&self.eps) {
+                *xv += dt * (f * *xv + w * ev);
+            }
+        }
+        self.i -= 1;
+    }
+
+    fn batch(&self) -> usize {
+        self.b
+    }
+
+    fn take_samples(&mut self) -> Vec<f64> {
+        std::mem::take(&mut self.x)
+    }
+}
 
 pub struct EulerEps {
     sde: Sde,
@@ -32,20 +103,11 @@ impl Solver for EulerEps {
     }
 
     fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, _rng: &mut Rng) {
-        let d = model.dim();
-        let mut tb = Vec::new();
-        let mut eps = vec![0.0; b * d];
-        let n = self.grid.len() - 1;
-        for i in (1..=n).rev() {
-            let (t, t_prev) = (self.grid[i], self.grid[i - 1]);
-            let dt = t_prev - t; // negative
-            model.eval(x, fill_t(&mut tb, t, b), b, &mut eps);
-            let f = self.sde.f_scalar(t);
-            let w = 0.5 * self.sde.g2(t) / self.sde.sigma(t);
-            for (xv, ev) in x.iter_mut().zip(&eps) {
-                *xv += dt * (f * *xv + w * ev);
-            }
-        }
+        sample_via_cursor(self, model, x, b);
+    }
+
+    fn cursor(&self, x: &[f64], b: usize) -> Option<Box<dyn StepCursor>> {
+        Some(Box::new(EulerCursor::new(&self.sde, &self.grid, false, x, b)))
     }
 }
 
@@ -70,22 +132,11 @@ impl Solver for EulerScore {
     }
 
     fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, _rng: &mut Rng) {
-        let d = model.dim();
-        let mut tb = Vec::new();
-        let mut eps = vec![0.0; b * d];
-        let n = self.grid.len() - 1;
-        for i in (1..=n).rev() {
-            let (t, t_prev) = (self.grid[i], self.grid[i - 1]);
-            let dt = t_prev - t;
-            model.eval(x, fill_t(&mut tb, t, b), b, &mut eps);
-            let f = self.sde.f_scalar(t);
-            let g2 = self.sde.g2(t);
-            let sig = self.sde.sigma(t);
-            for (xv, ev) in x.iter_mut().zip(&eps) {
-                let s = -ev / sig; // score from eps
-                *xv += dt * (f * *xv - 0.5 * g2 * s);
-            }
-        }
+        sample_via_cursor(self, model, x, b);
+    }
+
+    fn cursor(&self, x: &[f64], b: usize) -> Option<Box<dyn StepCursor>> {
+        Some(Box::new(EulerCursor::new(&self.sde, &self.grid, true, x, b)))
     }
 }
 

@@ -22,12 +22,15 @@
 pub mod dpm;
 pub mod ei;
 pub mod euler;
+pub mod plan;
 pub mod pndm;
 pub mod rho_ab;
 pub mod rho_rk;
 pub mod rk45;
 pub mod sde_samplers;
 pub mod tab;
+
+pub use plan::{drive, StepCursor};
 
 use crate::diffusion::Sde;
 use crate::score::EpsModel;
@@ -43,6 +46,16 @@ pub trait Solver: Send + Sync {
 
     /// Model evaluations per trajectory for this configuration.
     fn nfe(&self) -> usize;
+
+    /// Begin a resumable integration from the prior draw `x` ([b * dim]).
+    /// `None` means this solver only supports blocking `sample` (adaptive
+    /// RK45, the fixed-stage ρRK schemes, the s-param EI baseline, and the
+    /// stochastic samplers); the coordinator's scheduler then falls back to
+    /// a whole-trajectory run instead of step-level merging.
+    fn cursor(&self, x: &[f64], b: usize) -> Option<Box<dyn StepCursor>> {
+        let _ = (x, b);
+        None
+    }
 }
 
 /// Solver selector (string names are the CLI / wire format).

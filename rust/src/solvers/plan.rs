@@ -1,0 +1,174 @@
+//! Resumable step machines: the `EvalPlan`/`StepCursor` layer.
+//!
+//! A [`StepCursor`] is a solver trajectory turned inside out: instead of the
+//! solver calling `EpsModel::eval` itself, the cursor *yields* one pending
+//! ε-evaluation at a time — (scalar t, input states, eps destination) — and
+//! advances its internal state machine when the caller reports the eval
+//! done. That inversion is what lets the coordinator's scheduler collect
+//! pending evals from every in-flight trajectory, group them by (model, t),
+//! and dispatch one merged network call per group: the per-step score
+//! evaluation is the dominant cost at low NFE (paper §3), so amortizing it
+//! across concurrent clients is the whole serving win.
+//!
+//! Two invariants make scheduled integration *bit-identical* to solo
+//! integration:
+//!
+//! 1. `Solver::sample` for every cursor-capable solver is implemented by
+//!    driving its own cursor ([`drive`]) — there is exactly one copy of the
+//!    step math, so the two paths cannot drift.
+//! 2. Every eval a cursor yields broadcasts a single scalar t over its rows
+//!    (this is what `fill_t` always did), so a merged batch is uniform-t and
+//!    takes the native engine's shared-embedding fast path; and every model
+//!    backend computes rows independently, so a row's eps does not depend on
+//!    which other rows share the batch (`rust/tests/scheduler.rs` pins the
+//!    resulting sample-level parity).
+//!
+//! Cursor-capable solvers: tAB-DEIS (incl. DDIM), ρAB-DEIS, DPM-Solver-1/2/3,
+//! PNDM/iPNDM, Euler (both params). The adaptive RK45, the fixed-stage ρRK
+//! schemes, the s-param EI baseline, and the stochastic samplers keep their
+//! blocking `sample` only (`Solver::cursor` returns `None`) and are run
+//! whole-trajectory by the scheduler's fallback path.
+
+use crate::score::EpsModel;
+use crate::solvers::{fill_t, Solver};
+
+/// A solver trajectory paused at an ε-evaluation boundary.
+///
+/// Protocol: while [`pending_t`](Self::pending_t) is `Some(t)`, evaluate the
+/// model at scalar time `t` on [`io`](Self::io)'s input rows, write eps into
+/// `io`'s destination, then call [`advance`](Self::advance). When it turns
+/// `None`, the integration is complete and [`take_samples`](Self::take_samples)
+/// yields the final states.
+pub trait StepCursor: Send {
+    /// Scalar time of the pending ε-evaluation (solver steps always
+    /// broadcast one t over the whole batch), or `None` when the trajectory
+    /// has reached t_0.
+    fn pending_t(&self) -> Option<f64>;
+
+    /// (input states, eps destination) for the pending eval, both
+    /// `[batch * dim]`. Only valid while `pending_t()` is `Some`.
+    fn io(&mut self) -> (&[f64], &mut [f64]);
+
+    /// Consume the eps written into `io().1` and step the state machine to
+    /// the next pending eval (or to completion).
+    fn advance(&mut self);
+
+    /// Rows in this trajectory's batch.
+    fn batch(&self) -> usize;
+
+    /// Final samples `[batch * dim]`; valid once `pending_t()` is `None`.
+    /// Leaves the cursor drained.
+    fn take_samples(&mut self) -> Vec<f64>;
+}
+
+/// Drive a cursor to completion against one model — the solo (unscheduled)
+/// path. `Solver::sample` of every cursor-capable solver routes through
+/// here, so solo and scheduled integration share the same step math.
+pub fn drive(cursor: &mut dyn StepCursor, model: &dyn EpsModel) {
+    let b = cursor.batch();
+    let mut tb = Vec::new();
+    while let Some(t) = cursor.pending_t() {
+        fill_t(&mut tb, t, b);
+        let (x, out) = cursor.io();
+        model.eval(x, &tb, b, out);
+        cursor.advance();
+    }
+}
+
+/// Shared `Solver::sample` implementation for cursor-capable solvers.
+pub(crate) fn sample_via_cursor(
+    solver: &dyn Solver,
+    model: &dyn EpsModel,
+    x: &mut [f64],
+    b: usize,
+) {
+    let mut cursor = solver.cursor(x, b).expect("solver advertises cursor support");
+    drive(cursor.as_mut(), model);
+    x.copy_from_slice(&cursor.take_samples());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diffusion::Sde;
+    use crate::gmm::Gmm;
+    use crate::score::{Counting, GmmEps};
+    use crate::solvers::{self, SolverKind};
+    use crate::timegrid::{build, GridKind};
+    use crate::util::rng::Rng;
+
+    fn model() -> GmmEps {
+        GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp())
+    }
+
+    /// Manually driving a cursor must reproduce `Solver::sample` exactly,
+    /// for every cursor-capable solver kind.
+    #[test]
+    fn cursor_drive_matches_sample_bit_exact() {
+        let sde = Sde::vp();
+        let m = model();
+        let b = 6;
+        let kinds = [
+            SolverKind::Euler,
+            SolverKind::EulerScore,
+            SolverKind::Tab(0),
+            SolverKind::Tab(3),
+            SolverKind::RhoAb(2),
+            SolverKind::Dpm(1),
+            SolverKind::Dpm(2),
+            SolverKind::Dpm(3),
+            SolverKind::Ipndm(3),
+            SolverKind::Pndm,
+        ];
+        for kind in kinds {
+            let steps = kind.steps_for_nfe(16).max(5);
+            let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, steps);
+            let solver = solvers::build(kind, &sde, &grid);
+            let x0: Vec<f64> = Rng::new(17).normal_vec(b * 2);
+
+            let mut xa = x0.clone();
+            solver.sample(&m, &mut xa, b, &mut Rng::new(0));
+
+            let mut cursor = solver.cursor(&x0, b).expect("cursor-capable");
+            drive(cursor.as_mut(), &m);
+            let xb = cursor.take_samples();
+            assert_eq!(xa, xb, "{} cursor vs sample", solver.name());
+        }
+    }
+
+    /// The cursor spends exactly the solver's advertised NFE.
+    #[test]
+    fn cursor_nfe_matches_solver_nfe() {
+        let sde = Sde::vp();
+        let m = model();
+        let counted = Counting::new(&m);
+        for kind in [SolverKind::Tab(3), SolverKind::Dpm(3), SolverKind::Pndm] {
+            let steps = kind.steps_for_nfe(20).max(5);
+            let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, steps);
+            let solver = solvers::build(kind, &sde, &grid);
+            let x0: Vec<f64> = Rng::new(3).normal_vec(8);
+            counted.reset();
+            let mut cursor = solver.cursor(&x0, 4).expect("cursor-capable");
+            drive(cursor.as_mut(), &counted);
+            assert_eq!(counted.nfe(), solver.nfe(), "{}", solver.name());
+        }
+    }
+
+    /// Non-resumable solvers advertise it by returning None.
+    #[test]
+    fn blocking_solvers_have_no_cursor() {
+        let sde = Sde::vp();
+        let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, 8);
+        for kind in [
+            SolverKind::EiScore,
+            SolverKind::RhoHeun,
+            SolverKind::Rk45,
+            SolverKind::EulerMaruyama,
+            SolverKind::ADdim,
+        ] {
+            let solver = solvers::build(kind, &sde, &grid);
+            let x0 = vec![0.0; 8];
+            assert!(solver.cursor(&x0, 4).is_none(), "{}", solver.name());
+        }
+    }
+}

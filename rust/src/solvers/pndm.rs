@@ -11,7 +11,8 @@
 
 use crate::diffusion::Sde;
 use crate::score::EpsModel;
-use crate::solvers::{fill_t, EpsBuffer, Solver};
+use crate::solvers::plan::{sample_via_cursor, StepCursor};
+use crate::solvers::{EpsBuffer, Solver};
 use crate::util::rng::Rng;
 
 /// Classical AB weights for uniform steps, newest first (Eqs. 36, 38–40).
@@ -57,6 +58,56 @@ impl Ipndm {
     }
 }
 
+/// Resumable iPNDM step machine: one eval per step, AB-weighted transfer.
+pub struct IpndmCursor {
+    sde: Sde,
+    grid: Vec<f64>,
+    order: usize,
+    x: Vec<f64>,
+    e_hat: Vec<f64>,
+    pending: Vec<f64>,
+    buf: EpsBuffer,
+    step: usize,
+    n: usize,
+    b: usize,
+}
+
+impl StepCursor for IpndmCursor {
+    fn pending_t(&self) -> Option<f64> {
+        if self.step < self.n {
+            Some(self.grid[self.n - self.step])
+        } else {
+            None
+        }
+    }
+
+    fn io(&mut self) -> (&[f64], &mut [f64]) {
+        (&self.x, &mut self.pending)
+    }
+
+    fn advance(&mut self) {
+        let i = self.n - self.step;
+        let t = self.grid[i];
+        let eps = std::mem::take(&mut self.pending);
+        self.buf.push(t, eps);
+        let ord = self.order.min(self.buf.len() - 1); // warmup ramps 0,1,..,order
+        combine_into(&mut self.e_hat, ab_weights(ord), &self.buf);
+        transfer(&self.sde, &mut self.x, &self.e_hat, t, self.grid[i - 1]);
+        self.step += 1;
+        if self.step < self.n {
+            self.pending = self.buf.checkout(self.x.len());
+        }
+    }
+
+    fn batch(&self) -> usize {
+        self.b
+    }
+
+    fn take_samples(&mut self) -> Vec<f64> {
+        std::mem::take(&mut self.x)
+    }
+}
+
 impl Solver for Ipndm {
     fn name(&self) -> String {
         format!("ipndm{}", self.order)
@@ -67,20 +118,24 @@ impl Solver for Ipndm {
     }
 
     fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, _rng: &mut Rng) {
-        let d = model.dim();
-        let n = self.grid.len() - 1;
-        let mut tb = Vec::new();
+        sample_via_cursor(self, model, x, b);
+    }
+
+    fn cursor(&self, x: &[f64], b: usize) -> Option<Box<dyn StepCursor>> {
         let mut buf = EpsBuffer::new(self.order + 1);
-        let mut e_hat = vec![0.0; b * d];
-        for i in (1..=n).rev() {
-            let t = self.grid[i];
-            let mut eps = buf.checkout(b * d);
-            model.eval(x, fill_t(&mut tb, t, b), b, &mut eps);
-            buf.push(t, eps);
-            let ord = self.order.min(buf.len() - 1); // warmup ramps 0,1,..,order
-            combine_into(&mut e_hat, ab_weights(ord), &buf);
-            transfer(&self.sde, x, &e_hat, t, self.grid[i - 1]);
-        }
+        let pending = buf.checkout(x.len());
+        Some(Box::new(IpndmCursor {
+            sde: self.sde,
+            grid: self.grid.clone(),
+            order: self.order,
+            x: x.to_vec(),
+            e_hat: vec![0.0; x.len()],
+            pending,
+            buf,
+            step: 0,
+            n: self.grid.len() - 1,
+            b,
+        }))
     }
 }
 
@@ -94,55 +149,125 @@ impl Pndm {
         assert!(grid.len() - 1 >= 4, "PNDM needs >= 4 grid steps");
         Pndm { sde: *sde, grid: grid.to_vec() }
     }
-
-    /// Pseudo-RK warmup step (Liu et al. 2022): 4 evals, Runge–Kutta-weighted
-    /// eps fed through the DDIM transfer. `ws` buffers are reused across the
-    /// three warmup steps; the returned eps at t (checked out of `buf`'s
-    /// recycler by the caller) seeds the multistep buffer.
-    #[allow(clippy::too_many_arguments)]
-    fn prk_step(
-        &self,
-        model: &dyn EpsModel,
-        x: &mut [f64],
-        e1: &mut [f64],
-        b: usize,
-        t: f64,
-        t_prev: f64,
-        tb: &mut Vec<f64>,
-        ws: &mut PrkScratch,
-    ) {
-        let mid = 0.5 * (t + t_prev);
-        model.eval(x, fill_t(tb, t, b), b, e1);
-        // xtmp is reused for all three stage states: each stage's input is
-        // rebuilt from x before its transfer.
-        ws.xtmp.copy_from_slice(x);
-        transfer(&self.sde, &mut ws.xtmp, e1, t, mid);
-        model.eval(&ws.xtmp, fill_t(tb, mid, b), b, &mut ws.etmp);
-        // acc accumulates the RK-weighted eps: (e1 + 2 e2 + 2 e3 + e4) / 6.
-        for (a, (&e1v, &e2v)) in ws.acc.iter_mut().zip(e1.iter().zip(&ws.etmp)) {
-            *a = (e1v + 2.0 * e2v) / 6.0;
-        }
-        ws.xtmp.copy_from_slice(x);
-        transfer(&self.sde, &mut ws.xtmp, &ws.etmp, t, mid);
-        model.eval(&ws.xtmp, fill_t(tb, mid, b), b, &mut ws.etmp);
-        for (a, &e3v) in ws.acc.iter_mut().zip(&ws.etmp) {
-            *a += 2.0 * e3v / 6.0;
-        }
-        ws.xtmp.copy_from_slice(x);
-        transfer(&self.sde, &mut ws.xtmp, &ws.etmp, t, t_prev);
-        model.eval(&ws.xtmp, fill_t(tb, t_prev, b), b, &mut ws.etmp);
-        for (a, &e4v) in ws.acc.iter_mut().zip(&ws.etmp) {
-            *a += e4v / 6.0;
-        }
-        transfer(&self.sde, x, &ws.acc, t, t_prev);
-    }
 }
 
-/// Reused stage buffers for the pseudo-RK warmup.
-struct PrkScratch {
+/// Resumable PNDM step machine. The first 3 steps are the pseudo-RK warmup
+/// (Liu et al. 2022): 4 evals per step — stage 0 at t on x (into `pending`,
+/// which later seeds the multistep buffer), stages 1/2 at the midpoint and
+/// stage 3 at t_prev, each on a transfer-rebuilt `xtmp`, accumulating the
+/// RK-weighted eps (e1 + 2e2 + 2e3 + e4)/6 into `acc`. Once 3 evals are
+/// buffered, each step is a single eval + AB(3) transfer.
+pub struct PndmCursor {
+    sde: Sde,
+    grid: Vec<f64>,
+    x: Vec<f64>,
+    e_hat: Vec<f64>,
+    /// Eval destination for stage 0 (the t-node eps that seeds `buf`).
+    pending: Vec<f64>,
+    buf: EpsBuffer,
+    /// Warmup scratch: stage input, stage eps, RK accumulator.
     xtmp: Vec<f64>,
     etmp: Vec<f64>,
     acc: Vec<f64>,
+    /// Integrating grid[i] -> grid[i-1]; done at i == 0.
+    i: usize,
+    /// Stage within a warmup step (0..=3); multistep steps use stage 0 only.
+    stage: usize,
+    /// Whether the current step is a pseudo-RK warmup step (buf.len() < 3
+    /// when the step began).
+    warm: bool,
+    b: usize,
+}
+
+impl StepCursor for PndmCursor {
+    fn pending_t(&self) -> Option<f64> {
+        if self.i == 0 {
+            return None;
+        }
+        let (t, t_prev) = (self.grid[self.i], self.grid[self.i - 1]);
+        let mid = 0.5 * (t + t_prev);
+        Some(match self.stage {
+            0 => t,
+            1 | 2 => mid,
+            3 => t_prev,
+            _ => unreachable!("pndm stage out of range"),
+        })
+    }
+
+    fn io(&mut self) -> (&[f64], &mut [f64]) {
+        match self.stage {
+            0 => (&self.x, &mut self.pending),
+            _ => (&self.xtmp, &mut self.etmp),
+        }
+    }
+
+    fn advance(&mut self) {
+        let (t, t_prev) = (self.grid[self.i], self.grid[self.i - 1]);
+        let mid = 0.5 * (t + t_prev);
+        match (self.warm, self.stage) {
+            (false, 0) => {
+                let eps = std::mem::take(&mut self.pending);
+                self.buf.push(t, eps);
+                combine_into(&mut self.e_hat, ab_weights(3), &self.buf);
+                transfer(&self.sde, &mut self.x, &self.e_hat, t, t_prev);
+                self.finish_step();
+            }
+            (true, 0) => {
+                // e1 sits in `pending`; build stage-2's input from it.
+                self.xtmp.copy_from_slice(&self.x);
+                transfer(&self.sde, &mut self.xtmp, &self.pending, t, mid);
+                self.stage = 1;
+            }
+            (true, 1) => {
+                // acc = (e1 + 2 e2) / 6; rebuild input with e2 for stage 3.
+                for (a, (&e1v, &e2v)) in
+                    self.acc.iter_mut().zip(self.pending.iter().zip(&self.etmp))
+                {
+                    *a = (e1v + 2.0 * e2v) / 6.0;
+                }
+                self.xtmp.copy_from_slice(&self.x);
+                transfer(&self.sde, &mut self.xtmp, &self.etmp, t, mid);
+                self.stage = 2;
+            }
+            (true, 2) => {
+                for (a, &e3v) in self.acc.iter_mut().zip(&self.etmp) {
+                    *a += 2.0 * e3v / 6.0;
+                }
+                self.xtmp.copy_from_slice(&self.x);
+                transfer(&self.sde, &mut self.xtmp, &self.etmp, t, t_prev);
+                self.stage = 3;
+            }
+            (true, 3) => {
+                for (a, &e4v) in self.acc.iter_mut().zip(&self.etmp) {
+                    *a += e4v / 6.0;
+                }
+                transfer(&self.sde, &mut self.x, &self.acc, t, t_prev);
+                let e1 = std::mem::take(&mut self.pending);
+                self.buf.push(t, e1);
+                self.finish_step();
+            }
+            _ => unreachable!("pndm (warm, stage) out of range"),
+        }
+    }
+
+    fn batch(&self) -> usize {
+        self.b
+    }
+
+    fn take_samples(&mut self) -> Vec<f64> {
+        std::mem::take(&mut self.x)
+    }
+}
+
+impl PndmCursor {
+    fn finish_step(&mut self) {
+        self.i -= 1;
+        self.stage = 0;
+        self.warm = self.buf.len() < 3;
+        if self.i >= 1 {
+            self.pending = self.buf.checkout(self.x.len());
+        }
+    }
 }
 
 impl Solver for Pndm {
@@ -157,30 +282,27 @@ impl Solver for Pndm {
     }
 
     fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, _rng: &mut Rng) {
-        let d = model.dim();
-        let n = self.grid.len() - 1;
-        let mut tb = Vec::new();
+        sample_via_cursor(self, model, x, b);
+    }
+
+    fn cursor(&self, x: &[f64], b: usize) -> Option<Box<dyn StepCursor>> {
         let mut buf = EpsBuffer::new(4);
-        let mut e_hat = vec![0.0; b * d];
-        let mut ws = PrkScratch {
-            xtmp: vec![0.0; b * d],
-            etmp: vec![0.0; b * d],
-            acc: vec![0.0; b * d],
-        };
-        for i in (1..=n).rev() {
-            let (t, t_prev) = (self.grid[i], self.grid[i - 1]);
-            if buf.len() < 3 {
-                let mut e1 = buf.checkout(b * d);
-                self.prk_step(model, x, &mut e1, b, t, t_prev, &mut tb, &mut ws);
-                buf.push(t, e1);
-            } else {
-                let mut eps = buf.checkout(b * d);
-                model.eval(x, fill_t(&mut tb, t, b), b, &mut eps);
-                buf.push(t, eps);
-                combine_into(&mut e_hat, ab_weights(3), &buf);
-                transfer(&self.sde, x, &e_hat, t, t_prev);
-            }
-        }
+        let pending = buf.checkout(x.len());
+        Some(Box::new(PndmCursor {
+            sde: self.sde,
+            grid: self.grid.clone(),
+            x: x.to_vec(),
+            e_hat: vec![0.0; x.len()],
+            pending,
+            buf,
+            xtmp: vec![0.0; x.len()],
+            etmp: vec![0.0; x.len()],
+            acc: vec![0.0; x.len()],
+            i: self.grid.len() - 1,
+            stage: 0,
+            warm: true,
+            b,
+        }))
     }
 }
 

@@ -6,7 +6,8 @@
 use crate::diffusion::Sde;
 use crate::quad::lagrange_basis_integral;
 use crate::score::EpsModel;
-use crate::solvers::{fill_t, EpsBuffer, Solver};
+use crate::solvers::plan::{sample_via_cursor, StepCursor};
+use crate::solvers::{EpsBuffer, Solver};
 use crate::util::rng::Rng;
 
 pub struct RhoAbDeis {
@@ -16,8 +17,10 @@ pub struct RhoAbDeis {
     order: usize,
     /// Per step (index 0 = the i=N step): AB coefficients for the warmup-
     /// ramped effective order. Precomputed once per (sde, grid, order) so
-    /// the sampling loop does no coefficient work (paper Eq. 15 remark).
-    plan: Vec<Vec<f64>>,
+    /// the sampling loop does no coefficient work (paper Eq. 15 remark);
+    /// Arc-shared with cursors so starting a trajectory costs O(1)
+    /// allocations regardless of step count (rust/tests/zero_alloc.rs).
+    plan: std::sync::Arc<Vec<Vec<f64>>>,
 }
 
 impl RhoAbDeis {
@@ -25,7 +28,7 @@ impl RhoAbDeis {
         assert!(order <= 3);
         let rho: Vec<f64> = grid.iter().map(|&t| sde.rho(t)).collect();
         let n = grid.len() - 1;
-        let plan = (1..=n)
+        let plan: Vec<Vec<f64>> = (1..=n)
             .rev()
             .enumerate()
             .map(|(step, i)| {
@@ -37,7 +40,87 @@ impl RhoAbDeis {
                     .collect()
             })
             .collect();
-        RhoAbDeis { sde: *sde, grid: grid.to_vec(), rho, order, plan }
+        RhoAbDeis {
+            sde: *sde,
+            grid: grid.to_vec(),
+            rho,
+            order,
+            plan: std::sync::Arc::new(plan),
+        }
+    }
+}
+
+/// Resumable ρAB-DEIS step machine: integrates the transformed ODE in
+/// y = x/√ᾱ, yielding evals at x̂(t) = √ᾱ(t)·y. Single copy of the update
+/// math for both the solo and scheduled paths.
+pub struct RhoAbCursor {
+    sde: Sde,
+    grid: Vec<f64>,
+    rho: Vec<f64>,
+    plan: std::sync::Arc<Vec<Vec<f64>>>,
+    /// Transformed state y = x / sqrt(abar).
+    y: Vec<f64>,
+    /// Eval input x̂ = sqrt(abar(t)) * y at the pending node.
+    xcur: Vec<f64>,
+    pending: Vec<f64>,
+    buf: EpsBuffer,
+    step: usize,
+    n: usize,
+    b: usize,
+}
+
+impl RhoAbCursor {
+    /// Rebuild the eval input for the current pending node.
+    fn refresh_xcur(&mut self) {
+        let s = self.sde.sqrt_abar(self.grid[self.n - self.step]);
+        for (xc, &yv) in self.xcur.iter_mut().zip(&self.y) {
+            *xc = s * yv;
+        }
+    }
+}
+
+impl StepCursor for RhoAbCursor {
+    fn pending_t(&self) -> Option<f64> {
+        if self.step < self.n {
+            Some(self.grid[self.n - self.step])
+        } else {
+            None
+        }
+    }
+
+    fn io(&mut self) -> (&[f64], &mut [f64]) {
+        (&self.xcur, &mut self.pending)
+    }
+
+    fn advance(&mut self) {
+        let i = self.n - self.step;
+        let eps = std::mem::take(&mut self.pending);
+        self.buf.push(self.rho[i], eps);
+        let coefs = &self.plan[self.step];
+        for (j, c) in coefs.iter().enumerate() {
+            let e = self.buf.eps(j);
+            for (yv, ev) in self.y.iter_mut().zip(e) {
+                *yv += c * ev;
+            }
+        }
+        self.step += 1;
+        if self.step < self.n {
+            self.refresh_xcur();
+            self.pending = self.buf.checkout(self.xcur.len());
+        }
+    }
+
+    fn batch(&self) -> usize {
+        self.b
+    }
+
+    fn take_samples(&mut self) -> Vec<f64> {
+        let s0 = self.sde.sqrt_abar(self.grid[0]);
+        let mut x = std::mem::take(&mut self.y);
+        for v in x.iter_mut() {
+            *v *= s0;
+        }
+        x
     }
 }
 
@@ -51,38 +134,30 @@ impl Solver for RhoAbDeis {
     }
 
     fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, _rng: &mut Rng) {
+        sample_via_cursor(self, model, x, b);
+    }
+
+    fn cursor(&self, x: &[f64], b: usize) -> Option<Box<dyn StepCursor>> {
         let n = self.grid.len() - 1;
-        let d = model.dim();
-        let mut tb = Vec::new();
+        let s = self.sde.sqrt_abar(self.grid[n]);
+        let y: Vec<f64> = x.iter().map(|&v| v / s).collect();
         let mut buf = EpsBuffer::new(self.order + 1);
-        // Work in y = x / sqrt(abar).
-        let mut y: Vec<f64> = {
-            let s = self.sde.sqrt_abar(self.grid[n]);
-            x.iter().map(|&v| v / s).collect()
+        let pending = buf.checkout(x.len());
+        let mut cur = RhoAbCursor {
+            sde: self.sde,
+            grid: self.grid.clone(),
+            rho: self.rho.clone(),
+            plan: self.plan.clone(),
+            y,
+            xcur: vec![0.0; x.len()],
+            pending,
+            buf,
+            step: 0,
+            n,
+            b,
         };
-        let mut xcur = vec![0.0; b * d];
-        for (step, i) in (1..=n).rev().enumerate() {
-            let t = self.grid[i];
-            let s = self.sde.sqrt_abar(t);
-            for (xc, &yv) in xcur.iter_mut().zip(&y) {
-                *xc = s * yv;
-            }
-            let mut eps = buf.checkout(b * d);
-            model.eval(&xcur, fill_t(&mut tb, t, b), b, &mut eps);
-            buf.push(self.rho[i], eps);
-            let coefs = &self.plan[step];
-            debug_assert_eq!(coefs.len(), self.order.min(buf.len() - 1) + 1);
-            for (j, c) in coefs.iter().enumerate() {
-                let e = buf.eps(j);
-                for (yv, ev) in y.iter_mut().zip(e) {
-                    *yv += c * ev;
-                }
-            }
-        }
-        let s0 = self.sde.sqrt_abar(self.grid[0]);
-        for (xv, &yv) in x.iter_mut().zip(&y) {
-            *xv = s0 * yv;
-        }
+        cur.refresh_xcur();
+        Some(Box::new(cur))
     }
 }
 

@@ -7,14 +7,17 @@
 use crate::diffusion::Sde;
 use crate::quad::{lagrange_basis, Quadrature};
 use crate::score::EpsModel;
-use crate::solvers::{deis_combine, fill_t, EpsBuffer, Solver};
+use crate::solvers::plan::{sample_via_cursor, StepCursor};
+use crate::solvers::{deis_combine, EpsBuffer, Solver};
 use crate::util::rng::Rng;
 
 pub struct TabDeis {
     grid: Vec<f64>,
     order: usize,
     /// Per step (index 0 = the i=N step): (psi, C_ij for j=0..r_eff).
-    plan: Vec<(f64, Vec<f64>)>,
+    /// Arc-shared with cursors so starting a trajectory costs O(1)
+    /// allocations regardless of step count (rust/tests/zero_alloc.rs).
+    plan: std::sync::Arc<Vec<(f64, Vec<f64>)>>,
 }
 
 impl TabDeis {
@@ -41,7 +44,7 @@ impl TabDeis {
                 .collect();
             plan.push((sde.psi(t_prev, t), coefs));
         }
-        TabDeis { grid: grid.to_vec(), order, plan }
+        TabDeis { grid: grid.to_vec(), order, plan: std::sync::Arc::new(plan) }
     }
 
     /// Closed-form DDIM coefficient for a VP step (Prop. 2) — test oracle.
@@ -52,6 +55,60 @@ impl TabDeis {
     /// Expose a step's coefficients (tests/diagnostics).
     pub fn step_coef(&self, step: usize) -> &[f64] {
         &self.plan[step].1
+    }
+}
+
+/// Resumable tAB-DEIS step machine — the single copy of the Eq. 14–15
+/// update, driven both by `Solver::sample` and the coordinator's scheduler.
+pub struct TabCursor {
+    grid: Vec<f64>,
+    /// Per step: (psi, C_ij) — shared with the precomputed solver plan.
+    plan: std::sync::Arc<Vec<(f64, Vec<f64>)>>,
+    x: Vec<f64>,
+    /// Destination of the pending eval, checked out of `buf`'s recycler.
+    pending: Vec<f64>,
+    buf: EpsBuffer,
+    step: usize,
+    n: usize,
+    b: usize,
+}
+
+impl StepCursor for TabCursor {
+    fn pending_t(&self) -> Option<f64> {
+        if self.step < self.n {
+            Some(self.grid[self.n - self.step])
+        } else {
+            None
+        }
+    }
+
+    fn io(&mut self) -> (&[f64], &mut [f64]) {
+        (&self.x, &mut self.pending)
+    }
+
+    fn advance(&mut self) {
+        let t = self.grid[self.n - self.step];
+        let eps = std::mem::take(&mut self.pending);
+        self.buf.push(t, eps);
+        let (psi, coefs) = &self.plan[self.step];
+        // Fixed-size ref array: order <= 3 means at most 4 histories.
+        let mut eps_refs: [&[f64]; 4] = [&[]; 4];
+        for (j, r) in eps_refs.iter_mut().enumerate().take(coefs.len()) {
+            *r = self.buf.eps(j);
+        }
+        deis_combine(&mut self.x, *psi, coefs, &eps_refs[..coefs.len()]);
+        self.step += 1;
+        if self.step < self.n {
+            self.pending = self.buf.checkout(self.x.len());
+        }
+    }
+
+    fn batch(&self) -> usize {
+        self.b
+    }
+
+    fn take_samples(&mut self) -> Vec<f64> {
+        std::mem::take(&mut self.x)
     }
 }
 
@@ -69,23 +126,23 @@ impl Solver for TabDeis {
     }
 
     fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, _rng: &mut Rng) {
-        let d = model.dim();
-        let mut tb = Vec::new();
-        let mut buf = EpsBuffer::new(self.order + 1);
+        sample_via_cursor(self, model, x, b);
+    }
+
+    fn cursor(&self, x: &[f64], b: usize) -> Option<Box<dyn StepCursor>> {
         let n = self.grid.len() - 1;
-        for (step, i) in (1..=n).rev().enumerate() {
-            let t = self.grid[i];
-            let mut eps = buf.checkout(b * d);
-            model.eval(x, fill_t(&mut tb, t, b), b, &mut eps);
-            buf.push(t, eps);
-            let (psi, coefs) = &self.plan[step];
-            // Fixed-size ref array: order <= 3 means at most 4 histories.
-            let mut eps_refs: [&[f64]; 4] = [&[]; 4];
-            for (j, r) in eps_refs.iter_mut().enumerate().take(coefs.len()) {
-                *r = buf.eps(j);
-            }
-            deis_combine(x, *psi, coefs, &eps_refs[..coefs.len()]);
-        }
+        let mut buf = EpsBuffer::new(self.order + 1);
+        let pending = buf.checkout(x.len());
+        Some(Box::new(TabCursor {
+            grid: self.grid.clone(),
+            plan: self.plan.clone(),
+            x: x.to_vec(),
+            pending,
+            buf,
+            step: 0,
+            n,
+            b,
+        }))
     }
 }
 

@@ -91,6 +91,26 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// True when the invocation asked for a smoke run: `--quick` anywhere in
+/// argv (`cargo bench --bench perf_hotpath -- --quick`) or the
+/// `DEIS_BENCH_QUICK` env var. CI uses this to verify every bench executes
+/// end-to-end (and still emits its JSON/CSV rows) without paying full
+/// measurement budgets.
+pub fn quick_requested() -> bool {
+    std::env::args().any(|a| a == "--quick") || std::env::var_os("DEIS_BENCH_QUICK").is_some()
+}
+
+/// Per-bench time budget honoring `--quick`.
+pub fn budget_or_quick(full: Duration) -> Duration {
+    if quick_requested() {
+        // Enough for >= 3 iterations of every hot-path bench; the numbers
+        // are smoke-quality only and should not be written into tables.
+        Duration::from_millis(40)
+    } else {
+        full
+    }
+}
+
 /// Append rows to results/<file>.csv, creating the header on first write.
 pub struct CsvSink {
     path: std::path::PathBuf,

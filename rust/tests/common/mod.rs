@@ -1,0 +1,55 @@
+//! Shared helpers for the serving/scheduler integration tests.
+//!
+//! Each integration-test target compiles its own copy of this module and
+//! uses a different subset of it, so dead-code warnings are suppressed.
+#![allow(dead_code)]
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use deis::coordinator::ModelRegistry;
+use deis::diffusion::Sde;
+use deis::gmm::Gmm;
+use deis::score::{EpsModel, GmmEps};
+
+/// The standard 8-Gaussian-ring analytic oracle (no artifacts needed).
+pub fn oracle() -> GmmEps {
+    GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp())
+}
+
+/// Analytic oracle with an optional per-eval stall. Stalling the (single)
+/// worker inside a model call keeps the admission queue open long enough
+/// that a burst of concurrent clients is admitted — and therefore merged —
+/// in one scheduler tick, making batching assertions deterministic instead
+/// of timing-lucky. The math is untouched, so parity against the plain
+/// oracle is exact.
+pub struct StallOracle {
+    inner: GmmEps,
+    stall: Duration,
+}
+
+impl StallOracle {
+    pub fn new(stall: Duration) -> StallOracle {
+        StallOracle { inner: oracle(), stall }
+    }
+}
+
+impl EpsModel for StallOracle {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn eval(&self, x: &[f64], t: &[f64], b: usize, out: &mut [f64]) {
+        if !self.stall.is_zero() {
+            std::thread::sleep(self.stall);
+        }
+        self.inner.eval(x, t, b, out);
+    }
+}
+
+/// Registry mapping "gmm2d" to a [`StallOracle`] with the given stall.
+pub fn stall_registry(stall: Duration) -> ModelRegistry {
+    let mut reg = ModelRegistry::new();
+    reg.insert("gmm2d", Arc::new(StallOracle::new(stall)));
+    reg
+}

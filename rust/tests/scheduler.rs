@@ -1,0 +1,141 @@
+//! Step-level scheduler integration: concurrent TCP clients whose
+//! ε-evaluations get merged across requests, observable through the stats
+//! endpoint, plus the bit-exactness guarantee — batched-scheduled sampling
+//! must equal solo sampling per (seed, config).
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use deis::coordinator::{Coordinator, CoordinatorConfig, SampleRequest};
+use deis::server::{serve, Client};
+use deis::solvers::{self, SolverKind};
+use deis::timegrid;
+use deis::util::json::Json;
+use deis::util::rng::Rng;
+
+/// Reference: the exact samples request `req` must produce, computed
+/// without the coordinator (same prior stream, same solver, solo batch).
+fn solo_samples(req: &SampleRequest) -> Vec<f64> {
+    let model = common::oracle();
+    let steps = req.solver.steps_for_nfe(req.nfe);
+    let grid = timegrid::build(req.grid, &req.sde, req.t0, 1.0, steps);
+    let solver = solvers::build(req.solver, &req.sde, &grid);
+    let d = model.dim();
+    let mut rng = Rng::new(req.seed);
+    let prior = req.sde.prior_std(1.0);
+    let mut x = vec![0.0; req.n_samples * d];
+    for v in x.iter_mut() {
+        *v = prior * rng.normal();
+    }
+    let mut srng = Rng::new(req.seed ^ 0xD1F_F051);
+    solver.sample(&model, &mut x, req.n_samples, &mut srng);
+    x
+}
+
+#[test]
+fn concurrent_clients_with_mixed_nfes_merge_evals_over_tcp() {
+    // One worker + a 40ms eval stall: every client that submits during the
+    // stall is admitted in the same scheduler tick. All trajectories start
+    // at t_N = T regardless of NFE, so even the different-NFE flights merge
+    // their first eval, and the same-config pairs stay merged throughout.
+    let coord = Arc::new(Coordinator::new(
+        CoordinatorConfig { workers: 1, max_batch_samples: 4096, ..Default::default() },
+        common::stall_registry(Duration::from_millis(40)),
+    ));
+    let addr = serve(coord, "127.0.0.1:0").unwrap();
+
+    // Pre-connect so client threads only need to write one line during the
+    // stall window.
+    let mut warm_client = Client::connect(addr).unwrap();
+    let clients: Vec<Client> = (0..6).map(|_| Client::connect(addr).unwrap()).collect();
+
+    // Occupy the worker: its first eval stalls 40ms with the queue open.
+    let warm = std::thread::spawn(move || {
+        warm_client
+            .call(&Json::parse(r#"{"model":"gmm2d","solver":"ddim","nfe":2,"n":4}"#).unwrap())
+            .unwrap()
+    });
+    // Give the warm request time to reach the worker.
+    std::thread::sleep(Duration::from_millis(10));
+
+    let nfes = [6usize, 6, 8, 8, 10, 12];
+    let mut handles = Vec::new();
+    for (i, mut c) in clients.into_iter().enumerate() {
+        let nfe = nfes[i];
+        handles.push(std::thread::spawn(move || {
+            let req = format!(
+                r#"{{"model":"gmm2d","solver":"tab2","nfe":{nfe},"n":8,"seed":{i}}}"#
+            );
+            c.call(&Json::parse(&req).unwrap()).unwrap()
+        }));
+    }
+    let responses: Vec<Json> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert!(warm.join().unwrap().get("ok").unwrap().as_bool().unwrap());
+    for r in &responses {
+        assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
+    }
+    // The same-NFE pairs admission-merge; their evals then co-batch.
+    let max_co = responses
+        .iter()
+        .map(|r| r.get("co_batched").unwrap().as_f64().unwrap() as usize)
+        .max()
+        .unwrap();
+    assert!(max_co > 1, "no cross-request eval batching observed");
+
+    // The stats endpoint must prove evals were merged: occupancy > 1.
+    let mut c = Client::connect(addr).unwrap();
+    let stats = c.call(&Json::parse(r#"{"cmd":"stats"}"#).unwrap()).unwrap();
+    assert_eq!(stats.get("completed").unwrap().as_f64().unwrap() as usize, 7);
+    let sched_evals = stats.get("sched_evals").unwrap().as_f64().unwrap();
+    assert!(sched_evals > 0.0, "scheduler dispatched no merged evals");
+    let occupancy = stats.get("eval_occupancy").unwrap().as_f64().unwrap();
+    assert!(
+        occupancy > 1.0,
+        "stats endpoint must show cross-request merging (eval_occupancy {occupancy})"
+    );
+    assert!(stats.get("max_occupancy").unwrap().as_f64().unwrap() >= 2.0);
+}
+
+#[test]
+fn scheduled_sampling_is_bit_identical_to_solo_per_seed() {
+    // Mixed burst: same-key requests (admission merge), cross-solver
+    // same-grid requests (step-level co-batching), a multi-stage solver,
+    // and a blocking-fallback solver. Admitted together thanks to the
+    // stall, every one of them must still produce exactly the samples its
+    // (seed, config) produces solo — bit-for-bit.
+    let coord = Coordinator::new(
+        CoordinatorConfig { workers: 2, max_batch_samples: 4096, ..Default::default() },
+        common::stall_registry(Duration::from_millis(10)),
+    );
+    let mk = |solver: SolverKind, nfe: usize, n: usize, seed: u64| {
+        let mut r = SampleRequest::new("gmm2d", solver, nfe, n);
+        r.seed = seed;
+        r
+    };
+    let reqs = vec![
+        mk(SolverKind::Tab(3), 10, 16, 1),
+        mk(SolverKind::Tab(3), 10, 8, 2), // same key as above: admission merge
+        mk(SolverKind::Tab(0), 10, 8, 3), // same grid, different solver: co-batch
+        mk(SolverKind::RhoAb(2), 10, 8, 4),
+        mk(SolverKind::Dpm(2), 10, 8, 5),
+        mk(SolverKind::Ipndm(3), 10, 8, 6),
+        mk(SolverKind::Pndm, 15, 8, 7),
+        mk(SolverKind::Euler, 10, 8, 8),
+        mk(SolverKind::RhoHeun, 10, 8, 9), // no cursor: blocking fallback
+    ];
+    let expected: Vec<Vec<f64>> = reqs.iter().map(solo_samples).collect();
+    let rxs: Vec<_> = reqs.iter().map(|r| coord.submit(r.clone())).collect();
+    for ((req, rx), want) in reqs.iter().zip(rxs).zip(&expected) {
+        let got = rx.recv().unwrap().unwrap();
+        assert_eq!(
+            &got.samples, want,
+            "scheduled vs solo samples differ for {:?} seed {}",
+            req.solver, req.seed
+        );
+    }
+    let s = coord.stats();
+    assert_eq!(s.completed, 9);
+    coord.shutdown();
+}

@@ -1,32 +1,49 @@
 //! Serving-layer integration: TCP server + client over the analytic oracle
 //! (no artifacts needed), exercising batching, merging and the wire format.
 
-use std::sync::Arc;
+mod common;
 
-use deis::coordinator::{Coordinator, CoordinatorConfig, ModelRegistry};
-use deis::diffusion::Sde;
-use deis::gmm::Gmm;
-use deis::score::GmmEps;
+use std::sync::Arc;
+use std::time::Duration;
+
+use deis::coordinator::{Coordinator, CoordinatorConfig};
 use deis::server::{serve, Client};
 use deis::util::json::Json;
 
-fn boot(workers: usize) -> std::net::SocketAddr {
-    let mut reg = ModelRegistry::new();
-    reg.insert("gmm2d", Arc::new(GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp())));
+fn boot_with(workers: usize, stall: Duration, max_inflight: usize) -> std::net::SocketAddr {
     let coord = Arc::new(Coordinator::new(
-        CoordinatorConfig { workers, max_batch_samples: 512 },
-        reg,
+        CoordinatorConfig {
+            workers,
+            max_batch_samples: 512,
+            max_inflight_requests: max_inflight,
+        },
+        common::stall_registry(stall),
     ));
     serve(coord, "127.0.0.1:0").unwrap()
 }
 
+fn boot(workers: usize, stall: Duration) -> std::net::SocketAddr {
+    boot_with(workers, stall, 4096)
+}
+
 #[test]
 fn many_clients_merge_and_complete() {
-    let addr = boot(2);
+    let addr = boot(1, Duration::from_millis(25));
+
+    // Occupy the single worker; everything that arrives during its stalled
+    // eval is admitted in one tick.
+    let mut warm_client = Client::connect(addr).unwrap();
+    let clients: Vec<Client> = (0..12).map(|_| Client::connect(addr).unwrap()).collect();
+    let warm = std::thread::spawn(move || {
+        warm_client
+            .call(&Json::parse(r#"{"model":"gmm2d","solver":"ddim","nfe":2,"n":4}"#).unwrap())
+            .unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(8));
+
     let mut handles = Vec::new();
-    for i in 0..12 {
+    for (i, mut c) in clients.into_iter().enumerate() {
         handles.push(std::thread::spawn(move || {
-            let mut c = Client::connect(addr).unwrap();
             let req = format!(
                 r#"{{"model":"gmm2d","solver":"tab2","nfe":8,"n":32,"seed":{i}}}"#
             );
@@ -36,21 +53,26 @@ fn many_clients_merge_and_complete() {
         }));
     }
     let merges: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert!(warm.join().unwrap().get("ok").unwrap().as_bool().unwrap());
     assert_eq!(merges.len(), 12);
-    // With 2 workers and 12 simultaneous identical requests, at least some
-    // runs must have merged more than one request.
+    // The queued burst must have been admission-merged into shared runs.
     assert!(merges.iter().any(|&m| m > 1), "no dynamic batching observed: {merges:?}");
 
     let mut c = Client::connect(addr).unwrap();
     let stats = c.call(&Json::parse(r#"{"cmd":"stats"}"#).unwrap()).unwrap();
-    assert_eq!(stats.get("completed").unwrap().as_f64().unwrap() as usize, 12);
+    assert_eq!(stats.get("completed").unwrap().as_f64().unwrap() as usize, 13);
     let batches = stats.get("batches").unwrap().as_f64().unwrap() as usize;
-    assert!(batches < 12, "expected merging to reduce batch count, got {batches}");
+    assert!(batches < 13, "expected merging to reduce batch count, got {batches}");
+    // Merged trajectory groups drive merged evals: occupancy must show it.
+    assert!(
+        stats.get("eval_occupancy").unwrap().as_f64().unwrap() > 1.0,
+        "stats endpoint must report cross-request eval merging"
+    );
 }
 
 #[test]
 fn mixed_solver_configs_do_not_cross_contaminate() {
-    let addr = boot(3);
+    let addr = boot(3, Duration::ZERO);
     let mut a = Client::connect(addr).unwrap();
     let mut b = Client::connect(addr).unwrap();
     // Same seed, different solver => different samples; same seed + same
@@ -68,4 +90,63 @@ fn mixed_solver_configs_do_not_cross_contaminate() {
     let sa2 = ra2.get("samples").unwrap().as_f64_vec().unwrap();
     assert_eq!(sa, sa2, "determinism violated");
     assert!(sa.iter().zip(&sb).any(|(x, y)| (x - y).abs() > 1e-9));
+}
+
+#[test]
+fn deadline_and_overload_are_reported_over_the_wire() {
+    let addr = boot(1, Duration::ZERO);
+    let mut c = Client::connect(addr).unwrap();
+    // A zero deadline expires before the worker can pick the request up.
+    let resp = c
+        .call(&Json::parse(
+            r#"{"model":"gmm2d","solver":"ddim","nfe":5,"n":4,"deadline_ms":0}"#,
+        ).unwrap())
+        .unwrap();
+    assert!(!resp.get("ok").unwrap().as_bool().unwrap());
+    assert!(
+        resp.get("error").unwrap().as_str().unwrap().contains("deadline"),
+        "{resp:?}"
+    );
+    // A generous deadline samples normally.
+    let resp = c
+        .call(&Json::parse(
+            r#"{"model":"gmm2d","solver":"ddim","nfe":5,"n":4,"deadline_ms":60000}"#,
+        ).unwrap())
+        .unwrap();
+    assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp:?}");
+
+    let stats = c.call(&Json::parse(r#"{"cmd":"stats"}"#).unwrap()).unwrap();
+    assert_eq!(stats.get("expired").unwrap().as_f64().unwrap() as usize, 1);
+}
+
+#[test]
+fn overload_is_reported_over_the_wire() {
+    // One in-flight slot and a stalled worker: while the first request is
+    // integrating, further submissions must be refused with the documented
+    // "overloaded" error instead of queueing without bound.
+    let addr = boot_with(1, Duration::from_millis(40), 1);
+    let mut busy = Client::connect(addr).unwrap();
+    let mut refused = Client::connect(addr).unwrap();
+
+    let first = std::thread::spawn(move || {
+        busy.call(&Json::parse(r#"{"model":"gmm2d","solver":"ddim","nfe":3,"n":4}"#).unwrap())
+            .unwrap()
+    });
+    // Let the first request occupy the only slot (worker stalls 40ms/eval).
+    std::thread::sleep(Duration::from_millis(15));
+    let resp = refused
+        .call(&Json::parse(r#"{"model":"gmm2d","solver":"ddim","nfe":3,"n":4}"#).unwrap())
+        .unwrap();
+    assert!(!resp.get("ok").unwrap().as_bool().unwrap(), "{resp:?}");
+    assert!(
+        resp.get("error").unwrap().as_str().unwrap().contains("overloaded"),
+        "{resp:?}"
+    );
+    // The occupant completes normally once the stall ends.
+    assert!(first.join().unwrap().get("ok").unwrap().as_bool().unwrap());
+
+    let mut c = Client::connect(addr).unwrap();
+    let stats = c.call(&Json::parse(r#"{"cmd":"stats"}"#).unwrap()).unwrap();
+    assert_eq!(stats.get("rejected").unwrap().as_f64().unwrap() as usize, 1);
+    assert_eq!(stats.get("completed").unwrap().as_f64().unwrap() as usize, 1);
 }
