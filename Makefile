@@ -4,12 +4,19 @@
 
 CARGO = cd rust && cargo
 
-.PHONY: verify build test lint fmt clippy bench bench-quick serve-demo artifacts ci
+.PHONY: verify verify-full build test lint fmt clippy bench bench-quick serve-demo artifacts ci
 
 ## Tier-1 verify (ROADMAP): release build + full test suite.
 verify:
 	$(CARGO) build --release
 	$(CARGO) test -q
+
+## The whole local gate: tier-1 verify + the full CI lint job (clippy over
+## every target — lib, tests, benches, examples — and the fmt check).
+## Green here means both the `verify` and `lint` CI jobs pass.
+verify-full: verify
+	$(CARGO) clippy --all-targets -- -D warnings
+	$(CARGO) fmt --check
 
 build:
 	$(CARGO) build --release
@@ -24,7 +31,7 @@ fmt:
 	$(CARGO) fmt --check
 
 clippy:
-	$(CARGO) clippy -- -D warnings
+	$(CARGO) clippy --all-targets -- -D warnings
 
 ## Full perf run: populates results/perf_hotpath.csv + BENCH_hotpath.json.
 bench:

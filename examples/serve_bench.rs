@@ -91,6 +91,8 @@ fn main() -> anyhow::Result<()> {
     println!("merged evals       {:>10}", stats.sched_evals);
     println!("eval occupancy     {:>10.2}", stats.eval_occupancy);
     println!("peak occupancy     {:>10}", stats.max_occupancy);
+    println!("plan cache hits    {:>10}", stats.plan_cache_hits);
+    println!("plan cache misses  {:>10}", stats.plan_cache_misses);
 
     if model.starts_with("gmm2d") {
         let eval = QualityEval::new("gmm2d", 20_000);

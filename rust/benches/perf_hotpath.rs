@@ -155,6 +155,34 @@ fn main() {
                 black_box(rx.recv().unwrap().unwrap());
             }
         }));
+        // Mixed-solver 8-way: solvers that used to take the blocking
+        // fallback (adaptive rk45, stochastic Euler–Maruyama) alongside
+        // tAB/DPM — tracks the fallback-free universal-cursor path, with
+        // plan-cache lookups on every admission after the first round.
+        log(bench_for("scheduler mixed-solver 8-way (n=32, nfe=10)", budget, || {
+            let kinds = [
+                SolverKind::Tab(2),
+                SolverKind::Dpm(2),
+                SolverKind::Rk45,
+                SolverKind::EulerMaruyama,
+                SolverKind::Tab(2),
+                SolverKind::Dpm(2),
+                SolverKind::Rk45,
+                SolverKind::EulerMaruyama,
+            ];
+            let rxs: Vec<_> = kinds
+                .iter()
+                .enumerate()
+                .map(|(i, &kind)| {
+                    let mut req = SampleRequest::new("gmm2d", kind, 10, 32);
+                    req.seed = i as u64;
+                    coord.submit(req)
+                })
+                .collect();
+            for rx in rxs {
+                black_box(rx.recv().unwrap().unwrap());
+            }
+        }));
         coord.shutdown();
     }
 

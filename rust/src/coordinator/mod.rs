@@ -20,9 +20,16 @@
 //! yields its pending ε-evaluation through the resumable [`StepCursor`]
 //! API, and evals that land on the same `(model, t)` are dispatched as one
 //! merged network call — amortizing the dominant per-step cost across
-//! requests that admission-time keying could never merge. Python is never
-//! involved; the model registry maps names to [`EpsModel`] backends
-//! (PJRT / native / analytic).
+//! requests that admission-time keying could never merge. Cursorization is
+//! universal (there is no blocking whole-trajectory path), so **all**
+//! traffic is co-batchable. Python is never involved; the model registry
+//! maps names to [`EpsModel`] backends (PJRT / native / analytic).
+//!
+//! The per-config (grid, coefficient) plans behind the cursors come from a
+//! shared [`PlanCache`](crate::solvers::PlanCache): `submit` resolves the
+//! plan on the submitting thread (a map lookup in the steady state) and
+//! attaches it to the queued request, so admission under the coordinator
+//! mutex does no grid or quadrature work at all.
 //!
 //! [`StepCursor`]: crate::solvers::StepCursor
 //!
@@ -43,6 +50,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::score::EpsModel;
+use crate::solvers::PlanCache;
 
 /// Model registry: name -> eps backend.
 #[derive(Default)]
@@ -90,6 +98,12 @@ impl Default for CoordinatorConfig {
 
 pub(crate) type Responder = SyncSender<anyhow::Result<SampleResult>>;
 
+/// Upper bound on a request's NFE budget. NFE comes straight off the wire
+/// and sizes both the grid allocation and the coefficient quadrature behind
+/// a plan build, so it must be bounded before any plan work happens. Far
+/// above any sensible serving config (the paper's regime is NFE <= 50).
+pub const MAX_REQUEST_NFE: usize = 8192;
+
 pub(crate) struct Shared {
     pub(crate) state: Mutex<scheduler::SchedState>,
     pub(crate) cv: Condvar,
@@ -98,10 +112,9 @@ pub(crate) struct Shared {
     pub(crate) stats: Stats,
     pub(crate) max_batch_samples: usize,
     pub(crate) max_inflight: usize,
-    /// Requests currently executing on the legacy blocking path — they
-    /// leave `state` (queue + flights) for the duration of the solver run
-    /// but must still count against `max_inflight`.
-    pub(crate) legacy_inflight: std::sync::atomic::AtomicUsize,
+    /// Shared (grid, coefficients) plans, resolved at submit time so the
+    /// coordinator mutex never sees grid or quadrature work.
+    pub(crate) plan_cache: PlanCache,
 }
 
 pub struct Coordinator {
@@ -119,7 +132,7 @@ impl Coordinator {
             stats: Stats::default(),
             max_batch_samples: cfg.max_batch_samples.max(1),
             max_inflight: cfg.max_inflight_requests.max(1),
-            legacy_inflight: std::sync::atomic::AtomicUsize::new(0),
+            plan_cache: PlanCache::new(),
         });
         let workers = (0..cfg.workers.max(1))
             .map(|_| {
@@ -130,25 +143,87 @@ impl Coordinator {
         Coordinator { shared, workers }
     }
 
-    /// Non-blocking submit; the receiver yields the result. Overload and
-    /// pre-expired deadlines are reported through the receiver as errors.
+    /// Non-blocking submit; the receiver yields the result. Overload,
+    /// invalid configurations and pre-expired deadlines are reported through
+    /// the receiver as errors.
+    ///
+    /// Plan resolution happens HERE, on the submitting thread: a shared
+    /// [`PlanCache`] lookup in the steady state, a (concurrency-friendly)
+    /// build on the first sighting of a config. The coordinator mutex is
+    /// only taken afterwards, for the queue push — the heavy polynomial-
+    /// integral work of solver construction never runs under it.
     pub fn submit(&self, req: SampleRequest) -> Receiver<anyhow::Result<SampleResult>> {
         let (tx, rx) = sync_channel(1);
         self.shared.stats.requests.fetch_add(1, Ordering::Relaxed);
         let deadline = req.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
+        let reject_overloaded = |inflight: usize| {
+            self.shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(Err(anyhow::anyhow!(
+                "coordinator overloaded: {inflight} requests in flight (max {}); retry later",
+                self.shared.max_inflight
+            )));
+        };
+        // Cheap request sanity BEFORE any plan work: nfe comes off the wire
+        // and sizes the grid allocation + coefficient quadrature. Counted
+        // as `rejected` so stats account for every refused request.
+        if req.nfe > MAX_REQUEST_NFE {
+            self.shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(Err(anyhow::anyhow!(
+                "nfe {} out of range (max {MAX_REQUEST_NFE})",
+                req.nfe
+            )));
+            return rx;
+        }
+        // Early shed: an overloaded coordinator must reject without paying
+        // for plan resolution (a plan build is the most expensive thing a
+        // request can trigger). The bound is re-checked at the queue push.
         {
-            let mut st = self.shared.state.lock().unwrap();
-            let inflight = st.inflight_requests()
-                + self.shared.legacy_inflight.load(Ordering::Relaxed);
+            let st = self.shared.state.lock().unwrap();
+            let inflight = st.inflight_requests();
             if inflight >= self.shared.max_inflight {
-                self.shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                drop(st);
+                reject_overloaded(inflight);
+                return rx;
+            }
+        }
+        // Grid/solver constructors assert on malformed configs (t0 out of
+        // range, too few steps for PNDM, ...); turn panics into per-request
+        // errors. No lock is held, so nothing can be poisoned.
+        let built = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.shared
+                .plan_cache
+                .get_or_build(&req.sde, req.solver, req.grid, req.t0, req.nfe)
+        }));
+        let plan = match built {
+            Ok((plan, hit)) => {
+                let ctr = if hit {
+                    &self.shared.stats.plan_cache_hits
+                } else {
+                    &self.shared.stats.plan_cache_misses
+                };
+                ctr.fetch_add(1, Ordering::Relaxed);
+                plan
+            }
+            Err(_) => {
                 let _ = tx.send(Err(anyhow::anyhow!(
-                    "coordinator overloaded: {inflight} requests in flight (max {}); retry later",
-                    self.shared.max_inflight
+                    "invalid sampling configuration for solver '{}' (nfe {}, t0 {}): \
+                     grid/solver constraints violated",
+                    req.solver.name(),
+                    req.nfe,
+                    req.t0
                 )));
                 return rx;
             }
-            st.queue.push(req, (tx, Instant::now(), deadline));
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            let inflight = st.inflight_requests();
+            if inflight >= self.shared.max_inflight {
+                drop(st);
+                reject_overloaded(inflight);
+                return rx;
+            }
+            st.queue.push(req, (tx, Instant::now(), deadline, plan));
         }
         self.shared.cv.notify_one();
         rx
@@ -247,6 +322,53 @@ mod tests {
         assert_eq!(s.completed, 3);
         assert_eq!(s.samples, 24);
         assert!(s.p50_us > 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn plan_cache_hits_on_repeat_config_and_does_not_alias() {
+        let c = Coordinator::new(CoordinatorConfig::default(), registry());
+        let mk = |nfe: usize, seed: u64| {
+            let mut r = SampleRequest::new("gmm2d", SolverKind::Tab(2), nfe, 4);
+            r.seed = seed;
+            r
+        };
+        let a = c.sample_blocking(mk(10, 1)).unwrap();
+        let s = c.stats();
+        assert_eq!(s.plan_cache_misses, 1, "first config must build");
+        assert_eq!(s.plan_cache_hits, 0);
+        // Same config, different seed: admission key and plan key both match
+        // — second submission must reuse the cached plan.
+        let _ = c.sample_blocking(mk(10, 2)).unwrap();
+        let s = c.stats();
+        assert_eq!(s.plan_cache_misses, 1);
+        assert_eq!(s.plan_cache_hits, 1, "repeat config must hit the plan cache");
+        // Distinct config (different NFE): its own plan, not an alias.
+        let b = c.sample_blocking(mk(12, 1)).unwrap();
+        let s = c.stats();
+        assert_eq!(s.plan_cache_misses, 2, "distinct config must build its own plan");
+        assert_eq!(s.plan_cache_hits, 1);
+        assert_eq!(a.nfe, 10);
+        assert_eq!(b.nfe, 12);
+        c.shutdown();
+    }
+
+    #[test]
+    fn invalid_config_is_an_error_not_a_crash() {
+        let c = Coordinator::new(CoordinatorConfig::default(), registry());
+        // PNDM requires >= 4 grid steps; nfe 10 maps to 1 step. The plan
+        // build panics, which submit must convert into a per-request error
+        // — and the coordinator must stay serviceable afterwards.
+        let bad = SampleRequest::new("gmm2d", SolverKind::Pndm, 10, 4);
+        let err = c.sample_blocking(bad);
+        assert!(err.is_err(), "invalid config must be reported as an error");
+        // Oversized NFE is rejected before any plan work happens.
+        let huge = SampleRequest::new("gmm2d", SolverKind::Tab(0), MAX_REQUEST_NFE + 1, 4);
+        let err = c.sample_blocking(huge);
+        assert!(err.is_err(), "over-cap nfe must be rejected");
+        assert!(err.unwrap_err().to_string().contains("out of range"));
+        let ok = c.sample_blocking(SampleRequest::new("gmm2d", SolverKind::Tab(0), 5, 4));
+        assert!(ok.is_ok(), "coordinator must survive an invalid config");
         c.shutdown();
     }
 

@@ -47,21 +47,26 @@ impl SampleRequest {
     pub fn batch_key(&self) -> BatchKey {
         BatchKey {
             model: self.model.clone(),
-            sde_bits: format!("{:?}", self.sde),
+            sde: self.sde.key_bits(),
             solver: self.solver,
-            grid_bits: format!("{:?}", self.grid),
+            grid: self.grid.key_bits(),
             t0_bits: self.t0.to_bits(),
             nfe: self.nfe,
         }
     }
 }
 
+/// Batch-compatibility key. The f64-parameterized parts enter as bit
+/// patterns ([`crate::diffusion::Sde::key_bits`],
+/// [`crate::timegrid::GridKind::key_bits`]) so key construction under the
+/// coordinator mutex costs one String clone (the model name), not Debug
+/// formatting.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct BatchKey {
     pub model: String,
-    pub sde_bits: String,
+    pub sde: (u8, u64, u64),
     pub solver: SolverKind,
-    pub grid_bits: String,
+    pub grid: (u8, u64),
     pub t0_bits: u64,
     pub nfe: usize,
 }
@@ -77,8 +82,8 @@ pub struct SampleResult {
     /// How many requests shared the solver run (admission-time merge).
     pub merged_with: usize,
     /// Peak number of requests whose ε-evaluations were co-batched with
-    /// this one by the step-level scheduler (>= merged_with for scheduled
-    /// solvers; 1 for the blocking fallback path).
+    /// this one by the step-level scheduler. Every solver is scheduled, so
+    /// this is always >= merged_with (>= 1).
     pub co_batched: usize,
     pub queue_us: u64,
     pub solve_us: u64,

@@ -25,14 +25,34 @@
 //! Scheduling policy: pick the bucket containing the longest-waiting
 //! trajectory group (FIFO fairness keeps lockstep groups together), cap it
 //! at `max_batch_samples`, run the eval outside the lock, then scatter the
-//! eps slices back through each cursor and advance it. Solvers without a
-//! cursor (adaptive RK45, stochastic samplers, ρRK, s-param EI) fall back to
-//! a whole-trajectory blocking run, preserving the old behavior exactly.
+//! eps slices back through each cursor and advance it. Cursorization is
+//! universal — adaptive RK45, the ρRK stage schemes, s-param EI and the
+//! stochastic samplers are all resumable — so there is no blocking
+//! whole-trajectory path left: every request is co-batchable.
 //!
-//! Determinism: a request's samples depend only on its (seed, n, config) —
-//! per-request prior RNG streams, and per-row model math independent of
-//! batch composition — so scheduled, admission-merged and solo runs are
-//! bit-identical (`rust/tests/scheduler.rs` pins this).
+//! Admission is deliberately thin: the (grid, coefficients) plan a flight
+//! needs is resolved in `Coordinator::submit` through the shared
+//! [`PlanCache`](crate::solvers::cache::PlanCache) and rides the queue tag,
+//! so under the coordinator mutex admission only draws priors and
+//! instantiates a cursor. No quadrature, no grid construction, no panic
+//! risk under the lock.
+//!
+//! Determinism: for deterministic solvers a request's samples depend only
+//! on its (seed, n, config) — per-request prior RNG streams, and per-row
+//! model math independent of batch composition — so scheduled,
+//! admission-merged and solo runs are bit-identical
+//! (`rust/tests/scheduler.rs` pins this). Stochastic flights draw noise
+//! only inside `advance`, from a cursor-owned stream seeded by the flight's
+//! HEAD request, so step-level co-batching with strangers never perturbs
+//! the noise — scheduled == solo holds for any stochastic request that is
+//! not admission-merged. Two caveats, both inherited from the old blocking
+//! path (which also ran the solver over the stacked rows): same-config
+//! stochastic requests admission-merged in one tick share the head's noise
+//! stream, and batch-coupled estimators span the merged rows — A-DDIM's Γ
+//! estimate and rk45's RMS error norm (hence its accept/reject sequence)
+//! are computed over the whole flight. A merged non-head request of those
+//! solvers can therefore differ from its solo run; fully deterministic
+//! per-row solvers (everything else) are bit-identical merged or not.
 //!
 //! Known tradeoff: the post-eval scatter + `advance()` (the solver's linear
 //! combination, O(rows·dim)) runs under the coordinator mutex. That is 2–3
@@ -50,13 +70,13 @@ use super::batcher::{Batcher, Pending};
 use super::request::{SampleRequest, SampleResult};
 use super::{Responder, Shared};
 use crate::score::EpsModel;
-use crate::solvers::{self, Solver, StepCursor};
-use crate::timegrid;
+use crate::solvers::{Solver as _, SolverPlan, StepCursor};
 use crate::util::rng::Rng;
 
 /// Queue tag carried through admission: response channel, enqueue time,
-/// absolute deadline (if the request set one).
-pub(super) type Tag = (Responder, Instant, Option<Instant>);
+/// absolute deadline (if the request set one), and the shared solver plan
+/// resolved at submit (so admission does no grid/coefficient work).
+pub(super) type Tag = (Responder, Instant, Option<Instant>, Arc<SolverPlan>);
 
 /// One client request inside a trajectory group.
 struct FlightPart {
@@ -115,17 +135,6 @@ impl SchedState {
     }
 }
 
-/// A blocking whole-trajectory job (solver without cursor support).
-struct LegacyJob {
-    spec: SampleRequest,
-    model: Arc<dyn EpsModel>,
-    solver: Box<dyn Solver>,
-    x: Vec<f64>,
-    rows: usize,
-    dim: usize,
-    parts: Vec<FlightPart>,
-}
-
 /// A merged ε-eval covering every flight in `idx` at scalar time `t`.
 struct GroupJob {
     idx: Vec<usize>,
@@ -135,12 +144,7 @@ struct GroupJob {
     dim: usize,
 }
 
-enum Work {
-    Legacy(LegacyJob),
-    Group(GroupJob),
-}
-
-/// Scheduler worker: admit -> pick merged eval (or legacy run) -> execute.
+/// Scheduler worker: admit -> pick merged eval -> execute.
 pub(super) fn worker_loop(sh: Arc<Shared>) {
     // Worker-owned buffers reused across evals (gathered states, merged
     // eps output, broadcast t) — no steady-state allocation on the loop.
@@ -148,26 +152,21 @@ pub(super) fn worker_loop(sh: Arc<Shared>) {
     let mut outbuf: Vec<f64> = Vec::new();
     let mut tb: Vec<f64> = Vec::new();
     loop {
-        let work = {
+        let job = {
             let mut st = sh.state.lock().unwrap();
             loop {
                 if sh.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
                 expire_deadlines(&mut st, &sh);
-                if let Some(job) = admit(&mut st, &sh) {
-                    break Work::Legacy(job);
-                }
+                admit(&mut st, &sh);
                 if let Some(job) = pick_group(&mut st, &sh, &mut xbuf) {
-                    break Work::Group(job);
+                    break job;
                 }
                 st = sh.cv.wait(st).unwrap();
             }
         };
-        match work {
-            Work::Legacy(job) => run_legacy(&sh, job),
-            Work::Group(job) => run_group(&sh, job, &xbuf, &mut outbuf, &mut tb),
-        }
+        run_group(&sh, job, &xbuf, &mut outbuf, &mut tb);
         // Completed or unblocked flights may be schedulable again, and a
         // waiting worker may now find work.
         sh.cv.notify_all();
@@ -190,10 +189,11 @@ fn draw_priors(group: &[Pending<Tag>], spec: &SampleRequest, d: usize, rows: usi
     x
 }
 
-/// Drain the admission queue into flights. Returns the first key group
-/// whose solver has no cursor — the caller runs it as a blocking job (the
-/// rest of the queue is handled on subsequent passes).
-fn admit(st: &mut SchedState, sh: &Shared) -> Option<LegacyJob> {
+/// Drain the admission queue into flights. The heavy per-config work (grid
+/// + coefficients) arrived prebuilt on the queue tag, so each group costs
+/// one prior draw and one cursor instantiation — cheap enough for the
+/// coordinator mutex.
+fn admit(st: &mut SchedState, sh: &Shared) {
     while let Some((_key, group)) = st.queue.pop_batch() {
         // Deadline check at admission: a request that expired while queued
         // gets an error instead of occupying a solver run.
@@ -227,30 +227,9 @@ fn admit(st: &mut SchedState, sh: &Shared) -> Option<LegacyJob> {
             }
         };
         let d = model.dim();
-        // Grid/solver constructors assert on malformed configs (t0 out of
-        // range, too few steps for PNDM, ...). A panic here would poison the
-        // coordinator mutex and brick the service for every client, so turn
-        // construction panics into per-request errors instead.
-        let built = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            let steps = spec.solver.steps_for_nfe(spec.nfe);
-            let grid = timegrid::build(spec.grid, &spec.sde, spec.t0, 1.0, steps);
-            solvers::build(spec.solver, &spec.sde, &grid)
-        }));
-        let solver = match built {
-            Ok(s) => s,
-            Err(_) => {
-                for p in live {
-                    let _ = p.tag.0.send(Err(anyhow::anyhow!(
-                        "invalid sampling configuration for solver '{}' (nfe {}, t0 {}): \
-                         grid/solver constraints violated",
-                        spec.solver.name(),
-                        spec.nfe,
-                        spec.t0
-                    )));
-                }
-                continue;
-            }
-        };
+        // All group members share a batch key, hence the same plan config;
+        // the head's Arc is the group's plan.
+        let plan = live[0].tag.3.clone();
         let rows: usize = live.iter().map(|p| p.req.n_samples).sum();
         let x = draw_priors(&live, &spec, d, rows);
         let mut oldest = live[0].tag.1;
@@ -272,35 +251,29 @@ fn admit(st: &mut SchedState, sh: &Shared) -> Option<LegacyJob> {
             .collect();
         sh.stats.batches.fetch_add(1, Ordering::Relaxed);
         sh.stats.merged_requests.fetch_add(parts.len() as u64, Ordering::Relaxed);
-        match solver.cursor(&x, rows) {
-            Some(cursor) => {
-                let flight = Flight {
-                    model_name: spec.model.clone(),
-                    model,
-                    cursor,
-                    parts,
-                    nfe: spec.nfe,
-                    dim: d,
-                    rows,
-                    co_batched_peak: 0,
-                    busy: false,
-                    started: None,
-                    oldest,
-                };
-                match st.flights.iter_mut().find(|s| s.is_none()) {
-                    Some(slot) => *slot = Some(flight),
-                    None => st.flights.push(Some(flight)),
-                }
-            }
-            None => {
-                // Keep the parts visible to backpressure while they execute
-                // outside `state`; run_legacy decrements after responding.
-                sh.legacy_inflight.fetch_add(parts.len(), Ordering::Relaxed);
-                return Some(LegacyJob { spec, model, solver, x, rows, dim: d, parts });
-            }
+        // Stochastic solvers clone this stream into their cursor; it is
+        // deterministic in the head request's seed, which `tests/scheduler.rs`
+        // mirrors for its solo references.
+        let mut srng = Rng::new(spec.seed ^ 0xD1F_F051);
+        let cursor = plan.solver.cursor(&x, rows, &mut srng);
+        let flight = Flight {
+            model_name: spec.model.clone(),
+            model,
+            cursor,
+            parts,
+            nfe: spec.nfe,
+            dim: d,
+            rows,
+            co_batched_peak: 0,
+            busy: false,
+            started: None,
+            oldest,
+        };
+        match st.flights.iter_mut().find(|s| s.is_none()) {
+            Some(slot) => *slot = Some(flight),
+            None => st.flights.push(Some(flight)),
         }
     }
-    None
 }
 
 /// Drop expired waiting requests; abort flights nobody is waiting on.
@@ -441,7 +414,10 @@ fn run_group(sh: &Shared, job: GroupJob, xbuf: &[f64], outbuf: &mut Vec<f64>, tb
 }
 
 /// Deliver a finished flight: slice the stacked samples back into
-/// per-request results.
+/// per-request results. The deadline contract holds through delivery: a
+/// part whose deadline fired while the flight was busy in its final evals
+/// (where `expire_deadlines` cannot touch it) gets an error, not late
+/// samples.
 fn complete_flight(sh: &Shared, mut flight: Flight) {
     let samples = flight.cursor.take_samples();
     let d = flight.dim;
@@ -450,6 +426,13 @@ fn complete_flight(sh: &Shared, mut flight: Flight) {
     let merged = flight.parts.len();
     sh.stats.samples.fetch_add(flight.rows as u64, Ordering::Relaxed);
     for part in flight.parts {
+        if part.deadline.is_some_and(|dl| dl <= solve_end) {
+            sh.stats.expired.fetch_add(1, Ordering::Relaxed);
+            let _ = part.responder.send(Err(anyhow::anyhow!(
+                "deadline exceeded before sampling completed"
+            )));
+            continue;
+        }
         // Slice by the admission-time row offset, not cumulatively: parts
         // expired mid-flight leave holes, and surviving requests must still
         // get exactly their own rows.
@@ -468,57 +451,3 @@ fn complete_flight(sh: &Shared, mut flight: Flight) {
     }
 }
 
-/// Whole-trajectory blocking run for solvers without cursor support —
-/// the pre-scheduler sampling behavior, kept bit-identical, plus the
-/// deadline contract: the run cannot be interrupted mid-integration, but
-/// a part whose deadline has fired by delivery time gets an error rather
-/// than late samples (and an all-expired job skips the solve entirely).
-fn run_legacy(sh: &Shared, job: LegacyJob) {
-    let LegacyJob { spec, model, solver, mut x, rows, dim, parts } = job;
-    let n_parts = parts.len();
-    let expire = |part: &FlightPart| {
-        sh.stats.expired.fetch_add(1, Ordering::Relaxed);
-        let _ = part
-            .responder
-            .send(Err(anyhow::anyhow!("deadline exceeded before sampling completed")));
-    };
-    let expired_by =
-        |part: &FlightPart, now: Instant| part.deadline.is_some_and(|d| d <= now);
-    let now = Instant::now();
-    if parts.iter().all(|p| expired_by(p, now)) {
-        for part in &parts {
-            expire(part);
-        }
-        sh.legacy_inflight.fetch_sub(n_parts, Ordering::Relaxed);
-        return;
-    }
-    let t_solve = now;
-    // One rng stream for stochastic solvers across the merged batch,
-    // deterministic in the head request's seed.
-    let mut srng = Rng::new(spec.seed ^ 0xD1F_F051);
-    solver.sample(model.as_ref(), &mut x, rows, &mut srng);
-    let solve_us = t_solve.elapsed().as_micros() as u64;
-    sh.stats.samples.fetch_add(rows as u64, Ordering::Relaxed);
-    sh.stats.model_evals.fetch_add(solver.nfe() as u64, Ordering::Relaxed);
-    let merged = parts.len();
-    let delivery = Instant::now();
-    for part in parts {
-        if expired_by(&part, delivery) {
-            expire(&part);
-            continue;
-        }
-        let res = SampleResult {
-            samples: x[part.row0 * dim..(part.row0 + part.n) * dim].to_vec(),
-            dim,
-            nfe: spec.nfe,
-            merged_with: merged,
-            co_batched: 1,
-            queue_us: t_solve.duration_since(part.enqueued).as_micros() as u64,
-            solve_us,
-        };
-        sh.stats.completed.fetch_add(1, Ordering::Relaxed);
-        sh.stats.record_latency(part.enqueued.elapsed().as_micros() as u64);
-        let _ = part.responder.send(Ok(res));
-    }
-    sh.legacy_inflight.fetch_sub(n_parts, Ordering::Relaxed);
-}

@@ -2,18 +2,24 @@
 //!
 //! Counter glossary (see also the wire-protocol doc in `server`):
 //!   * `requests` / `completed` / `rejected` / `expired` — request lifecycle.
-//!     `rejected` counts backpressure refusals at submit; `expired` counts
-//!     per-request deadlines that fired before completion.
+//!     `rejected` counts refusals at submit (backpressure overload and
+//!     out-of-range nfe); `expired` counts per-request deadlines that fired
+//!     before completion.
 //!   * `batches` / `merged_requests` — admission-time merging: one batch is
 //!     one trajectory group (requests stacked into a shared state matrix).
-//!   * `model_evals` — ε-model calls actually dispatched. For scheduled
-//!     solvers one merged call can serve many trajectory groups at once; for
-//!     the blocking fallback it counts the solver's per-trajectory NFE.
+//!   * `model_evals` — ε-model calls actually dispatched. Every solver is
+//!     scheduled (cursorization is universal), so one merged call can serve
+//!     many trajectory groups at once.
 //!   * `sched_evals` / `sched_eval_requests` — the step-level scheduler's
 //!     merged dispatches and how many client requests each one served.
 //!     Their ratio (`eval_occupancy` in the snapshot) is the headline
 //!     cross-request batching win: occupancy k means each network call was
 //!     amortized over k requests. `max_occupancy` is the observed peak.
+//!   * `plan_cache_hits` / `plan_cache_misses` — shared solver-plan cache
+//!     (`solvers::cache`): a hit means admission reused a previously built
+//!     (grid, coefficients) plan; a miss means the submitting thread built
+//!     one. In the steady state of a serving workload hits dominate and no
+//!     coefficient work happens anywhere near the coordinator mutex.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -31,6 +37,8 @@ pub struct Stats {
     pub sched_evals: AtomicU64,
     pub sched_eval_requests: AtomicU64,
     pub max_occupancy: AtomicU64,
+    pub plan_cache_hits: AtomicU64,
+    pub plan_cache_misses: AtomicU64,
     latencies_us: Mutex<Vec<u64>>, // end-to-end per request
 }
 
@@ -49,6 +57,8 @@ pub struct StatsSnapshot {
     /// Mean requests served per scheduled ε-eval (0 if none ran yet).
     pub eval_occupancy: f64,
     pub max_occupancy: u64,
+    pub plan_cache_hits: u64,
+    pub plan_cache_misses: u64,
     pub p50_us: u64,
     pub p99_us: u64,
     pub mean_us: f64,
@@ -96,6 +106,8 @@ impl Stats {
                 sched_eval_requests as f64 / sched_evals as f64
             },
             max_occupancy: self.max_occupancy.load(Ordering::Relaxed),
+            plan_cache_hits: self.plan_cache_hits.load(Ordering::Relaxed),
+            plan_cache_misses: self.plan_cache_misses.load(Ordering::Relaxed),
             p50_us: pct(0.5),
             p99_us: pct(0.99),
             mean_us: if lat.is_empty() {

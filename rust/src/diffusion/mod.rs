@@ -43,6 +43,16 @@ impl Sde {
         }
     }
 
+    /// Stable identity for hashable cache keys (`solvers::cache::PlanKey`):
+    /// (variant discriminant, parameter bit patterns). `Sde` itself cannot
+    /// be `Eq`/`Hash` because of the f64 parameters.
+    pub fn key_bits(&self) -> (u8, u64, u64) {
+        match self {
+            Sde::Vp(s) => (0, s.beta0.to_bits(), s.beta1.to_bits()),
+            Sde::Ve(s) => (1, s.sigma_min.to_bits(), s.sigma_max.to_bits()),
+        }
+    }
+
     /// log ᾱ(t) (0 for VE).
     pub fn log_abar(&self, t: f64) -> f64 {
         match self {

@@ -17,12 +17,18 @@
 //! trajectory is aborted when no other request shares it. Overload
 //! (backpressure: more than the coordinator's max in-flight requests) is
 //! likewise reported immediately as {"ok":false,"error":"coordinator
-//! overloaded ..."} — clients should back off and retry.
+//! overloaded ..."} — clients should back off and retry. `nfe` is capped
+//! at `coordinator::MAX_REQUEST_NFE` (it sizes the solver-plan build);
+//! larger values are rejected with {"ok":false,"error":"nfe ... out of
+//! range ..."}.
 //!
 //! In the reply, `merged_with` counts requests stacked into the same
 //! trajectory group at admission, and `co_batched` is the peak number of
 //! requests whose ε-evaluations the step-level scheduler dispatched in a
-//! single model call with this one (1 on the blocking fallback path).
+//! single model call with this one. Every solver — deterministic,
+//! adaptive (rk45) and stochastic (em/sddim/addim) alike — runs through
+//! the scheduler, so `co_batched` is always reported and always
+//! >= `merged_with`; there is no blocking fallback path.
 //!
 //! Introspection:
 //!   -> {"cmd":"stats"}            <- {"ok":true,"requests":...}
@@ -32,8 +38,10 @@
 //! `expired`, `samples`), admission merging (`batches`, `merged_requests`),
 //! scheduler effectiveness (`model_evals`, `sched_evals`,
 //! `sched_eval_requests`, `eval_occupancy`, `max_occupancy` — occupancy k
-//! means each scheduled network call served k requests on average), and
-//! latency (`p50_us`, `p99_us`, `mean_us`).
+//! means each scheduled network call served k requests on average), the
+//! shared solver-plan cache (`plan_cache_hits`, `plan_cache_misses` — a hit
+//! means admission reused a cached (grid, coefficients) plan instead of
+//! rebuilding it), and latency (`p50_us`, `p99_us`, `mean_us`).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -92,6 +100,8 @@ fn handle_line(coord: &Coordinator, line: &str) -> String {
                         ("sched_eval_requests", Json::num(s.sched_eval_requests as f64)),
                         ("eval_occupancy", Json::num(s.eval_occupancy)),
                         ("max_occupancy", Json::num(s.max_occupancy as f64)),
+                        ("plan_cache_hits", Json::num(s.plan_cache_hits as f64)),
+                        ("plan_cache_misses", Json::num(s.plan_cache_misses as f64)),
                         ("p50_us", Json::num(s.p50_us as f64)),
                         ("p99_us", Json::num(s.p99_us as f64)),
                         ("mean_us", Json::num(s.mean_us)),

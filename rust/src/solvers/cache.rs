@@ -1,0 +1,234 @@
+//! Shared solver-plan cache: the per-(sde, solver, grid, t0, NFE) work that
+//! is reusable across requests — the time grid and the solver with all of
+//! its precomputed coefficients (tAB/ρAB polynomial integrals, EI
+//! quadrature, DPM λ tables) — built once and shared as an
+//! [`Arc<SolverPlan>`].
+//!
+//! Why this layer exists: the coordinator used to rebuild grid +
+//! coefficients on every admission, *under the coordinator mutex*. The
+//! quadrature behind a tAB-DEIS plan is orders of magnitude more work than
+//! the admission bookkeeping around it, so a burst of requests serialized
+//! on polynomial integrals before a single ε-eval was dispatched. With the
+//! cache, `Coordinator::submit` resolves the plan on the submitting thread
+//! — a map lookup in the steady state, with builds for distinct configs
+//! running concurrently — and admission under the mutex is reduced to
+//! drawing priors and instantiating a cursor.
+//!
+//! Concurrency contract: the internal map lock is held only for
+//! lookup/insert, never during a build. Two threads racing on the same
+//! missing key may both build; the first insert wins and the loser's plan
+//! is dropped (both count as misses). `plan_cache_hits`/`plan_cache_misses`
+//! are surfaced through the coordinator stats.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::diffusion::Sde;
+use crate::solvers::{self, Solver, SolverKind};
+use crate::timegrid::{self, GridKind};
+
+/// A fully precomputed sampling plan: everything about a configuration that
+/// does not depend on the request's batch, seed, or deadline.
+pub struct SolverPlan {
+    pub kind: SolverKind,
+    /// Ascending time grid, grid[0] = t0.
+    pub grid: Vec<f64>,
+    /// Solver with coefficients precomputed for `grid`.
+    pub solver: Box<dyn Solver>,
+}
+
+impl SolverPlan {
+    /// Build from a request-shaped config. Panics exactly where the grid and
+    /// solver constructors assert (bad t0, too few steps for PNDM, ...);
+    /// callers serving untrusted configs must catch that (the coordinator
+    /// does, outside any lock).
+    pub fn build(sde: &Sde, kind: SolverKind, grid: GridKind, t0: f64, nfe: usize) -> SolverPlan {
+        let steps = kind.steps_for_nfe(nfe);
+        let g = timegrid::build(grid, sde, t0, 1.0, steps);
+        let solver = solvers::build(kind, sde, &g);
+        SolverPlan { kind, grid: g, solver }
+    }
+}
+
+/// Cache key: a cheap `Copy` tuple of bit patterns. f64 parameters enter
+/// as bits ([`Sde::key_bits`], [`GridKind::key_bits`], `t0.to_bits()`) —
+/// no allocation or string hashing on the per-submit lookup path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    sde: (u8, u64, u64),
+    solver: SolverKind,
+    grid: (u8, u64),
+    t0_bits: u64,
+    nfe: usize,
+}
+
+impl PlanKey {
+    pub fn of(sde: &Sde, solver: SolverKind, grid: GridKind, t0: f64, nfe: usize) -> PlanKey {
+        PlanKey {
+            sde: sde.key_bits(),
+            solver,
+            grid: grid.key_bits(),
+            t0_bits: t0.to_bits(),
+            nfe,
+        }
+    }
+}
+
+/// Hard cap on retained plans. The key embeds client-controlled bit
+/// patterns (t0, NFE), so without a bound a client iterating t0 one ULP at
+/// a time would grow the map — and coordinator memory — forever. At the
+/// cap an arbitrary existing entry is evicted for each new insert, so a
+/// transient burst of junk configs cannot permanently pin the cache away
+/// from the real serving configs. A serving workload's steady state is a
+/// handful of configs, far below the cap.
+pub const MAX_PLANS: usize = 256;
+
+/// Process-lifetime map from [`PlanKey`] to its shared [`SolverPlan`],
+/// bounded by [`MAX_PLANS`].
+#[derive(Default)]
+pub struct PlanCache {
+    map: Mutex<HashMap<PlanKey, Arc<SolverPlan>>>,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// Resolve the plan for a config, building it outside the map lock on a
+    /// miss. Returns (plan, hit).
+    pub fn get_or_build(
+        &self,
+        sde: &Sde,
+        solver: SolverKind,
+        grid: GridKind,
+        t0: f64,
+        nfe: usize,
+    ) -> (Arc<SolverPlan>, bool) {
+        let key = PlanKey::of(sde, solver, grid, t0, nfe);
+        if let Some(plan) = self.map.lock().unwrap().get(&key) {
+            return (plan.clone(), true);
+        }
+        // Build WITHOUT the lock: quadrature dominates, and misses on
+        // distinct configs must not serialize on each other.
+        let plan = Arc::new(SolverPlan::build(sde, solver, grid, t0, nfe));
+        let mut map = self.map.lock().unwrap();
+        if let Some(existing) = map.get(&key) {
+            // A racing build won the insert; share its plan.
+            return (existing.clone(), false);
+        }
+        if map.len() >= MAX_PLANS {
+            // Evict an arbitrary entry: bounds memory without letting a
+            // one-time flood of configs pin the cache forever.
+            if let Some(victim) = map.keys().next().copied() {
+                map.remove(&victim);
+            }
+        }
+        map.insert(key, plan.clone());
+        (plan, false)
+    }
+
+    /// Number of distinct configs cached.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeat_config_hits_and_shares_the_plan() {
+        let cache = PlanCache::new();
+        let sde = Sde::vp();
+        let (a, hit_a) =
+            cache.get_or_build(&sde, SolverKind::Tab(3), GridKind::Quadratic, 1e-3, 10);
+        assert!(!hit_a, "first resolution must be a miss");
+        let (b, hit_b) =
+            cache.get_or_build(&sde, SolverKind::Tab(3), GridKind::Quadratic, 1e-3, 10);
+        assert!(hit_b, "second resolution of the same config must hit");
+        assert!(Arc::ptr_eq(&a, &b), "hit must return the SAME shared plan");
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_configs_do_not_alias() {
+        let cache = PlanCache::new();
+        let sde = Sde::vp();
+        let base = (SolverKind::Tab(2), GridKind::Quadratic, 1e-3, 10);
+        let (p0, _) = cache.get_or_build(&sde, base.0, base.1, base.2, base.3);
+        // Vary every key dimension; each must be its own cache entry.
+        let variants: Vec<(Arc<SolverPlan>, bool)> = vec![
+            cache.get_or_build(&sde, SolverKind::Tab(3), base.1, base.2, base.3),
+            cache.get_or_build(&sde, base.0, GridKind::Uniform, base.2, base.3),
+            cache.get_or_build(&sde, base.0, base.1, 1e-4, base.3),
+            cache.get_or_build(&sde, base.0, base.1, base.2, 12),
+            cache.get_or_build(&Sde::ve(), base.0, GridKind::LogRho, 1e-3, base.3),
+        ];
+        for (p, hit) in &variants {
+            assert!(!*hit, "distinct config must miss");
+            assert!(!Arc::ptr_eq(&p0, p), "distinct configs must not alias");
+        }
+        assert_eq!(cache.len(), 6);
+    }
+
+    #[test]
+    fn plan_grid_matches_direct_build() {
+        let cache = PlanCache::new();
+        let sde = Sde::vp();
+        let (plan, _) = cache.get_or_build(&sde, SolverKind::Dpm(2), GridKind::LogRho, 1e-3, 10);
+        let steps = SolverKind::Dpm(2).steps_for_nfe(10);
+        let grid = timegrid::build(GridKind::LogRho, &sde, 1e-3, 1.0, steps);
+        assert_eq!(plan.grid, grid);
+        assert_eq!(plan.kind, SolverKind::Dpm(2));
+        assert_eq!(plan.solver.nfe(), solvers::build(SolverKind::Dpm(2), &sde, &grid).nfe());
+    }
+
+    #[test]
+    fn cache_size_is_bounded_and_not_pinned_by_floods() {
+        let cache = PlanCache::new();
+        let sde = Sde::vp();
+        // Euler plans are cheap to build (no quadrature), so flooding the
+        // cache with distinct configs is fast.
+        for nfe in 1..=MAX_PLANS + 8 {
+            let (plan, hit) =
+                cache.get_or_build(&sde, SolverKind::Euler, GridKind::Uniform, 1e-3, nfe);
+            assert!(!hit);
+            assert_eq!(plan.grid.len(), nfe + 1, "over-cap plans must still build correctly");
+        }
+        assert!(cache.len() <= MAX_PLANS, "cache grew past its bound: {}", cache.len());
+        // The flood must not pin the cache: a config arriving after it is
+        // still cacheable (evict-on-insert, not insert-refusal).
+        let fresh =
+            |c: &PlanCache| c.get_or_build(&sde, SolverKind::Euler, GridKind::Quadratic, 1e-3, 7);
+        let (_, hit) = fresh(&cache);
+        assert!(!hit, "first sighting of the post-flood config is a miss");
+        let (_, hit) = fresh(&cache);
+        assert!(hit, "post-flood config must be retained on its next resolution");
+        assert!(cache.len() <= MAX_PLANS);
+    }
+
+    #[test]
+    fn key_equality_follows_config_equality() {
+        let sde = Sde::vp();
+        let k = |t0: f64, nfe: usize| {
+            PlanKey::of(&sde, SolverKind::Tab(1), GridKind::LogRho, t0, nfe)
+        };
+        assert_eq!(k(1e-3, 10), k(1e-3, 10));
+        assert_ne!(k(1e-3, 10), k(1e-4, 10));
+        assert_ne!(k(1e-3, 10), k(1e-3, 11));
+        assert_ne!(
+            PlanKey::of(&sde, SolverKind::Tab(1), GridKind::PowerT(2.0), 1e-3, 10),
+            PlanKey::of(&sde, SolverKind::Tab(1), GridKind::PowerT(3.0), 1e-3, 10),
+        );
+        assert_ne!(
+            PlanKey::of(&Sde::vp(), SolverKind::Tab(1), GridKind::LogRho, 1e-3, 10),
+            PlanKey::of(&Sde::ve(), SolverKind::Tab(1), GridKind::LogRho, 1e-3, 10),
+        );
+    }
+}

@@ -193,18 +193,18 @@ impl Solver for DpmSolver {
         (self.grid.len() - 1) * self.order
     }
 
-    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, _rng: &mut Rng) {
-        sample_via_cursor(self, model, x, b);
+    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, rng: &mut Rng) {
+        sample_via_cursor(self, model, x, b, rng);
     }
 
-    fn cursor(&self, x: &[f64], b: usize) -> Option<Box<dyn StepCursor>> {
+    fn cursor(&self, x: &[f64], b: usize, _rng: &mut Rng) -> Box<dyn StepCursor> {
         // Stage buffers only exist for the multi-stage orders.
         let (u, e1, e2) = if self.order >= 2 {
             (vec![0.0; x.len()], vec![0.0; x.len()], vec![0.0; x.len()])
         } else {
             (Vec::new(), Vec::new(), Vec::new())
         };
-        Some(Box::new(DpmCursor {
+        Box::new(DpmCursor {
             sde: self.sde,
             grid: self.grid.clone(),
             order: self.order,
@@ -216,7 +216,7 @@ impl Solver for DpmSolver {
             i: self.grid.len() - 1,
             stage: 0,
             b,
-        }))
+        })
     }
 }
 

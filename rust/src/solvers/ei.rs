@@ -9,13 +9,16 @@
 use crate::diffusion::Sde;
 use crate::quad::Quadrature;
 use crate::score::EpsModel;
-use crate::solvers::{deis_combine, fill_t, Solver};
+use crate::solvers::plan::{sample_via_cursor, StepCursor};
+use crate::solvers::{deis_combine, Solver};
 use crate::util::rng::Rng;
 
 pub struct EiScore {
     grid: Vec<f64>,
     /// Per step (i = N..1): (psi, coef) with coef already divided by σ(t_i).
-    plan: Vec<(f64, f64)>,
+    /// Arc-shared with cursors so starting a trajectory costs O(1)
+    /// allocations regardless of step count (same discipline as TabDeis).
+    plan: std::sync::Arc<Vec<(f64, f64)>>,
 }
 
 impl EiScore {
@@ -31,7 +34,48 @@ impl EiScore {
                 q.integrate_panels(|tau| 0.5 * sde.psi(t_prev, tau) * sde.g2(tau), t, t_prev, 8);
             plan.push((psi, integral / sde.sigma(t)));
         }
-        EiScore { grid: grid.to_vec(), plan }
+        EiScore { grid: grid.to_vec(), plan: std::sync::Arc::new(plan) }
+    }
+}
+
+/// Resumable EI-score step machine — one eval per step, precomputed
+/// (psi, coef) combine. Single copy of the Eq. 8 update for both the solo
+/// and scheduled paths.
+pub struct EiCursor {
+    grid: Vec<f64>,
+    plan: std::sync::Arc<Vec<(f64, f64)>>,
+    x: Vec<f64>,
+    eps: Vec<f64>,
+    step: usize,
+    n: usize,
+    b: usize,
+}
+
+impl StepCursor for EiCursor {
+    fn pending_t(&self) -> Option<f64> {
+        if self.step < self.n {
+            Some(self.grid[self.n - self.step])
+        } else {
+            None
+        }
+    }
+
+    fn io(&mut self) -> (&[f64], &mut [f64]) {
+        (&self.x, &mut self.eps)
+    }
+
+    fn advance(&mut self) {
+        let (psi, c) = self.plan[self.step];
+        deis_combine(&mut self.x, psi, &[c], &[&self.eps]);
+        self.step += 1;
+    }
+
+    fn batch(&self) -> usize {
+        self.b
+    }
+
+    fn take_samples(&mut self) -> Vec<f64> {
+        std::mem::take(&mut self.x)
     }
 }
 
@@ -44,16 +88,20 @@ impl Solver for EiScore {
         self.grid.len() - 1
     }
 
-    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, _rng: &mut Rng) {
-        let d = model.dim();
-        let mut tb = Vec::new();
-        let mut eps = vec![0.0; b * d];
-        let n = self.grid.len() - 1;
-        for (step, i) in (1..=n).rev().enumerate() {
-            model.eval(x, fill_t(&mut tb, self.grid[i], b), b, &mut eps);
-            let (psi, c) = self.plan[step];
-            deis_combine(x, psi, &[c], &[&eps]);
-        }
+    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, rng: &mut Rng) {
+        sample_via_cursor(self, model, x, b, rng);
+    }
+
+    fn cursor(&self, x: &[f64], b: usize, _rng: &mut Rng) -> Box<dyn StepCursor> {
+        Box::new(EiCursor {
+            grid: self.grid.clone(),
+            plan: self.plan.clone(),
+            x: x.to_vec(),
+            eps: vec![0.0; x.len()],
+            step: 0,
+            n: self.grid.len() - 1,
+            b,
+        })
     }
 }
 
@@ -70,7 +118,7 @@ mod tests {
         let sde = Sde::vp();
         let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, 10);
         let ei = EiScore::new(&sde, &grid);
-        for &(psi, c) in &ei.plan {
+        for &(psi, c) in ei.plan.iter() {
             assert!(psi >= 1.0, "vp psi toward t=0 grows: {psi}");
             assert!(c < 0.0, "coef should remove noise: {c}");
         }

@@ -102,12 +102,12 @@ impl Solver for EulerEps {
         self.grid.len() - 1
     }
 
-    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, _rng: &mut Rng) {
-        sample_via_cursor(self, model, x, b);
+    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, rng: &mut Rng) {
+        sample_via_cursor(self, model, x, b, rng);
     }
 
-    fn cursor(&self, x: &[f64], b: usize) -> Option<Box<dyn StepCursor>> {
-        Some(Box::new(EulerCursor::new(&self.sde, &self.grid, false, x, b)))
+    fn cursor(&self, x: &[f64], b: usize, _rng: &mut Rng) -> Box<dyn StepCursor> {
+        Box::new(EulerCursor::new(&self.sde, &self.grid, false, x, b))
     }
 }
 
@@ -131,12 +131,12 @@ impl Solver for EulerScore {
         self.grid.len() - 1
     }
 
-    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, _rng: &mut Rng) {
-        sample_via_cursor(self, model, x, b);
+    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, rng: &mut Rng) {
+        sample_via_cursor(self, model, x, b, rng);
     }
 
-    fn cursor(&self, x: &[f64], b: usize) -> Option<Box<dyn StepCursor>> {
-        Some(Box::new(EulerCursor::new(&self.sde, &self.grid, true, x, b)))
+    fn cursor(&self, x: &[f64], b: usize, _rng: &mut Rng) -> Box<dyn StepCursor> {
+        Box::new(EulerCursor::new(&self.sde, &self.grid, true, x, b))
     }
 }
 

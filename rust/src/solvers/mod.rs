@@ -19,6 +19,7 @@
 //!   Analytic-DDIM (Tab. 12)    -> [`sde_samplers::ADdim`]
 //!   Euler-Maruyama / sDDIM     -> [`sde_samplers::EulerMaruyama`] / [`sde_samplers::StochDdim`]
 
+pub mod cache;
 pub mod dpm;
 pub mod ei;
 pub mod euler;
@@ -30,6 +31,7 @@ pub mod rk45;
 pub mod sde_samplers;
 pub mod tab;
 
+pub use cache::{PlanCache, SolverPlan};
 pub use plan::{drive, StepCursor};
 
 use crate::diffusion::Sde;
@@ -48,14 +50,11 @@ pub trait Solver: Send + Sync {
     fn nfe(&self) -> usize;
 
     /// Begin a resumable integration from the prior draw `x` ([b * dim]).
-    /// `None` means this solver only supports blocking `sample` (adaptive
-    /// RK45, the fixed-stage ρRK schemes, the s-param EI baseline, and the
-    /// stochastic samplers); the coordinator's scheduler then falls back to
-    /// a whole-trajectory run instead of step-level merging.
-    fn cursor(&self, x: &[f64], b: usize) -> Option<Box<dyn StepCursor>> {
-        let _ = (x, b);
-        None
-    }
+    /// Every solver is a step machine — there is no blocking whole-trajectory
+    /// path. Stochastic solvers clone `rng` into the cursor so scheduled and
+    /// solo runs consume an identical noise stream; deterministic solvers
+    /// ignore it.
+    fn cursor(&self, x: &[f64], b: usize, rng: &mut Rng) -> Box<dyn StepCursor>;
 }
 
 /// Solver selector (string names are the CLI / wire format).

@@ -10,27 +10,36 @@
 //! evaluation is the dominant cost at low NFE (paper §3), so amortizing it
 //! across concurrent clients is the whole serving win.
 //!
-//! Two invariants make scheduled integration *bit-identical* to solo
+//! Three invariants make scheduled integration *bit-identical* to solo
 //! integration:
 //!
-//! 1. `Solver::sample` for every cursor-capable solver is implemented by
-//!    driving its own cursor ([`drive`]) — there is exactly one copy of the
-//!    step math, so the two paths cannot drift.
+//! 1. `Solver::sample` for every solver is implemented by driving its own
+//!    cursor ([`drive`]) — there is exactly one copy of the step math, so
+//!    the two paths cannot drift.
 //! 2. Every eval a cursor yields broadcasts a single scalar t over its rows
 //!    (this is what `fill_t` always did), so a merged batch is uniform-t and
 //!    takes the native engine's shared-embedding fast path; and every model
 //!    backend computes rows independently, so a row's eps does not depend on
 //!    which other rows share the batch (`rust/tests/scheduler.rs` pins the
 //!    resulting sample-level parity).
+//! 3. Stochastic cursors own their `Rng` (cloned from the stream handed to
+//!    [`Solver::cursor`]) and draw noise only inside `advance`, so the noise
+//!    a trajectory receives is independent of how its evals were co-batched.
 //!
-//! Cursor-capable solvers: tAB-DEIS (incl. DDIM), ρAB-DEIS, DPM-Solver-1/2/3,
-//! PNDM/iPNDM, Euler (both params). The adaptive RK45, the fixed-stage ρRK
-//! schemes, the s-param EI baseline, and the stochastic samplers keep their
-//! blocking `sample` only (`Solver::cursor` returns `None`) and are run
-//! whole-trajectory by the scheduler's fallback path.
+//! Cursorization is universal: tAB-DEIS (incl. DDIM), ρAB-DEIS,
+//! DPM-Solver-1/2/3, PNDM/iPNDM, Euler (both params), the s-param EI
+//! baseline, the fixed-stage ρRK schemes, the adaptive RK45 (its embedded
+//! error estimate and step-size controller run between yields), and the
+//! stochastic samplers (Euler–Maruyama, sDDIM, A-DDIM). There is no
+//! blocking whole-trajectory fallback anywhere in the serving stack.
+//!
+//! The heavy per-(sde, grid, solver) coefficient precomputation these
+//! cursors consume is shared across requests through
+//! [`solvers::cache::PlanCache`](crate::solvers::cache::PlanCache).
 
 use crate::score::EpsModel;
 use crate::solvers::{fill_t, Solver};
+use crate::util::rng::Rng;
 
 /// A solver trajectory paused at an ε-evaluation boundary.
 ///
@@ -59,6 +68,15 @@ pub trait StepCursor: Send {
     /// Final samples `[batch * dim]`; valid once `pending_t()` is `None`.
     /// Leaves the cursor drained.
     fn take_samples(&mut self) -> Vec<f64>;
+
+    /// Hand back the cursor's owned noise stream, if it has one (stochastic
+    /// cursors only), leaving the cursor drained. [`sample_via_cursor`] uses
+    /// this to re-sync the caller's `&mut Rng` after a solo run, preserving
+    /// the pre-cursor contract that consecutive `sample` calls sharing one
+    /// `Rng` draw fresh noise each time.
+    fn take_rng(&mut self) -> Option<Rng> {
+        None
+    }
 }
 
 /// Drive a cursor to completion against one model — the solo (unscheduled)
@@ -75,15 +93,23 @@ pub fn drive(cursor: &mut dyn StepCursor, model: &dyn EpsModel) {
     }
 }
 
-/// Shared `Solver::sample` implementation for cursor-capable solvers.
+/// Shared `Solver::sample` implementation: every solver routes through its
+/// cursor. `rng` feeds the cursor's noise stream (stochastic solvers clone
+/// it; deterministic solvers ignore it); after the run the caller's `rng`
+/// is re-synced from the cursor, so stochastic `sample` consumes the stream
+/// exactly as the pre-cursor blocking loops did.
 pub(crate) fn sample_via_cursor(
     solver: &dyn Solver,
     model: &dyn EpsModel,
     x: &mut [f64],
     b: usize,
+    rng: &mut Rng,
 ) {
-    let mut cursor = solver.cursor(x, b).expect("solver advertises cursor support");
+    let mut cursor = solver.cursor(x, b, rng);
     drive(cursor.as_mut(), model);
+    if let Some(consumed) = cursor.take_rng() {
+        *rng = consumed;
+    }
     x.copy_from_slice(&cursor.take_samples());
 }
 
@@ -101,38 +127,75 @@ mod tests {
         GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp())
     }
 
+    /// Every solver kind, deterministic and stochastic alike.
+    fn all_kinds() -> Vec<SolverKind> {
+        use SolverKind::*;
+        vec![
+            Euler,
+            EulerScore,
+            EiScore,
+            Tab(0),
+            Tab(3),
+            RhoAb(2),
+            RhoMidpoint,
+            RhoHeun,
+            RhoKutta3,
+            RhoRk4,
+            Rk45,
+            Pndm,
+            Ipndm(3),
+            Dpm(1),
+            Dpm(2),
+            Dpm(3),
+            EulerMaruyama,
+            StochDdim,
+            ADdim,
+        ]
+    }
+
     /// Manually driving a cursor must reproduce `Solver::sample` exactly,
-    /// for every cursor-capable solver kind.
+    /// for EVERY solver kind — including the stochastic samplers, whose
+    /// cursors clone the seeded `Rng` and must replay the same noise stream.
     #[test]
     fn cursor_drive_matches_sample_bit_exact() {
         let sde = Sde::vp();
         let m = model();
         let b = 6;
-        let kinds = [
-            SolverKind::Euler,
-            SolverKind::EulerScore,
-            SolverKind::Tab(0),
-            SolverKind::Tab(3),
-            SolverKind::RhoAb(2),
-            SolverKind::Dpm(1),
-            SolverKind::Dpm(2),
-            SolverKind::Dpm(3),
-            SolverKind::Ipndm(3),
-            SolverKind::Pndm,
-        ];
-        for kind in kinds {
+        for kind in all_kinds() {
             let steps = kind.steps_for_nfe(16).max(5);
             let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, steps);
             let solver = solvers::build(kind, &sde, &grid);
             let x0: Vec<f64> = Rng::new(17).normal_vec(b * 2);
 
             let mut xa = x0.clone();
-            solver.sample(&m, &mut xa, b, &mut Rng::new(0));
+            solver.sample(&m, &mut xa, b, &mut Rng::new(9));
 
-            let mut cursor = solver.cursor(&x0, b).expect("cursor-capable");
+            let mut cursor = solver.cursor(&x0, b, &mut Rng::new(9));
             drive(cursor.as_mut(), &m);
             let xb = cursor.take_samples();
             assert_eq!(xa, xb, "{} cursor vs sample", solver.name());
+        }
+    }
+
+    /// Cursorization is universal: every kind yields a live cursor that
+    /// integrates to finite samples of the right shape.
+    #[test]
+    fn every_solver_kind_yields_a_cursor() {
+        let sde = Sde::vp();
+        let m = model();
+        let b = 4;
+        for kind in all_kinds() {
+            let steps = kind.steps_for_nfe(12).max(5);
+            let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, steps);
+            let solver = solvers::build(kind, &sde, &grid);
+            let x0: Vec<f64> = Rng::new(23).normal_vec(b * 2);
+            let mut cursor = solver.cursor(&x0, b, &mut Rng::new(1));
+            assert!(cursor.pending_t().is_some(), "{} starts pending", solver.name());
+            assert_eq!(cursor.batch(), b);
+            drive(cursor.as_mut(), &m);
+            let out = cursor.take_samples();
+            assert_eq!(out.len(), x0.len(), "{}", solver.name());
+            assert!(out.iter().all(|v| v.is_finite()), "{} diverged", solver.name());
         }
     }
 
@@ -142,33 +205,23 @@ mod tests {
         let sde = Sde::vp();
         let m = model();
         let counted = Counting::new(&m);
-        for kind in [SolverKind::Tab(3), SolverKind::Dpm(3), SolverKind::Pndm] {
+        for kind in [
+            SolverKind::Tab(3),
+            SolverKind::Dpm(3),
+            SolverKind::Pndm,
+            SolverKind::RhoHeun,
+            SolverKind::EiScore,
+            SolverKind::EulerMaruyama,
+            SolverKind::ADdim,
+        ] {
             let steps = kind.steps_for_nfe(20).max(5);
             let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, steps);
             let solver = solvers::build(kind, &sde, &grid);
             let x0: Vec<f64> = Rng::new(3).normal_vec(8);
             counted.reset();
-            let mut cursor = solver.cursor(&x0, 4).expect("cursor-capable");
+            let mut cursor = solver.cursor(&x0, 4, &mut Rng::new(5));
             drive(cursor.as_mut(), &counted);
             assert_eq!(counted.nfe(), solver.nfe(), "{}", solver.name());
-        }
-    }
-
-    /// Non-resumable solvers advertise it by returning None.
-    #[test]
-    fn blocking_solvers_have_no_cursor() {
-        let sde = Sde::vp();
-        let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, 8);
-        for kind in [
-            SolverKind::EiScore,
-            SolverKind::RhoHeun,
-            SolverKind::Rk45,
-            SolverKind::EulerMaruyama,
-            SolverKind::ADdim,
-        ] {
-            let solver = solvers::build(kind, &sde, &grid);
-            let x0 = vec![0.0; 8];
-            assert!(solver.cursor(&x0, 4).is_none(), "{}", solver.name());
         }
     }
 }

@@ -117,14 +117,14 @@ impl Solver for Ipndm {
         self.grid.len() - 1
     }
 
-    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, _rng: &mut Rng) {
-        sample_via_cursor(self, model, x, b);
+    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, rng: &mut Rng) {
+        sample_via_cursor(self, model, x, b, rng);
     }
 
-    fn cursor(&self, x: &[f64], b: usize) -> Option<Box<dyn StepCursor>> {
+    fn cursor(&self, x: &[f64], b: usize, _rng: &mut Rng) -> Box<dyn StepCursor> {
         let mut buf = EpsBuffer::new(self.order + 1);
         let pending = buf.checkout(x.len());
-        Some(Box::new(IpndmCursor {
+        Box::new(IpndmCursor {
             sde: self.sde,
             grid: self.grid.clone(),
             order: self.order,
@@ -135,7 +135,7 @@ impl Solver for Ipndm {
             step: 0,
             n: self.grid.len() - 1,
             b,
-        }))
+        })
     }
 }
 
@@ -281,14 +281,14 @@ impl Solver for Pndm {
         3 * 4 + (n - 3)
     }
 
-    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, _rng: &mut Rng) {
-        sample_via_cursor(self, model, x, b);
+    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, rng: &mut Rng) {
+        sample_via_cursor(self, model, x, b, rng);
     }
 
-    fn cursor(&self, x: &[f64], b: usize) -> Option<Box<dyn StepCursor>> {
+    fn cursor(&self, x: &[f64], b: usize, _rng: &mut Rng) -> Box<dyn StepCursor> {
         let mut buf = EpsBuffer::new(4);
         let pending = buf.checkout(x.len());
-        Some(Box::new(PndmCursor {
+        Box::new(PndmCursor {
             sde: self.sde,
             grid: self.grid.clone(),
             x: x.to_vec(),
@@ -302,7 +302,7 @@ impl Solver for Pndm {
             stage: 0,
             warm: true,
             b,
-        }))
+        })
     }
 }
 

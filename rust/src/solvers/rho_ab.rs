@@ -133,11 +133,11 @@ impl Solver for RhoAbDeis {
         self.grid.len() - 1
     }
 
-    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, _rng: &mut Rng) {
-        sample_via_cursor(self, model, x, b);
+    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, rng: &mut Rng) {
+        sample_via_cursor(self, model, x, b, rng);
     }
 
-    fn cursor(&self, x: &[f64], b: usize) -> Option<Box<dyn StepCursor>> {
+    fn cursor(&self, x: &[f64], b: usize, _rng: &mut Rng) -> Box<dyn StepCursor> {
         let n = self.grid.len() - 1;
         let s = self.sde.sqrt_abar(self.grid[n]);
         let y: Vec<f64> = x.iter().map(|&v| v / s).collect();
@@ -157,7 +157,7 @@ impl Solver for RhoAbDeis {
             b,
         };
         cur.refresh_xcur();
-        Some(Box::new(cur))
+        Box::new(cur)
     }
 }
 

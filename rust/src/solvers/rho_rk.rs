@@ -5,7 +5,8 @@
 
 use crate::diffusion::Sde;
 use crate::score::EpsModel;
-use crate::solvers::{fill_t, Solver};
+use crate::solvers::plan::{sample_via_cursor, StepCursor};
+use crate::solvers::Solver;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -73,24 +74,138 @@ impl RhoRk {
         let rho = grid.iter().map(|&t| sde.rho(t)).collect();
         RhoRk { sde: *sde, grid: grid.to_vec(), rho, scheme }
     }
+}
 
-    /// Evaluate ε̂(y, ρ) = ε_θ(√ᾱ(t(ρ)) y, t(ρ)).
-    fn eval_hat(
-        &self,
-        model: &dyn EpsModel,
-        y: &[f64],
-        rho: f64,
-        b: usize,
-        tb: &mut Vec<f64>,
-        xbuf: &mut [f64],
-        out: &mut [f64],
-    ) {
-        let t = self.sde.t_of_rho(rho).clamp(self.grid[0], self.grid[self.grid.len() - 1]);
-        let s = self.sde.sqrt_abar(t);
-        for (xv, &yv) in xbuf.iter_mut().zip(y) {
-            *xv = s * yv;
+/// Resumable ρRK step machine: integrates dŷ/dρ = ε̂(ŷ, ρ) stage by stage.
+/// Each yield is the eval for one RK stage at x̂ = √ᾱ(t(ρ_s))·ŷ_stage; the
+/// stage combination y += h·Σ b_s k_s runs in `advance` after the last
+/// stage, so solo and scheduled runs share one copy of the tableau math.
+pub struct RhoRkCursor {
+    sde: Sde,
+    grid: Vec<f64>,
+    rho: Vec<f64>,
+    c: Vec<f64>,
+    a: Vec<Vec<f64>>,
+    w: Vec<f64>,
+    stages: usize,
+    /// Transformed state ŷ = x / √ᾱ.
+    y: Vec<f64>,
+    /// Stage state ŷ + h·Σ_j a[s][j]·k_j.
+    ybuf: Vec<f64>,
+    /// Eval input x̂ = √ᾱ(t_eval)·ybuf for the pending stage.
+    xbuf: Vec<f64>,
+    /// Stage derivatives; the pending eval writes into `ks[stage]`.
+    ks: Vec<Vec<f64>>,
+    /// Integrating grid[i] -> grid[i-1]; done at i == 0.
+    i: usize,
+    stage: usize,
+    /// Time of the pending eval (cached so `pending_t` stays pure).
+    t_eval: f64,
+    b: usize,
+}
+
+impl RhoRkCursor {
+    fn new(solver: &RhoRk, x: &[f64], b: usize) -> RhoRkCursor {
+        let n = solver.grid.len() - 1;
+        let (c, a, w) = solver.scheme.tableau();
+        let stages = solver.scheme.stages();
+        let s_start = solver.sde.sqrt_abar(solver.grid[n]);
+        let y: Vec<f64> = x.iter().map(|&v| v / s_start).collect();
+        let mut cur = RhoRkCursor {
+            sde: solver.sde,
+            grid: solver.grid.clone(),
+            rho: solver.rho.clone(),
+            c,
+            a,
+            w,
+            stages,
+            y,
+            ybuf: vec![0.0; x.len()],
+            xbuf: vec![0.0; x.len()],
+            ks: (0..stages).map(|_| vec![0.0; x.len()]).collect(),
+            i: n,
+            stage: 0,
+            t_eval: 0.0,
+            b,
+        };
+        cur.prep_stage();
+        cur
+    }
+
+    /// ρ-step of the current grid interval (negative: rho shrinks).
+    fn h(&self) -> f64 {
+        self.rho[self.i - 1] - self.rho[self.i]
+    }
+
+    /// Build the pending stage's input: ybuf = y + h·Σ_j a[s][j]·k_j, then
+    /// x̂ = √ᾱ(t(ρ_s))·ybuf at the stage node ρ_s = ρ_i + c[s]·h.
+    fn prep_stage(&mut self) {
+        let h = self.h();
+        let s_idx = self.stage;
+        self.ybuf.copy_from_slice(&self.y);
+        for (j, &aj) in self.a[s_idx].iter().enumerate() {
+            if aj != 0.0 {
+                for (yv, kv) in self.ybuf.iter_mut().zip(&self.ks[j]) {
+                    *yv += h * aj * kv;
+                }
+            }
         }
-        model.eval(xbuf, fill_t(tb, t, b), b, out);
+        let rho_s = self.rho[self.i] + self.c[s_idx] * h;
+        let t = self.sde.t_of_rho(rho_s).clamp(self.grid[0], self.grid[self.grid.len() - 1]);
+        self.t_eval = t;
+        let sc = self.sde.sqrt_abar(t);
+        for (xv, &yv) in self.xbuf.iter_mut().zip(&self.ybuf) {
+            *xv = sc * yv;
+        }
+    }
+}
+
+impl StepCursor for RhoRkCursor {
+    fn pending_t(&self) -> Option<f64> {
+        if self.i >= 1 {
+            Some(self.t_eval)
+        } else {
+            None
+        }
+    }
+
+    fn io(&mut self) -> (&[f64], &mut [f64]) {
+        let stage = self.stage;
+        (&self.xbuf, &mut self.ks[stage])
+    }
+
+    fn advance(&mut self) {
+        self.stage += 1;
+        if self.stage < self.stages {
+            self.prep_stage();
+            return;
+        }
+        let h = self.h();
+        for (s_idx, ws) in self.w.iter().enumerate() {
+            if *ws != 0.0 {
+                for (yv, kv) in self.y.iter_mut().zip(&self.ks[s_idx]) {
+                    *yv += h * ws * kv;
+                }
+            }
+        }
+        self.i -= 1;
+        self.stage = 0;
+        if self.i >= 1 {
+            self.prep_stage();
+        }
+    }
+
+    fn batch(&self) -> usize {
+        self.b
+    }
+
+    fn take_samples(&mut self) -> Vec<f64> {
+        let s0 = self.sde.sqrt_abar(self.grid[0]);
+        let mut x = std::mem::take(&mut self.y);
+        for v in x.iter_mut() {
+            *v *= s0;
+        }
+        x
     }
 }
 
@@ -103,48 +218,12 @@ impl Solver for RhoRk {
         (self.grid.len() - 1) * self.scheme.stages()
     }
 
-    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, _rng: &mut Rng) {
-        let n = self.grid.len() - 1;
-        let d = model.dim();
-        let (c, a, w) = self.scheme.tableau();
-        let stages = self.scheme.stages();
-        let mut tb = Vec::new();
-        let mut xbuf = vec![0.0; b * d];
-        let mut ybuf = vec![0.0; b * d];
-        let mut ks: Vec<Vec<f64>> = (0..stages).map(|_| vec![0.0; b * d]).collect();
+    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, rng: &mut Rng) {
+        sample_via_cursor(self, model, x, b, rng);
+    }
 
-        let s_start = self.sde.sqrt_abar(self.grid[n]);
-        let mut y: Vec<f64> = x.iter().map(|&v| v / s_start).collect();
-
-        for i in (1..=n).rev() {
-            let h = self.rho[i - 1] - self.rho[i]; // negative (rho shrinks)
-            for s_idx in 0..stages {
-                // y_stage = y + h * sum_j a[s][j] k_j
-                ybuf.copy_from_slice(&y);
-                for (j, &aj) in a[s_idx].iter().enumerate() {
-                    if aj != 0.0 {
-                        for (yv, kv) in ybuf.iter_mut().zip(&ks[j]) {
-                            *yv += h * aj * kv;
-                        }
-                    }
-                }
-                let rho_s = self.rho[i] + c[s_idx] * h;
-                let (head, tail) = ks.split_at_mut(s_idx);
-                let _ = head;
-                self.eval_hat(model, &ybuf, rho_s, b, &mut tb, &mut xbuf, &mut tail[0]);
-            }
-            for (s_idx, ws) in w.iter().enumerate() {
-                if *ws != 0.0 {
-                    for (yv, kv) in y.iter_mut().zip(&ks[s_idx]) {
-                        *yv += h * ws * kv;
-                    }
-                }
-            }
-        }
-        let s0 = self.sde.sqrt_abar(self.grid[0]);
-        for (xv, &yv) in x.iter_mut().zip(&y) {
-            *xv = s0 * yv;
-        }
+    fn cursor(&self, x: &[f64], b: usize, _rng: &mut Rng) -> Box<dyn StepCursor> {
+        Box::new(RhoRkCursor::new(self, x, b))
     }
 }
 

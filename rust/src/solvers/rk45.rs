@@ -7,7 +7,8 @@
 
 use crate::diffusion::Sde;
 use crate::score::EpsModel;
-use crate::solvers::{fill_t, Solver};
+use crate::solvers::plan::{sample_via_cursor, StepCursor};
+use crate::solvers::Solver;
 use crate::util::rng::Rng;
 
 // Dormand–Prince coefficients.
@@ -44,23 +45,174 @@ impl Rk45 {
     pub fn new(sde: &Sde, grid: &[f64], rtol: f64, atol: f64) -> Self {
         Rk45 { sde: *sde, t0: grid[0], t_max: grid[grid.len() - 1], rtol, atol }
     }
+}
 
-    /// dx/dt of the eps-form PF ODE (Eq. 10).
-    fn deriv(
-        &self,
-        model: &dyn EpsModel,
-        x: &[f64],
-        t: f64,
-        b: usize,
-        tb: &mut Vec<f64>,
-        out: &mut [f64],
-    ) {
-        model.eval(x, fill_t(tb, t, b), b, out);
-        let f = self.sde.f_scalar(t);
-        let w = 0.5 * self.sde.g2(t) / self.sde.sigma(t);
-        for (o, &xv) in out.iter_mut().zip(x) {
+/// Smallest |h| the controller may shrink to (guards against stalling).
+const H_MIN: f64 = 1e-10;
+
+/// Resumable Dormand–Prince step machine. The cursor yields one raw ε-eval
+/// per RK stage; `advance` applies the PF-ODE transform (Eq. 10:
+/// k = f(t)·x_stage + w(t)·eps), and after the 7th stage of an attempt it
+/// computes the embedded 5(4) error estimate and runs the step-size
+/// controller — all between yields, so the adaptive step sequence (accepts,
+/// rejects, h trajectory) is exactly the one the former blocking loop took.
+pub struct Rk45Cursor {
+    sde: Sde,
+    t0: f64,
+    rtol: f64,
+    atol: f64,
+    /// Accepted state.
+    x: Vec<f64>,
+    /// Stage input for the pending eval (stages 1..=6).
+    xs: Vec<f64>,
+    /// 5th-order candidate of the current attempt.
+    x5: Vec<f64>,
+    /// Stage derivatives; the pending eval writes raw eps into `k[stage]`.
+    k: Vec<Vec<f64>>,
+    t: f64,
+    h: f64,
+    /// Time of the pending eval (cached so `pending_t` stays pure).
+    t_eval: f64,
+    /// 0 = the initial FSAL eval on `x`; 1..=6 = stage of the current attempt.
+    stage: usize,
+    done: bool,
+    b: usize,
+}
+
+impl Rk45Cursor {
+    fn new(solver: &Rk45, x: &[f64], b: usize) -> Rk45Cursor {
+        Rk45Cursor {
+            sde: solver.sde,
+            t0: solver.t0,
+            rtol: solver.rtol,
+            atol: solver.atol,
+            x: x.to_vec(),
+            xs: vec![0.0; x.len()],
+            x5: vec![0.0; x.len()],
+            k: (0..7).map(|_| vec![0.0; x.len()]).collect(),
+            t: solver.t_max,
+            h: -(solver.t_max - solver.t0) * 0.02, // initial step, backward
+            t_eval: solver.t_max,
+            stage: 0,
+            done: false,
+            b,
+        }
+    }
+
+    /// eps -> PF-ODE derivative in place (Eq. 10), using the stage input the
+    /// eval was issued on.
+    fn to_deriv(&mut self, stage: usize) {
+        let f = self.sde.f_scalar(self.t_eval);
+        let w = 0.5 * self.sde.g2(self.t_eval) / self.sde.sigma(self.t_eval);
+        let x_in = if stage == 0 { &self.x } else { &self.xs };
+        for (o, &xv) in self.k[stage].iter_mut().zip(x_in) {
             *o = f * xv + w * *o;
         }
+    }
+
+    /// Start the next attempted step, or finish the integration.
+    fn begin_attempt(&mut self) {
+        if self.t <= self.t0 + 1e-12 {
+            self.done = true;
+            return;
+        }
+        if self.t + self.h < self.t0 {
+            self.h = self.t0 - self.t;
+        }
+        self.stage = 1;
+        self.prep_stage();
+    }
+
+    /// Build the stage input xs = x + h·Σ_j A[s][j]·k_j and the stage time.
+    fn prep_stage(&mut self) {
+        let s = self.stage;
+        self.xs.copy_from_slice(&self.x);
+        for (j, kj) in self.k.iter().enumerate().take(s) {
+            let a = A[s][j];
+            if a != 0.0 {
+                let h = self.h;
+                for (xv, kv) in self.xs.iter_mut().zip(kj) {
+                    *xv += h * a * kv;
+                }
+            }
+        }
+        self.t_eval = self.t + C[s] * self.h;
+    }
+
+    /// All 7 stage derivatives are in: 5th-order solution + embedded error
+    /// estimate, accept/reject, and the step-size controller.
+    fn finish_attempt(&mut self) {
+        let nd = self.x.len();
+        self.x5.copy_from_slice(&self.x);
+        let mut err: f64 = 0.0;
+        for idx in 0..nd {
+            let mut dx5 = 0.0;
+            let mut dx4 = 0.0;
+            for s in 0..7 {
+                dx5 += B5[s] * self.k[s][idx];
+                dx4 += B4[s] * self.k[s][idx];
+            }
+            self.x5[idx] += self.h * dx5;
+            let sc = self.atol + self.rtol * self.x[idx].abs().max(self.x5[idx].abs());
+            let e = self.h * (dx5 - dx4) / sc;
+            err += e * e;
+        }
+        err = (err / nd as f64).sqrt();
+
+        if err <= 1.0 {
+            self.t += self.h;
+            self.x.copy_from_slice(&self.x5);
+            // FSAL: k7 of the accepted attempt is k1 of the next.
+            let (head, tail) = self.k.split_at_mut(6);
+            head[0].copy_from_slice(&tail[0]);
+        }
+        // PI-ish controller.
+        let factor = (0.9 * err.powf(-0.2)).clamp(0.2, 5.0);
+        self.h *= factor;
+        if self.h.abs() < H_MIN {
+            self.h = -H_MIN;
+        }
+        self.begin_attempt();
+    }
+}
+
+impl StepCursor for Rk45Cursor {
+    fn pending_t(&self) -> Option<f64> {
+        if self.done {
+            None
+        } else {
+            Some(self.t_eval)
+        }
+    }
+
+    fn io(&mut self) -> (&[f64], &mut [f64]) {
+        let stage = self.stage;
+        if stage == 0 {
+            (&self.x, &mut self.k[0])
+        } else {
+            (&self.xs, &mut self.k[stage])
+        }
+    }
+
+    fn advance(&mut self) {
+        let stage = self.stage;
+        self.to_deriv(stage);
+        if stage == 0 {
+            self.begin_attempt();
+        } else if stage < 6 {
+            self.stage = stage + 1;
+            self.prep_stage();
+        } else {
+            self.finish_attempt();
+        }
+    }
+
+    fn batch(&self) -> usize {
+        self.b
+    }
+
+    fn take_samples(&mut self) -> Vec<f64> {
+        std::mem::take(&mut self.x)
     }
 }
 
@@ -73,68 +225,12 @@ impl Solver for Rk45 {
         0 // adaptive — measured, not declared
     }
 
-    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, _rng: &mut Rng) {
-        let d = model.dim();
-        let mut tb = Vec::new();
-        let mut k: Vec<Vec<f64>> = (0..7).map(|_| vec![0.0; b * d]).collect();
-        let mut xs = vec![0.0; b * d];
-        let mut x5 = vec![0.0; b * d];
+    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, rng: &mut Rng) {
+        sample_via_cursor(self, model, x, b, rng);
+    }
 
-        let mut t = self.t_max;
-        let mut h = -(self.t_max - self.t0) * 0.02; // initial step, backward
-        let h_min = 1e-10;
-
-        self.deriv(model, x, t, b, &mut tb, &mut k[0]);
-        while t > self.t0 + 1e-12 {
-            if t + h < self.t0 {
-                h = self.t0 - t;
-            }
-            // Stages 1..6 (k[0] carried over, FSAL).
-            for s in 1..7 {
-                xs.copy_from_slice(x);
-                for (j, kj) in k.iter().enumerate().take(s) {
-                    let a = A[s][j];
-                    if a != 0.0 {
-                        for (xv, kv) in xs.iter_mut().zip(kj) {
-                            *xv += h * a * kv;
-                        }
-                    }
-                }
-                let (head, tail) = k.split_at_mut(s);
-                let _ = head;
-                self.deriv(model, &xs, t + C[s] * h, b, &mut tb, &mut tail[0]);
-            }
-            // 5th-order solution + embedded error estimate.
-            x5.copy_from_slice(x);
-            let mut err: f64 = 0.0;
-            for idx in 0..b * d {
-                let mut dx5 = 0.0;
-                let mut dx4 = 0.0;
-                for s in 0..7 {
-                    dx5 += B5[s] * k[s][idx];
-                    dx4 += B4[s] * k[s][idx];
-                }
-                x5[idx] += h * dx5;
-                let sc = self.atol + self.rtol * x[idx].abs().max(x5[idx].abs());
-                let e = h * (dx5 - dx4) / sc;
-                err += e * e;
-            }
-            err = (err / (b * d) as f64).sqrt();
-
-            if err <= 1.0 {
-                t += h;
-                x.copy_from_slice(&x5);
-                // FSAL: k7 of the accepted step is k1 of the next.
-                let last = k[6].clone();
-                k[0].copy_from_slice(&last);
-            }
-            // PI-ish controller.
-            let factor = (0.9 * err.powf(-0.2)).clamp(0.2, 5.0);
-            h *= factor;
-            if h.abs() < h_min {
-                h = -h_min;
-            }
-        }
+    fn cursor(&self, x: &[f64], b: usize, _rng: &mut Rng) -> Box<dyn StepCursor> {
+        Box::new(Rk45Cursor::new(self, x, b))
     }
 }
 

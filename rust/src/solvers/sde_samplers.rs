@@ -10,7 +10,8 @@
 
 use crate::diffusion::Sde;
 use crate::score::EpsModel;
-use crate::solvers::{fill_t, Solver};
+use crate::solvers::plan::{sample_via_cursor, StepCursor};
+use crate::solvers::Solver;
 use crate::util::rng::Rng;
 
 pub struct EulerMaruyama {
@@ -24,6 +25,149 @@ impl EulerMaruyama {
     }
 }
 
+/// Which per-step update a [`StochCursor`] applies.
+#[derive(Clone, Copy)]
+enum StochKind {
+    Em,
+    Sddim { eta: f64 },
+    Addim { clip: Option<f64> },
+}
+
+/// Resumable step machine shared by all three stochastic samplers — they
+/// differ only in the per-step update (`StochKind`), each one eval per grid
+/// step on `x`. The cursor owns its `Rng` (cloned from the stream handed to
+/// [`Solver::cursor`]) and draws noise only in `advance`, so the noise a
+/// trajectory receives does not depend on how its evals were co-batched by
+/// the scheduler.
+pub struct StochCursor {
+    sde: Sde,
+    grid: Vec<f64>,
+    kind: StochKind,
+    x: Vec<f64>,
+    eps: Vec<f64>,
+    rng: Rng,
+    /// Integrating grid[i] -> grid[i-1]; done at i == 0.
+    i: usize,
+    b: usize,
+}
+
+impl StochCursor {
+    fn new(sde: &Sde, grid: &[f64], kind: StochKind, x: &[f64], b: usize, rng: &mut Rng) -> Self {
+        StochCursor {
+            sde: *sde,
+            grid: grid.to_vec(),
+            kind,
+            x: x.to_vec(),
+            eps: vec![0.0; x.len()],
+            rng: rng.clone(),
+            i: grid.len() - 1,
+            b,
+        }
+    }
+
+    /// Euler–Maruyama on the reverse SDE (λ = 1).
+    fn advance_em(&mut self) {
+        let (t, t_prev) = (self.grid[self.i], self.grid[self.i - 1]);
+        let dt = t_prev - t; // negative
+        let f = self.sde.f_scalar(t);
+        let g2 = self.sde.g2(t);
+        let w = g2 / self.sde.sigma(t); // (1+λ²)/2 · g²/σ with λ=1
+        let noise_scale = ((-dt).max(0.0)).sqrt() * g2.sqrt();
+        for (xv, ev) in self.x.iter_mut().zip(&self.eps) {
+            *xv += dt * (f * *xv + w * ev) + noise_scale * self.rng.normal();
+        }
+    }
+
+    /// Stochastic DDIM step (Eq. 34).
+    fn advance_sddim(&mut self, eta: f64) {
+        let i = self.i;
+        let (t_s, t_e) = (self.grid[i], self.grid[i - 1]);
+        let (a_s, a_e) = (self.sde.abar(t_s), self.sde.abar(t_e));
+        let (sig_s, sig_e) = (self.sde.sigma(t_s), self.sde.sigma(t_e));
+        // Eq. (34): sigma_eta^2 = eta^2 (1-a_e)/(1-a_s) (1 - a_s/a_e)
+        let var_eta = eta * eta * (1.0 - a_e) / (1.0 - a_s) * (1.0 - a_s / a_e);
+        // No noise into the final state.
+        let var_eta = if i == 1 { 0.0 } else { var_eta.max(0.0) };
+        let coef_eps = (sig_e * sig_e - var_eta).max(0.0).sqrt();
+        let scale = (a_e / a_s).sqrt();
+        let sd = var_eta.sqrt();
+        for (xv, ev) in self.x.iter_mut().zip(&self.eps) {
+            let x0_dir = scale * (*xv - sig_s * ev);
+            *xv = x0_dir + coef_eps * ev + sd * self.rng.normal();
+        }
+    }
+
+    /// Analytic-DDIM step. The Γ estimate (mean ‖ε‖²/d, module doc) is
+    /// computed over the cursor's own batch, exactly as the blocking loop
+    /// did over its stacked rows.
+    fn advance_addim(&mut self, clip: Option<f64>) {
+        let i = self.i;
+        let d = self.x.len() / self.b;
+        let (t_s, t_e) = (self.grid[i], self.grid[i - 1]);
+        let (a_s, a_e) = (self.sde.abar(t_s), self.sde.abar(t_e));
+        let (bb_s, bb_e) = (1.0 - a_s, 1.0 - a_e); // beta-bar
+        let alpha_step = a_s / a_e; // per-step alpha_n
+        let beta_step = 1.0 - alpha_step;
+        // DDPM "small" posterior variance lambda_n^2.
+        let lam2 = bb_e / bb_s * beta_step;
+        // Batch MC estimate of Gamma = E[||eps||^2]/d  (dataset statistic
+        // in Bao et al.; see module doc for the substitution).
+        let mean_eps2: f64 =
+            self.eps.iter().map(|e| e * e).sum::<f64>() / (self.b as f64 * d as f64);
+        let gap = (bb_s / alpha_step).sqrt() - (bb_e - lam2).max(0.0).sqrt();
+        let var_opt = lam2 + gap * gap * (1.0 - mean_eps2).max(0.0);
+        let var_opt = if i == 1 { 0.0 } else { var_opt.max(0.0) };
+        let sd = var_opt.sqrt();
+        // Posterior mean mu(x, x0_hat) with optional clipping of x0_hat.
+        let c0 = a_e.sqrt() * beta_step / bb_s;
+        let cx = alpha_step.sqrt() * bb_e / bb_s;
+        let sig_s = bb_s.sqrt();
+        let sqrt_as = a_s.sqrt();
+        for (xv, ev) in self.x.iter_mut().zip(&self.eps) {
+            let mut x0 = (*xv - sig_s * ev) / sqrt_as;
+            if let Some(c) = clip {
+                x0 = x0.clamp(-c, c);
+            }
+            *xv = c0 * x0 + cx * *xv + sd * self.rng.normal();
+        }
+    }
+}
+
+impl StepCursor for StochCursor {
+    fn pending_t(&self) -> Option<f64> {
+        if self.i >= 1 {
+            Some(self.grid[self.i])
+        } else {
+            None
+        }
+    }
+
+    fn io(&mut self) -> (&[f64], &mut [f64]) {
+        (&self.x, &mut self.eps)
+    }
+
+    fn advance(&mut self) {
+        match self.kind {
+            StochKind::Em => self.advance_em(),
+            StochKind::Sddim { eta } => self.advance_sddim(eta),
+            StochKind::Addim { clip } => self.advance_addim(clip),
+        }
+        self.i -= 1;
+    }
+
+    fn batch(&self) -> usize {
+        self.b
+    }
+
+    fn take_samples(&mut self) -> Vec<f64> {
+        std::mem::take(&mut self.x)
+    }
+
+    fn take_rng(&mut self) -> Option<Rng> {
+        Some(std::mem::replace(&mut self.rng, Rng::new(0)))
+    }
+}
+
 impl Solver for EulerMaruyama {
     fn name(&self) -> String {
         "em".into()
@@ -34,22 +178,11 @@ impl Solver for EulerMaruyama {
     }
 
     fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, rng: &mut Rng) {
-        let d = model.dim();
-        let mut tb = Vec::new();
-        let mut eps = vec![0.0; b * d];
-        let n = self.grid.len() - 1;
-        for i in (1..=n).rev() {
-            let (t, t_prev) = (self.grid[i], self.grid[i - 1]);
-            let dt = t_prev - t; // negative
-            model.eval(x, fill_t(&mut tb, t, b), b, &mut eps);
-            let f = self.sde.f_scalar(t);
-            let g2 = self.sde.g2(t);
-            let w = g2 / self.sde.sigma(t); // (1+λ²)/2 · g²/σ with λ=1
-            let noise_scale = ((-dt).max(0.0)).sqrt() * g2.sqrt();
-            for (xv, ev) in x.iter_mut().zip(&eps) {
-                *xv += dt * (f * *xv + w * ev) + noise_scale * rng.normal();
-            }
-        }
+        sample_via_cursor(self, model, x, b, rng);
+    }
+
+    fn cursor(&self, x: &[f64], b: usize, rng: &mut Rng) -> Box<dyn StepCursor> {
+        Box::new(StochCursor::new(&self.sde, &self.grid, StochKind::Em, x, b, rng))
     }
 }
 
@@ -76,28 +209,12 @@ impl Solver for StochDdim {
     }
 
     fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, rng: &mut Rng) {
-        let d = model.dim();
-        let mut tb = Vec::new();
-        let mut eps = vec![0.0; b * d];
-        let n = self.grid.len() - 1;
-        for i in (1..=n).rev() {
-            let (t_s, t_e) = (self.grid[i], self.grid[i - 1]);
-            let (a_s, a_e) = (self.sde.abar(t_s), self.sde.abar(t_e));
-            let (sig_s, sig_e) = (self.sde.sigma(t_s), self.sde.sigma(t_e));
-            model.eval(x, fill_t(&mut tb, t_s, b), b, &mut eps);
-            // Eq. (34): sigma_eta^2 = eta^2 (1-a_e)/(1-a_s) (1 - a_s/a_e)
-            let var_eta =
-                self.eta * self.eta * (1.0 - a_e) / (1.0 - a_s) * (1.0 - a_s / a_e);
-            // No noise into the final state.
-            let var_eta = if i == 1 { 0.0 } else { var_eta.max(0.0) };
-            let coef_eps = (sig_e * sig_e - var_eta).max(0.0).sqrt();
-            let scale = (a_e / a_s).sqrt();
-            let sd = var_eta.sqrt();
-            for (xv, ev) in x.iter_mut().zip(&eps) {
-                let x0_dir = scale * (*xv - sig_s * ev);
-                *xv = x0_dir + coef_eps * ev + sd * rng.normal();
-            }
-        }
+        sample_via_cursor(self, model, x, b, rng);
+    }
+
+    fn cursor(&self, x: &[f64], b: usize, rng: &mut Rng) -> Box<dyn StepCursor> {
+        let kind = StochKind::Sddim { eta: self.eta };
+        Box::new(StochCursor::new(&self.sde, &self.grid, kind, x, b, rng))
     }
 }
 
@@ -125,40 +242,12 @@ impl Solver for ADdim {
     }
 
     fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, rng: &mut Rng) {
-        let d = model.dim();
-        let mut tb = Vec::new();
-        let mut eps = vec![0.0; b * d];
-        let n = self.grid.len() - 1;
-        for i in (1..=n).rev() {
-            let (t_s, t_e) = (self.grid[i], self.grid[i - 1]);
-            let (a_s, a_e) = (self.sde.abar(t_s), self.sde.abar(t_e));
-            let (bb_s, bb_e) = (1.0 - a_s, 1.0 - a_e); // beta-bar
-            let alpha_step = a_s / a_e; // per-step alpha_n
-            let beta_step = 1.0 - alpha_step;
-            model.eval(x, fill_t(&mut tb, t_s, b), b, &mut eps);
-            // DDPM "small" posterior variance lambda_n^2.
-            let lam2 = bb_e / bb_s * beta_step;
-            // Batch MC estimate of Gamma = E[||eps||^2]/d  (dataset statistic
-            // in Bao et al.; see module doc for the substitution).
-            let mean_eps2: f64 =
-                eps.iter().map(|e| e * e).sum::<f64>() / (b as f64 * d as f64);
-            let gap = (bb_s / alpha_step).sqrt() - (bb_e - lam2).max(0.0).sqrt();
-            let var_opt = lam2 + gap * gap * (1.0 - mean_eps2).max(0.0);
-            let var_opt = if i == 1 { 0.0 } else { var_opt.max(0.0) };
-            let sd = var_opt.sqrt();
-            // Posterior mean mu(x, x0_hat) with optional clipping of x0_hat.
-            let c0 = a_e.sqrt() * beta_step / bb_s;
-            let cx = alpha_step.sqrt() * bb_e / bb_s;
-            let sig_s = bb_s.sqrt();
-            let sqrt_as = a_s.sqrt();
-            for (xv, ev) in x.iter_mut().zip(&eps) {
-                let mut x0 = (*xv - sig_s * ev) / sqrt_as;
-                if let Some(c) = self.clip {
-                    x0 = x0.clamp(-c, c);
-                }
-                *xv = c0 * x0 + cx * *xv + sd * rng.normal();
-            }
-        }
+        sample_via_cursor(self, model, x, b, rng);
+    }
+
+    fn cursor(&self, x: &[f64], b: usize, rng: &mut Rng) -> Box<dyn StepCursor> {
+        let kind = StochKind::Addim { clip: self.clip };
+        Box::new(StochCursor::new(&self.sde, &self.grid, kind, x, b, rng))
     }
 }
 
@@ -216,6 +305,27 @@ mod tests {
             dists.sort_by(f64::total_cmp);
             assert!(dists[b / 2] < 0.8, "{} median {}", solver.name(), dists[b / 2]);
         }
+    }
+
+    #[test]
+    fn consecutive_sample_calls_advance_the_shared_rng() {
+        // Two sample() calls on one Rng must not replay identical noise:
+        // the cursor clones the stream, so sample_via_cursor re-syncs the
+        // caller's rng from the cursor afterwards (StepCursor::take_rng).
+        let sde = Sde::vp();
+        let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, 10);
+        let m = model();
+        let x0: Vec<f64> = Rng::new(5).normal_vec(8);
+        let mut rng = Rng::new(1);
+        let em = EulerMaruyama::new(&sde, &grid);
+        let mut xa = x0.clone();
+        em.sample(&m, &mut xa, 4, &mut rng);
+        let mut xb = x0;
+        em.sample(&m, &mut xb, 4, &mut rng);
+        assert!(
+            xa.iter().zip(&xb).any(|(a, b)| (a - b).abs() > 1e-9),
+            "second sample call replayed the first call's noise stream"
+        );
     }
 
     #[test]

@@ -125,15 +125,15 @@ impl Solver for TabDeis {
         self.grid.len() - 1
     }
 
-    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, _rng: &mut Rng) {
-        sample_via_cursor(self, model, x, b);
+    fn sample(&self, model: &dyn EpsModel, x: &mut [f64], b: usize, rng: &mut Rng) {
+        sample_via_cursor(self, model, x, b, rng);
     }
 
-    fn cursor(&self, x: &[f64], b: usize) -> Option<Box<dyn StepCursor>> {
+    fn cursor(&self, x: &[f64], b: usize, _rng: &mut Rng) -> Box<dyn StepCursor> {
         let n = self.grid.len() - 1;
         let mut buf = EpsBuffer::new(self.order + 1);
         let pending = buf.checkout(x.len());
-        Some(Box::new(TabCursor {
+        Box::new(TabCursor {
             grid: self.grid.clone(),
             plan: self.plan.clone(),
             x: x.to_vec(),
@@ -142,7 +142,7 @@ impl Solver for TabDeis {
             step: 0,
             n,
             b,
-        }))
+        })
     }
 }
 

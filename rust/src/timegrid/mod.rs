@@ -30,6 +30,19 @@ impl GridKind {
         }
     }
 
+    /// Stable identity for hashable cache keys (`solvers::cache::PlanKey`):
+    /// (variant discriminant, parameter bits). `GridKind` itself cannot be
+    /// `Eq`/`Hash` because of the f64 parameters.
+    pub fn key_bits(&self) -> (u8, u64) {
+        match self {
+            GridKind::Uniform => (0, 0),
+            GridKind::Quadratic => (1, 0),
+            GridKind::PowerT(k) => (2, k.to_bits()),
+            GridKind::PowerRho(k) => (3, k.to_bits()),
+            GridKind::LogRho => (4, 0),
+        }
+    }
+
     pub fn parse(s: &str) -> Option<GridKind> {
         match s {
             "uniform" | "uniform-t" => Some(GridKind::Uniform),
@@ -144,6 +157,27 @@ mod tests {
             assert!(GridKind::parse(s).is_some(), "{s}");
         }
         assert!(GridKind::parse("nope").is_none());
+    }
+
+    #[test]
+    fn key_bits_distinguish_kinds_and_params() {
+        let kinds = [
+            GridKind::Uniform,
+            GridKind::Quadratic,
+            GridKind::PowerT(2.0),
+            GridKind::PowerT(3.0),
+            GridKind::PowerRho(7.0),
+            GridKind::LogRho,
+        ];
+        for (i, a) in kinds.iter().enumerate() {
+            for (j, b) in kinds.iter().enumerate() {
+                if i == j {
+                    assert_eq!(a.key_bits(), b.key_bits());
+                } else {
+                    assert_ne!(a.key_bits(), b.key_bits(), "{a:?} vs {b:?}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -96,15 +96,25 @@ fn concurrent_clients_with_mixed_nfes_merge_evals_over_tcp() {
         "stats endpoint must show cross-request merging (eval_occupancy {occupancy})"
     );
     assert!(stats.get("max_occupancy").unwrap().as_f64().unwrap() >= 2.0);
+    // The shared plan cache is observable over the wire. (Hits are not
+    // asserted here: concurrent submissions of one config may race into
+    // two builds, which the cache counts as two misses by design.)
+    assert!(
+        stats.get("plan_cache_misses").unwrap().as_f64().unwrap() >= 1.0,
+        "plan cache misses must be reported in server stats"
+    );
+    assert!(stats.get("plan_cache_hits").is_ok(), "plan_cache_hits key must exist");
 }
 
 #[test]
 fn scheduled_sampling_is_bit_identical_to_solo_per_seed() {
     // Mixed burst: same-key requests (admission merge), cross-solver
-    // same-grid requests (step-level co-batching), a multi-stage solver,
-    // and a blocking-fallback solver. Admitted together thanks to the
-    // stall, every one of them must still produce exactly the samples its
-    // (seed, config) produces solo — bit-for-bit.
+    // same-grid requests (step-level co-batching), multi-stage solvers,
+    // the adaptive rk45, the s-param EI baseline, and the stochastic
+    // samplers (whose cursors own an Rng seeded from the request). Every
+    // solver is scheduled — there is no blocking path — and every request
+    // must still produce exactly the samples its (seed, config) produces
+    // solo, bit-for-bit.
     let coord = Coordinator::new(
         CoordinatorConfig { workers: 2, max_batch_samples: 4096, ..Default::default() },
         common::stall_registry(Duration::from_millis(10)),
@@ -123,7 +133,11 @@ fn scheduled_sampling_is_bit_identical_to_solo_per_seed() {
         mk(SolverKind::Ipndm(3), 10, 8, 6),
         mk(SolverKind::Pndm, 15, 8, 7),
         mk(SolverKind::Euler, 10, 8, 8),
-        mk(SolverKind::RhoHeun, 10, 8, 9), // no cursor: blocking fallback
+        mk(SolverKind::RhoHeun, 10, 8, 9),      // fixed-stage ρRK cursor
+        mk(SolverKind::EiScore, 10, 8, 10),     // s-param EI cursor
+        mk(SolverKind::Rk45, 10, 8, 11),        // adaptive cursor
+        mk(SolverKind::EulerMaruyama, 10, 8, 12), // stochastic cursor
+        mk(SolverKind::ADdim, 10, 8, 13),       // stochastic cursor
     ];
     let expected: Vec<Vec<f64>> = reqs.iter().map(solo_samples).collect();
     let rxs: Vec<_> = reqs.iter().map(|r| coord.submit(r.clone())).collect();
@@ -134,8 +148,16 @@ fn scheduled_sampling_is_bit_identical_to_solo_per_seed() {
             "scheduled vs solo samples differ for {:?} seed {}",
             req.solver, req.seed
         );
+        assert!(got.co_batched >= 1, "every solver reports co_batched now");
     }
     let s = coord.stats();
-    assert_eq!(s.completed, 9);
+    assert_eq!(s.completed, 13);
+    assert!(
+        s.plan_cache_misses > 0 && s.plan_cache_hits > 0,
+        "the tab3 pair shares one plan (hit); distinct configs build (misses): \
+         hits {} misses {}",
+        s.plan_cache_hits,
+        s.plan_cache_misses
+    );
     coord.shutdown();
 }
