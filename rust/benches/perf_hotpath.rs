@@ -186,6 +186,42 @@ fn main() {
         coord.shutdown();
     }
 
+    // --- L3: scheduler under slot-count + lock contention -------------------
+    {
+        // 64 key-distinct tiny flights (4 solvers x 16 NFEs, n=2 each) over
+        // 4 workers: per-eval work is minimal, so the round-trip cost is
+        // dominated by scheduler bookkeeping — admission, ready-index
+        // anchor/member selection, checkout/re-slot — and by how much of
+        // the scatter+advance runs outside the coordinator mutex. This is
+        // the row that tracks the off-lock advance + ready-index win
+        // (BENCH_hotpath.json diff vs the parent commit).
+        let mut reg = ModelRegistry::new();
+        reg.insert("gmm2d", Arc::new(GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp())));
+        let coord = Coordinator::new(
+            CoordinatorConfig { workers: 4, ..Default::default() },
+            reg,
+        );
+        log(bench_for("scheduler 64-flight contended (n=2, 4 workers)", budget, || {
+            let kinds =
+                [SolverKind::Tab(1), SolverKind::Tab(2), SolverKind::Dpm(1), SolverKind::Euler];
+            let rxs: Vec<_> = (0..64)
+                .map(|i| {
+                    // Distinct (solver, nfe) per submission: no admission
+                    // merging, so all 64 trajectories occupy their own
+                    // flight slots and contend on the scheduler state.
+                    let mut req =
+                        SampleRequest::new("gmm2d", kinds[i % kinds.len()], 8 + i / 4, 2);
+                    req.seed = i as u64;
+                    coord.submit(req)
+                })
+                .collect();
+            for rx in rxs {
+                black_box(rx.recv().unwrap().unwrap());
+            }
+        }));
+        coord.shutdown();
+    }
+
     drop(log);
     if let Err(e) = json.flush() {
         eprintln!("warning: could not write BENCH_hotpath.json: {e}");

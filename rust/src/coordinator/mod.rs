@@ -31,6 +31,16 @@
 //! attaches it to the queued request, so admission under the coordinator
 //! mutex does no grid or quadrature work at all.
 //!
+//! The coordinator mutex itself guards routing state only. Workers check
+//! member flights *out of their slots*, so input gather, the model call,
+//! the eps scatter and `cursor.advance()` — every O(rows·dim) cost,
+//! including stochastic noise draws — run lock-free; a short re-lock
+//! re-slots the flights. Under the lock the scheduler consults a ready
+//! index ((model, t) buckets + an oldest-first heap + a free-slot list)
+//! instead of scanning flight slots, and admission's prior draw + cursor
+//! instantiation also run off-lock between two short critical sections.
+//! See `scheduler.rs` for the design and its invariants.
+//!
 //! [`StepCursor`]: crate::solvers::StepCursor
 //!
 //! Offline-registry note: built on std::thread + channels (no tokio).
@@ -465,6 +475,72 @@ mod tests {
             Arc::new(SlowEps(GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp()), stall)),
         );
         r
+    }
+
+    /// A deadline that fires mid-flight (between evals, while the sibling
+    /// requests keep integrating) must error exactly that part and leave a
+    /// row hole: the surviving merged request still gets bit-exactly its
+    /// own rows, proving delivery slices by admission-time `row0` and the
+    /// expiry sweep never touches sibling state.
+    #[test]
+    fn deadline_mid_flight_errors_part_while_sibling_stays_bit_exact() {
+        let stall = std::time::Duration::from_millis(40);
+        let c = Coordinator::new(
+            CoordinatorConfig { workers: 1, max_batch_samples: 4096, ..Default::default() },
+            slow_registry(stall),
+        );
+        // Solo reference for the surviving request, same prior + noise
+        // streams the coordinator uses (see tests/scheduler.rs).
+        let solo = {
+            let model = GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp());
+            let kind = SolverKind::Tab(2);
+            let sde = Sde::vp();
+            let steps = kind.steps_for_nfe(6);
+            let grid = crate::timegrid::build(
+                crate::timegrid::GridKind::Quadratic,
+                &sde,
+                sde.t0_default(),
+                1.0,
+                steps,
+            );
+            let solver = crate::solvers::build(kind, &sde, &grid);
+            let mut rng = crate::util::rng::Rng::new(5);
+            let prior = sde.prior_std(1.0);
+            let mut x = vec![0.0; 8 * 2];
+            for v in x.iter_mut() {
+                *v = prior * rng.normal();
+            }
+            let mut srng = crate::util::rng::Rng::new(5 ^ 0xD1F_F051);
+            solver.sample(&model, &mut x, 8, &mut srng);
+            x
+        };
+        // Occupy the single worker so A and B queue during the stall and
+        // admission-merge into ONE flight (same batch key).
+        let warm = c.submit(SampleRequest::new("slow", SolverKind::Tab(0), 2, 4));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        let mut a = SampleRequest::new("slow", SolverKind::Tab(2), 6, 8);
+        a.seed = 4;
+        // Fires after the flight is admitted (~2 stalls in) but long before
+        // its 6 evals finish (~6 stalls): mid-flight by a wide margin.
+        a.deadline_ms = Some(150);
+        let mut b = SampleRequest::new("slow", SolverKind::Tab(2), 6, 8);
+        b.seed = 5;
+        let rx_a = c.submit(a);
+        let rx_b = c.submit(b);
+        let ra = rx_a.recv().unwrap();
+        assert!(ra.is_err(), "mid-flight expired part must get an error, not late samples");
+        assert!(ra.unwrap_err().to_string().contains("deadline"));
+        let rb = rx_b.recv().unwrap().unwrap();
+        assert_eq!(
+            rb.samples, solo,
+            "sibling of an expired part must still receive exactly its own rows"
+        );
+        assert!(warm.recv().unwrap().is_ok());
+        let s = c.stats();
+        assert_eq!(s.expired, 1);
+        assert_eq!(s.completed, 2, "warm + sibling complete; expired part does not");
+        assert_eq!(s.samples, 4 + 8, "only delivered parts contribute sample rows");
+        c.shutdown();
     }
 
     #[test]

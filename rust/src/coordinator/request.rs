@@ -21,7 +21,11 @@ pub struct SampleRequest {
     /// Optional per-request deadline, relative to submission. A request
     /// still queued (or still integrating) when it expires receives an
     /// error instead of samples, and its trajectory is aborted if no other
-    /// request shares it. Not part of the batch key.
+    /// request shares it. The contract is enforced *at delivery*: even if
+    /// the deadline fires while the request's flight is checked out by a
+    /// worker for an off-lock eval (where the expiry sweep cannot see it),
+    /// the reply is still an error, never late samples. Not part of the
+    /// batch key.
     pub deadline_ms: Option<u64>,
 }
 
@@ -85,7 +89,9 @@ pub struct SampleResult {
     /// this one by the step-level scheduler. Every solver is scheduled, so
     /// this is always >= merged_with (>= 1).
     pub co_batched: usize,
+    /// Submission to the flight's first eval checkout.
     pub queue_us: u64,
+    /// First eval checkout to delivery (the integration itself).
     pub solve_us: u64,
 }
 

@@ -24,44 +24,92 @@
 //!
 //! Scheduling policy: pick the bucket containing the longest-waiting
 //! trajectory group (FIFO fairness keeps lockstep groups together), cap it
-//! at `max_batch_samples`, run the eval outside the lock, then scatter the
-//! eps slices back through each cursor and advance it. Cursorization is
-//! universal — adaptive RK45, the ρRK stage schemes, s-param EI and the
-//! stochastic samplers are all resumable — so there is no blocking
-//! whole-trajectory path left: every request is co-batchable.
+//! at `max_batch_samples`, run the eval, then scatter the eps slices back
+//! through each cursor and advance it. Cursorization is universal —
+//! adaptive RK45, the ρRK stage schemes, s-param EI and the stochastic
+//! samplers are all resumable — so there is no blocking whole-trajectory
+//! path left: every request is co-batchable.
 //!
-//! Admission is deliberately thin: the (grid, coefficients) plan a flight
-//! needs is resolved in `Coordinator::submit` through the shared
-//! [`PlanCache`](crate::solvers::cache::PlanCache) and rides the queue tag,
-//! so under the coordinator mutex admission only draws priors and
-//! instantiates a cursor. No quadrature, no grid construction, no panic
-//! risk under the lock.
+//! # Off-lock execution
 //!
-//! Determinism: for deterministic solvers a request's samples depend only
-//! on its (seed, n, config) — per-request prior RNG streams, and per-row
-//! model math independent of batch composition — so scheduled,
-//! admission-merged and solo runs are bit-identical
-//! (`rust/tests/scheduler.rs` pins this). Stochastic flights draw noise
-//! only inside `advance`, from a cursor-owned stream seeded by the flight's
-//! HEAD request, so step-level co-batching with strangers never perturbs
-//! the noise — scheduled == solo holds for any stochastic request that is
-//! not admission-merged. Two caveats, both inherited from the old blocking
-//! path (which also ran the solver over the stacked rows): same-config
-//! stochastic requests admission-merged in one tick share the head's noise
-//! stream, and batch-coupled estimators span the merged rows — A-DDIM's Γ
-//! estimate and rk45's RMS error norm (hence its accept/reject sequence)
-//! are computed over the whole flight. A merged non-head request of those
-//! solvers can therefore differ from its solo run; fully deterministic
-//! per-row solvers (everything else) are bit-identical merged or not.
+//! The coordinator mutex guards *routing state only*. Everything whose cost
+//! scales with rows·dim runs without it:
 //!
-//! Known tradeoff: the post-eval scatter + `advance()` (the solver's linear
-//! combination, O(rows·dim)) runs under the coordinator mutex. That is 2–3
-//! orders of magnitude cheaper than the network eval it follows
-//! (O(rows·dim·hidden²)), but it does serialize across workers; if profiles
-//! ever show contention here, the fix is to take the member flights out of
-//! their slots (they are already marked busy), advance outside the lock,
-//! and reinsert — tracked in ROADMAP.md.
+//! * **Admission** pops one key-merged group from the queue under the lock,
+//!   then releases it to draw priors and instantiate the cursor
+//!   (`build_flight`), re-locking only to slot the finished flight. The
+//!   (grid, coefficients) plan arrived prebuilt on the queue tag via the
+//!   shared [`PlanCache`](crate::solvers::cache::PlanCache), resolved in
+//!   `Coordinator::submit` on the submitting thread.
+//! * **Evals** check member flights *out of their slots* in [`pick_group`]
+//!   (they are removed from the flights table entirely, not merely flagged
+//!   busy), so the worker owns them: input gather, the merged model call,
+//!   the eps scatter, and `cursor.advance()` — the solver's O(rows·dim)
+//!   linear combines, and for stochastic cursors the noise draws — all run
+//!   lock-free in [`run_group`]. A short re-lock then re-slots each flight
+//!   (or routes it to [`complete_flight`] when its trajectory is done).
+//!
+//! A checked-out flight is invisible to the expiry sweep; the deadline
+//! contract holds anyway because it is enforced *at delivery*: a part whose
+//! deadline fires while its flight is checked out is caught either by the
+//! sweep after the flight re-slots, or by `complete_flight`'s re-check
+//! before sending — it always receives an error, never late samples.
+//! In-flight accounting (backpressure) counts checked-out and mid-admission
+//! parts through `SchedState::{active_parts, admitting_parts}`, so the
+//! overload bound cannot be dodged by catching the scheduler mid-eval.
+//!
+//! # Ready index
+//!
+//! [`pick_group`] used to scan every flight slot twice per tick (once for
+//! the anchor, once for members) — fine at hundreds of flights, O(flights)
+//! pain at tens of thousands. The scheduler now maintains a **ready index**
+//! updated at insert/checkout/abort:
+//!
+//! * `buckets`: `(model, pending_t bits) -> Vec<slot>` — member gathering is
+//!   O(bucket), and a bucket is exactly one merged dispatch candidate.
+//! * `ready`: a min-heap of `(oldest, generation, slot)` — anchor selection
+//!   (the globally longest-waiting ready flight) is O(log flights)
+//!   amortized. Entries are lazily invalidated: each slot carries a
+//!   generation bumped on every (re)occupancy, and stale entries are
+//!   discarded when they surface at the top. A slotted flight has exactly
+//!   one live entry (one push per insert), so the heap holds at most one
+//!   entry per insert event — bounded by live flights plus not-yet-surfaced
+//!   stale entries, which each pick drains from the top.
+//! * `free_slots`: vacant slot indices, so admission is a pop instead of a
+//!   linear scan for a `None`.
+//!
+//! The index invariant (checked by the unit tests below): every slotted
+//! flight — all of which have a pending eval by construction — appears in
+//! exactly the bucket of its `(model, pending_t)` and has exactly one live
+//! heap entry; buckets and the free list never point at anything else.
+//! Flights checked out by a worker are *absent* from slots and index alike;
+//! they re-enter through [`SchedState::insert_flight`] which restores the
+//! invariant.
+//!
+//! # Determinism
+//!
+//! For deterministic solvers a request's samples depend only on its
+//! (seed, n, config) — per-request prior RNG streams, and per-row model math
+//! independent of batch composition — so scheduled, admission-merged and
+//! solo runs are bit-identical (`rust/tests/scheduler.rs` pins this, now
+//! under a ≥4-worker stress battery). Stochastic flights draw noise only
+//! inside `advance`, from a cursor-owned stream seeded by the flight's HEAD
+//! request, so step-level co-batching with strangers never perturbs the
+//! noise — scheduled == solo holds for any stochastic request that is not
+//! admission-merged. Two caveats, both inherited from the old blocking path
+//! (which also ran the solver over the stacked rows): same-config stochastic
+//! requests admission-merged in one tick share the head's noise stream, and
+//! batch-coupled estimators span the merged rows — A-DDIM's Γ estimate and
+//! rk45's RMS error norm (hence its accept/reject sequence) are computed
+//! over the whole flight. A merged non-head request of those solvers can
+//! therefore differ from its solo run; fully deterministic per-row solvers
+//! (everything else) are bit-identical merged or not. Off-lock execution
+//! changes none of this: a flight's math is self-contained in its cursor
+//! (see the cursor-invariants note in `solvers/plan.rs`), so which worker
+//! advances it, and under which lock regime, is unobservable in the output.
 
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
@@ -92,8 +140,14 @@ struct FlightPart {
 
 /// An in-flight trajectory group: requests admitted together under one
 /// batch key, integrating as one cursor over a stacked state matrix.
+///
+/// A `Flight` lives in exactly one of two places: a `SchedState` slot
+/// (pending its next eval, visible to the ready index and the expiry sweep)
+/// or checked out by a worker mid-eval (owned, lock-free). The cursor owns
+/// every piece of trajectory state, so a checked-out flight needs nothing
+/// from the shared state to advance.
 struct Flight {
-    model_name: String,
+    model_name: Arc<str>,
     model: Arc<dyn EpsModel>,
     cursor: Box<dyn StepCursor>,
     parts: Vec<FlightPart>,
@@ -103,48 +157,185 @@ struct Flight {
     rows: usize,
     /// Peak number of requests co-batched with this flight's evals.
     co_batched_peak: usize,
-    /// True while a worker holds this flight's rows in a merged eval.
-    busy: bool,
     /// First eval dispatch (queue_us / solve_us split point).
     started: Option<Instant>,
     /// Earliest enqueue time over parts — the FIFO fairness key.
     oldest: Instant,
 }
 
-/// Scheduler state under the coordinator mutex.
+/// Scheduler state under the coordinator mutex: the admission queue, the
+/// flight slots, and the ready index over them. All bookkeeping here is
+/// O(1)/O(log n)/O(bucket) per operation — nothing under the mutex scales
+/// with rows·dim or with the total flight count.
 pub(super) struct SchedState {
     /// Admission queue: key-merged by the [`Batcher`] exactly as before.
     pub(super) queue: Batcher<Tag>,
     flights: Vec<Option<Flight>>,
+    /// Per-slot occupancy generation, bumped on every insert; heap entries
+    /// carry the generation they were pushed under, so entries for departed
+    /// flights are recognizably stale.
+    slot_gen: Vec<u64>,
+    /// Vacant slot indices (every `None` in `flights` is here exactly once).
+    free_slots: Vec<usize>,
+    /// Ready index: `(model, pending_t bits) -> slots` pending that eval.
+    buckets: HashMap<(Arc<str>, u64), Vec<usize>>,
+    /// Min-heap (via `Reverse`) of `(oldest, generation, slot)` over ready
+    /// flights; stale entries are skipped/discarded lazily at the top.
+    ready: BinaryHeap<Reverse<(Instant, u64, usize)>>,
+    /// FlightParts admitted into a slot or checked out by a worker — i.e.
+    /// every request past the queue that has not yet been routed to
+    /// delivery. Part of the backpressure bound.
+    active_parts: usize,
+    /// Requests popped from the queue whose flight is being built off-lock
+    /// (between `pop_batch` and `insert_flight`). Part of the backpressure
+    /// bound so overload cannot slip through mid-admission.
+    admitting_parts: usize,
+    /// Parts among `active_parts` that carry a deadline. When zero — the
+    /// common case — the per-tick expiry sweep exits immediately instead of
+    /// walking every slot.
+    deadline_parts: usize,
 }
 
 impl SchedState {
     pub(super) fn new(max_batch_samples: usize) -> SchedState {
-        SchedState { queue: Batcher::new(max_batch_samples), flights: Vec::new() }
+        SchedState {
+            queue: Batcher::new(max_batch_samples),
+            flights: Vec::new(),
+            slot_gen: Vec::new(),
+            free_slots: Vec::new(),
+            buckets: HashMap::new(),
+            ready: BinaryHeap::new(),
+            active_parts: 0,
+            admitting_parts: 0,
+            deadline_parts: 0,
+        }
     }
 
-    /// Requests not yet responded to (backpressure accounting).
+    /// Requests not yet responded to (backpressure accounting): queued,
+    /// slotted, checked out mid-eval, or mid-admission. Counter-based —
+    /// O(1), no flight scan.
     pub(super) fn inflight_requests(&self) -> usize {
-        self.queue.len()
-            + self
-                .flights
-                .iter()
-                .flatten()
-                .map(|f| f.parts.len())
-                .sum::<usize>()
+        self.queue.len() + self.active_parts + self.admitting_parts
+    }
+
+    /// Slot a pending flight and index it. The one entry point back into
+    /// the shared state, used by admission and by workers re-slotting
+    /// checked-out flights.
+    fn insert_flight(&mut self, f: Flight) {
+        let t_bits = f.cursor.pending_t().expect("only pending flights are slotted").to_bits();
+        let slot = match self.free_slots.pop() {
+            Some(s) => s,
+            None => {
+                self.flights.push(None);
+                self.slot_gen.push(0);
+                self.flights.len() - 1
+            }
+        };
+        debug_assert!(self.flights[slot].is_none(), "insert into an occupied slot");
+        self.slot_gen[slot] = self.slot_gen[slot].wrapping_add(1);
+        self.buckets.entry((f.model_name.clone(), t_bits)).or_default().push(slot);
+        self.ready.push(Reverse((f.oldest, self.slot_gen[slot], slot)));
+        self.flights[slot] = Some(f);
+    }
+
+    /// Unslot a flight (worker checkout or abort): clears the slot, removes
+    /// the bucket entry, reclaims the slot. The flight's heap entry is left
+    /// to be discarded lazily (the slot's generation no longer matches once
+    /// the slot is reused, and a vacant slot fails the occupancy check).
+    fn remove_flight(&mut self, slot: usize) -> Flight {
+        let f = self.flights[slot].take().expect("removing an empty slot");
+        let t_bits = f.cursor.pending_t().expect("slotted flights are always pending").to_bits();
+        let key = (f.model_name.clone(), t_bits);
+        if let Some(b) = self.buckets.get_mut(&key) {
+            if let Some(pos) = b.iter().position(|&s| s == slot) {
+                b.swap_remove(pos);
+            }
+            if b.is_empty() {
+                self.buckets.remove(&key);
+            }
+        }
+        self.free_slots.push(slot);
+        f
+    }
+
+    /// A heap entry is live iff its slot is occupied by the same occupancy
+    /// (generation) it was pushed under.
+    fn heap_entry_live(&self, gen: u64, slot: usize) -> bool {
+        self.flights[slot].is_some() && self.slot_gen[slot] == gen
+    }
+
+    /// Ready-index invariant, used by the unit tests after every mutation:
+    /// the index covers exactly the slotted flights (all of which have a
+    /// pending t), with one live heap entry each; the free list covers
+    /// exactly the vacant slots.
+    #[cfg(test)]
+    fn assert_ready_invariants(&self) {
+        for (slot, f) in self.flights.iter().enumerate() {
+            match f {
+                Some(f) => {
+                    let t = f.cursor.pending_t().expect("slotted flight must be pending");
+                    let b = self
+                        .buckets
+                        .get(&(f.model_name.clone(), t.to_bits()))
+                        .unwrap_or_else(|| panic!("slot {slot} missing from its bucket"));
+                    assert_eq!(
+                        b.iter().filter(|&&s| s == slot).count(),
+                        1,
+                        "slot {slot} must appear in its bucket exactly once"
+                    );
+                    assert_eq!(
+                        self.ready
+                            .iter()
+                            .filter(|Reverse((o, g, s))| *s == slot
+                                && *g == self.slot_gen[slot]
+                                && *o == f.oldest)
+                            .count(),
+                        1,
+                        "slot {slot} must have exactly one live heap entry"
+                    );
+                    assert!(!self.free_slots.contains(&slot), "occupied slot {slot} on free list");
+                }
+                None => assert_eq!(
+                    self.free_slots.iter().filter(|&&s| s == slot).count(),
+                    1,
+                    "vacant slot {slot} must be on the free list exactly once"
+                ),
+            }
+        }
+        for ((name, t_bits), slots) in &self.buckets {
+            assert!(!slots.is_empty(), "empty bucket retained for {name}");
+            for &s in slots {
+                let f = self.flights[s].as_ref().expect("bucket points at a vacant slot");
+                assert_eq!(&f.model_name, name, "bucket model mismatch at slot {s}");
+                assert_eq!(
+                    f.cursor.pending_t().unwrap().to_bits(),
+                    *t_bits,
+                    "bucket t mismatch at slot {s}"
+                );
+            }
+        }
     }
 }
 
-/// A merged ε-eval covering every flight in `idx` at scalar time `t`.
+/// A merged ε-eval: the member flights, checked out of their slots and
+/// owned by the worker until it re-slots or completes them.
 struct GroupJob {
-    idx: Vec<usize>,
+    flights: Vec<Flight>,
     model: Arc<dyn EpsModel>,
     t: f64,
     rows: usize,
     dim: usize,
 }
 
-/// Scheduler worker: admit -> pick merged eval -> execute.
+/// Work a scheduler tick hands to the off-lock half of the loop.
+enum Work {
+    /// A key-merged admission group to build into a flight.
+    Admit(Vec<Pending<Tag>>),
+    /// A merged eval over checked-out flights.
+    Eval(GroupJob),
+}
+
+/// Scheduler worker: pick work under the mutex, execute it off-lock.
 pub(super) fn worker_loop(sh: Arc<Shared>) {
     // Worker-owned buffers reused across evals (gathered states, merged
     // eps output, broadcast t) — no steady-state allocation on the loop.
@@ -152,22 +343,52 @@ pub(super) fn worker_loop(sh: Arc<Shared>) {
     let mut outbuf: Vec<f64> = Vec::new();
     let mut tb: Vec<f64> = Vec::new();
     loop {
-        let job = {
+        let work = {
             let mut st = sh.state.lock().unwrap();
             loop {
                 if sh.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
                 expire_deadlines(&mut st, &sh);
-                admit(&mut st, &sh);
-                if let Some(job) = pick_group(&mut st, &sh, &mut xbuf) {
-                    break job;
+                // Admission first: queued groups become schedulable flights
+                // before new evals dispatch, so a burst admitted during one
+                // stalled eval still merges (and other workers can pick the
+                // new flights' evals while this one admits the next group).
+                if let Some((_key, group)) = st.queue.pop_batch() {
+                    st.admitting_parts += group.len();
+                    break Work::Admit(group);
+                }
+                if let Some(job) = pick_group(&mut st, sh.max_batch_samples) {
+                    break Work::Eval(job);
                 }
                 st = sh.cv.wait(st).unwrap();
             }
         };
-        run_group(&sh, job, &xbuf, &mut outbuf, &mut tb);
-        // Completed or unblocked flights may be schedulable again, and a
+        match work {
+            Work::Admit(group) => {
+                let n_group = group.len();
+                // Priors + cursor instantiation (O(rows·dim)) run here,
+                // off-lock; the re-lock only slots the result.
+                let flight = build_flight(&sh, group);
+                {
+                    let mut st = sh.state.lock().unwrap();
+                    st.admitting_parts -= n_group;
+                    if let Some(f) = flight {
+                        st.active_parts += f.parts.len();
+                        st.deadline_parts +=
+                            f.parts.iter().filter(|p| p.deadline.is_some()).count();
+                        st.insert_flight(f);
+                    }
+                }
+            }
+            Work::Eval(job) => {
+                let finished = run_group(&sh, job, &mut xbuf, &mut outbuf, &mut tb);
+                for flight in finished {
+                    complete_flight(&sh, flight);
+                }
+            }
+        }
+        // New flights or re-slotted cursors may be schedulable, and a
         // waiting worker may now find work.
         sh.cv.notify_all();
     }
@@ -189,234 +410,248 @@ fn draw_priors(group: &[Pending<Tag>], spec: &SampleRequest, d: usize, rows: usi
     x
 }
 
-/// Drain the admission queue into flights. The heavy per-config work (grid
-/// + coefficients) arrived prebuilt on the queue tag, so each group costs
-/// one prior draw and one cursor instantiation — cheap enough for the
-/// coordinator mutex.
-fn admit(st: &mut SchedState, sh: &Shared) {
-    while let Some((_key, group)) = st.queue.pop_batch() {
-        // Deadline check at admission: a request that expired while queued
-        // gets an error instead of occupying a solver run.
-        let now = Instant::now();
-        let mut live: Vec<Pending<Tag>> = Vec::with_capacity(group.len());
-        for p in group {
-            if p.tag.2.is_some_and(|d| d <= now) {
-                sh.stats.expired.fetch_add(1, Ordering::Relaxed);
+/// Build one admission group into a flight — off-lock. The heavy per-config
+/// work (grid + coefficients) arrived prebuilt on the queue tag; what
+/// remains is the prior draw and cursor instantiation, which scale with
+/// rows·dim and therefore must not run under the coordinator mutex.
+/// Returns `None` when every member was refused (expired in the queue, or
+/// the model name is unknown) — refusals are answered directly from here.
+fn build_flight(sh: &Shared, group: Vec<Pending<Tag>>) -> Option<Flight> {
+    // Deadline check at admission: a request that expired while queued
+    // gets an error instead of occupying a solver run.
+    let now = Instant::now();
+    let mut live: Vec<Pending<Tag>> = Vec::with_capacity(group.len());
+    for p in group {
+        if p.tag.2.is_some_and(|d| d <= now) {
+            sh.stats.expired.fetch_add(1, Ordering::Relaxed);
+            let _ = p
+                .tag
+                .0
+                .send(Err(anyhow::anyhow!("deadline exceeded while queued")));
+        } else {
+            live.push(p);
+        }
+    }
+    if live.is_empty() {
+        return None;
+    }
+    let spec = live[0].req.clone();
+    let model = match sh.registry.get(&spec.model) {
+        Some(m) => m,
+        None => {
+            for p in live {
                 let _ = p
                     .tag
                     .0
-                    .send(Err(anyhow::anyhow!("deadline exceeded while queued")));
-            } else {
-                live.push(p);
+                    .send(Err(anyhow::anyhow!("unknown model '{}'", spec.model)));
             }
+            return None;
         }
-        if live.is_empty() {
-            continue;
-        }
-        let spec = live[0].req.clone();
-        let model = match sh.registry.get(&spec.model) {
-            Some(m) => m,
-            None => {
-                for p in live {
-                    let _ = p
-                        .tag
-                        .0
-                        .send(Err(anyhow::anyhow!("unknown model '{}'", spec.model)));
-                }
-                continue;
-            }
-        };
-        let d = model.dim();
-        // All group members share a batch key, hence the same plan config;
-        // the head's Arc is the group's plan.
-        let plan = live[0].tag.3.clone();
-        let rows: usize = live.iter().map(|p| p.req.n_samples).sum();
-        let x = draw_priors(&live, &spec, d, rows);
-        let mut oldest = live[0].tag.1;
-        let mut row0 = 0;
-        let parts: Vec<FlightPart> = live
-            .into_iter()
-            .map(|p| {
-                oldest = oldest.min(p.tag.1);
-                let part = FlightPart {
-                    n: p.req.n_samples,
-                    row0,
-                    responder: p.tag.0,
-                    enqueued: p.tag.1,
-                    deadline: p.tag.2,
-                };
-                row0 += p.req.n_samples;
-                part
-            })
-            .collect();
-        sh.stats.batches.fetch_add(1, Ordering::Relaxed);
-        sh.stats.merged_requests.fetch_add(parts.len() as u64, Ordering::Relaxed);
-        // Stochastic solvers clone this stream into their cursor; it is
-        // deterministic in the head request's seed, which `tests/scheduler.rs`
-        // mirrors for its solo references.
-        let mut srng = Rng::new(spec.seed ^ 0xD1F_F051);
-        let cursor = plan.solver.cursor(&x, rows, &mut srng);
-        let flight = Flight {
-            model_name: spec.model.clone(),
-            model,
-            cursor,
-            parts,
-            nfe: spec.nfe,
-            dim: d,
-            rows,
-            co_batched_peak: 0,
-            busy: false,
-            started: None,
-            oldest,
-        };
-        match st.flights.iter_mut().find(|s| s.is_none()) {
-            Some(slot) => *slot = Some(flight),
-            None => st.flights.push(Some(flight)),
-        }
-    }
+    };
+    let d = model.dim();
+    // All group members share a batch key, hence the same plan config;
+    // the head's Arc is the group's plan.
+    let plan = live[0].tag.3.clone();
+    let rows: usize = live.iter().map(|p| p.req.n_samples).sum();
+    let x = draw_priors(&live, &spec, d, rows);
+    let mut oldest = live[0].tag.1;
+    let mut row0 = 0;
+    let parts: Vec<FlightPart> = live
+        .into_iter()
+        .map(|p| {
+            oldest = oldest.min(p.tag.1);
+            let part = FlightPart {
+                n: p.req.n_samples,
+                row0,
+                responder: p.tag.0,
+                enqueued: p.tag.1,
+                deadline: p.tag.2,
+            };
+            row0 += p.req.n_samples;
+            part
+        })
+        .collect();
+    sh.stats.batches.fetch_add(1, Ordering::Relaxed);
+    sh.stats.merged_requests.fetch_add(parts.len() as u64, Ordering::Relaxed);
+    // Stochastic solvers clone this stream into their cursor; it is
+    // deterministic in the head request's seed, which `tests/scheduler.rs`
+    // mirrors for its solo references.
+    let mut srng = Rng::new(spec.seed ^ 0xD1F_F051);
+    let cursor = plan.solver.cursor(&x, rows, &mut srng);
+    Some(Flight {
+        model_name: Arc::from(spec.model.as_str()),
+        model,
+        cursor,
+        parts,
+        nfe: spec.nfe,
+        dim: d,
+        rows,
+        co_batched_peak: 0,
+        started: None,
+        oldest,
+    })
 }
 
 /// Drop expired waiting requests; abort flights nobody is waiting on.
-/// In-place (`retain`): the common no-deadline sweep allocates nothing —
-/// this runs on every scheduler tick under the coordinator mutex.
+/// Exits immediately when no slotted-or-checked-out part carries a deadline
+/// (the common serving case), so the per-tick cost of the sweep is zero
+/// unless deadlines are actually in play. Checked-out flights are invisible
+/// here by construction — their parts are caught after re-slotting, or at
+/// delivery by `complete_flight`.
 fn expire_deadlines(st: &mut SchedState, sh: &Shared) {
+    if st.deadline_parts == 0 {
+        return;
+    }
     let now = Instant::now();
-    for slot in st.flights.iter_mut() {
-        if let Some(f) = slot {
-            if f.busy {
-                continue;
+    for slot in 0..st.flights.len() {
+        let (removed, abort) = match st.flights[slot].as_mut() {
+            None => continue,
+            Some(f) => {
+                let before = f.parts.len();
+                f.parts.retain(|part| {
+                    if part.deadline.is_some_and(|d| d <= now) {
+                        sh.stats.expired.fetch_add(1, Ordering::Relaxed);
+                        let _ = part.responder.send(Err(anyhow::anyhow!(
+                            "deadline exceeded before sampling completed"
+                        )));
+                        false
+                    } else {
+                        true
+                    }
+                });
+                (before - f.parts.len(), f.parts.is_empty())
             }
-            f.parts.retain(|part| {
-                if part.deadline.is_some_and(|d| d <= now) {
-                    sh.stats.expired.fetch_add(1, Ordering::Relaxed);
-                    let _ = part.responder.send(Err(anyhow::anyhow!(
-                        "deadline exceeded before sampling completed"
-                    )));
-                    false
-                } else {
-                    true
-                }
-            });
-            if f.parts.is_empty() {
-                // No live requester left: abort the trajectory, reclaiming
-                // its remaining eval budget.
-                *slot = None;
-            }
+        };
+        // Only deadline-carrying parts can be retained away.
+        st.active_parts -= removed;
+        st.deadline_parts -= removed;
+        if abort {
+            // No live requester left: abort the trajectory, reclaiming
+            // its remaining eval budget.
+            drop(st.remove_flight(slot));
         }
     }
 }
 
 /// Choose the next merged eval: the `(model, t)` bucket containing the
 /// longest-waiting ready flight, filled in FIFO order up to the sample
-/// budget. Marks members busy and gathers their input rows into `xbuf`.
-fn pick_group(st: &mut SchedState, sh: &Shared, xbuf: &mut Vec<f64>) -> Option<GroupJob> {
-    let mut anchor: Option<usize> = None;
-    for (i, f) in st.flights.iter().enumerate() {
-        if let Some(f) = f {
-            if !f.busy && f.cursor.pending_t().is_some() {
-                let better = match anchor {
-                    Some(a) => f.oldest < st.flights[a].as_ref().unwrap().oldest,
-                    None => true,
-                };
-                if better {
-                    anchor = Some(i);
-                }
-            }
+/// budget — and **check the members out of their slots**, transferring
+/// ownership to the calling worker so gather/eval/scatter/advance all run
+/// without the coordinator mutex.
+///
+/// Anchor selection peeks the ready heap (discarding stale entries at the
+/// top) instead of scanning the slots; member gathering reads only the
+/// anchor's bucket. Cost: O(log flights + bucket), independent of the total
+/// flight count.
+fn pick_group(st: &mut SchedState, budget: usize) -> Option<GroupJob> {
+    // Anchor: the oldest live ready flight. Peek, don't pop — in the rare
+    // tie case where an equally-old bucket mate wins the sort below and the
+    // budget excludes the anchor, its entry must survive for the next tick.
+    let a = loop {
+        let &Reverse((_, gen, slot)) = st.ready.peek()?;
+        if st.heap_entry_live(gen, slot) {
+            break slot;
         }
-    }
-    let a = anchor?;
-    let (name, t, model, dim) = {
-        let f = st.flights[a].as_ref().unwrap();
-        (f.model_name.clone(), f.cursor.pending_t().unwrap(), f.model.clone(), f.dim)
+        st.ready.pop();
     };
-    // Every ready flight pending the same (model, t), oldest first.
-    let mut members: Vec<(usize, Instant)> = st
-        .flights
+    let (key, t, model, dim) = {
+        let f = st.flights[a].as_ref().unwrap();
+        let t = f.cursor.pending_t().unwrap();
+        ((f.model_name.clone(), t.to_bits()), t, f.model.clone(), f.dim)
+    };
+    // Every ready flight pending the same (model, t) — the anchor's bucket —
+    // oldest first. The anchor is the bucket's (possibly tied) minimum.
+    let mut members: Vec<(Instant, usize)> = st.buckets[&key]
         .iter()
-        .enumerate()
-        .filter_map(|(i, f)| f.as_ref().map(|f| (i, f)))
-        .filter(|(_, f)| {
-            !f.busy
-                && f.model_name == name
-                && f.cursor.pending_t().map(f64::to_bits) == Some(t.to_bits())
-        })
-        .map(|(i, f)| (i, f.oldest))
+        .map(|&s| (st.flights[s].as_ref().unwrap().oldest, s))
         .collect();
-    members.sort_by_key(|&(_, oldest)| oldest);
-    let budget = sh.max_batch_samples;
-    let mut idx = Vec::with_capacity(members.len());
+    members.sort_unstable();
+    let started = Instant::now();
+    let mut flights: Vec<Flight> = Vec::with_capacity(members.len());
     let mut rows = 0;
-    for (i, _) in members {
-        let f_rows = st.flights[i].as_ref().unwrap().rows;
-        // The anchor always dispatches, even oversized; later members must
-        // fit the remaining budget.
-        if !idx.is_empty() && rows + f_rows > budget {
+    for (_, slot) in members {
+        let f_rows = st.flights[slot].as_ref().unwrap().rows;
+        // The first member always dispatches, even oversized; later members
+        // must fit the remaining budget.
+        if !flights.is_empty() && rows + f_rows > budget {
             continue;
         }
-        idx.push(i);
-        rows += f_rows;
+        let mut f = st.remove_flight(slot);
+        if f.started.is_none() {
+            f.started = Some(started);
+        }
+        rows += f.rows;
+        flights.push(f);
         if rows >= budget {
             break;
         }
     }
-    let started = Instant::now();
+    Some(GroupJob { flights, model, t, rows, dim })
+}
+
+/// Execute one merged ε-eval over checked-out flights: gather inputs, run
+/// the model, scatter the eps slices back and advance every cursor — all
+/// without the coordinator mutex (the worker owns the flights). A short
+/// re-lock then re-slots still-pending flights; finished ones are returned
+/// for delivery (also off-lock).
+fn run_group(
+    sh: &Shared,
+    mut job: GroupJob,
+    xbuf: &mut Vec<f64>,
+    outbuf: &mut Vec<f64>,
+    tb: &mut Vec<f64>,
+) -> Vec<Flight> {
+    let d = job.dim;
     xbuf.clear();
-    xbuf.reserve(rows * dim);
-    for &i in &idx {
-        let f = st.flights[i].as_mut().unwrap();
-        f.busy = true;
-        if f.started.is_none() {
-            f.started = Some(started);
-        }
+    xbuf.reserve(job.rows * d);
+    for f in job.flights.iter_mut() {
         let (x_in, _) = f.cursor.io();
         xbuf.extend_from_slice(x_in);
     }
-    Some(GroupJob { idx, model, t, rows, dim })
-}
-
-/// Execute one merged ε-eval and scatter the results back through the
-/// member cursors.
-fn run_group(sh: &Shared, job: GroupJob, xbuf: &[f64], outbuf: &mut Vec<f64>, tb: &mut Vec<f64>) {
-    let d = job.dim;
     tb.clear();
     tb.resize(job.rows, job.t);
     outbuf.clear();
     outbuf.resize(job.rows * d, 0.0);
-    job.model.eval(&xbuf[..job.rows * d], tb, job.rows, outbuf);
+    job.model.eval(&xbuf[..job.rows * d], &tb[..], job.rows, &mut outbuf[..]);
     sh.stats.model_evals.fetch_add(1, Ordering::Relaxed);
+    let group_reqs: usize = job.flights.iter().map(|f| f.parts.len()).sum();
+    sh.stats.record_sched_eval(group_reqs as u64);
 
+    // Scatter + advance: the O(rows·dim) linear combines (and stochastic
+    // noise draws) run here, lock-free.
+    let mut offset = 0;
+    for f in job.flights.iter_mut() {
+        let rows = f.rows;
+        {
+            let (_x, out) = f.cursor.io();
+            out.copy_from_slice(&outbuf[offset * d..(offset + rows) * d]);
+        }
+        f.cursor.advance();
+        f.co_batched_peak = f.co_batched_peak.max(group_reqs);
+        offset += rows;
+    }
+
+    // Short re-lock: route each flight back to a slot or out to delivery.
     let mut finished: Vec<Flight> = Vec::new();
     {
         let mut st = sh.state.lock().unwrap();
-        let group_reqs: usize =
-            job.idx.iter().map(|&i| st.flights[i].as_ref().unwrap().parts.len()).sum();
-        sh.stats.record_sched_eval(group_reqs as u64);
-        let mut offset = 0;
-        for &i in &job.idx {
-            let f = st.flights[i].as_mut().unwrap();
-            let rows = f.rows;
-            {
-                let (_x, out) = f.cursor.io();
-                out.copy_from_slice(&outbuf[offset * d..(offset + rows) * d]);
-            }
-            f.cursor.advance();
-            f.busy = false;
-            f.co_batched_peak = f.co_batched_peak.max(group_reqs);
-            offset += rows;
-            if f.cursor.pending_t().is_none() {
-                finished.push(st.flights[i].take().unwrap());
+        for f in job.flights {
+            if f.cursor.pending_t().is_some() {
+                st.insert_flight(f);
+            } else {
+                st.active_parts -= f.parts.len();
+                st.deadline_parts -= f.parts.iter().filter(|p| p.deadline.is_some()).count();
+                finished.push(f);
             }
         }
     }
-    for flight in finished {
-        complete_flight(sh, flight);
-    }
+    finished
 }
 
 /// Deliver a finished flight: slice the stacked samples back into
 /// per-request results. The deadline contract holds through delivery: a
-/// part whose deadline fired while the flight was busy in its final evals
-/// (where `expire_deadlines` cannot touch it) gets an error, not late
+/// part whose deadline fired while the flight was checked out in its final
+/// evals (where `expire_deadlines` cannot see it) gets an error, not late
 /// samples.
 fn complete_flight(sh: &Shared, mut flight: Flight) {
     let samples = flight.cursor.take_samples();
@@ -424,7 +659,6 @@ fn complete_flight(sh: &Shared, mut flight: Flight) {
     let solve_end = Instant::now();
     let started = flight.started.unwrap_or(solve_end);
     let merged = flight.parts.len();
-    sh.stats.samples.fetch_add(flight.rows as u64, Ordering::Relaxed);
     for part in flight.parts {
         if part.deadline.is_some_and(|dl| dl <= solve_end) {
             sh.stats.expired.fetch_add(1, Ordering::Relaxed);
@@ -445,9 +679,200 @@ fn complete_flight(sh: &Shared, mut flight: Flight) {
             queue_us: started.duration_since(part.enqueued).as_micros() as u64,
             solve_us: solve_end.duration_since(started).as_micros() as u64,
         };
+        // Count rows per DELIVERED part (not per finished flight): parts
+        // expired at delivery or mid-flight contribute no samples, keeping
+        // `samples` consistent with `completed`.
+        sh.stats.samples.fetch_add(part.n as u64, Ordering::Relaxed);
         sh.stats.completed.fetch_add(1, Ordering::Relaxed);
         sh.stats.record_latency(part.enqueued.elapsed().as_micros() as u64);
         let _ = part.responder.send(Ok(res));
     }
 }
 
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ModelRegistry;
+    use crate::coordinator::Stats;
+    use crate::diffusion::Sde;
+    use crate::gmm::Gmm;
+    use crate::score::GmmEps;
+    use crate::solvers::SolverKind;
+    use crate::timegrid::GridKind;
+    use std::sync::mpsc::{sync_channel, Receiver};
+    use std::sync::{atomic::AtomicBool, Condvar, Mutex};
+    use std::time::Duration;
+
+    type Rx = Receiver<anyhow::Result<SampleResult>>;
+
+    /// A slottable flight over the analytic oracle with `n` rows, one part.
+    /// `name` controls the index bucket: every cursor's FIRST pending t is
+    /// t_N = T = 1.0 regardless of NFE, so same-name flights always start in
+    /// one bucket — use a different name to force a separate bucket.
+    fn test_flight(
+        name: &str,
+        seed: u64,
+        nfe: usize,
+        n: usize,
+        deadline: Option<Instant>,
+    ) -> (Flight, Rx) {
+        let model: Arc<dyn EpsModel> =
+            Arc::new(GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp()));
+        let plan = SolverPlan::build(&Sde::vp(), SolverKind::Tab(1), GridKind::Quadratic, 1e-3, nfe);
+        let d = model.dim();
+        let mut rng = Rng::new(seed);
+        let x = rng.normal_vec(n * d);
+        let mut srng = Rng::new(seed ^ 0xD1F_F051);
+        let cursor = plan.solver.cursor(&x, n, &mut srng);
+        let (tx, rx) = sync_channel(1);
+        let now = Instant::now();
+        let flight = Flight {
+            model_name: Arc::from(name),
+            model,
+            cursor,
+            parts: vec![FlightPart { n, row0: 0, responder: tx, enqueued: now, deadline }],
+            nfe,
+            dim: d,
+            rows: n,
+            co_batched_peak: 0,
+            started: None,
+            oldest: now,
+        };
+        (flight, rx)
+    }
+
+    fn slot_in(st: &mut SchedState, f: Flight) {
+        st.active_parts += f.parts.len();
+        st.deadline_parts += f.parts.iter().filter(|p| p.deadline.is_some()).count();
+        st.insert_flight(f);
+    }
+
+    #[test]
+    fn ready_index_invariants_hold_across_mutations() {
+        let mut st = SchedState::new(1024);
+        let mut rxs = Vec::new();
+        // Insert: two same-model flights (shared bucket — every fresh cursor
+        // pends t_N = 1.0) plus one under a different model name, which is
+        // the only way a fresh flight lands in a separate bucket.
+        for (name, seed, nfe, n) in
+            [("gmm2d", 1u64, 6usize, 2usize), ("gmm2d", 2, 6, 3), ("other", 3, 9, 2)]
+        {
+            let (f, rx) = test_flight(name, seed, nfe, n, None);
+            slot_in(&mut st, f);
+            rxs.push(rx);
+            st.assert_ready_invariants();
+        }
+        assert_eq!(st.inflight_requests(), 3);
+
+        // Checkout: the whole oldest bucket leaves slots and index alike.
+        let job = pick_group(&mut st, 1024).expect("ready flights must be pickable");
+        st.assert_ready_invariants();
+        assert_eq!(job.flights.len(), 2, "same-(model,t) flights must group");
+        assert_eq!(job.rows, 5);
+        assert_eq!(st.inflight_requests(), 3, "checked-out parts still count as inflight");
+
+        // Advance off-index (zero eps is numerically fine here — only the
+        // index bookkeeping is under test), then re-slot.
+        let mut flights = job.flights;
+        for f in flights.iter_mut() {
+            {
+                let (_x, out) = f.cursor.io();
+                for v in out.iter_mut() {
+                    *v = 0.0;
+                }
+            }
+            f.cursor.advance();
+        }
+        for f in flights {
+            assert!(f.cursor.pending_t().is_some(), "nfe 6 has more than one step");
+            st.insert_flight(f);
+            st.assert_ready_invariants();
+        }
+
+        // The re-slotted pair advanced to a NEW t: three flights, all
+        // indexed, two buckets again.
+        assert_eq!(st.buckets.len(), 2);
+
+        // Abort: removal leaves no dangling bucket or free-list entry.
+        let occupied: Vec<usize> =
+            (0..st.flights.len()).filter(|&s| st.flights[s].is_some()).collect();
+        let victim = occupied[0];
+        let parts = st.flights[victim].as_ref().unwrap().parts.len();
+        st.active_parts -= parts;
+        drop(st.remove_flight(victim));
+        st.assert_ready_invariants();
+
+        // Freed slots are reused before the table grows.
+        let len_before = st.flights.len();
+        let (f, rx) = test_flight("gmm2d", 9, 6, 1, None);
+        slot_in(&mut st, f);
+        rxs.push(rx);
+        st.assert_ready_invariants();
+        assert_eq!(st.flights.len(), len_before, "admission must reuse the freed slot");
+    }
+
+    #[test]
+    fn pick_group_is_fifo_and_respects_budget() {
+        let mut st = SchedState::new(1024);
+        let mut rxs = Vec::new();
+        // Three bucket-mates with rows 1, 2, 3, inserted oldest-first.
+        for (seed, n) in [(1u64, 1usize), (2, 2), (3, 3)] {
+            let (f, rx) = test_flight("gmm2d", seed, 6, n, None);
+            slot_in(&mut st, f);
+            rxs.push(rx);
+        }
+        // Budget 3: flights 1 and 2 fit (rows 1+2), flight 3 must wait.
+        let job = pick_group(&mut st, 3).unwrap();
+        assert_eq!(
+            job.flights.iter().map(|f| f.rows).collect::<Vec<_>>(),
+            vec![1, 2],
+            "FIFO selection under the sample budget"
+        );
+        st.assert_ready_invariants();
+        // The leftover flight is the next anchor, oversized or not.
+        let job2 = pick_group(&mut st, 1).unwrap();
+        assert_eq!(job2.flights.len(), 1);
+        assert_eq!(job2.flights[0].rows, 3, "anchor dispatches even over budget");
+        st.assert_ready_invariants();
+        assert!(pick_group(&mut st, 1024).is_none(), "no ready flights left");
+    }
+
+    fn bare_shared() -> Shared {
+        Shared {
+            state: Mutex::new(SchedState::new(64)),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            registry: ModelRegistry::new(),
+            stats: Stats::default(),
+            max_batch_samples: 64,
+            max_inflight: 1024,
+            plan_cache: crate::solvers::PlanCache::new(),
+        }
+    }
+
+    #[test]
+    fn expiry_sweep_skips_when_no_deadlines_and_aborts_empty_flights() {
+        let sh = bare_shared();
+        let mut st = sh.state.lock().unwrap();
+        let (f, _rx_live) = test_flight("gmm2d", 1, 6, 2, None);
+        slot_in(&mut st, f);
+        // No deadline parts anywhere: the sweep must be a no-op (and in
+        // particular must not walk or disturb the index).
+        expire_deadlines(&mut st, &sh);
+        st.assert_ready_invariants();
+        assert_eq!(sh.stats.snapshot().expired, 0);
+
+        // A flight whose only part is already expired: swept, answered,
+        // aborted, slot reclaimed.
+        let (f, rx) =
+            test_flight("gmm2d", 2, 6, 2, Some(Instant::now() - Duration::from_millis(1)));
+        slot_in(&mut st, f);
+        expire_deadlines(&mut st, &sh);
+        st.assert_ready_invariants();
+        assert_eq!(sh.stats.snapshot().expired, 1);
+        assert_eq!(st.deadline_parts, 0);
+        assert_eq!(st.inflight_requests(), 1, "only the live flight remains");
+        let err = rx.try_recv().expect("expired part must be answered synchronously");
+        assert!(err.is_err(), "expired part must receive an error");
+    }
+}

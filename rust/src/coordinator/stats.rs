@@ -20,9 +20,131 @@
 //!     (grid, coefficients) plan; a miss means the submitting thread built
 //!     one. In the steady state of a serving workload hits dominate and no
 //!     coefficient work happens anywhere near the coordinator mutex.
+//!
+//! Latency aggregation is a [`LatencyHistogram`]: a fixed array of log-
+//! bucketed `AtomicU64` counters, so `record_latency` is three relaxed
+//! atomic adds — no mutex, no allocation, no sorting on the delivery path.
+//! The old implementation pushed every latency into a `Mutex<Vec<u64>>`,
+//! which made request completion serialize on one lock (and `snapshot`
+//! clone + sort an unbounded vector). The histogram trades that for a
+//! bounded quantile quantization error documented on
+//! [`LatencyHistogram::REL_ERROR`]; the mean stays exact and the wire
+//! schema (`p50_us`/`p99_us`/`mean_us`) is unchanged.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+
+/// Sub-bucket resolution of the latency histogram: values below
+/// `2^LAT_SUB_BITS` are counted exactly; each power-of-two range
+/// `[2^m, 2^(m+1))` above that is split into `2^LAT_SUB_BITS` equal
+/// sub-buckets.
+pub const LAT_SUB_BITS: u32 = 5;
+const SUBS: usize = 1 << LAT_SUB_BITS;
+/// Bucket count covering the full u64 range: the exact block plus one
+/// `SUBS`-wide block per leading-bit position `LAT_SUB_BITS..=63`.
+const NUM_BUCKETS: usize = (64 - LAT_SUB_BITS as usize) * SUBS + SUBS;
+
+/// Bucket holding `v`: identity below `SUBS`; otherwise the top
+/// `LAT_SUB_BITS + 1` significant bits pick (power-of-two block, sub-bucket).
+fn bucket_index(v: u64) -> usize {
+    if v < SUBS as u64 {
+        v as usize
+    } else {
+        let m = 63 - v.leading_zeros(); // m >= LAT_SUB_BITS
+        let sub = (v >> (m - LAT_SUB_BITS)) as usize - SUBS;
+        ((m - LAT_SUB_BITS) as usize + 1) * SUBS + sub
+    }
+}
+
+/// Midpoint of bucket `idx`'s value range — the representative reported for
+/// quantiles. For buckets of width 1 (all values below `2 * SUBS`) this is
+/// the value itself.
+fn bucket_mid(idx: usize) -> u64 {
+    if idx < SUBS {
+        return idx as u64;
+    }
+    let shift = (idx / SUBS - 1) as u32;
+    let low = (SUBS as u64 + (idx % SUBS) as u64) << shift;
+    low + (1u64 << shift) / 2
+}
+
+/// Lock-free log-bucketed histogram for end-to-end request latencies.
+///
+/// `record` performs three `fetch_add(Relaxed)`s and nothing else — safe to
+/// call from any number of delivery threads concurrently. `quantile` walks
+/// the fixed bucket array (the cold introspection path).
+///
+/// Error bound: the reported quantile is the midpoint of the bucket that
+/// contains the exact order statistic, so it differs from the exact value
+/// by at most one bucket width — a relative error of at most
+/// [`Self::REL_ERROR`] (`2^-LAT_SUB_BITS` ≈ 3.1%), and exactly 0 for values
+/// below `2^(LAT_SUB_BITS + 1)` = 64 (bucket width 1). The mean is exact:
+/// sum and count are tracked directly.
+pub struct LatencyHistogram {
+    buckets: Box<[AtomicU64; NUM_BUCKETS]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: Box::new(std::array::from_fn(|_| AtomicU64::new(0))),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    /// Worst-case relative quantization error of `quantile`
+    /// (one bucket width, `2^-LAT_SUB_BITS`).
+    pub const REL_ERROR: f64 = 1.0 / SUBS as f64;
+
+    /// Record one value. Lock-free; callable concurrently from any thread.
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact mean of all recorded values (0 if none).
+    pub fn mean(&self) -> f64 {
+        let n = self.count.load(Ordering::Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Quantile estimate following the same rank rule the sorted-Vec
+    /// implementation used (`sorted[ceil((len-1) * p)]`), quantized to the
+    /// containing bucket's midpoint (see [`Self::REL_ERROR`]). Returns 0
+    /// when nothing has been recorded.
+    pub fn quantile(&self, p: f64) -> u64 {
+        // One coherent pass over the bucket array; the rank is derived from
+        // the same loads so a concurrent `record` cannot push the target
+        // rank past the scanned mass.
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((total - 1) as f64 * p).ceil() as u64; // 0-based
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return bucket_mid(i);
+            }
+        }
+        bucket_mid(NUM_BUCKETS - 1)
+    }
+}
 
 #[derive(Default)]
 pub struct Stats {
@@ -39,7 +161,8 @@ pub struct Stats {
     pub max_occupancy: AtomicU64,
     pub plan_cache_hits: AtomicU64,
     pub plan_cache_misses: AtomicU64,
-    latencies_us: Mutex<Vec<u64>>, // end-to-end per request
+    /// End-to-end per-request latency, log-bucketed and lock-free.
+    latency_us: LatencyHistogram,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -59,14 +182,19 @@ pub struct StatsSnapshot {
     pub max_occupancy: u64,
     pub plan_cache_hits: u64,
     pub plan_cache_misses: u64,
+    /// Bucketed-histogram percentiles: within [`LatencyHistogram::REL_ERROR`]
+    /// relative error of the exact order statistics.
     pub p50_us: u64,
     pub p99_us: u64,
+    /// Exact mean latency (sum/count, not bucketed).
     pub mean_us: f64,
 }
 
 impl Stats {
+    /// Record one delivered request's end-to-end latency. Lock-free (three
+    /// relaxed atomic adds) — the delivery hot path never serializes here.
     pub fn record_latency(&self, us: u64) {
-        self.latencies_us.lock().unwrap().push(us);
+        self.latency_us.record(us);
     }
 
     /// Record one scheduler-merged ε-eval that served `requests` client
@@ -78,15 +206,6 @@ impl Stats {
     }
 
     pub fn snapshot(&self) -> StatsSnapshot {
-        let mut lat = self.latencies_us.lock().unwrap().clone();
-        lat.sort_unstable();
-        let pct = |p: f64| -> u64 {
-            if lat.is_empty() {
-                0
-            } else {
-                lat[((lat.len() - 1) as f64 * p).ceil() as usize]
-            }
-        };
         let sched_evals = self.sched_evals.load(Ordering::Relaxed);
         let sched_eval_requests = self.sched_eval_requests.load(Ordering::Relaxed);
         StatsSnapshot {
@@ -108,13 +227,9 @@ impl Stats {
             max_occupancy: self.max_occupancy.load(Ordering::Relaxed),
             plan_cache_hits: self.plan_cache_hits.load(Ordering::Relaxed),
             plan_cache_misses: self.plan_cache_misses.load(Ordering::Relaxed),
-            p50_us: pct(0.5),
-            p99_us: pct(0.99),
-            mean_us: if lat.is_empty() {
-                0.0
-            } else {
-                lat.iter().sum::<u64>() as f64 / lat.len() as f64
-            },
+            p50_us: self.latency_us.quantile(0.5),
+            p99_us: self.latency_us.quantile(0.99),
+            mean_us: self.latency_us.mean(),
         }
     }
 }
@@ -122,9 +237,14 @@ impl Stats {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Rng;
 
     #[test]
     fn snapshot_percentiles() {
+        // All five values sit in width-1 buckets except 1000, whose bucket
+        // [992, 1008) happens to have midpoint exactly 1000 — so the
+        // bucketed histogram reproduces the old sorted-Vec answers here.
         let s = Stats::default();
         for v in [10, 20, 30, 40, 1000] {
             s.record_latency(v);
@@ -149,5 +269,110 @@ mod tests {
         assert_eq!(snap.sched_eval_requests, 6);
         assert!((snap.eval_occupancy - 2.0).abs() < 1e-12);
         assert_eq!(snap.max_occupancy, 3);
+    }
+
+    #[test]
+    fn bucket_math_edges() {
+        // Exact region: identity both ways.
+        for v in [0u64, 1, 31, 32, 63] {
+            assert_eq!(bucket_mid(bucket_index(v)), v, "width-1 bucket for {v}");
+        }
+        // Largest value maps to the last bucket, in bounds.
+        assert_eq!(bucket_index(u64::MAX), NUM_BUCKETS - 1);
+        // Buckets are monotone: a larger value never lands in an earlier
+        // bucket, and the midpoint stays within one relative bucket width.
+        let mut prev = 0usize;
+        for shift in 0..64u32 {
+            let v = 1u64 << shift;
+            let idx = bucket_index(v);
+            assert!(idx >= prev, "bucket order broken at 2^{shift}");
+            prev = idx;
+            let mid = bucket_mid(idx);
+            let err = (mid as f64 - v as f64).abs();
+            assert!(
+                err <= LatencyHistogram::REL_ERROR * v as f64 + 0.5,
+                "2^{shift}: mid {mid} too far from {v}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.quantile(0.99), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.count(), 0);
+    }
+
+    /// The documented accuracy contract: on random latency sets spanning
+    /// the exact region, mid-range log buckets and huge values, the
+    /// bucketed p50/p99 are within one bucket's relative error of the exact
+    /// sorted-Vec quantiles, and the mean is exact.
+    #[test]
+    fn prop_bucketed_quantiles_match_exact_within_one_bucket() {
+        run_prop("latency histogram accuracy", 31, 60, |rng: &mut Rng| {
+            let s = Stats::default();
+            let n = 1 + rng.below(300);
+            let mut vals: Vec<u64> = Vec::with_capacity(n);
+            for _ in 0..n {
+                let v = match rng.below(3) {
+                    0 => rng.below(64) as u64,        // exact buckets
+                    1 => rng.below(5_000_000) as u64, // serving-shaped µs
+                    // Any log scale up to 2^40 — large enough to span the
+                    // bucket blocks, small enough that the u64 sum (and its
+                    // f64 image) stays exact over 300 values.
+                    _ => rng.next_u64() >> (24 + rng.below(40) as u32),
+                };
+                vals.push(v);
+                s.record_latency(v);
+            }
+            let mut sorted = vals.clone();
+            sorted.sort_unstable();
+            let exact = |p: f64| sorted[((sorted.len() - 1) as f64 * p).ceil() as usize];
+            let snap = s.snapshot();
+            for (p, got) in [(0.5, snap.p50_us), (0.99, snap.p99_us)] {
+                let want = exact(p);
+                // got is the midpoint of the bucket containing `want`; the
+                // +1 absorbs the integer half-width of width-1/2 buckets.
+                let tol = LatencyHistogram::REL_ERROR * want as f64 + 1.0;
+                assert!(
+                    (got as f64 - want as f64).abs() <= tol,
+                    "p{p}: bucketed {got} vs exact {want} (n {n}, tol {tol})"
+                );
+            }
+            let exact_mean =
+                vals.iter().map(|&v| v as f64).sum::<f64>() / vals.len() as f64;
+            // Same sum, same count: the histogram mean must agree to float
+            // roundoff of the summation order, not to bucket resolution.
+            assert!(
+                (snap.mean_us - exact_mean).abs() <= 1e-9 * exact_mean.max(1.0),
+                "mean {} vs exact {exact_mean}",
+                snap.mean_us
+            );
+        });
+    }
+
+    /// Concurrent recorders: no count is lost and the totals balance —
+    /// the lock-freedom claim, exercised rather than asserted.
+    #[test]
+    fn concurrent_records_all_land() {
+        let s = std::sync::Arc::new(Stats::default());
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    s.record_latency(t * 1000 + i);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.latency_us.count(), 4000);
+        let p50 = s.snapshot().p50_us;
+        // All values lie in [0, 4000): the median must too.
+        assert!(p50 < 4100, "p50 {p50} out of recorded range");
     }
 }

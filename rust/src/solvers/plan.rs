@@ -36,6 +36,29 @@
 //! The heavy per-(sde, grid, solver) coefficient precomputation these
 //! cursors consume is shared across requests through
 //! [`solvers::cache::PlanCache`](crate::solvers::cache::PlanCache).
+//!
+//! # Cursor invariants the scheduler's off-lock checkout relies on
+//!
+//! The coordinator's workers take a flight's cursor *out* of the shared
+//! scheduler state and run scatter + [`advance`](StepCursor::advance)
+//! without any lock held. That is sound because of three contractual
+//! properties every cursor implementation upholds:
+//!
+//! 1. **Self-containment.** A cursor owns every piece of per-trajectory
+//!    state — the state matrix, eps history, adaptive-controller state,
+//!    and (for stochastic solvers) the noise `Rng`. The shared plan behind
+//!    it (`Arc<SolverPlan>`: grid + coefficients) is immutable. Advancing a
+//!    cursor therefore needs no synchronization with anything else.
+//! 2. **`pending_t` is stable between advances.** Only
+//!    [`advance`](StepCursor::advance) may change the pending eval; while a
+//!    flight sits in a scheduler slot its `(model, pending_t)` is frozen,
+//!    which is what lets the scheduler index flights by that key and trust
+//!    the index until the flight is checked out.
+//! 3. **`io` is valid exactly while pending.** The (input, eps
+//!    destination) buffers stay put between `pending_t()` turning `Some`
+//!    and the matching `advance`, so a worker may gather inputs, run the
+//!    merged eval, and scatter results with no cursor interaction in
+//!    between.
 
 use crate::score::EpsModel;
 use crate::solvers::{fill_t, Solver};

@@ -106,6 +106,124 @@ fn concurrent_clients_with_mixed_nfes_merge_evals_over_tcp() {
     assert!(stats.get("plan_cache_hits").is_ok(), "plan_cache_hits key must exist");
 }
 
+/// The concurrency battery for the off-lock scheduler: many concurrent TCP
+/// clients with mixed solver kinds — including the adaptive rk45 and the
+/// stochastic samplers — against 4 scheduler workers and a stall-model that
+/// keeps many flights checked out simultaneously. Asserts the three
+/// serving invariants the off-lock refactor must preserve:
+///
+///   1. every request gets exactly one response (every call returns, and
+///      the lifecycle counters balance: requests == completed + rejected
+///      + expired);
+///   2. refusals stay refusals — over-cap NFE is rejected, a zero deadline
+///      expires — and neither perturbs the live traffic;
+///   3. bit-exact parity: each completed request's samples equal its solo
+///      `sample()` run per (seed, config), proving checked-out advance
+///      changed no math. Coupling-sensitive kinds (rk45, em, addim) get
+///      unique (solver, nfe) keys so nothing admission-merges with them —
+///      the regime where scheduled == solo holds exactly (see the scheduler
+///      module doc); the deterministic kinds share keys freely and must be
+///      bit-exact merged or not.
+#[test]
+fn stress_battery_exactly_one_response_stats_balance_and_parity() {
+    let coord = Arc::new(Coordinator::new(
+        CoordinatorConfig { workers: 4, max_batch_samples: 4096, max_inflight_requests: 4096 },
+        common::stall_registry(Duration::from_millis(10)),
+    ));
+    let addr = serve(coord.clone(), "127.0.0.1:0").unwrap();
+
+    // (wire solver name, nfe, seed) — 24 completing requests.
+    let mut cfgs: Vec<(&str, usize, u64)> = Vec::new();
+    for s in 0..8 {
+        cfgs.push(("tab2", 8, s)); // one shared batch key: admission-merge fodder
+    }
+    for s in 0..4 {
+        cfgs.push(("tab3", 10, 40 + s));
+    }
+    for s in 0..4 {
+        cfgs.push(("dpm2", 10, 80 + s));
+    }
+    for (i, nfe) in [10usize, 12, 14, 16].into_iter().enumerate() {
+        cfgs.push(("rk45", nfe, 100 + i as u64)); // unique keys: never merged
+    }
+    for (i, nfe) in [9usize, 11].into_iter().enumerate() {
+        cfgs.push(("em", nfe, 120 + i as u64)); // stochastic, unique keys
+    }
+    for (i, nfe) in [13usize, 15].into_iter().enumerate() {
+        cfgs.push(("addim", nfe, 140 + i as u64)); // stochastic, unique keys
+    }
+    let expected: Vec<Vec<f64>> = cfgs
+        .iter()
+        .map(|&(name, nfe, seed)| {
+            let mut r = SampleRequest::new("gmm2d", SolverKind::parse(name).unwrap(), nfe, 6);
+            r.seed = seed;
+            solo_samples(&r)
+        })
+        .collect();
+
+    // Pre-connect every client, then fire all requests concurrently.
+    let clients: Vec<Client> = (0..cfgs.len()).map(|_| Client::connect(addr).unwrap()).collect();
+    let mut handles = Vec::new();
+    for ((name, nfe, seed), mut c) in cfgs.iter().copied().zip(clients) {
+        handles.push(std::thread::spawn(move || {
+            let req = format!(
+                r#"{{"model":"gmm2d","solver":"{name}","nfe":{nfe},"n":6,"seed":{seed},"return_samples":true}}"#
+            );
+            c.call(&Json::parse(&req).unwrap()).unwrap()
+        }));
+    }
+    // Refusal traffic alongside: three zero-deadline requests (expire in
+    // the queue) and two over-cap NFE requests (rejected at submit).
+    let over_cap = deis::coordinator::MAX_REQUEST_NFE + 1;
+    let mut refusals = Vec::new();
+    for i in 0..5 {
+        let line = if i < 3 {
+            r#"{"model":"gmm2d","solver":"euler","nfe":4,"n":2,"deadline_ms":0}"#.to_string()
+        } else {
+            format!(r#"{{"model":"gmm2d","solver":"tab1","nfe":{over_cap},"n":2}}"#)
+        };
+        let mut c = Client::connect(addr).unwrap();
+        refusals.push(std::thread::spawn(move || c.call(&Json::parse(&line).unwrap()).unwrap()));
+    }
+
+    // Exactly one response per request: every call returns one reply.
+    let responses: Vec<Json> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for (r, ((name, nfe, seed), want)) in responses.iter().zip(cfgs.iter().zip(&expected)) {
+        assert!(r.get("ok").unwrap().as_bool().unwrap(), "{name} nfe {nfe} seed {seed}: {r:?}");
+        assert_eq!(r.get("n").unwrap().as_f64().unwrap() as usize, 6);
+        let got = r.get("samples").unwrap().as_f64_vec().unwrap();
+        // JSON floats use shortest-roundtrip formatting, so equality here
+        // is bit-exactness through the full TCP path.
+        assert_eq!(&got, want, "scheduled vs solo mismatch for {name} nfe {nfe} seed {seed}");
+        assert!(r.get("co_batched").unwrap().as_f64().unwrap() >= 1.0);
+    }
+    for (i, h) in refusals.into_iter().enumerate() {
+        let r = h.join().unwrap();
+        assert!(!r.get("ok").unwrap().as_bool().unwrap(), "refusal {i} must be an error");
+        let err = r.get("error").unwrap().as_str().unwrap().to_string();
+        if i < 3 {
+            assert!(err.contains("deadline"), "refusal {i}: {err}");
+        } else {
+            assert!(err.contains("out of range"), "refusal {i}: {err}");
+        }
+    }
+
+    // Lifecycle balance: nothing double-answered, nothing dropped.
+    let s = coord.stats();
+    assert_eq!(s.requests, 29);
+    assert_eq!(s.completed, 24);
+    assert_eq!(s.expired, 3);
+    assert_eq!(s.rejected, 2);
+    assert_eq!(
+        s.requests,
+        s.completed + s.rejected + s.expired,
+        "lifecycle counters must balance"
+    );
+    assert_eq!(s.samples, 24 * 6, "only completed requests contribute sample rows");
+    assert!(s.sched_evals > 0);
+    assert!(s.p50_us > 0, "bucketed latency histogram must report percentiles");
+}
+
 #[test]
 fn scheduled_sampling_is_bit_identical_to_solo_per_seed() {
     // Mixed burst: same-key requests (admission merge), cross-solver

@@ -120,6 +120,49 @@ fn deadline_and_overload_are_reported_over_the_wire() {
 }
 
 #[test]
+fn deadline_firing_during_checked_out_eval_yields_error_not_late_samples() {
+    // Force the race the off-lock advance design must survive: the flight
+    // is checked OUT of its scheduler slot (invisible to the expiry sweep)
+    // when its deadline fires. An idle worker picks the request up within
+    // microseconds, then stalls 120ms inside the trajectory's only eval;
+    // the 40ms deadline therefore fires mid-checkout, deterministically.
+    // The expired-at-delivery contract demands an error — late samples
+    // must be withheld even though the integration finished them.
+    let addr = boot(1, Duration::from_millis(120));
+    let mut c = Client::connect(addr).unwrap();
+    let t0 = std::time::Instant::now();
+    let resp = c
+        .call(&Json::parse(
+            r#"{"model":"gmm2d","solver":"ddim","nfe":1,"n":4,"deadline_ms":40,"return_samples":true}"#,
+        ).unwrap())
+        .unwrap();
+    let elapsed = t0.elapsed();
+    assert!(!resp.get("ok").unwrap().as_bool().unwrap(), "{resp:?}");
+    assert!(
+        resp.get("error").unwrap().as_str().unwrap().contains("deadline"),
+        "{resp:?}"
+    );
+    assert!(resp.get("samples").is_err(), "an expired reply must carry no samples");
+    // The reply arriving only after the stalled eval proves the deadline
+    // fired while the flight was checked out (a queue-expiry would have
+    // answered at ~40ms), i.e. the delivery-time re-check caught it.
+    assert!(
+        elapsed >= Duration::from_millis(90),
+        "reply after {elapsed:?}: deadline did not race the checked-out eval"
+    );
+
+    let mut sc = Client::connect(addr).unwrap();
+    let stats = sc.call(&Json::parse(r#"{"cmd":"stats"}"#).unwrap()).unwrap();
+    assert_eq!(stats.get("expired").unwrap().as_f64().unwrap() as usize, 1);
+    assert_eq!(stats.get("completed").unwrap().as_f64().unwrap() as usize, 0);
+    assert_eq!(
+        stats.get("samples").unwrap().as_f64().unwrap() as usize,
+        0,
+        "expired-at-delivery parts must contribute no sample rows"
+    );
+}
+
+#[test]
 fn overload_is_reported_over_the_wire() {
     // One in-flight slot and a stalled worker: while the first request is
     // integrating, further submissions must be refused with the documented
