@@ -1,11 +1,32 @@
 //! Dynamic batcher: groups queued requests with equal [`BatchKey`] into one
-//! solver run, bounded by a sample budget. FIFO across keys (the head of the
-//! queue picks the key), FIFO within a key — property-tested invariants:
-//! every submitted request is dispatched exactly once, merged requests
-//! always share a key, and no merged batch exceeds the budget unless a
-//! single oversized request forces it.
+//! solver run, bounded by a sample budget. FIFO across keys (the oldest
+//! queued request picks the key), FIFO within a key — property-tested
+//! invariants: every submitted request is dispatched exactly once, merged
+//! requests always share a key, and no merged batch exceeds the budget
+//! unless a single oversized request forces it.
+//!
+//! # Complexity
+//!
+//! The queue is indexed by key: every pending request lives in its key's
+//! FIFO *lane* (`lanes`), and `key_fifo` orders the nonempty lanes by when
+//! they last became nonempty — so the front lane's head is always the
+//! globally oldest pending request. `pop_batch` therefore costs O(group)
+//! per pop: it drains the front lane up to the sample budget and never
+//! looks at any other lane. The previous implementation popped and
+//! re-pushed the *entire* queue to find same-key requests — O(queue) per
+//! pop, recomputing every request's `batch_key()` along the way — which
+//! made a deep mixed-key queue quadratic to drain. The grouping semantics
+//! are unchanged: a lane holds *all* arrivals of its key regardless of how
+//! other keys interleave, and a budget-capped lane is re-filed into
+//! `key_fifo` by its new head's arrival order — leftovers dispatch exactly
+//! where the linear scan would have left them in the queue, so a capped
+//! key can never starve an older key's requests.
+//!
+//! The lane index is exposed read-only ([`Batcher::pending_keys`],
+//! [`Batcher::pending_for`]) so tests can pin the no-scan claim
+//! structurally instead of by timing.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 use super::request::{BatchKey, SampleRequest};
 
@@ -13,51 +34,120 @@ pub struct Pending<T> {
     pub req: SampleRequest,
     pub tag: T,
     pub enqueued: std::time::Instant,
+    /// Global arrival sequence number — the cross-lane FIFO order key.
+    seq: u64,
 }
 
 pub struct Batcher<T> {
-    queue: VecDeque<Pending<T>>,
+    /// Per-key FIFO lanes; a queued request lives in exactly one lane.
+    lanes: HashMap<BatchKey, VecDeque<Pending<T>>>,
+    /// Nonempty lanes, sorted ascending by their head request's arrival
+    /// `seq` — so the front lane's head is always the globally oldest
+    /// request. Maintained for free on push (a newly nonempty lane's head
+    /// is the newest request of all, so it belongs at the back) and by a
+    /// re-file on budget-capped pops (see `pop_batch`).
+    key_fifo: VecDeque<BatchKey>,
+    /// Total queued requests across all lanes.
+    len: usize,
+    /// Next arrival sequence number.
+    next_seq: u64,
     pub max_batch_samples: usize,
 }
 
 impl<T> Batcher<T> {
     pub fn new(max_batch_samples: usize) -> Self {
-        Batcher { queue: VecDeque::new(), max_batch_samples: max_batch_samples.max(1) }
+        Batcher {
+            lanes: HashMap::new(),
+            key_fifo: VecDeque::new(),
+            len: 0,
+            next_seq: 0,
+            max_batch_samples: max_batch_samples.max(1),
+        }
     }
 
     pub fn push(&mut self, req: SampleRequest, tag: T) {
-        self.queue.push_back(Pending { req, tag, enqueued: std::time::Instant::now() });
+        let key = req.batch_key();
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let lane = self.lanes.entry(key.clone()).or_default();
+        if lane.is_empty() {
+            // This lane's head carries the largest seq of any queued
+            // request, so appending keeps `key_fifo` sorted by head seq.
+            self.key_fifo.push_back(key);
+        }
+        lane.push_back(Pending { req, tag, enqueued: std::time::Instant::now(), seq });
+        self.len += 1;
     }
 
     pub fn len(&self) -> usize {
-        self.queue.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.queue.is_empty()
+        self.len == 0
     }
 
-    /// Pop the next merged batch: the oldest request plus every later
-    /// request with the same key, until the sample budget fills.
-    /// Returns (key, requests) or None if idle.
+    /// Number of distinct keys with queued requests (the admission lanes).
+    pub fn pending_keys(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Queued requests under `key` — an O(1) lane lookup, which is the
+    /// whole point: same-key lookups never scan the other lanes.
+    pub fn pending_for(&self, key: &BatchKey) -> usize {
+        self.lanes.get(key).map_or(0, |lane| lane.len())
+    }
+
+    /// Pop the next merged batch: the oldest queued request plus every
+    /// other request in its lane, in FIFO order, until the sample budget
+    /// fills. Returns (key, requests) or None if idle. O(group), not
+    /// O(queue): only the front lane is touched.
+    ///
+    /// Budget semantics are strictly FIFO within the lane: the drain stops
+    /// at the first request that does not fit, rather than skipping it to
+    /// pack a smaller later one (the old scan did the latter, which could
+    /// starve a large request behind a stream of small same-key ones).
     pub fn pop_batch(&mut self) -> Option<(BatchKey, Vec<Pending<T>>)> {
-        let head = self.queue.pop_front()?;
-        let key = head.req.batch_key();
+        let key = self.key_fifo.pop_front()?;
+        let lane = self.lanes.get_mut(&key).expect("key_fifo entry must have a lane");
+        let head = lane.pop_front().expect("key_fifo lanes are nonempty by invariant");
         let mut total = head.req.n_samples;
         let mut group = vec![head];
-        let mut rest = VecDeque::with_capacity(self.queue.len());
-        while let Some(p) = self.queue.pop_front() {
+        while let Some(p) = lane.front() {
             if total < self.max_batch_samples
-                && p.req.batch_key() == key
                 && total + p.req.n_samples <= self.max_batch_samples
             {
                 total += p.req.n_samples;
-                group.push(p);
+                group.push(lane.pop_front().expect("front was just Some"));
             } else {
-                rest.push_back(p);
+                break;
             }
         }
-        self.queue = rest;
+        self.len -= group.len();
+        let leftover_head_seq = lane.front().map(|p| p.seq);
+        match leftover_head_seq {
+            None => {
+                self.lanes.remove(&key);
+            }
+            Some(hs) => {
+                // Budget-capped: re-file the key by its NEW head's arrival
+                // order, keeping `key_fifo` sorted by head seq — so a
+                // leftover enqueued after another key's head does NOT cut
+                // in front of it (exactly the old linear scan's ordering,
+                // which left leftovers in their original queue positions;
+                // pinning this at the front instead would let a sustained
+                // same-key stream starve every other key). O(distinct
+                // keys) worst case, and only on the capped path.
+                let pos = self.key_fifo.partition_point(|k| {
+                    self.lanes[k]
+                        .front()
+                        .expect("key_fifo lanes are nonempty by invariant")
+                        .seq
+                        < hs
+                });
+                self.key_fifo.insert(pos, key.clone());
+            }
+        }
         Some((key, group))
     }
 }
@@ -107,6 +197,97 @@ mod tests {
         assert_eq!(g[0].req.n_samples, 1000);
     }
 
+    /// FIFO across interleaved keys: three keys arriving interleaved must
+    /// dispatch in oldest-head order, each batch containing every arrival
+    /// of its key (including ones enqueued after other keys), and the lane
+    /// index must track the structure exactly — the structural form of the
+    /// "no O(queue) scan" claim.
+    #[test]
+    fn interleaved_keys_dispatch_fifo_with_indexed_lanes() {
+        let mut b: Batcher<usize> = Batcher::new(1000);
+        let ka = req("m", SolverKind::Tab(3), 10, 1);
+        let kb = req("m", SolverKind::Tab(2), 10, 1);
+        let kc = req("m", SolverKind::Tab(1), 10, 1);
+        // Arrival order: a b a c b a  — lanes a:[0,2,5] b:[1,4] c:[3].
+        for (r, tag) in
+            [(&ka, 0usize), (&kb, 1), (&ka, 2), (&kc, 3), (&kb, 4), (&ka, 5)]
+        {
+            b.push(r.clone(), tag);
+        }
+        assert_eq!(b.len(), 6);
+        assert_eq!(b.pending_keys(), 3);
+        assert_eq!(b.pending_for(&ka.batch_key()), 3);
+        assert_eq!(b.pending_for(&kb.batch_key()), 2);
+        assert_eq!(b.pending_for(&kc.batch_key()), 1);
+
+        let (key, g) = b.pop_batch().unwrap();
+        assert_eq!(key, ka.batch_key(), "oldest request picks the key");
+        assert_eq!(g.iter().map(|p| p.tag).collect::<Vec<_>>(), vec![0, 2, 5]);
+        // Popping lane a must not have disturbed lanes b and c.
+        assert_eq!(b.pending_keys(), 2);
+        assert_eq!(b.pending_for(&ka.batch_key()), 0);
+        assert_eq!(b.pending_for(&kb.batch_key()), 2);
+
+        let (key, g) = b.pop_batch().unwrap();
+        assert_eq!(key, kb.batch_key());
+        assert_eq!(g.iter().map(|p| p.tag).collect::<Vec<_>>(), vec![1, 4]);
+        let (key, g) = b.pop_batch().unwrap();
+        assert_eq!(key, kc.batch_key());
+        assert_eq!(g.iter().map(|p| p.tag).collect::<Vec<_>>(), vec![3]);
+        assert!(b.pop_batch().is_none());
+        assert_eq!(b.pending_keys(), 0);
+        assert_eq!(b.len(), 0);
+    }
+
+    /// When a capped lane's leftovers really are the oldest requests, they
+    /// keep the front of the queue and dispatch before any younger key,
+    /// across repeated pops, with the max-batch cap honored every time.
+    #[test]
+    fn budget_capped_lane_stays_at_the_front() {
+        let mut b: Batcher<usize> = Batcher::new(20);
+        for i in 0..5 {
+            b.push(req("m", SolverKind::Tab(3), 10, 10), i);
+        }
+        b.push(req("m", SolverKind::Tab(1), 10, 10), 99); // younger key
+        let (_, g) = b.pop_batch().unwrap();
+        assert_eq!(g.iter().map(|p| p.tag).collect::<Vec<_>>(), vec![0, 1]);
+        let (_, g) = b.pop_batch().unwrap();
+        assert_eq!(
+            g.iter().map(|p| p.tag).collect::<Vec<_>>(),
+            vec![2, 3],
+            "capped leftovers must dispatch before the younger key"
+        );
+        let (_, g) = b.pop_batch().unwrap();
+        assert_eq!(g.iter().map(|p| p.tag).collect::<Vec<_>>(), vec![4]);
+        let (_, g) = b.pop_batch().unwrap();
+        assert_eq!(g.iter().map(|p| p.tag).collect::<Vec<_>>(), vec![99]);
+        assert!(b.pop_batch().is_none());
+    }
+
+    /// The starvation regression: leftovers of a budget-capped lane that
+    /// arrived AFTER another key's head must not cut in front of it. The
+    /// capped key is re-filed by its new head's arrival order, so the
+    /// dispatch order matches what the old in-place linear scan produced.
+    #[test]
+    fn budget_capped_leftovers_do_not_starve_older_keys() {
+        let mut b: Batcher<usize> = Batcher::new(20);
+        // Arrivals: A1(15) B1(10) A2(15) — A2 cannot join A1's batch.
+        b.push(req("m", SolverKind::Tab(3), 10, 15), 0); // A1
+        b.push(req("m", SolverKind::Tab(2), 10, 10), 1); // B1
+        b.push(req("m", SolverKind::Tab(3), 10, 15), 2); // A2
+        let (_, g) = b.pop_batch().unwrap();
+        assert_eq!(g.iter().map(|p| p.tag).collect::<Vec<_>>(), vec![0]);
+        let (_, g) = b.pop_batch().unwrap();
+        assert_eq!(
+            g.iter().map(|p| p.tag).collect::<Vec<_>>(),
+            vec![1],
+            "B1 is older than A's leftover and must dispatch first"
+        );
+        let (_, g) = b.pop_batch().unwrap();
+        assert_eq!(g.iter().map(|p| p.tag).collect::<Vec<_>>(), vec![2]);
+        assert!(b.pop_batch().is_none());
+    }
+
     #[test]
     fn prop_every_request_dispatched_once_with_matching_key() {
         run_prop("batcher bijection", 29, 40, |rng: &mut Rng| {
@@ -131,6 +312,7 @@ mod tests {
                 }
             }
             assert!(seen.iter().all(|&s| s), "some requests never dispatched");
+            assert_eq!(b.pending_keys(), 0, "drained batcher must hold no lanes");
         });
     }
 }
