@@ -202,15 +202,46 @@ fn main() {
             reg,
         );
         log(bench_for("scheduler 64-flight contended (n=2, 4 workers)", budget, || {
+            run_contended_single_model(&coord);
+        }));
+        coord.shutdown();
+    }
+
+    // --- L3: sharded scheduler, multi-model contention ----------------------
+    {
+        // Same 64-flight contended shape, but split over 4 registered
+        // models: with per-model sharding each model's 16 flights run on
+        // their own mutex/ready-index/queue, so this row vs the
+        // single-model row above quantifies the sharding win (and the
+        // worker-stealing overhead) under identical total work.
+        let mut reg = ModelRegistry::new();
+        for name in ["gmm2d_a", "gmm2d_b", "gmm2d_c", "gmm2d_d"] {
+            reg.insert(name, Arc::new(GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp())));
+        }
+        let coord = Coordinator::new(
+            CoordinatorConfig { workers: 4, ..Default::default() },
+            reg,
+        );
+        log(bench_for("scheduler 4-model contended (n=2, 4 workers)", budget, || {
             let kinds =
                 [SolverKind::Tab(1), SolverKind::Tab(2), SolverKind::Dpm(1), SolverKind::Euler];
+            let names = ["gmm2d_a", "gmm2d_b", "gmm2d_c", "gmm2d_d"];
             let rxs: Vec<_> = (0..64)
                 .map(|i| {
-                    // Distinct (solver, nfe) per submission: no admission
-                    // merging, so all 64 trajectories occupy their own
-                    // flight slots and contend on the scheduler state.
-                    let mut req =
-                        SampleRequest::new("gmm2d", kinds[i % kinds.len()], 8 + i / 4, 2);
+                    // 16 flights per model, every (solver, nfe) distinct
+                    // within its model: no admission merging, so all 64
+                    // trajectories hold their own flight slots — but spread
+                    // over 4 shards instead of contending on one lock.
+                    // Model i%4 gets flight j = i/4 with nfe 8+j, which
+                    // reproduces the single-model row's exact nfe multiset
+                    // (each of 8..=23 four times) so the two rows time
+                    // identical total work.
+                    let mut req = SampleRequest::new(
+                        names[i % 4],
+                        kinds[(i / 4) % 4],
+                        8 + i / 4,
+                        2,
+                    );
                     req.seed = i as u64;
                     coord.submit(req)
                 })
@@ -225,5 +256,24 @@ fn main() {
     drop(log);
     if let Err(e) = json.flush() {
         eprintln!("warning: could not write BENCH_hotpath.json: {e}");
+    }
+}
+
+/// The PR-4 contended row body, factored so the single-model and 4-model
+/// rows time the same request shape.
+fn run_contended_single_model(coord: &Coordinator) {
+    let kinds = [SolverKind::Tab(1), SolverKind::Tab(2), SolverKind::Dpm(1), SolverKind::Euler];
+    let rxs: Vec<_> = (0..64)
+        .map(|i| {
+            // Distinct (solver, nfe) per submission: no admission merging,
+            // so all 64 trajectories occupy their own flight slots and
+            // contend on the (single) shard's scheduler state.
+            let mut req = SampleRequest::new("gmm2d", kinds[i % kinds.len()], 8 + i / 4, 2);
+            req.seed = i as u64;
+            coord.submit(req)
+        })
+        .collect();
+    for rx in rxs {
+        black_box(rx.recv().unwrap().unwrap());
     }
 }

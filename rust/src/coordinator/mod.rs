@@ -1,47 +1,73 @@
-//! L3 coordinator: the serving engine.
+//! L3 coordinator: the serving engine, sharded by model.
 //!
-//! Architecture (continuous-batching-shaped, scaled to a sampling service):
+//! Architecture (continuous-batching-shaped, scaled to a sampling service
+//! that serves many named models at once):
 //!
 //! ```text
-//!   submit() ──> bounded queue ──> admission (group by BatchKey)
-//!                                     │ trajectory groups (StepCursor each)
-//!                             step-level scheduler
-//!                      (bucket pending evals by (model, t))
-//!                                     │ one merged ε-eval per bucket
-//!                              worker thread pool
-//!                                     │ scatter eps, advance cursors
-//!                          per-request slices ──> response channels
+//!   submit() ── atomic admission (global + per-model caps, no lock)
+//!       │            ShardMap: model name ──> shard   (shared-read router)
+//!       ├────────────────┬──────────────────┐
+//!   shard "imgnet"   shard "gmm2d"     shard "ffhq"      (one per model,
+//!   ┌ own mutex ┐    ┌ own mutex ┐    ┌ own mutex ┐       created lazily)
+//!   │ Batcher   │    │ Batcher   │    │ Batcher   │  admission, key-merged
+//!   │ flights   │    │ flights   │    │ flights   │  trajectory groups
+//!   │ ready idx │    │ ready idx │    │ ready idx │  (t)-buckets + heap
+//!   └───────────┘    └───────────┘    └───────────┘
+//!         ╰───────────── worker pool ─────────────╯
+//!      affinity shard first, steal from the busiest;
+//!      gather / merged ε-eval / scatter / advance run OFF-lock
 //! ```
 //!
-//! Two merging layers. At **admission**, requests that share (model, sde,
-//! solver, grid, t0, NFE) are stacked into one state matrix — DEIS's
-//! batch-reusable coefficients make the extra rows nearly free. At the
-//! **step level** (`scheduler` module), every in-flight trajectory group
-//! yields its pending ε-evaluation through the resumable [`StepCursor`]
-//! API, and evals that land on the same `(model, t)` are dispatched as one
-//! merged network call — amortizing the dominant per-step cost across
-//! requests that admission-time keying could never merge. Cursorization is
-//! universal (there is no blocking whole-trajectory path), so **all**
-//! traffic is co-batchable. Python is never involved; the model registry
-//! maps names to [`EpsModel`] backends (PJRT / native / analytic).
+//! Step-level co-batching can only merge ε-evals that share `(model, t)` —
+//! a cross-model merge is impossible by construction — so scheduler state
+//! is partitioned by model: each registered model gets its own [`Shard`]
+//! (mutex + admission queue + flight slots + ready index + deadline sweep),
+//! created on first use. Requests for model A never touch model B's lock:
+//! routing is a shared read-lock map lookup in [`Coordinator::submit`],
+//! admission control is a pair of atomic counters (global and per-shard
+//! caps), and workers *scan* for work through per-shard load atomics,
+//! locking only the shard they take work from. A fleet serving k models
+//! runs its scheduler bookkeeping on k independent mutexes; a single-model
+//! hot spot still uses every worker through load-based stealing (see
+//! `scheduler.rs`).
+//!
+//! Two merging layers per shard. At **admission**, requests that share
+//! (model, sde, solver, grid, t0, NFE) are stacked into one state matrix —
+//! DEIS's batch-reusable coefficients make the extra rows nearly free; the
+//! [`Batcher`](batcher::Batcher) indexes its queue per key, so popping a
+//! merged group is O(group), not O(queue). At the **step level**, every
+//! in-flight trajectory group yields its pending ε-evaluation through the
+//! resumable [`StepCursor`] API, and evals that land on the same `t` are
+//! dispatched as one merged network call. Cursorization is universal, so
+//! **all** traffic is co-batchable. Python is never involved; the model
+//! registry maps names to [`EpsModel`] backends (PJRT / native / analytic).
 //!
 //! The per-config (grid, coefficient) plans behind the cursors come from a
 //! shared [`PlanCache`](crate::solvers::PlanCache): `submit` resolves the
 //! plan on the submitting thread (a map lookup in the steady state) and
-//! attaches it to the queued request, so admission under the coordinator
-//! mutex does no grid or quadrature work at all.
+//! attaches it to the queued request, so admission under a shard mutex
+//! does no grid or quadrature work at all.
 //!
-//! The coordinator mutex itself guards routing state only. Workers check
-//! member flights *out of their slots*, so input gather, the model call,
-//! the eps scatter and `cursor.advance()` — every O(rows·dim) cost,
-//! including stochastic noise draws — run lock-free; a short re-lock
-//! re-slots the flights. Under the lock the scheduler consults a ready
-//! index ((model, t) buckets + an oldest-first heap + a free-slot list)
-//! instead of scanning flight slots, and admission's prior draw + cursor
-//! instantiation also run off-lock between two short critical sections.
-//! See `scheduler.rs` for the design and its invariants.
+//! Each shard mutex guards routing state only. Workers check member
+//! flights *out of their slots*, so input gather, the model call, the eps
+//! scatter and `cursor.advance()` — every O(rows·dim) cost, including
+//! stochastic noise draws — run lock-free; a short re-lock re-slots the
+//! flights. Under the lock the scheduler consults a ready index
+//! ((t)-buckets + an oldest-first heap + a free-slot list) instead of
+//! scanning flight slots, and admission's prior draw + cursor instantiation
+//! also run off-lock between two short critical sections — with the wake
+//! rail fanning a burst of distinct keys across idle workers so group
+//! builds for the *same* shard proceed concurrently. See `scheduler.rs`
+//! for the design and its invariants.
+//!
+//! Observability is sharded too: global [`Stats`] stay authoritative for
+//! the aggregate, and every shard records the same lifecycle/occupancy
+//! counters into its own [`ModelStats`], surfaced as
+//! [`StatsSnapshot::per_model`] and the additive `per_model` key of the
+//! `{"cmd":"stats"}` wire reply.
 //!
 //! [`StepCursor`]: crate::solvers::StepCursor
+//! [`Shard`]: scheduler::Shard
 //!
 //! Offline-registry note: built on std::thread + channels (no tokio).
 
@@ -51,16 +77,18 @@ mod scheduler;
 pub mod stats;
 
 pub use request::{BatchKey, SampleRequest, SampleResult};
-pub use stats::{Stats, StatsSnapshot};
+pub use stats::{ModelStats, ModelStatsSnapshot, Stats, StatsSnapshot};
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::score::EpsModel;
 use crate::solvers::PlanCache;
+
+use self::scheduler::{ShardMap, WakeRail};
 
 /// Model registry: name -> eps backend.
 #[derive(Default)]
@@ -94,15 +122,25 @@ pub struct CoordinatorConfig {
     /// Max merged samples per solver run / merged ε-eval (PJRT artifact cap
     /// is 1024; larger batches chunk inside the backend anyway).
     pub max_batch_samples: usize,
-    /// Backpressure bound: submissions beyond this many unanswered requests
-    /// are rejected immediately with an "overloaded" error instead of
-    /// growing the queue without limit.
+    /// Global backpressure bound: submissions beyond this many unanswered
+    /// requests (across all models) are rejected immediately with an
+    /// "overloaded" error instead of growing the queues without limit.
     pub max_inflight_requests: usize,
+    /// Per-model backpressure bound: one model's traffic beyond this many
+    /// unanswered requests is rejected even when the global bound has room,
+    /// so a single hot model cannot starve every other shard out of the
+    /// global budget.
+    pub max_inflight_per_model: usize,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { workers: 2, max_batch_samples: 1024, max_inflight_requests: 4096 }
+        CoordinatorConfig {
+            workers: 2,
+            max_batch_samples: 1024,
+            max_inflight_requests: 4096,
+            max_inflight_per_model: 4096,
+        }
     }
 }
 
@@ -115,15 +153,23 @@ pub(crate) type Responder = SyncSender<anyhow::Result<SampleResult>>;
 pub const MAX_REQUEST_NFE: usize = 8192;
 
 pub(crate) struct Shared {
-    pub(crate) state: Mutex<scheduler::SchedState>,
-    pub(crate) cv: Condvar,
+    /// Per-model scheduler shards, created lazily from the registry.
+    pub(crate) shards: ShardMap,
+    /// Global worker sleep/wake rail (generation-counted, lost-wakeup-free).
+    pub(crate) wake: WakeRail,
     pub(crate) shutdown: AtomicBool,
     pub(crate) registry: ModelRegistry,
     pub(crate) stats: Stats,
-    pub(crate) max_batch_samples: usize,
     pub(crate) max_inflight: usize,
-    /// Shared (grid, coefficients) plans, resolved at submit time so the
-    /// coordinator mutex never sees grid or quadrature work.
+    pub(crate) max_inflight_per_model: usize,
+    /// Requests admitted past submit and not yet answered — the global
+    /// backpressure reservation. One fetch_add at submit, one fetch_sub
+    /// when the response is sent; queued, slotted, checked-out and
+    /// mid-admission parts are all covered by the single reservation, so
+    /// admission control is O(1) and takes no lock anywhere.
+    pub(crate) inflight_parts: AtomicUsize,
+    /// Shared (grid, coefficients) plans, resolved at submit time so no
+    /// shard mutex ever sees grid or quadrature work.
     pub(crate) plan_cache: PlanCache,
 }
 
@@ -135,86 +181,119 @@ pub struct Coordinator {
 impl Coordinator {
     pub fn new(cfg: CoordinatorConfig, registry: ModelRegistry) -> Coordinator {
         let shared = Arc::new(Shared {
-            state: Mutex::new(scheduler::SchedState::new(cfg.max_batch_samples)),
-            cv: Condvar::new(),
+            shards: ShardMap::new(cfg.max_batch_samples.max(1)),
+            wake: WakeRail::new(),
             shutdown: AtomicBool::new(false),
             registry,
             stats: Stats::default(),
-            max_batch_samples: cfg.max_batch_samples.max(1),
             max_inflight: cfg.max_inflight_requests.max(1),
+            max_inflight_per_model: cfg.max_inflight_per_model.max(1),
+            inflight_parts: AtomicUsize::new(0),
             plan_cache: PlanCache::new(),
         });
         let workers = (0..cfg.workers.max(1))
-            .map(|_| {
+            .map(|widx| {
                 let sh = shared.clone();
-                std::thread::spawn(move || scheduler::worker_loop(sh))
+                std::thread::spawn(move || scheduler::worker_loop(sh, widx))
             })
             .collect();
         Coordinator { shared, workers }
     }
 
-    /// Non-blocking submit; the receiver yields the result. Overload,
-    /// invalid configurations and pre-expired deadlines are reported through
-    /// the receiver as errors.
+    /// Non-blocking submit; the receiver yields the result. Overload
+    /// (global or per-model), unknown model names, invalid configurations
+    /// and pre-expired deadlines are reported through the receiver as
+    /// errors — every refusal counts into `rejected` (or `expired`), so the
+    /// lifecycle counters always balance.
     ///
-    /// Plan resolution happens HERE, on the submitting thread: a shared
+    /// The hot path takes no coordinator-wide lock at all: admission
+    /// control is two atomic reservations, shard routing is a shared read
+    /// lock (exclusive only on a model's first sighting), and plan
+    /// resolution happens HERE, on the submitting thread — a shared
     /// [`PlanCache`] lookup in the steady state, a (concurrency-friendly)
-    /// build on the first sighting of a config. The coordinator mutex is
-    /// only taken afterwards, for the queue push — the heavy polynomial-
-    /// integral work of solver construction never runs under it.
+    /// build on the first sighting of a config. Only the owning shard's
+    /// mutex is taken at the end, for the queue push.
     pub fn submit(&self, req: SampleRequest) -> Receiver<anyhow::Result<SampleResult>> {
         let (tx, rx) = sync_channel(1);
-        self.shared.stats.requests.fetch_add(1, Ordering::Relaxed);
+        let sh = &*self.shared;
+        sh.stats.requests.fetch_add(1, Ordering::Relaxed);
         let deadline = req.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
-        let reject_overloaded = |inflight: usize| {
-            self.shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
-            let _ = tx.send(Err(anyhow::anyhow!(
-                "coordinator overloaded: {inflight} requests in flight (max {}); retry later",
-                self.shared.max_inflight
-            )));
-        };
         // Cheap request sanity BEFORE any plan work: nfe comes off the wire
-        // and sizes the grid allocation + coefficient quadrature. Counted
-        // as `rejected` so stats account for every refused request.
+        // and sizes the grid allocation + coefficient quadrature.
         if req.nfe > MAX_REQUEST_NFE {
-            self.shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            sh.stats.rejected.fetch_add(1, Ordering::Relaxed);
             let _ = tx.send(Err(anyhow::anyhow!(
                 "nfe {} out of range (max {MAX_REQUEST_NFE})",
                 req.nfe
             )));
             return rx;
         }
-        // Early shed: an overloaded coordinator must reject without paying
-        // for plan resolution (a plan build is the most expensive thing a
-        // request can trigger). The bound is re-checked at the queue push.
-        {
-            let st = self.shared.state.lock().unwrap();
-            let inflight = st.inflight_requests();
-            if inflight >= self.shared.max_inflight {
-                drop(st);
-                reject_overloaded(inflight);
+        // Global admission: reserve one in-flight slot atomically. An
+        // overloaded coordinator must shed BEFORE paying for routing or
+        // plan resolution (a plan build is the most expensive thing a
+        // request can trigger). The reservation is released when the
+        // response is sent — wherever that happens.
+        let cur = sh.inflight_parts.fetch_add(1, Ordering::SeqCst);
+        if cur >= sh.max_inflight {
+            sh.inflight_parts.fetch_sub(1, Ordering::SeqCst);
+            sh.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(Err(anyhow::anyhow!(
+                "coordinator overloaded: {cur} requests in flight (max {}); retry later",
+                sh.max_inflight
+            )));
+            return rx;
+        }
+        // Route to the model's shard (created lazily from the registry on
+        // first sighting). Unknown models are refused here — no shard, no
+        // queue occupancy, no plan work — with the same error text the
+        // admission path used to produce.
+        let shard = match sh.shards.get_or_create(&req.model, &sh.registry) {
+            Some(s) => s,
+            None => {
+                sh.inflight_parts.fetch_sub(1, Ordering::SeqCst);
+                sh.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(Err(anyhow::anyhow!("unknown model '{}'", req.model)));
                 return rx;
             }
+        };
+        shard.stats.requests.fetch_add(1, Ordering::Relaxed);
+        // Per-model admission: same reservation discipline against the
+        // shard's own counter, so one hot model sheds before it can occupy
+        // the whole global budget.
+        let scur = shard.inflight.fetch_add(1, Ordering::SeqCst);
+        if scur >= sh.max_inflight_per_model {
+            shard.inflight.fetch_sub(1, Ordering::SeqCst);
+            sh.inflight_parts.fetch_sub(1, Ordering::SeqCst);
+            sh.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            shard.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(Err(anyhow::anyhow!(
+                "model '{}' overloaded: {scur} requests in flight (max {}); retry later",
+                req.model,
+                sh.max_inflight_per_model
+            )));
+            return rx;
         }
         // Grid/solver constructors assert on malformed configs (t0 out of
         // range, too few steps for PNDM, ...); turn panics into per-request
         // errors. No lock is held, so nothing can be poisoned.
         let built = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            self.shared
-                .plan_cache
-                .get_or_build(&req.sde, req.solver, req.grid, req.t0, req.nfe)
+            sh.plan_cache.get_or_build(&req.sde, req.solver, req.grid, req.t0, req.nfe)
         }));
         let plan = match built {
             Ok((plan, hit)) => {
                 let ctr = if hit {
-                    &self.shared.stats.plan_cache_hits
+                    &sh.stats.plan_cache_hits
                 } else {
-                    &self.shared.stats.plan_cache_misses
+                    &sh.stats.plan_cache_misses
                 };
                 ctr.fetch_add(1, Ordering::Relaxed);
                 plan
             }
             Err(_) => {
+                shard.inflight.fetch_sub(1, Ordering::SeqCst);
+                sh.inflight_parts.fetch_sub(1, Ordering::SeqCst);
+                sh.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                shard.stats.rejected.fetch_add(1, Ordering::Relaxed);
                 let _ = tx.send(Err(anyhow::anyhow!(
                     "invalid sampling configuration for solver '{}' (nfe {}, t0 {}): \
                      grid/solver constraints violated",
@@ -226,16 +305,11 @@ impl Coordinator {
             }
         };
         {
-            let mut st = self.shared.state.lock().unwrap();
-            let inflight = st.inflight_requests();
-            if inflight >= self.shared.max_inflight {
-                drop(st);
-                reject_overloaded(inflight);
-                return rx;
-            }
+            let mut st = shard.lock();
             st.queue.push(req, (tx, Instant::now(), deadline, plan));
+            shard.publish_load(&st);
         }
-        self.shared.cv.notify_one();
+        sh.wake.wake();
         rx
     }
 
@@ -244,17 +318,48 @@ impl Coordinator {
         self.submit(req).recv().expect("coordinator dropped response channel")
     }
 
+    /// Aggregate counters plus the per-model (per-shard) breakdown, sorted
+    /// by model name.
     pub fn stats(&self) -> StatsSnapshot {
-        self.shared.stats.snapshot()
+        let mut snap = self.shared.stats.snapshot();
+        snap.per_model = self.shared.shards.per_model_snapshots();
+        snap
     }
 
     pub fn models(&self) -> Vec<String> {
         self.shared.registry.names()
     }
 
+    #[cfg(test)]
+    pub(crate) fn shard_count(&self) -> usize {
+        self.shared.shards.count()
+    }
+
+    /// Block until every worker is parked on the wake rail (no tick is
+    /// mid-scan with a stale load hint) — the deterministic quiescence
+    /// point for shard-isolation assertions.
+    #[cfg(test)]
+    pub(crate) fn quiesce_workers(&self) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while self.shared.wake.waiters() < self.workers.len() {
+            assert!(Instant::now() < deadline, "workers failed to quiesce within 10s");
+            std::thread::yield_now();
+        }
+    }
+
+    /// Times a shard's mutex has been acquired (0 for absent shards) — the
+    /// shard-isolation assertion hook.
+    #[cfg(test)]
+    pub(crate) fn shard_lock_count(&self, name: &str) -> u64 {
+        self.shared
+            .shards
+            .get(name)
+            .map_or(0, |s| s.lock_acquisitions.load(Ordering::Relaxed))
+    }
+
     pub fn shutdown(self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
-        self.shared.cv.notify_all();
+        self.shared.wake.wake();
         for w in self.workers {
             let _ = w.join();
         }
@@ -293,6 +398,70 @@ mod tests {
         let c = Coordinator::new(CoordinatorConfig::default(), registry());
         let err = c.sample_blocking(SampleRequest::new("nope", SolverKind::Tab(0), 5, 4));
         assert!(err.is_err());
+        assert!(
+            err.unwrap_err().to_string().contains("unknown model"),
+            "unknown-model error text must be preserved"
+        );
+        let s = c.stats();
+        assert_eq!(s.rejected, 1, "unknown-model refusals count as rejected");
+        assert_eq!(s.requests, s.completed + s.rejected + s.expired);
+        c.shutdown();
+    }
+
+    #[test]
+    fn shards_are_created_lazily_per_model() {
+        let mut r = registry();
+        r.insert("gmm2d_b", Arc::new(GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp())));
+        let c = Coordinator::new(CoordinatorConfig::default(), r);
+        assert_eq!(c.shard_count(), 0, "no shards before any traffic");
+        c.sample_blocking(SampleRequest::new("gmm2d", SolverKind::Tab(0), 5, 4)).unwrap();
+        assert_eq!(c.shard_count(), 1, "first request creates its model's shard");
+        c.sample_blocking(SampleRequest::new("gmm2d", SolverKind::Tab(0), 5, 4)).unwrap();
+        assert_eq!(c.shard_count(), 1, "repeat traffic reuses the shard");
+        c.sample_blocking(SampleRequest::new("gmm2d_b", SolverKind::Tab(0), 5, 4)).unwrap();
+        assert_eq!(c.shard_count(), 2);
+        // Unknown models create nothing (and still error — see above).
+        let _ = c.sample_blocking(SampleRequest::new("nope", SolverKind::Tab(0), 5, 4));
+        assert_eq!(c.shard_count(), 2);
+        // The per-model breakdown mirrors the shards, sorted by name.
+        let s = c.stats();
+        let names: Vec<&str> = s.per_model.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["gmm2d", "gmm2d_b"]);
+        assert_eq!(s.per_model[0].1.completed, 2);
+        assert_eq!(s.per_model[1].1.completed, 1);
+        c.shutdown();
+    }
+
+    /// The sharding contract itself: traffic at model A must never take
+    /// model B's shard lock. Proven by the lock-acquisition counter — B's
+    /// count freezes once B's own traffic drains, no matter how much A
+    /// traffic follows.
+    #[test]
+    fn foreign_model_traffic_never_takes_an_idle_shards_lock() {
+        let mut r = registry();
+        r.insert("cold", Arc::new(GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp())));
+        let c = Coordinator::new(
+            CoordinatorConfig { workers: 4, ..Default::default() },
+            r,
+        );
+        c.sample_blocking(SampleRequest::new("cold", SolverKind::Tab(1), 6, 4)).unwrap();
+        c.sample_blocking(SampleRequest::new("gmm2d", SolverKind::Tab(1), 6, 4)).unwrap();
+        // Quiesce: once every worker is parked on the wake rail, no tick
+        // can still hold a stale load hint for the cold shard — and cold's
+        // load stays 0 from here on, so its lock count must freeze.
+        c.quiesce_workers();
+        let frozen = c.shard_lock_count("cold");
+        assert!(frozen > 0, "cold's own traffic must have locked its shard");
+        for i in 0..24 {
+            let mut q = SampleRequest::new("gmm2d", SolverKind::Tab(2), 8, 4);
+            q.seed = i;
+            c.sample_blocking(q).unwrap();
+        }
+        assert_eq!(
+            c.shard_lock_count("cold"),
+            frozen,
+            "gmm2d traffic took the idle cold shard's lock"
+        );
         c.shutdown();
     }
 
@@ -332,6 +501,13 @@ mod tests {
         assert_eq!(s.completed, 3);
         assert_eq!(s.samples, 24);
         assert!(s.p50_us > 0);
+        // Per-model mirror of a single-model workload.
+        assert_eq!(s.per_model.len(), 1);
+        let (name, m) = &s.per_model[0];
+        assert_eq!(name, "gmm2d");
+        assert_eq!(m.requests, 3);
+        assert_eq!(m.completed, 3);
+        assert_eq!(m.samples, 24);
         c.shutdown();
     }
 
@@ -379,6 +555,10 @@ mod tests {
         assert!(err.unwrap_err().to_string().contains("out of range"));
         let ok = c.sample_blocking(SampleRequest::new("gmm2d", SolverKind::Tab(0), 5, 4));
         assert!(ok.is_ok(), "coordinator must survive an invalid config");
+        // Both refusals are accounted: the lifecycle balances.
+        let s = c.stats();
+        assert_eq!(s.rejected, 2, "invalid-config and over-cap refusals count as rejected");
+        assert_eq!(s.requests, s.completed + s.rejected + s.expired);
         c.shutdown();
     }
 
@@ -415,7 +595,12 @@ mod tests {
         // Two in-flight slots: the burst beyond them must be rejected, and
         // the rejection must be immediate (error through the receiver).
         let c = Coordinator::new(
-            CoordinatorConfig { workers: 1, max_batch_samples: 1, max_inflight_requests: 2 },
+            CoordinatorConfig {
+                workers: 1,
+                max_batch_samples: 1,
+                max_inflight_requests: 2,
+                ..Default::default()
+            },
             registry(),
         );
         let reqs: Vec<_> = (0..24)
@@ -432,6 +617,58 @@ mod tests {
         let s = c.stats();
         assert_eq!(s.rejected as usize, rejected);
         assert_eq!(s.completed + s.rejected, 24);
+        c.shutdown();
+    }
+
+    #[test]
+    fn per_model_cap_rejects_only_the_hot_model() {
+        // A hot model capped at 2 in-flight requests sheds its burst with a
+        // model-naming overload error while a cold model (and the global
+        // budget) stays wide open.
+        let mut r = ModelRegistry::new();
+        r.insert(
+            "hot",
+            Arc::new(SlowEps(
+                GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp()),
+                std::time::Duration::from_millis(20),
+            )),
+        );
+        r.insert("cold", Arc::new(GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp())));
+        let c = Coordinator::new(
+            CoordinatorConfig {
+                workers: 2,
+                max_batch_samples: 1,
+                max_inflight_requests: 4096,
+                max_inflight_per_model: 2,
+            },
+            r,
+        );
+        let rxs: Vec<_> = (0..8)
+            .map(|i| {
+                let mut q = SampleRequest::new("hot", SolverKind::Tab(1), 6, 2);
+                q.seed = i;
+                c.submit(q)
+            })
+            .collect();
+        // The cold model admits freely while hot is capped out.
+        let cold = c.sample_blocking(SampleRequest::new("cold", SolverKind::Tab(0), 5, 4));
+        assert!(cold.is_ok(), "per-model cap on 'hot' must not shed 'cold' traffic");
+        let results: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        let rejected = results.iter().filter(|r| r.is_err()).count();
+        assert!(rejected > 0, "8 instant submissions over a 2-slot cap must shed");
+        assert!(results.iter().any(|r| r.is_ok()));
+        for r in results.iter().filter(|r| r.is_err()) {
+            let msg = r.as_ref().unwrap_err().to_string();
+            assert!(msg.contains("model 'hot' overloaded"), "{msg}");
+        }
+        let s = c.stats();
+        assert_eq!(s.requests, s.completed + s.rejected + s.expired);
+        let hot = &s.per_model.iter().find(|(n, _)| n == "hot").unwrap().1;
+        let cold_m = &s.per_model.iter().find(|(n, _)| n == "cold").unwrap().1;
+        assert_eq!(hot.rejected as usize, rejected, "per-model rejections attributed to hot");
+        assert_eq!(cold_m.rejected, 0);
+        assert_eq!(cold_m.completed, 1);
+        assert_eq!(hot.requests, hot.completed + hot.rejected + hot.expired);
         c.shutdown();
     }
 

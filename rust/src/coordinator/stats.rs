@@ -2,9 +2,12 @@
 //!
 //! Counter glossary (see also the wire-protocol doc in `server`):
 //!   * `requests` / `completed` / `rejected` / `expired` — request lifecycle.
-//!     `rejected` counts refusals at submit (backpressure overload and
-//!     out-of-range nfe); `expired` counts per-request deadlines that fired
-//!     before completion.
+//!     `rejected` counts refusals at submit (backpressure overload — global
+//!     or per-model — plus out-of-range nfe, unknown model names, and
+//!     invalid sampling configurations); `expired` counts per-request
+//!     deadlines that fired before completion. The lifecycle therefore
+//!     balances: every submitted request lands in exactly one of
+//!     `completed`/`rejected`/`expired`.
 //!   * `batches` / `merged_requests` — admission-time merging: one batch is
 //!     one trajectory group (requests stacked into a shared state matrix).
 //!   * `model_evals` — ε-model calls actually dispatched. Every solver is
@@ -19,7 +22,16 @@
 //!     (`solvers::cache`): a hit means admission reused a previously built
 //!     (grid, coefficients) plan; a miss means the submitting thread built
 //!     one. In the steady state of a serving workload hits dominate and no
-//!     coefficient work happens anywhere near the coordinator mutex.
+//!     coefficient work happens anywhere near a shard mutex.
+//!
+//! The coordinator is sharded by model (one scheduler shard per registered
+//! model, see `coordinator/scheduler.rs`), and each shard additionally
+//! records its own [`ModelStats`] — the same lifecycle/merging/occupancy
+//! counters, scoped to one model. [`StatsSnapshot::per_model`] carries the
+//! per-shard snapshots (sorted by model name); the global counters above
+//! remain authoritative for the aggregate, and refusals that cannot be
+//! attributed to a shard (global-overload rejections, out-of-range nfe,
+//! unknown model names) appear only in the global `rejected`.
 //!
 //! Latency aggregation is a [`LatencyHistogram`]: a fixed array of log-
 //! bucketed `AtomicU64` counters, so `record_latency` is three relaxed
@@ -146,6 +158,80 @@ impl LatencyHistogram {
     }
 }
 
+/// Per-model (per-shard) serving counters: the shard-attributable subset of
+/// [`Stats`], recorded by exactly one scheduler shard each — so recording
+/// never contends across models. `rejected` here counts only refusals made
+/// *after* shard resolution (per-model overload, invalid configurations);
+/// global-overload/unknown-model/over-cap-nfe refusals have no shard and
+/// live only in the global counters.
+#[derive(Default)]
+pub struct ModelStats {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub expired: AtomicU64,
+    pub samples: AtomicU64,
+    pub batches: AtomicU64,
+    pub merged_requests: AtomicU64,
+    pub model_evals: AtomicU64,
+    pub sched_evals: AtomicU64,
+    pub sched_eval_requests: AtomicU64,
+    pub max_occupancy: AtomicU64,
+}
+
+/// Point-in-time copy of one model's [`ModelStats`], carried in
+/// [`StatsSnapshot::per_model`] and serialized additively under the
+/// `per_model` key of the `{"cmd":"stats"}` wire reply.
+#[derive(Clone, Debug, Default)]
+pub struct ModelStatsSnapshot {
+    pub requests: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub expired: u64,
+    pub samples: u64,
+    pub batches: u64,
+    pub merged_requests: u64,
+    pub model_evals: u64,
+    pub sched_evals: u64,
+    pub sched_eval_requests: u64,
+    /// Mean requests served per scheduled ε-eval of this model's shard.
+    pub eval_occupancy: f64,
+    pub max_occupancy: u64,
+}
+
+impl ModelStats {
+    /// Record one scheduler-merged ε-eval of this shard that served
+    /// `requests` client requests in a single model call.
+    pub fn record_sched_eval(&self, requests: u64) {
+        self.sched_evals.fetch_add(1, Ordering::Relaxed);
+        self.sched_eval_requests.fetch_add(requests, Ordering::Relaxed);
+        self.max_occupancy.fetch_max(requests, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> ModelStatsSnapshot {
+        let sched_evals = self.sched_evals.load(Ordering::Relaxed);
+        let sched_eval_requests = self.sched_eval_requests.load(Ordering::Relaxed);
+        ModelStatsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            samples: self.samples.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            merged_requests: self.merged_requests.load(Ordering::Relaxed),
+            model_evals: self.model_evals.load(Ordering::Relaxed),
+            sched_evals,
+            sched_eval_requests,
+            eval_occupancy: if sched_evals == 0 {
+                0.0
+            } else {
+                sched_eval_requests as f64 / sched_evals as f64
+            },
+            max_occupancy: self.max_occupancy.load(Ordering::Relaxed),
+        }
+    }
+}
+
 #[derive(Default)]
 pub struct Stats {
     pub requests: AtomicU64,
@@ -188,6 +274,10 @@ pub struct StatsSnapshot {
     pub p99_us: u64,
     /// Exact mean latency (sum/count, not bucketed).
     pub mean_us: f64,
+    /// Per-model shard counters, sorted by model name. Filled by
+    /// `Coordinator::stats` (the shard map owns the per-model recorders);
+    /// empty on a bare `Stats::snapshot()`.
+    pub per_model: Vec<(String, ModelStatsSnapshot)>,
 }
 
 impl Stats {
@@ -230,6 +320,7 @@ impl Stats {
             p50_us: self.latency_us.quantile(0.5),
             p99_us: self.latency_us.quantile(0.99),
             mean_us: self.latency_us.mean(),
+            per_model: Vec::new(),
         }
     }
 }
@@ -269,6 +360,24 @@ mod tests {
         assert_eq!(snap.sched_eval_requests, 6);
         assert!((snap.eval_occupancy - 2.0).abs() < 1e-12);
         assert_eq!(snap.max_occupancy, 3);
+    }
+
+    #[test]
+    fn per_model_stats_snapshot_and_occupancy() {
+        let m = ModelStats::default();
+        assert_eq!(m.snapshot().eval_occupancy, 0.0);
+        m.record_sched_eval(2);
+        m.record_sched_eval(4);
+        m.requests.store(6, Ordering::Relaxed);
+        let snap = m.snapshot();
+        assert_eq!(snap.requests, 6);
+        assert_eq!(snap.sched_evals, 2);
+        assert_eq!(snap.sched_eval_requests, 6);
+        assert!((snap.eval_occupancy - 3.0).abs() < 1e-12);
+        assert_eq!(snap.max_occupancy, 4);
+        // A bare global snapshot carries no per-model rows; the shard map
+        // fills them in `Coordinator::stats`.
+        assert!(Stats::default().snapshot().per_model.is_empty());
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   serve   --addr 127.0.0.1:7878 --workers 4 --models gmm2d,gmm2d_exact
 //!           [--max-batch 1024] [--max-inflight 4096]
+//!           [--max-inflight-per-model 4096]
 //!   sample  --model gmm2d_exact --solver tab3 --nfe 10 --n 1000 [--metric]
 //!   info    (artifact + platform inventory)
 
@@ -40,10 +41,14 @@ fn main() -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let models = args.list_or("models", "gmm2d,gmm2d_exact,gmm2d_oracle");
     let reg = default_registry(&models)?;
+    let max_inflight = args.usize_or("max-inflight", 4096);
     let cfg = CoordinatorConfig {
         workers: args.usize_or("workers", 4),
         max_batch_samples: args.usize_or("max-batch", 1024),
-        max_inflight_requests: args.usize_or("max-inflight", 4096),
+        max_inflight_requests: max_inflight,
+        // One model may not hog the whole global budget; defaults to the
+        // global bound (i.e. no extra cap) unless narrowed explicitly.
+        max_inflight_per_model: args.usize_or("max-inflight-per-model", max_inflight),
     };
     let coord = Arc::new(Coordinator::new(cfg, reg));
     let addr = server::serve(coord, &args.str_or("addr", "127.0.0.1:7878"))?;

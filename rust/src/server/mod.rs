@@ -41,7 +41,28 @@
 //! means each scheduled network call served k requests on average), the
 //! shared solver-plan cache (`plan_cache_hits`, `plan_cache_misses` — a hit
 //! means admission reused a cached (grid, coefficients) plan instead of
-//! rebuilding it), and latency (`p50_us`, `p99_us`, `mean_us`).
+//! rebuilding it), and latency (`p50_us`, `p99_us`, `mean_us`). `rejected`
+//! covers every refusal at submit: global overload, per-model overload,
+//! out-of-range `nfe`, unknown model names and invalid sampling configs —
+//! so `requests == completed + rejected + expired` always balances.
+//!
+//! The coordinator is sharded by model (one scheduler shard per registered
+//! model; see `coordinator/scheduler.rs`), and the stats reply additionally
+//! carries an ADDITIVE `per_model` object — one entry per shard (models
+//! that have received traffic), keyed by model name:
+//!
+//!   "per_model": {"gmm2d": {"requests":N,"completed":N,"rejected":N,
+//!                           "expired":N,"samples":N,"batches":N,
+//!                           "merged_requests":N,"model_evals":N,
+//!                           "sched_evals":N,"sched_eval_requests":N,
+//!                           "eval_occupancy":X,"max_occupancy":N}, ...}
+//!
+//! Per-model `rejected` counts only refusals attributable to that shard
+//! (per-model overload, invalid configs); global-overload, unknown-model
+//! and nfe-cap refusals appear only in the top-level `rejected`. Each
+//! model's lifecycle balances on its own: `requests == completed +
+//! rejected + expired` per entry. Existing clients that ignore unknown
+//! keys need no migration.
 //!
 //! Latency semantics: latencies are recorded into a lock-free log-bucketed
 //! histogram (`coordinator::stats::LatencyHistogram`), not a raw list.
@@ -95,6 +116,32 @@ fn handle_line(coord: &Coordinator, line: &str) -> String {
             return match cmd.as_str()? {
                 "stats" => {
                     let s = coord.stats();
+                    let per_model: std::collections::BTreeMap<String, Json> = s
+                        .per_model
+                        .iter()
+                        .map(|(name, m)| {
+                            (
+                                name.clone(),
+                                Json::obj(vec![
+                                    ("requests", Json::num(m.requests as f64)),
+                                    ("completed", Json::num(m.completed as f64)),
+                                    ("rejected", Json::num(m.rejected as f64)),
+                                    ("expired", Json::num(m.expired as f64)),
+                                    ("samples", Json::num(m.samples as f64)),
+                                    ("batches", Json::num(m.batches as f64)),
+                                    ("merged_requests", Json::num(m.merged_requests as f64)),
+                                    ("model_evals", Json::num(m.model_evals as f64)),
+                                    ("sched_evals", Json::num(m.sched_evals as f64)),
+                                    (
+                                        "sched_eval_requests",
+                                        Json::num(m.sched_eval_requests as f64),
+                                    ),
+                                    ("eval_occupancy", Json::num(m.eval_occupancy)),
+                                    ("max_occupancy", Json::num(m.max_occupancy as f64)),
+                                ]),
+                            )
+                        })
+                        .collect();
                     Ok(Json::obj(vec![
                         ("ok", Json::Bool(true)),
                         ("requests", Json::num(s.requests as f64)),
@@ -114,6 +161,7 @@ fn handle_line(coord: &Coordinator, line: &str) -> String {
                         ("p50_us", Json::num(s.p50_us as f64)),
                         ("p99_us", Json::num(s.p99_us as f64)),
                         ("mean_us", Json::num(s.mean_us)),
+                        ("per_model", Json::Obj(per_model)),
                     ]))
                 }
                 "models" => Ok(Json::obj(vec![
@@ -245,6 +293,10 @@ mod tests {
 
         let stats = client.call(&Json::parse(r#"{"cmd":"stats"}"#).unwrap()).unwrap();
         assert_eq!(stats.get("completed").unwrap().as_f64().unwrap(), 1.0);
+        // The additive per-model breakdown mirrors the single-model traffic.
+        let pm = stats.get("per_model").unwrap().get("gmm2d").unwrap();
+        assert_eq!(pm.get("requests").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(pm.get("completed").unwrap().as_f64().unwrap(), 1.0);
 
         let models = client.call(&Json::parse(r#"{"cmd":"models"}"#).unwrap()).unwrap();
         assert_eq!(models.get("models").unwrap().as_arr().unwrap().len(), 1);

@@ -17,6 +17,24 @@ pub fn oracle() -> GmmEps {
     GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp())
 }
 
+/// Distinct analytic mixtures per model name, so multi-model routing tests
+/// can prove a request was served by *its* model: the wrong shard would
+/// produce visibly (and bit-exactly checkably) different samples.
+/// "gmm2d" stays the standard ring so single-model helpers agree.
+pub fn gmm_for(name: &str) -> Gmm {
+    match name {
+        "gmm2d" => Gmm::ring2d(4.0, 8, 0.25),
+        "ring6" => Gmm::ring2d(2.5, 6, 0.35),
+        "ring5" => Gmm::ring2d(3.25, 5, 0.2),
+        other => panic!("no test mixture registered for model '{other}'"),
+    }
+}
+
+/// Analytic oracle for one of the [`gmm_for`] model names.
+pub fn oracle_for(name: &str) -> GmmEps {
+    GmmEps::new(gmm_for(name), Sde::vp())
+}
+
 /// Analytic oracle with an optional per-eval stall. Stalling the (single)
 /// worker inside a model call keeps the admission queue open long enough
 /// that a burst of concurrent clients is admitted — and therefore merged —
@@ -47,9 +65,29 @@ impl EpsModel for StallOracle {
     }
 }
 
+impl StallOracle {
+    /// Stalling wrapper around an arbitrary mixture oracle (multi-model
+    /// registries need per-model math, not just per-model names).
+    pub fn wrapping(inner: GmmEps, stall: Duration) -> StallOracle {
+        StallOracle { inner, stall }
+    }
+}
+
 /// Registry mapping "gmm2d" to a [`StallOracle`] with the given stall.
 pub fn stall_registry(stall: Duration) -> ModelRegistry {
     let mut reg = ModelRegistry::new();
     reg.insert("gmm2d", Arc::new(StallOracle::new(stall)));
+    reg
+}
+
+/// Registry with three DISTINCT stalling models ("gmm2d", "ring6",
+/// "ring5", each its own mixture — see [`gmm_for`]) for shard-routing
+/// tests: per-model bit-exact parity against [`oracle_for`] proves every
+/// request was served by exactly the model it named.
+pub fn multi_stall_registry(stall: Duration) -> ModelRegistry {
+    let mut reg = ModelRegistry::new();
+    for name in ["gmm2d", "ring6", "ring5"] {
+        reg.insert(name, Arc::new(StallOracle::wrapping(oracle_for(name), stall)));
+    }
     reg
 }

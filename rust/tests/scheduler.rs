@@ -17,8 +17,11 @@ use deis::util::rng::Rng;
 
 /// Reference: the exact samples request `req` must produce, computed
 /// without the coordinator (same prior stream, same solver, solo batch).
+/// Model-aware: resolves the mixture by the request's model name, so
+/// multi-model parity checks also prove the request was routed to the
+/// shard of exactly the model it named.
 fn solo_samples(req: &SampleRequest) -> Vec<f64> {
-    let model = common::oracle();
+    let model = common::oracle_for(&req.model);
     let steps = req.solver.steps_for_nfe(req.nfe);
     let grid = timegrid::build(req.grid, &req.sde, req.t0, 1.0, steps);
     let solver = solvers::build(req.solver, &req.sde, &grid);
@@ -127,7 +130,12 @@ fn concurrent_clients_with_mixed_nfes_merge_evals_over_tcp() {
 #[test]
 fn stress_battery_exactly_one_response_stats_balance_and_parity() {
     let coord = Arc::new(Coordinator::new(
-        CoordinatorConfig { workers: 4, max_batch_samples: 4096, max_inflight_requests: 4096 },
+        CoordinatorConfig {
+            workers: 4,
+            max_batch_samples: 4096,
+            max_inflight_requests: 4096,
+            ..Default::default()
+        },
         common::stall_registry(Duration::from_millis(10)),
     ));
     let addr = serve(coord.clone(), "127.0.0.1:0").unwrap();
@@ -222,6 +230,256 @@ fn stress_battery_exactly_one_response_stats_balance_and_parity() {
     assert_eq!(s.samples, 24 * 6, "only completed requests contribute sample rows");
     assert!(s.sched_evals > 0);
     assert!(s.p50_us > 0, "bucketed latency histogram must report percentiles");
+}
+
+/// Multi-model extension of the stress battery: the per-model sharding
+/// refactor must keep every serving invariant while routing ≥3 registered
+/// models' traffic to ≥3 independent shards over one TCP front end.
+///
+///   1. exactly one response per request, and the lifecycle counters
+///      balance globally AND per model (`requests == completed + rejected
+///      + expired` in every `per_model` entry);
+///   2. bit-exact solo parity per model — each model is a DIFFERENT
+///      mixture (`common::gmm_for`), so a response that matched the wrong
+///      shard's model could not possibly pass;
+///   3. shard eval accounting: every model runs merged evals on its own
+///      shard, and the per-model eval counters sum exactly to the global
+///      ones — eval traffic is fully attributed, never cross-shard.
+#[test]
+fn stress_battery_multi_model_shard_routing_balance_and_parity() {
+    let coord = Arc::new(Coordinator::new(
+        CoordinatorConfig {
+            workers: 4,
+            max_batch_samples: 4096,
+            max_inflight_requests: 4096,
+            ..Default::default()
+        },
+        common::multi_stall_registry(Duration::from_millis(10)),
+    ));
+    let addr = serve(coord.clone(), "127.0.0.1:0").unwrap();
+    let models = ["gmm2d", "ring6", "ring5"];
+
+    // Per model: 3x tab2 under one shared batch key (admission-merge
+    // fodder), tab3 + dpm2 (deterministic, mergeable), and rk45/em/addim
+    // with unique (solver, nfe) keys so the coupling-sensitive kinds never
+    // admission-merge — the regime where scheduled == solo is exact.
+    let mut cfgs: Vec<(&str, &str, usize, u64)> = Vec::new();
+    for (mi, m) in models.into_iter().enumerate() {
+        let base = 1000 * (mi as u64 + 1);
+        for s in 0..3 {
+            cfgs.push((m, "tab2", 8, base + s));
+        }
+        cfgs.push((m, "tab3", 10, base + 40));
+        cfgs.push((m, "dpm2", 10, base + 50));
+        cfgs.push((m, "rk45", 10 + 2 * mi, base + 60));
+        cfgs.push((m, "em", 9 + 2 * mi, base + 70));
+        cfgs.push((m, "addim", 13 + 2 * mi, base + 80));
+    }
+    let expected: Vec<Vec<f64>> = cfgs
+        .iter()
+        .map(|&(model, name, nfe, seed)| {
+            let mut r = SampleRequest::new(model, SolverKind::parse(name).unwrap(), nfe, 6);
+            r.seed = seed;
+            solo_samples(&r)
+        })
+        .collect();
+
+    // Pre-connect every client, then fire all requests concurrently.
+    let clients: Vec<Client> = (0..cfgs.len()).map(|_| Client::connect(addr).unwrap()).collect();
+    let mut handles = Vec::new();
+    for ((model, name, nfe, seed), mut c) in cfgs.iter().copied().zip(clients) {
+        handles.push(std::thread::spawn(move || {
+            let req = format!(
+                r#"{{"model":"{model}","solver":"{name}","nfe":{nfe},"n":6,"seed":{seed},"return_samples":true}}"#
+            );
+            c.call(&Json::parse(&req).unwrap()).unwrap()
+        }));
+    }
+    // Refusal traffic alongside: one zero-deadline request per model
+    // (expires on its own shard) and one unknown model name (rejected at
+    // routing, before any shard exists for it).
+    let mut refusals = Vec::new();
+    for m in models {
+        let line = format!(
+            r#"{{"model":"{m}","solver":"euler","nfe":4,"n":2,"deadline_ms":0}}"#
+        );
+        let mut c = Client::connect(addr).unwrap();
+        refusals.push(("deadline", std::thread::spawn(move || c.call(&Json::parse(&line).unwrap()).unwrap())));
+    }
+    {
+        let line = r#"{"model":"not_registered","solver":"ddim","nfe":4,"n":2}"#.to_string();
+        let mut c = Client::connect(addr).unwrap();
+        refusals.push(("unknown model", std::thread::spawn(move || c.call(&Json::parse(&line).unwrap()).unwrap())));
+    }
+
+    // Exactly one response per request, bit-exact per (model, seed, config).
+    let responses: Vec<Json> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for (r, ((model, name, nfe, seed), want)) in responses.iter().zip(cfgs.iter().zip(&expected)) {
+        assert!(
+            r.get("ok").unwrap().as_bool().unwrap(),
+            "{model}/{name} nfe {nfe} seed {seed}: {r:?}"
+        );
+        let got = r.get("samples").unwrap().as_f64_vec().unwrap();
+        // JSON floats use shortest-roundtrip formatting, so equality here
+        // is bit-exactness through the full TCP path — and because every
+        // model is a different mixture, a cross-shard routing mistake
+        // cannot produce these samples.
+        assert_eq!(&got, want, "scheduled vs solo mismatch for {model}/{name} seed {seed}");
+    }
+    for (needle, h) in refusals {
+        let r = h.join().unwrap();
+        assert!(!r.get("ok").unwrap().as_bool().unwrap(), "refusal ({needle}) must error");
+        let err = r.get("error").unwrap().as_str().unwrap().to_string();
+        assert!(err.contains(needle), "expected '{needle}' in: {err}");
+    }
+
+    // Lifecycle balance, globally and per model, over the wire.
+    let mut c = Client::connect(addr).unwrap();
+    let stats = c.call(&Json::parse(r#"{"cmd":"stats"}"#).unwrap()).unwrap();
+    let g = |k: &str| stats.get(k).unwrap().as_f64().unwrap() as u64;
+    assert_eq!(g("requests"), 28);
+    assert_eq!(g("completed"), 24);
+    assert_eq!(g("expired"), 3);
+    assert_eq!(g("rejected"), 1, "the unknown-model refusal counts as rejected");
+    assert_eq!(g("requests"), g("completed") + g("rejected") + g("expired"));
+    assert_eq!(g("samples"), 24 * 6);
+    let per_model = stats.get("per_model").unwrap();
+    let mut sum_sched_evals = 0.0;
+    let mut sum_model_evals = 0.0;
+    for m in models {
+        let pm = per_model.get(m).unwrap_or_else(|_| panic!("missing per_model entry for {m}"));
+        let p = |k: &str| pm.get(k).unwrap().as_f64().unwrap() as u64;
+        assert_eq!(p("requests"), 9, "{m}: 8 sampling + 1 zero-deadline");
+        assert_eq!(p("completed"), 8, "{m}");
+        assert_eq!(p("expired"), 1, "{m}");
+        assert_eq!(p("rejected"), 0, "{m}");
+        assert_eq!(p("requests"), p("completed") + p("rejected") + p("expired"), "{m}");
+        assert_eq!(p("samples"), 8 * 6, "{m}");
+        assert!(p("sched_evals") > 0, "{m}: shard must run its own merged evals");
+        sum_sched_evals += pm.get("sched_evals").unwrap().as_f64().unwrap();
+        sum_model_evals += pm.get("model_evals").unwrap().as_f64().unwrap();
+    }
+    // Eval attribution is exact: shard counters partition the global ones.
+    assert_eq!(sum_sched_evals as u64, g("sched_evals"));
+    assert_eq!(sum_model_evals as u64, g("model_evals"));
+    // The unknown model never got a shard (no fourth per_model entry).
+    assert!(per_model.get("not_registered").is_err());
+}
+
+/// Work stealing: a single-model hot spot on a many-shard coordinator must
+/// keep ALL workers busy. Three idle shards are warmed first, so worker
+/// affinity parks three of the four workers on idle home shards; the test
+/// then drives four independent flights at the fourth ("hot") model, whose
+/// ε-model is a rendezvous barrier that only releases when all four evals
+/// are in flight SIMULTANEOUSLY. Without stealing, only the hot shard's
+/// affinity worker would ever arrive, the rendezvous would time out and
+/// flag failure — so completion with a clean flag is deterministic proof
+/// that every worker stole into the hot shard.
+#[test]
+fn single_model_hotspot_keeps_all_workers_busy_via_stealing() {
+    use deis::coordinator::ModelRegistry;
+    use deis::score::EpsModel;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Condvar, Mutex};
+
+    const W: usize = 4;
+
+    struct Rendezvous {
+        want: usize,
+        /// (arrived-this-phase, phase)
+        state: Mutex<(usize, u64)>,
+        cv: Condvar,
+        failed: AtomicBool,
+    }
+
+    impl Rendezvous {
+        fn wait(&self) {
+            if self.failed.load(Ordering::SeqCst) {
+                return; // already failed: let the test drain and report
+            }
+            let mut g = self.state.lock().unwrap();
+            g.0 += 1;
+            if g.0 >= self.want {
+                g.0 = 0;
+                g.1 = g.1.wrapping_add(1);
+                self.cv.notify_all();
+                return;
+            }
+            let phase = g.1;
+            loop {
+                let (ng, to) = self.cv.wait_timeout(g, Duration::from_secs(5)).unwrap();
+                g = ng;
+                if g.1 != phase {
+                    return; // the phase completed: all `want` arrived
+                }
+                if to.timed_out() {
+                    self.failed.store(true, Ordering::SeqCst);
+                    g.0 = 0;
+                    g.1 = g.1.wrapping_add(1);
+                    self.cv.notify_all();
+                    return;
+                }
+            }
+        }
+    }
+
+    struct RendezvousEps {
+        inner: deis::score::GmmEps,
+        rv: Arc<Rendezvous>,
+    }
+
+    impl EpsModel for RendezvousEps {
+        fn dim(&self) -> usize {
+            self.inner.dim()
+        }
+
+        fn eval(&self, x: &[f64], t: &[f64], b: usize, out: &mut [f64]) {
+            self.rv.wait();
+            self.inner.eval(x, t, b, out);
+        }
+    }
+
+    let rv = Arc::new(Rendezvous {
+        want: W,
+        state: Mutex::new((0, 0)),
+        cv: Condvar::new(),
+        failed: AtomicBool::new(false),
+    });
+    let mut reg = ModelRegistry::new();
+    for name in ["idle0", "idle1", "idle2"] {
+        reg.insert(name, Arc::new(common::oracle()));
+    }
+    reg.insert("hot", Arc::new(RendezvousEps { inner: common::oracle(), rv: rv.clone() }));
+    // max_batch_samples = 1: no admission merging and one flight per
+    // dispatched eval, so the four hot requests are four independent
+    // flights whose evals must be executed by four distinct workers at
+    // once for the rendezvous to release.
+    let coord = Coordinator::new(
+        CoordinatorConfig { workers: W, max_batch_samples: 1, ..Default::default() },
+        reg,
+    );
+    // Warm the idle shards FIRST: shard order is creation order, so the
+    // hot shard is created last and exactly one worker has it as home.
+    for name in ["idle0", "idle1", "idle2"] {
+        coord.sample_blocking(SampleRequest::new(name, SolverKind::Tab(0), 5, 2)).unwrap();
+    }
+    let rxs: Vec<_> = (0..W)
+        .map(|i| {
+            let mut q = SampleRequest::new("hot", SolverKind::Tab(1), 8, 1);
+            q.seed = i as u64;
+            coord.submit(q)
+        })
+        .collect();
+    for rx in rxs {
+        assert!(rx.recv().unwrap().is_ok(), "hot-model request failed");
+    }
+    assert!(
+        !rv.failed.load(Ordering::SeqCst),
+        "rendezvous timed out: the idle-shard workers never stole into the hot shard"
+    );
+    let s = coord.stats();
+    assert_eq!(s.completed, 3 + W as u64);
+    coord.shutdown();
 }
 
 #[test]

@@ -16,6 +16,7 @@ fn boot_with(workers: usize, stall: Duration, max_inflight: usize) -> std::net::
             workers,
             max_batch_samples: 512,
             max_inflight_requests: max_inflight,
+            ..Default::default()
         },
         common::stall_registry(stall),
     ));
