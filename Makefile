@@ -4,7 +4,7 @@
 
 CARGO = cd rust && cargo
 
-.PHONY: verify verify-full build test lint fmt clippy bench bench-quick serve-demo artifacts ci
+.PHONY: verify verify-full build test lint fmt clippy bench bench-quick bench-diff serve-demo artifacts ci
 
 ## Tier-1 verify (ROADMAP): release build + full test suite.
 verify:
@@ -40,6 +40,14 @@ bench:
 ## CI bench-smoke equivalent: every bench executes on a tiny budget.
 bench-quick:
 	$(CARGO) bench --bench perf_hotpath -- --quick
+
+## §Perf backfill (EXPERIMENTS.md): download the parent commit's CI
+## BENCH_hotpath artifact and print the row-by-row delta against the local
+## BENCH_hotpath.json (run `make bench` first for numbers worth reading;
+## needs `gh auth login`).
+bench-diff:
+	scripts/fetch_parent_bench.sh BENCH_parent.json
+	python3 scripts/bench_diff.py BENCH_parent.json BENCH_hotpath.json
 
 ## Boot the sampling service on the analytic oracle (no artifacts needed)
 ## and show the step-level scheduler stats after a quick client burst:

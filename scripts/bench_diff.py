@@ -1,0 +1,59 @@
+#!/usr/bin/env python3
+"""Row-by-row delta table between two BENCH_hotpath.json files.
+
+Usage: bench_diff.py PARENT.json CURRENT.json
+
+The JSON shape is what rust/src/util/bench.rs::JsonSink writes:
+    {"bench name": {"mean_us": X, "p50_us": X, "p99_us": X}, ...}
+
+Prints one row per bench present in either file with the mean_us of both
+sides and the relative delta (negative = faster now). Rows only in one
+file are marked (new)/(gone). This is the executable half of the
+EXPERIMENTS.md "§Perf backfill mechanism": diff the parent commit's CI
+artifact against the current run. Numbers from `--quick` runs are
+smoke-quality — use them to prove the mechanism, not to fill tables.
+
+Exit code is always 0 when both files parse: a perf delta is a report,
+not a gate.
+"""
+
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, dict):
+        raise SystemExit(f"{path}: expected a JSON object of bench rows")
+    return data
+
+
+def fmt_us(v):
+    return f"{v:10.1f}" if v is not None else " " * 10
+
+
+def main():
+    if len(sys.argv) != 3:
+        raise SystemExit(__doc__.strip().splitlines()[2])
+    old, new = load(sys.argv[1]), load(sys.argv[2])
+    names = list(dict.fromkeys(list(old) + list(new)))  # stable union
+    width = max((len(n) for n in names), default=5)
+    print(f"{'bench':<{width}}  {'parent_us':>10}  {'current_us':>10}  {'delta':>8}")
+    print("-" * (width + 34))
+    for name in names:
+        o = old.get(name, {}).get("mean_us")
+        n = new.get(name, {}).get("mean_us")
+        if o is None:
+            note = "   (new)"
+        elif n is None:
+            note = "  (gone)"
+        elif o > 0:
+            note = f"{100.0 * (n - o) / o:+7.1f}%"
+        else:
+            note = "     n/a"
+        print(f"{name:<{width}}  {fmt_us(o)}  {fmt_us(n)}  {note}")
+
+
+if __name__ == "__main__":
+    main()

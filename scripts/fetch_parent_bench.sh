@@ -1,0 +1,36 @@
+#!/usr/bin/env bash
+# Download the parent commit's BENCH_hotpath CI artifact (uploaded by the
+# bench-smoke job of .github/workflows/ci.yml) so scripts/bench_diff.py can
+# print the row-by-row perf delta — the executable form of the
+# EXPERIMENTS.md "§Perf backfill mechanism".
+#
+# Usage: fetch_parent_bench.sh [OUT.json]
+#   OUT.json    where to write the parent snapshot (default BENCH_parent.json)
+#
+# Env:
+#   PARENT_SHA  commit whose artifact to fetch (default: git rev-parse HEAD^)
+#
+# Needs the `gh` CLI with auth (locally: `gh auth login`; in CI: GH_TOKEN).
+# Exits non-zero when no completed run/artifact exists for the parent —
+# callers that treat the diff as best-effort should `|| true` it.
+set -euo pipefail
+
+OUT="${1:-BENCH_parent.json}"
+PARENT="${PARENT_SHA:-$(git rev-parse HEAD^)}"
+
+command -v gh >/dev/null || { echo "fetch_parent_bench: gh CLI not found" >&2; exit 1; }
+
+echo "fetch_parent_bench: looking for a ci run of ${PARENT}" >&2
+RUN_ID="$(gh run list --commit "$PARENT" --workflow ci \
+    --json databaseId,status \
+    --jq '[.[] | select(.status == "completed")][0].databaseId // empty')"
+if [ -z "$RUN_ID" ]; then
+    echo "fetch_parent_bench: no completed ci run for ${PARENT}" >&2
+    exit 1
+fi
+
+TMP="$(mktemp -d)"
+trap 'rm -rf "$TMP"' EXIT
+gh run download "$RUN_ID" --name BENCH_hotpath --dir "$TMP"
+cp "$TMP/BENCH_hotpath.json" "$OUT"
+echo "fetch_parent_bench: wrote $OUT (run $RUN_ID, commit ${PARENT})" >&2
