@@ -4,7 +4,7 @@
 
 CARGO = cd rust && cargo
 
-.PHONY: verify verify-full build test lint fmt clippy bench bench-quick bench-diff serve-demo artifacts ci
+.PHONY: verify verify-full build test lint fmt clippy chaos bench bench-quick bench-diff serve-demo artifacts ci
 
 ## Tier-1 verify (ROADMAP): release build + full test suite.
 verify:
@@ -26,6 +26,15 @@ test:
 
 ## Lint job: formatting + clippy, warnings are errors.
 lint: fmt clippy
+
+## Chaos battery (EXPERIMENTS.md §Robustness): scripted fault injection
+## against the live TCP service — eval panics, NaN outputs, stalls past
+## deadlines — asserting fault containment, breaker open/recover and the
+## 4-term lifecycle balance. Runs in release (timing-sensitive stalls) on
+## top of the debug run `make test` already does.
+chaos:
+	$(CARGO) test --test chaos -q
+	$(CARGO) test --release --test chaos -q
 
 fmt:
 	$(CARGO) fmt --check
@@ -63,4 +72,4 @@ artifacts:
 	python3 python/compile/fixtures.py --out rust/artifacts/fixtures
 
 ## Everything CI runs.
-ci: verify lint bench-quick
+ci: verify lint chaos bench-quick

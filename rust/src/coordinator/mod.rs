@@ -80,7 +80,7 @@ pub use request::{BatchKey, SampleRequest, SampleResult};
 pub use stats::{ModelStats, ModelStatsSnapshot, Stats, StatsSnapshot};
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -131,6 +131,15 @@ pub struct CoordinatorConfig {
     /// so a single hot model cannot starve every other shard out of the
     /// global budget.
     pub max_inflight_per_model: usize,
+    /// Consecutive failing ε-evals (panic / non-finite output / panicking
+    /// advance) that open a model's circuit breaker; while open, submit
+    /// refuses that model's traffic immediately instead of queueing work a
+    /// broken model will burn. 0 disables the breaker.
+    pub breaker_threshold: u32,
+    /// How long an open breaker refuses traffic before half-opening
+    /// (admitting again with the failure streak retained, so one more
+    /// failure re-opens instantly while one clean eval closes it).
+    pub breaker_cooldown_ms: u64,
 }
 
 impl Default for CoordinatorConfig {
@@ -140,8 +149,23 @@ impl Default for CoordinatorConfig {
             max_batch_samples: 1024,
             max_inflight_requests: 4096,
             max_inflight_per_model: 4096,
+            breaker_threshold: 5,
+            breaker_cooldown_ms: 1000,
         }
     }
+}
+
+/// Liveness/degradation snapshot for the `{"cmd":"health"}` wire reply:
+/// the drain flag, worker restarts so far, and per-model circuit state.
+#[derive(Clone, Debug)]
+pub struct HealthSnapshot {
+    /// True once a graceful shutdown began: new submissions are refused.
+    pub draining: bool,
+    /// Worker threads restarted by the supervisor after a scheduler panic.
+    pub worker_panics: u64,
+    /// `(model, healthy)` for every shard created so far, sorted by name;
+    /// healthy = circuit closed (the model's traffic is being admitted).
+    pub models: Vec<(String, bool)>,
 }
 
 pub(crate) type Responder = SyncSender<anyhow::Result<SampleResult>>;
@@ -158,6 +182,16 @@ pub(crate) struct Shared {
     /// Global worker sleep/wake rail (generation-counted, lost-wakeup-free).
     pub(crate) wake: WakeRail,
     pub(crate) shutdown: AtomicBool,
+    /// Graceful-shutdown gate: set first, before workers stop, so submit
+    /// refuses new work while the in-flight tail drains.
+    pub(crate) draining: AtomicBool,
+    /// Worker threads restarted by [`scheduler::supervised_worker_loop`]
+    /// after a panic escaped the fault-contained regions.
+    pub(crate) worker_panics: AtomicU64,
+    /// Deterministic supervisor hook: a countdown of worker-loop panics to
+    /// inject at the top of the tick (see `worker_loop`).
+    #[cfg(test)]
+    pub(crate) test_worker_bomb: AtomicUsize,
     pub(crate) registry: ModelRegistry,
     pub(crate) stats: Stats,
     pub(crate) max_inflight: usize,
@@ -180,10 +214,18 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn new(cfg: CoordinatorConfig, registry: ModelRegistry) -> Coordinator {
+        let breaker = scheduler::BreakerConfig {
+            threshold: cfg.breaker_threshold,
+            cooldown: Duration::from_millis(cfg.breaker_cooldown_ms),
+        };
         let shared = Arc::new(Shared {
-            shards: ShardMap::new(cfg.max_batch_samples.max(1)),
+            shards: ShardMap::new(cfg.max_batch_samples.max(1), breaker),
             wake: WakeRail::new(),
             shutdown: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
+            worker_panics: AtomicU64::new(0),
+            #[cfg(test)]
+            test_worker_bomb: AtomicUsize::new(0),
             registry,
             stats: Stats::default(),
             max_inflight: cfg.max_inflight_requests.max(1),
@@ -194,7 +236,7 @@ impl Coordinator {
         let workers = (0..cfg.workers.max(1))
             .map(|widx| {
                 let sh = shared.clone();
-                std::thread::spawn(move || scheduler::worker_loop(sh, widx))
+                std::thread::spawn(move || scheduler::supervised_worker_loop(sh, widx))
             })
             .collect();
         Coordinator { shared, workers }
@@ -217,6 +259,16 @@ impl Coordinator {
         let (tx, rx) = sync_channel(1);
         let sh = &*self.shared;
         sh.stats.requests.fetch_add(1, Ordering::Relaxed);
+        // Drain gate: a coordinator shutting down finishes what it has and
+        // refuses everything new — checked before any reservation so the
+        // drain wait (inflight_parts -> 0) cannot be pushed back forever.
+        if sh.draining.load(Ordering::SeqCst) {
+            sh.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(Err(anyhow::anyhow!(
+                "coordinator shutting down: not accepting new requests"
+            )));
+            return rx;
+        }
         let deadline = req.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
         // Cheap request sanity BEFORE any plan work: nfe comes off the wire
         // and sizes the grid allocation + coefficient quadrature.
@@ -257,6 +309,25 @@ impl Coordinator {
             }
         };
         shard.stats.requests.fetch_add(1, Ordering::Relaxed);
+        // Circuit breaker: a model whose evals keep failing is refused
+        // up front — fail fast beats queueing work a broken backend will
+        // burn, and the healthy shards keep their full worker share. The
+        // refusal counts as `rejected` (the balance term) AND `unhealthy`
+        // (the diagnosis), globally and per model.
+        if shard.breaker.is_open() {
+            sh.inflight_parts.fetch_sub(1, Ordering::SeqCst);
+            sh.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            sh.stats.unhealthy.fetch_add(1, Ordering::Relaxed);
+            shard.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            shard.stats.unhealthy.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(Err(anyhow::anyhow!(
+                "model '{}' unhealthy (circuit open after {} consecutive eval \
+                 failures; retry after cooldown)",
+                req.model,
+                shard.breaker.threshold()
+            )));
+            return rx;
+        }
         // Per-model admission: same reservation discipline against the
         // shard's own counter, so one hot model sheds before it can occupy
         // the whole global budget.
@@ -357,12 +428,71 @@ impl Coordinator {
             .map_or(0, |s| s.lock_acquisitions.load(Ordering::Relaxed))
     }
 
+    /// Stop admitting new work without stopping the engine: every submit
+    /// from here on is refused with a "shutting down" error (counted
+    /// `rejected`) while already-admitted work keeps running. The server
+    /// front end flips this before its listener closes so in-flight
+    /// connections drain cleanly.
+    pub fn begin_drain(&self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Liveness/degradation snapshot: drain flag, worker restarts, and
+    /// per-model circuit state (healthy = closed), sorted by model name.
+    pub fn health(&self) -> HealthSnapshot {
+        let mut models: Vec<(String, bool)> = self
+            .shared
+            .shards
+            .all()
+            .iter()
+            .map(|s| (s.name.to_string(), !s.breaker.is_open()))
+            .collect();
+        models.sort_by(|a, b| a.0.cmp(&b.0));
+        HealthSnapshot {
+            draining: self.shared.draining.load(Ordering::SeqCst),
+            worker_panics: self.shared.worker_panics.load(Ordering::SeqCst),
+            models,
+        }
+    }
+
+    /// Graceful drain-then-stop with the default 5 s drain window.
     pub fn shutdown(self) {
-        self.shared.shutdown.store(true, Ordering::SeqCst);
-        self.shared.wake.wake();
+        self.shutdown_with_timeout(Duration::from_secs(5));
+    }
+
+    /// Graceful shutdown: stop admitting (submit refuses with a "shutting
+    /// down" error), wait up to `timeout` for the in-flight tail to be
+    /// answered, stop and join the workers, then answer whatever work is
+    /// still stranded (queued or slotted past the window) as `failed` —
+    /// every admitted request gets exactly one reply, and the lifecycle
+    /// balance `requests == completed + rejected + expired + failed` holds
+    /// through the shutdown itself.
+    pub fn shutdown_with_timeout(self, timeout: Duration) {
+        let sh = &*self.shared;
+        sh.draining.store(true, Ordering::SeqCst);
+        let deadline = Instant::now() + timeout;
+        while sh.inflight_parts.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+            sh.wake.wake();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Workers stop BEFORE the stranded sweep so the sweep cannot race
+        // a checkout: after the join, whatever the shards hold is all that
+        // is left.
+        sh.shutdown.store(true, Ordering::SeqCst);
+        sh.wake.wake();
         for w in self.workers {
             let _ = w.join();
         }
+        for shard in sh.shards.all() {
+            scheduler::abort_shard(sh, &shard, "coordinator shutting down");
+        }
+    }
+
+    /// Arm `n` injected worker-loop panics (outside the contained eval
+    /// regions) — the deterministic supervisor-restart hook.
+    #[cfg(test)]
+    pub(crate) fn arm_worker_bomb(&self, n: usize) {
+        self.shared.test_worker_bomb.store(n, Ordering::SeqCst);
     }
 }
 
@@ -640,6 +770,7 @@ mod tests {
                 max_batch_samples: 1,
                 max_inflight_requests: 4096,
                 max_inflight_per_model: 2,
+                ..Default::default()
             },
             r,
         );
@@ -846,5 +977,119 @@ mod tests {
             b.co_batched
         );
         c.shutdown();
+    }
+
+    /// The full breaker arc at the coordinator surface: consecutive eval
+    /// panics open the circuit, open-circuit traffic is refused at submit
+    /// (no eval dispatched, counted rejected AND unhealthy), and after the
+    /// cooldown a clean eval closes it again — with the 4-term lifecycle
+    /// balance holding globally and per model throughout.
+    #[test]
+    fn breaker_opens_then_refuses_then_recovers_after_cooldown() {
+        use crate::score::{FaultPlan, FaultyEps};
+        let mut r = ModelRegistry::new();
+        r.insert(
+            "flaky",
+            Arc::new(FaultyEps::new(
+                GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp()),
+                FaultPlan::new().panic_on(0).panic_on(1),
+            )),
+        );
+        let c = Coordinator::new(
+            CoordinatorConfig {
+                workers: 1,
+                breaker_threshold: 2,
+                breaker_cooldown_ms: 60,
+                ..Default::default()
+            },
+            r,
+        );
+        // Two serialized failing requests trip the threshold-2 breaker.
+        for seed in 0..2u64 {
+            let mut q = SampleRequest::new("flaky", SolverKind::Tab(0), 5, 4);
+            q.seed = seed;
+            let err = c.sample_blocking(q).unwrap_err().to_string();
+            assert!(err.contains("panicked"), "{err}");
+        }
+        let health = c.health();
+        assert_eq!(health.models, vec![("flaky".to_string(), false)]);
+        // Open circuit: refused at submit, no eval dispatched.
+        let refused = c
+            .sample_blocking(SampleRequest::new("flaky", SolverKind::Tab(0), 5, 4))
+            .unwrap_err()
+            .to_string();
+        assert!(refused.contains("unhealthy"), "{refused}");
+        // Half-open after the cooldown: the (now off-script) model evals
+        // cleanly, the request completes, the breaker closes.
+        std::thread::sleep(std::time::Duration::from_millis(90));
+        let ok = c.sample_blocking(SampleRequest::new("flaky", SolverKind::Tab(0), 5, 4));
+        assert!(ok.is_ok(), "half-open breaker must admit after cooldown");
+        assert_eq!(c.health().models, vec![("flaky".to_string(), true)]);
+        let s = c.stats();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.failed, 2);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.unhealthy, 1, "the refusal is diagnosed, not just rejected");
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.requests, s.completed + s.rejected + s.expired + s.failed);
+        let (_, m) = s.per_model.iter().find(|(n, _)| n == "flaky").unwrap();
+        assert_eq!(m.unhealthy, 1);
+        assert_eq!(m.requests, m.completed + m.rejected + m.expired + m.failed);
+        c.shutdown();
+    }
+
+    /// A worker thread lost to a scheduler panic (injected OUTSIDE the
+    /// fault-contained eval region) must be restarted by the supervisor —
+    /// with one worker configured, a lost thread would hang the next
+    /// request forever.
+    #[test]
+    fn worker_supervisor_restarts_a_panicked_worker() {
+        let c = Coordinator::new(
+            CoordinatorConfig { workers: 1, ..Default::default() },
+            registry(),
+        );
+        c.sample_blocking(SampleRequest::new("gmm2d", SolverKind::Tab(0), 5, 4)).unwrap();
+        c.arm_worker_bomb(1);
+        let ok = c.sample_blocking(SampleRequest::new("gmm2d", SolverKind::Tab(0), 6, 4));
+        assert!(ok.is_ok(), "request after a worker panic must still complete");
+        assert!(c.health().worker_panics >= 1, "supervisor must count the restart");
+        c.shutdown();
+    }
+
+    /// Graceful degradation at shutdown: begin_drain refuses new work
+    /// immediately, and a drain window too short for the queued tail still
+    /// leaves no request unanswered — stranded work gets a "shutting down"
+    /// error instead of a hung receiver.
+    #[test]
+    fn drain_refuses_new_work_and_answers_every_stranded_request() {
+        let c = Coordinator::new(
+            CoordinatorConfig { workers: 1, max_batch_samples: 1, ..Default::default() },
+            slow_registry(std::time::Duration::from_millis(60)),
+        );
+        // Batch cap 1: no admission merge, so the tail really queues
+        // behind the in-flight request while the worker stalls mid-eval.
+        let rxs: Vec<_> = (0..3)
+            .map(|i| {
+                let mut q = SampleRequest::new("slow", SolverKind::Tab(0), 2, 4);
+                q.seed = i;
+                c.submit(q)
+            })
+            .collect();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        c.begin_drain();
+        let refused = c.sample_blocking(SampleRequest::new("slow", SolverKind::Tab(0), 2, 4));
+        assert!(
+            refused.unwrap_err().to_string().contains("shutting down"),
+            "draining coordinator must refuse new submissions"
+        );
+        c.shutdown_with_timeout(Duration::from_millis(1));
+        // Every admitted request was answered exactly once: samples if it
+        // beat the drain window, a shutdown error otherwise.
+        let replies: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        assert!(replies.iter().any(|r| r.is_err()), "1 ms cannot drain ~360 ms of stalls");
+        for r in replies.iter().filter(|r| r.is_err()) {
+            let msg = r.as_ref().unwrap_err().to_string();
+            assert!(msg.contains("shutting down"), "{msg}");
+        }
     }
 }

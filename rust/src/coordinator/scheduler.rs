@@ -117,6 +117,31 @@
 //! be published into a gap and lost. The rail's fast path (no sleepers) is
 //! two atomic ops; no shard lock is ever held while sleeping.
 //!
+//! # Fault containment
+//!
+//! Model code is untrusted: an ε-eval (or a solver advance fed by one) may
+//! panic, stall, or emit non-finite values, and none of those may take the
+//! service down. The off-lock execution region — gather, the merged model
+//! call, scatter, `cursor.advance()` — runs under `catch_unwind`: a panic
+//! fails every member flight's parts with an error (honouring the deadline
+//! contract: an already-expired part counts `expired`, the rest count
+//! `failed`), releases their backpressure reservations, re-slots nothing,
+//! and bumps `eval_panics`. Non-finite eval output fails exactly the
+//! flights whose slices are poisoned; clean siblings in the same merged
+//! call proceed untouched. Each shard carries a consecutive-failure
+//! [`Breaker`]: after `threshold` consecutive failing evals the shard is
+//! marked unhealthy and `Coordinator::submit` refuses its traffic
+//! immediately (counted `rejected` + `unhealthy`) until a cooldown passes;
+//! the first clean eval after the half-open probe closes it again. Shard
+//! mutexes recover from poisoning (`util::sync`) — the state they guard is
+//! routing bookkeeping mutated only by short panic-free critical sections —
+//! and worker threads run under [`supervised_worker_loop`], which catches
+//! any panic that escapes the contained regions and restarts the loop, so
+//! a scheduler bug cannot silently eat a worker. The chaos battery
+//! (`rust/tests/chaos.rs`) drives all of this with scripted faults and
+//! asserts the lifecycle balance `requests == completed + rejected +
+//! expired + failed`, globally and per model.
+//!
 //! # Determinism
 //!
 //! Unchanged by sharding, because routing moved while the math stayed in
@@ -136,9 +161,10 @@
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::batcher::{Batcher, Pending};
 use super::request::{SampleRequest, SampleResult};
@@ -147,6 +173,7 @@ use super::{ModelRegistry, Responder, Shared};
 use crate::score::EpsModel;
 use crate::solvers::{Solver as _, SolverPlan, StepCursor};
 use crate::util::rng::Rng;
+use crate::util::sync::{lock_recover, read_recover, wait_recover, write_recover};
 
 /// Queue tag carried through admission: response channel, enqueue time,
 /// absolute deadline (if the request set one), and the shared solver plan
@@ -189,6 +216,83 @@ struct Flight {
     oldest: Instant,
 }
 
+/// Circuit-breaker configuration, shared by every shard of a coordinator.
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerConfig {
+    /// Consecutive failing evals that open the breaker. 0 disables it.
+    pub threshold: u32,
+    /// How long an open breaker refuses traffic before half-opening.
+    pub cooldown: Duration,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> BreakerConfig {
+        BreakerConfig { threshold: 5, cooldown: Duration::from_millis(1000) }
+    }
+}
+
+/// Per-shard consecutive-failure circuit breaker (lock-free).
+///
+/// Closed → open: `threshold` consecutive failing evals (a panic, or any
+/// member flight failed by non-finite output / a panicking advance) set an
+/// open-until timestamp; while it is in the future, `Coordinator::submit`
+/// refuses the model's traffic immediately instead of queueing work a
+/// broken model will burn. Open → half-open: once the cooldown elapses,
+/// `is_open` reads false and traffic is admitted again — but the
+/// consecutive counter still sits at the threshold, so one more failure
+/// re-opens instantly, while the first clean eval (`on_success`) closes
+/// the breaker fully.
+pub(crate) struct Breaker {
+    cfg: BreakerConfig,
+    /// Time base for `open_until_ms` (monotonic, per shard).
+    epoch: Instant,
+    consecutive: AtomicU32,
+    /// 0 = not open; otherwise open until `epoch + this many ms`.
+    open_until_ms: AtomicU64,
+}
+
+impl Breaker {
+    fn new(cfg: BreakerConfig) -> Breaker {
+        Breaker {
+            cfg,
+            epoch: Instant::now(),
+            consecutive: AtomicU32::new(0),
+            open_until_ms: AtomicU64::new(0),
+        }
+    }
+
+    pub(crate) fn is_open(&self) -> bool {
+        let until = self.open_until_ms.load(Ordering::SeqCst);
+        until != 0 && (self.epoch.elapsed().as_millis() as u64) < until
+    }
+
+    /// Record one failing eval; opens the breaker at the threshold.
+    pub(crate) fn on_failure(&self) {
+        let n = self.consecutive.fetch_add(1, Ordering::SeqCst).saturating_add(1);
+        if self.cfg.threshold > 0 && n >= self.cfg.threshold {
+            let until = self.epoch.elapsed().as_millis() as u64
+                + (self.cfg.cooldown.as_millis() as u64).max(1);
+            self.open_until_ms.store(until, Ordering::SeqCst);
+        }
+    }
+
+    /// Record one clean eval: closes the breaker and resets the streak.
+    pub(crate) fn on_success(&self) {
+        self.consecutive.store(0, Ordering::SeqCst);
+        self.open_until_ms.store(0, Ordering::SeqCst);
+    }
+
+    /// The configured consecutive-failure threshold (for refusal text).
+    pub(crate) fn threshold(&self) -> u32 {
+        self.cfg.threshold
+    }
+
+    #[cfg(test)]
+    pub(crate) fn consecutive(&self) -> u32 {
+        self.consecutive.load(Ordering::SeqCst)
+    }
+}
+
 /// One model's scheduler shard: admission queue, flight slots and ready
 /// index under the shard's own mutex, plus the lock-free load/backpressure
 /// atomics and the per-model stats recorder. Created lazily from the
@@ -198,6 +302,8 @@ pub(crate) struct Shard {
     pub(crate) name: Arc<str>,
     pub(crate) model: Arc<dyn EpsModel>,
     pub(crate) dim: usize,
+    /// Consecutive-failure circuit breaker; consulted lock-free at submit.
+    pub(crate) breaker: Breaker,
     state: Mutex<ShardState>,
     /// Approximate pending work (queued requests + slotted flights),
     /// readable WITHOUT the shard lock. Workers scanning for work — their
@@ -216,12 +322,18 @@ pub(crate) struct Shard {
 }
 
 impl Shard {
-    fn new(name: &str, model: Arc<dyn EpsModel>, max_batch_samples: usize) -> Shard {
+    fn new(
+        name: &str,
+        model: Arc<dyn EpsModel>,
+        max_batch_samples: usize,
+        breaker: BreakerConfig,
+    ) -> Shard {
         let dim = model.dim();
         Shard {
             name: Arc::from(name),
             model,
             dim,
+            breaker: Breaker::new(breaker),
             state: Mutex::new(ShardState::new(max_batch_samples)),
             load: AtomicUsize::new(0),
             inflight: AtomicUsize::new(0),
@@ -232,11 +344,14 @@ impl Shard {
     }
 
     /// The only way to the shard's state: counts acquisitions under test so
-    /// shard isolation is assertable, not just claimed.
+    /// shard isolation is assertable, not just claimed. Recovers from a
+    /// poisoned mutex (see `util::sync`) — critical sections here are short
+    /// and panic-free, so a poison mark means a fault elsewhere unwound
+    /// through a guard, not that the routing state is torn.
     pub(crate) fn lock(&self) -> MutexGuard<'_, ShardState> {
         #[cfg(test)]
         self.lock_acquisitions.fetch_add(1, Ordering::Relaxed);
-        self.state.lock().unwrap()
+        lock_recover(&self.state)
     }
 
     /// Publish the lock-free load estimate; call before releasing the shard
@@ -262,6 +377,7 @@ pub(crate) struct ShardMap {
     /// list and refresh it only when this moves.
     version: AtomicU64,
     max_batch_samples: usize,
+    breaker: BreakerConfig,
 }
 
 #[derive(Default)]
@@ -272,11 +388,12 @@ struct ShardMapInner {
 }
 
 impl ShardMap {
-    pub(crate) fn new(max_batch_samples: usize) -> ShardMap {
+    pub(crate) fn new(max_batch_samples: usize, breaker: BreakerConfig) -> ShardMap {
         ShardMap {
             inner: RwLock::new(ShardMapInner::default()),
             version: AtomicU64::new(0),
             max_batch_samples,
+            breaker,
         }
     }
 
@@ -288,15 +405,15 @@ impl ShardMap {
         name: &str,
         registry: &ModelRegistry,
     ) -> Option<Arc<Shard>> {
-        if let Some(s) = self.inner.read().unwrap().by_name.get(name) {
+        if let Some(s) = read_recover(&self.inner).by_name.get(name) {
             return Some(s.clone());
         }
         let model = registry.get(name)?;
-        let mut w = self.inner.write().unwrap();
+        let mut w = write_recover(&self.inner);
         if let Some(s) = w.by_name.get(name) {
             return Some(s.clone()); // racing creator won; use its shard
         }
-        let shard = Arc::new(Shard::new(name, model, self.max_batch_samples));
+        let shard = Arc::new(Shard::new(name, model, self.max_batch_samples, self.breaker));
         w.by_name.insert(name.to_string(), shard.clone());
         w.ordered.push(shard.clone());
         drop(w);
@@ -310,14 +427,19 @@ impl ShardMap {
         let v = self.version.load(Ordering::SeqCst);
         if v != *seen {
             out.clear();
-            out.extend(self.inner.read().unwrap().ordered.iter().cloned());
+            out.extend(read_recover(&self.inner).ordered.iter().cloned());
             *seen = v;
         }
     }
 
+    /// Every shard created so far, in creation order (drain + health walks).
+    pub(crate) fn all(&self) -> Vec<Arc<Shard>> {
+        read_recover(&self.inner).ordered.to_vec()
+    }
+
     /// Per-model stats snapshots, sorted by model name.
     pub(crate) fn per_model_snapshots(&self) -> Vec<(String, ModelStatsSnapshot)> {
-        let inner = self.inner.read().unwrap();
+        let inner = read_recover(&self.inner);
         let mut v: Vec<(String, ModelStatsSnapshot)> = inner
             .ordered
             .iter()
@@ -330,12 +452,12 @@ impl ShardMap {
     /// Shards created so far (lazy-creation observability).
     #[cfg(test)]
     pub(crate) fn count(&self) -> usize {
-        self.inner.read().unwrap().ordered.len()
+        read_recover(&self.inner).ordered.len()
     }
 
     #[cfg(test)]
     pub(crate) fn get(&self, name: &str) -> Option<Arc<Shard>> {
-        self.inner.read().unwrap().by_name.get(name).cloned()
+        read_recover(&self.inner).by_name.get(name).cloned()
     }
 }
 
@@ -372,7 +494,7 @@ impl WakeRail {
     pub(crate) fn wake(&self) {
         self.gen.fetch_add(1, Ordering::SeqCst);
         if self.waiters.load(Ordering::SeqCst) > 0 {
-            let _g = self.mx.lock().unwrap();
+            let _g = lock_recover(&self.mx);
             self.cv.notify_all();
         }
     }
@@ -390,9 +512,9 @@ impl WakeRail {
     /// wakeups re-check and re-park.
     pub(crate) fn sleep(&self, seen: u64, shutdown: &std::sync::atomic::AtomicBool) {
         self.waiters.fetch_add(1, Ordering::SeqCst);
-        let mut g = self.mx.lock().unwrap();
+        let mut g = lock_recover(&self.mx);
         while self.gen.load(Ordering::SeqCst) == seen && !shutdown.load(Ordering::SeqCst) {
-            g = self.cv.wait(g).unwrap();
+            g = wait_recover(&self.cv, g);
         }
         drop(g);
         self.waiters.fetch_sub(1, Ordering::SeqCst);
@@ -566,6 +688,27 @@ enum Work {
     Eval(GroupJob),
 }
 
+/// Worker supervisor: runs [`worker_loop`] under `catch_unwind` and
+/// restarts it if a panic escapes the fault-contained execution regions
+/// (i.e. a bug in the scheduler itself rather than in model code), so a
+/// worker thread is never silently lost. A clean return — shutdown — ends
+/// the thread. Restarts are counted on `Shared::worker_panics`.
+pub(crate) fn supervised_worker_loop(sh: Arc<Shared>, widx: usize) {
+    loop {
+        let sh2 = sh.clone();
+        let run = catch_unwind(AssertUnwindSafe(move || worker_loop(sh2, widx)));
+        match run {
+            Ok(()) => return,
+            Err(_) => {
+                sh.worker_panics.fetch_add(1, Ordering::SeqCst);
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+        }
+    }
+}
+
 /// Scheduler worker: scan shards for work (own shard first, then steal
 /// from the busiest), take one work item under that shard's lock, execute
 /// it off-lock. Workers never lock a shard they do not take work from —
@@ -584,6 +727,17 @@ pub(crate) fn worker_loop(sh: Arc<Shared>, widx: usize) {
     loop {
         if sh.shutdown.load(Ordering::SeqCst) {
             return;
+        }
+        // Deterministic supervisor hook: tests arm a countdown of worker
+        // panics outside the contained eval region to prove the supervisor
+        // restarts the loop.
+        #[cfg(test)]
+        if sh
+            .test_worker_bomb
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1))
+            .is_ok()
+        {
+            panic!("injected worker panic (test bomb)");
         }
         // Snapshot the wake generation BEFORE scanning: anything published
         // after this point bumps it and cancels the sleep below.
@@ -774,7 +928,25 @@ fn build_flight(sh: &Shared, shard: &Shard, group: Vec<Pending<Tag>>) -> Option<
     // deterministic in the head request's seed, which `tests/scheduler.rs`
     // mirrors for its solo references.
     let mut srng = Rng::new(spec.seed ^ 0xD1F_F051);
-    let cursor = plan.solver.cursor(&x, rows, &mut srng);
+    // Cursor construction is solver code operating on request-shaped input;
+    // contain it like an eval. On panic every member gets a per-part error
+    // and its reservations back — the group was never slotted, so there is
+    // no index state to repair.
+    let cursor = match catch_unwind(AssertUnwindSafe(|| plan.solver.cursor(&x, rows, &mut srng)))
+    {
+        Ok(c) => c,
+        Err(_) => {
+            for part in parts {
+                sh.stats.failed.fetch_add(1, Ordering::Relaxed);
+                shard.stats.failed.fetch_add(1, Ordering::Relaxed);
+                let _ = part.responder.send(Err(anyhow::anyhow!(
+                    "solver cursor construction panicked (fault contained)"
+                )));
+                release_inflight(sh, shard);
+            }
+            return None;
+        }
+    };
     Some(Flight {
         cursor,
         parts,
@@ -895,42 +1067,80 @@ fn run_group(
     tb: &mut Vec<f64>,
 ) -> Vec<Flight> {
     let d = shard.dim;
-    xbuf.clear();
-    xbuf.reserve(job.rows * d);
-    for f in job.flights.iter_mut() {
-        let (x_in, _) = f.cursor.io();
-        xbuf.extend_from_slice(x_in);
-    }
-    tb.clear();
-    tb.resize(job.rows, job.t);
-    outbuf.clear();
-    outbuf.resize(job.rows * d, 0.0);
-    shard.model.eval(&xbuf[..job.rows * d], &tb[..], job.rows, &mut outbuf[..]);
+    // Gather + merged model call under `catch_unwind`: model code is
+    // untrusted, and a panicking eval must become per-part errors for every
+    // member flight — counters released, nothing re-slotted — instead of a
+    // dead worker with stranded clients.
+    let evaled = catch_unwind(AssertUnwindSafe(|| {
+        xbuf.clear();
+        xbuf.reserve(job.rows * d);
+        for f in job.flights.iter_mut() {
+            let (x_in, _) = f.cursor.io();
+            xbuf.extend_from_slice(x_in);
+        }
+        tb.clear();
+        tb.resize(job.rows, job.t);
+        outbuf.clear();
+        outbuf.resize(job.rows * d, 0.0);
+        shard.model.eval(&xbuf[..job.rows * d], &tb[..], job.rows, &mut outbuf[..]);
+    }));
     sh.stats.model_evals.fetch_add(1, Ordering::Relaxed);
     shard.stats.model_evals.fetch_add(1, Ordering::Relaxed);
     let group_reqs: usize = job.flights.iter().map(|f| f.parts.len()).sum();
     sh.stats.record_sched_eval(group_reqs as u64);
     shard.stats.record_sched_eval(group_reqs as u64);
-
-    // Scatter + advance: the O(rows·dim) linear combines (and stochastic
-    // noise draws) run here, lock-free.
-    let mut offset = 0;
-    for f in job.flights.iter_mut() {
-        let rows = f.rows;
-        {
-            let (_x, out) = f.cursor.io();
-            out.copy_from_slice(&outbuf[offset * d..(offset + rows) * d]);
-        }
-        f.cursor.advance();
-        f.co_batched_peak = f.co_batched_peak.max(group_reqs);
-        offset += rows;
+    if evaled.is_err() {
+        sh.stats.eval_panics.fetch_add(1, Ordering::Relaxed);
+        shard.stats.eval_panics.fetch_add(1, Ordering::Relaxed);
+        shard.breaker.on_failure();
+        let msg = "model eval panicked (fault contained)";
+        fail_flights(sh, shard, job.flights.drain(..).map(|f| (f, msg)).collect());
+        return Vec::new();
     }
 
-    // Short re-lock: route each flight back to a slot or out to delivery.
+    // Scatter + advance, with per-flight containment: the O(rows·dim)
+    // linear combines (and stochastic noise draws) run here, lock-free. A
+    // flight whose eps slice is non-finite — or whose advance panics — is
+    // failed alone; clean siblings in the same merged call proceed.
+    let mut ok: Vec<Flight> = Vec::with_capacity(job.flights.len());
+    let mut failed: Vec<(Flight, &'static str)> = Vec::new();
+    let mut offset = 0;
+    for mut f in job.flights {
+        let rows = f.rows;
+        let eps = &outbuf[offset * d..(offset + rows) * d];
+        offset += rows;
+        if eps.iter().any(|v| !v.is_finite()) {
+            failed.push((f, "model returned non-finite eps"));
+            continue;
+        }
+        let advanced = catch_unwind(AssertUnwindSafe(|| {
+            {
+                let (_x, out) = f.cursor.io();
+                out.copy_from_slice(eps);
+            }
+            f.cursor.advance();
+        }));
+        match advanced {
+            Ok(()) => {
+                f.co_batched_peak = f.co_batched_peak.max(group_reqs);
+                ok.push(f);
+            }
+            Err(_) => failed.push((f, "solver advance panicked (fault contained)")),
+        }
+    }
+    if failed.is_empty() {
+        shard.breaker.on_success();
+    } else {
+        shard.breaker.on_failure();
+    }
+
+    // Short re-lock: route each surviving flight back to a slot or out to
+    // delivery. Failed flights are NOT touched here — `fail_flights` owns
+    // their deadline-part unwinding and part delivery.
     let mut finished: Vec<Flight> = Vec::new();
     {
         let mut st = shard.lock();
-        for f in job.flights {
+        for f in ok {
             if f.cursor.pending_t().is_some() {
                 st.insert_flight(f);
             } else {
@@ -940,7 +1150,91 @@ fn run_group(
         }
         shard.publish_load(&st);
     }
+    if !failed.is_empty() {
+        fail_flights(sh, shard, failed);
+    }
     finished
+}
+
+/// Fail checked-out flights: unwind their deadline-part accounting (they
+/// were invisible to the sweep but still counted), then answer every part
+/// with an error — delivery runs off-lock. The deadline contract stays
+/// exactly-once: a part whose deadline already fired counts (and reads) as
+/// `expired`; every other part counts as `failed`. Each part's backpressure
+/// reservation is released exactly once, here.
+fn fail_flights(sh: &Shared, shard: &Shard, failed: Vec<(Flight, &str)>) {
+    {
+        let mut st = shard.lock();
+        let dropped: usize = failed
+            .iter()
+            .map(|(f, _)| f.parts.iter().filter(|p| p.deadline.is_some()).count())
+            .sum();
+        st.deadline_parts -= dropped;
+        shard.publish_load(&st);
+    }
+    let now = Instant::now();
+    for (flight, msg) in failed {
+        for part in flight.parts {
+            if part.deadline.is_some_and(|dl| dl <= now) {
+                sh.stats.expired.fetch_add(1, Ordering::Relaxed);
+                shard.stats.expired.fetch_add(1, Ordering::Relaxed);
+                let _ = part.responder.send(Err(anyhow::anyhow!(
+                    "deadline exceeded before sampling completed"
+                )));
+            } else {
+                sh.stats.failed.fetch_add(1, Ordering::Relaxed);
+                shard.stats.failed.fetch_add(1, Ordering::Relaxed);
+                let _ = part.responder.send(Err(anyhow::anyhow!("{msg}")));
+            }
+            release_inflight(sh, shard);
+        }
+    }
+}
+
+/// Shutdown sweep: answer everything still parked on `shard` — queued
+/// admission groups and slotted flights — with a `failed` error carrying
+/// `msg`. Called by the drain path AFTER the workers stop and the drain
+/// wait elapses, so nothing here races a checkout: whatever the sweep
+/// sees is all that is left. Each part's backpressure reservation is
+/// released exactly once, keeping the lifecycle balance intact through a
+/// shutdown with work still in the pipe.
+pub(crate) fn abort_shard(sh: &Shared, shard: &Shard, msg: &str) {
+    // Queued requests first: pop admission groups until the queue is dry.
+    loop {
+        let group = {
+            let mut st = shard.lock();
+            let g = st.queue.pop_batch();
+            shard.publish_load(&st);
+            g
+        };
+        let Some((_key, pending)) = group else { break };
+        for p in pending {
+            let (tx, _enq, _deadline, _plan) = p.tag;
+            sh.stats.failed.fetch_add(1, Ordering::Relaxed);
+            shard.stats.failed.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(Err(anyhow::anyhow!("{msg}")));
+            release_inflight(sh, shard);
+        }
+    }
+    // Then slotted flights: unslot them all and route through the shared
+    // failure path (which owns the expired-vs-failed split and the
+    // reservation release).
+    let stranded: Vec<(Flight, &str)> = {
+        let mut st = shard.lock();
+        let mut v = Vec::new();
+        for slot in 0..st.flights.len() {
+            if st.flights[slot].is_some() {
+                // The parts stay counted in `deadline_parts` (slotted or
+                // checked out both count); fail_flights unwinds them.
+                v.push((st.remove_flight(slot), msg));
+            }
+        }
+        shard.publish_load(&st);
+        v
+    };
+    if !stranded.is_empty() {
+        fail_flights(sh, shard, stranded);
+    }
 }
 
 /// Deliver a finished flight: slice the stacked samples back into
@@ -1005,7 +1299,7 @@ mod tests {
     fn test_shard() -> Shard {
         let model: Arc<dyn EpsModel> =
             Arc::new(GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp()));
-        Shard::new("gmm2d", model, 1024)
+        Shard::new("gmm2d", model, 1024, BreakerConfig::default())
     }
 
     /// A slottable flight over the analytic oracle with `n` rows, one part.
@@ -1147,15 +1441,19 @@ mod tests {
 
     fn bare_shared() -> Shared {
         Shared {
-            shards: ShardMap::new(64),
+            shards: ShardMap::new(64, BreakerConfig::default()),
             wake: WakeRail::new(),
             shutdown: std::sync::atomic::AtomicBool::new(false),
+            draining: std::sync::atomic::AtomicBool::new(false),
             registry: ModelRegistry::new(),
             stats: super::super::Stats::default(),
             max_inflight: 1024,
             max_inflight_per_model: 1024,
             inflight_parts: AtomicUsize::new(0),
+            worker_panics: AtomicU64::new(0),
             plan_cache: crate::solvers::PlanCache::new(),
+            #[cfg(test)]
+            test_worker_bomb: AtomicUsize::new(0),
         }
     }
 
@@ -1226,11 +1524,156 @@ mod tests {
     }
 
     #[test]
+    fn breaker_opens_at_threshold_and_half_opens_after_cooldown() {
+        let b = Breaker::new(BreakerConfig { threshold: 2, cooldown: Duration::from_millis(40) });
+        assert!(!b.is_open());
+        b.on_failure();
+        assert!(!b.is_open(), "one failure is below threshold");
+        b.on_failure();
+        assert!(b.is_open(), "threshold consecutive failures must open");
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(!b.is_open(), "cooldown elapsed: half-open admits traffic");
+        // Half-open keeps the streak: one more failure re-opens instantly.
+        b.on_failure();
+        assert!(b.is_open(), "failure in half-open must re-open");
+        std::thread::sleep(Duration::from_millis(50));
+        b.on_success();
+        assert!(!b.is_open());
+        assert_eq!(b.consecutive(), 0, "success must reset the streak");
+        b.on_failure();
+        assert!(!b.is_open(), "closed breaker needs a fresh streak to open");
+
+        // threshold 0 disables the breaker entirely.
+        let off = Breaker::new(BreakerConfig { threshold: 0, cooldown: Duration::from_millis(1) });
+        for _ in 0..10 {
+            off.on_failure();
+        }
+        assert!(!off.is_open());
+    }
+
+    #[test]
+    fn panicking_eval_fails_parts_releases_counters_and_reslots_nothing() {
+        let sh = bare_shared();
+        let model: Arc<dyn EpsModel> = Arc::new(crate::score::FaultyEps::new(
+            GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp()),
+            crate::score::FaultPlan::new().panic_on(0),
+        ));
+        let shard = Shard::new(
+            "faulty",
+            model,
+            1024,
+            BreakerConfig { threshold: 2, cooldown: Duration::from_millis(50) },
+        );
+        let (f, rx) = test_flight(1, 6, 2, None, 0);
+        sh.inflight_parts.fetch_add(1, Ordering::SeqCst);
+        shard.inflight.fetch_add(1, Ordering::SeqCst);
+        let job;
+        {
+            let mut st = shard.lock();
+            slot_in(&mut st, f);
+            job = pick_group(&mut st, 1024).unwrap();
+            st.assert_ready_invariants();
+        }
+        let (mut xbuf, mut outbuf, mut tb) = (Vec::new(), Vec::new(), Vec::new());
+        let finished = run_group(&sh, &shard, job, &mut xbuf, &mut outbuf, &mut tb);
+        assert!(finished.is_empty(), "a panicked eval must finish nothing");
+        let err = rx.try_recv().expect("failed part must be answered synchronously");
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err()).contains("panicked"));
+        assert_eq!(sh.inflight_parts.load(Ordering::SeqCst), 0, "reservation leaked");
+        assert_eq!(shard.inflight.load(Ordering::SeqCst), 0);
+        assert_eq!(shard.stats.snapshot().failed, 1);
+        assert_eq!(shard.stats.snapshot().eval_panics, 1);
+        assert_eq!(sh.stats.snapshot().failed, 1);
+        assert_eq!(sh.stats.snapshot().eval_panics, 1);
+        assert_eq!(shard.breaker.consecutive(), 1);
+        {
+            let st = shard.lock();
+            assert_eq!(st.slotted, 0, "failed flights must not re-slot");
+            assert_eq!(st.deadline_parts, 0);
+        }
+
+        // Two consecutive panicking evals (fresh shard, plan scripting both)
+        // must open the breaker at threshold 2.
+        let model2: Arc<dyn EpsModel> = Arc::new(crate::score::FaultyEps::new(
+            GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp()),
+            crate::score::FaultPlan::new().panic_on(0).panic_on(1),
+        ));
+        let shard2 = Shard::new(
+            "faulty2",
+            model2,
+            1024,
+            BreakerConfig { threshold: 2, cooldown: Duration::from_millis(50) },
+        );
+        for seed in [3u64, 4] {
+            let (f, _rx) = test_flight(seed, 6, 2, None, 0);
+            sh.inflight_parts.fetch_add(1, Ordering::SeqCst);
+            shard2.inflight.fetch_add(1, Ordering::SeqCst);
+            let job;
+            {
+                let mut st = shard2.lock();
+                slot_in(&mut st, f);
+                job = pick_group(&mut st, 1024).unwrap();
+            }
+            let finished = run_group(&sh, &shard2, job, &mut xbuf, &mut outbuf, &mut tb);
+            assert!(finished.is_empty());
+        }
+        assert!(shard2.breaker.is_open(), "two consecutive panics must open the breaker");
+    }
+
+    #[test]
+    fn non_finite_eval_fails_the_flight_with_a_clear_error() {
+        let sh = bare_shared();
+        let model: Arc<dyn EpsModel> = Arc::new(crate::score::FaultyEps::new(
+            GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp()),
+            crate::score::FaultPlan::new().nan_on(0),
+        ));
+        let shard = Shard::new("nan", model, 1024, BreakerConfig::default());
+        let (f, rx) = test_flight(1, 6, 2, None, 0);
+        sh.inflight_parts.fetch_add(1, Ordering::SeqCst);
+        shard.inflight.fetch_add(1, Ordering::SeqCst);
+        let job;
+        {
+            let mut st = shard.lock();
+            slot_in(&mut st, f);
+            job = pick_group(&mut st, 1024).unwrap();
+        }
+        let (mut xbuf, mut outbuf, mut tb) = (Vec::new(), Vec::new(), Vec::new());
+        let finished = run_group(&sh, &shard, job, &mut xbuf, &mut outbuf, &mut tb);
+        assert!(finished.is_empty(), "a NaN eval must not complete the flight");
+        let err = rx.try_recv().unwrap();
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err()).contains("non-finite"));
+        assert_eq!(shard.stats.snapshot().failed, 1);
+        assert_eq!(shard.stats.snapshot().eval_panics, 0, "NaN is not a panic");
+        assert_eq!(sh.inflight_parts.load(Ordering::SeqCst), 0);
+        assert_eq!(shard.breaker.consecutive(), 1, "NaN output counts toward the breaker");
+
+        // The next (clean) eval closes the streak.
+        let (f2, rx2) = test_flight(2, 1, 2, None, 0);
+        sh.inflight_parts.fetch_add(1, Ordering::SeqCst);
+        shard.inflight.fetch_add(1, Ordering::SeqCst);
+        let job2;
+        {
+            let mut st = shard.lock();
+            slot_in(&mut st, f2);
+            job2 = pick_group(&mut st, 1024).unwrap();
+        }
+        let finished = run_group(&sh, &shard, job2, &mut xbuf, &mut outbuf, &mut tb);
+        assert_eq!(finished.len(), 1, "nfe-1 flight completes in one eval");
+        for fl in finished {
+            complete_flight(&sh, &shard, fl);
+        }
+        assert!(rx2.try_recv().unwrap().is_ok());
+        assert_eq!(shard.breaker.consecutive(), 0, "clean eval must reset the streak");
+    }
+
+    #[test]
     fn shard_map_creates_lazily_and_only_for_registered_models() {
         let mut reg = ModelRegistry::new();
         reg.insert("a", Arc::new(GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp())));
         reg.insert("b", Arc::new(GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp())));
-        let map = ShardMap::new(64);
+        let map = ShardMap::new(64, BreakerConfig::default());
         assert_eq!(map.count(), 0, "no shards before traffic");
         let a1 = map.get_or_create("a", &reg).expect("registered model must resolve");
         assert_eq!(map.count(), 1);

@@ -1,13 +1,21 @@
 //! Serving counters + latency aggregation (lock-free on the hot path).
 //!
 //! Counter glossary (see also the wire-protocol doc in `server`):
-//!   * `requests` / `completed` / `rejected` / `expired` — request lifecycle.
-//!     `rejected` counts refusals at submit (backpressure overload — global
-//!     or per-model — plus out-of-range nfe, unknown model names, and
-//!     invalid sampling configurations); `expired` counts per-request
-//!     deadlines that fired before completion. The lifecycle therefore
-//!     balances: every submitted request lands in exactly one of
-//!     `completed`/`rejected`/`expired`.
+//!   * `requests` / `completed` / `rejected` / `expired` / `failed` —
+//!     request lifecycle. `rejected` counts refusals at submit (backpressure
+//!     overload — global or per-model — plus out-of-range nfe, unknown model
+//!     names, invalid sampling configurations, circuit-breaker refusals and
+//!     drain-time refusals); `expired` counts per-request deadlines that
+//!     fired before completion; `failed` counts requests that were admitted
+//!     but could not be completed (a panicking or non-finite ε-eval, a
+//!     panicking cursor, or work abandoned by a forced shutdown). The
+//!     lifecycle therefore balances: every submitted request lands in
+//!     exactly one of `completed`/`rejected`/`expired`/`failed`.
+//!   * `eval_panics` — ε-eval dispatches that panicked (one per panicking
+//!     merged call, not per affected request; the affected requests land in
+//!     `failed`/`expired`). `unhealthy` — submits refused because the
+//!     model's circuit breaker was open (these are also included in
+//!     `rejected`, keeping the four-term balance above intact).
 //!   * `batches` / `merged_requests` — admission-time merging: one batch is
 //!     one trajectory group (requests stacked into a shared state matrix).
 //!   * `model_evals` — ε-model calls actually dispatched. Every solver is
@@ -170,6 +178,9 @@ pub struct ModelStats {
     pub completed: AtomicU64,
     pub rejected: AtomicU64,
     pub expired: AtomicU64,
+    pub failed: AtomicU64,
+    pub eval_panics: AtomicU64,
+    pub unhealthy: AtomicU64,
     pub samples: AtomicU64,
     pub batches: AtomicU64,
     pub merged_requests: AtomicU64,
@@ -188,6 +199,9 @@ pub struct ModelStatsSnapshot {
     pub completed: u64,
     pub rejected: u64,
     pub expired: u64,
+    pub failed: u64,
+    pub eval_panics: u64,
+    pub unhealthy: u64,
     pub samples: u64,
     pub batches: u64,
     pub merged_requests: u64,
@@ -216,6 +230,9 @@ impl ModelStats {
             completed: self.completed.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             expired: self.expired.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            eval_panics: self.eval_panics.load(Ordering::Relaxed),
+            unhealthy: self.unhealthy.load(Ordering::Relaxed),
             samples: self.samples.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             merged_requests: self.merged_requests.load(Ordering::Relaxed),
@@ -238,6 +255,9 @@ pub struct Stats {
     pub completed: AtomicU64,
     pub rejected: AtomicU64,
     pub expired: AtomicU64,
+    pub failed: AtomicU64,
+    pub eval_panics: AtomicU64,
+    pub unhealthy: AtomicU64,
     pub samples: AtomicU64,
     pub batches: AtomicU64,
     pub merged_requests: AtomicU64,
@@ -257,6 +277,9 @@ pub struct StatsSnapshot {
     pub completed: u64,
     pub rejected: u64,
     pub expired: u64,
+    pub failed: u64,
+    pub eval_panics: u64,
+    pub unhealthy: u64,
     pub samples: u64,
     pub batches: u64,
     pub merged_requests: u64,
@@ -303,6 +326,9 @@ impl Stats {
             completed: self.completed.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             expired: self.expired.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            eval_panics: self.eval_panics.load(Ordering::Relaxed),
+            unhealthy: self.unhealthy.load(Ordering::Relaxed),
             samples: self.samples.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             merged_requests: self.merged_requests.load(Ordering::Relaxed),
@@ -378,6 +404,27 @@ mod tests {
         // A bare global snapshot carries no per-model rows; the shard map
         // fills them in `Coordinator::stats`.
         assert!(Stats::default().snapshot().per_model.is_empty());
+    }
+
+    #[test]
+    fn failure_counters_land_in_snapshots() {
+        let s = Stats::default();
+        s.failed.fetch_add(3, Ordering::Relaxed);
+        s.eval_panics.fetch_add(2, Ordering::Relaxed);
+        s.unhealthy.fetch_add(1, Ordering::Relaxed);
+        let snap = s.snapshot();
+        assert_eq!(snap.failed, 3);
+        assert_eq!(snap.eval_panics, 2);
+        assert_eq!(snap.unhealthy, 1);
+
+        let m = ModelStats::default();
+        m.failed.fetch_add(5, Ordering::Relaxed);
+        m.eval_panics.fetch_add(4, Ordering::Relaxed);
+        m.unhealthy.fetch_add(6, Ordering::Relaxed);
+        let snap = m.snapshot();
+        assert_eq!(snap.failed, 5);
+        assert_eq!(snap.eval_panics, 4);
+        assert_eq!(snap.unhealthy, 6);
     }
 
     #[test]

@@ -4,6 +4,9 @@
 //!   serve   --addr 127.0.0.1:7878 --workers 4 --models gmm2d,gmm2d_exact
 //!           [--max-batch 1024] [--max-inflight 4096]
 //!           [--max-inflight-per-model 4096]
+//!           [--breaker-threshold 5] [--breaker-cooldown-ms 1000]
+//!           [--max-conns 1024] [--read-timeout-ms 30000]
+//!           [--write-timeout-ms 30000] [--max-line-bytes 262144]
 //!   sample  --model gmm2d_exact --solver tab3 --nfe 10 --n 1000 [--metric]
 //!   info    (artifact + platform inventory)
 
@@ -49,9 +52,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // One model may not hog the whole global budget; defaults to the
         // global bound (i.e. no extra cap) unless narrowed explicitly.
         max_inflight_per_model: args.usize_or("max-inflight-per-model", max_inflight),
+        // Per-model circuit breaker: consecutive eval failures before the
+        // model's traffic is refused outright, and how long the refusal
+        // lasts before a retry is admitted. 0 disables the breaker.
+        breaker_threshold: args.u64_or("breaker-threshold", 5) as u32,
+        breaker_cooldown_ms: args.u64_or("breaker-cooldown-ms", 1000),
+    };
+    let opts = server::ServeOptions {
+        max_conns: args.usize_or("max-conns", 1024),
+        read_timeout: std::time::Duration::from_millis(args.u64_or("read-timeout-ms", 30_000)),
+        write_timeout: std::time::Duration::from_millis(
+            args.u64_or("write-timeout-ms", 30_000),
+        ),
+        max_line_bytes: args.usize_or("max-line-bytes", 256 * 1024),
     };
     let coord = Arc::new(Coordinator::new(cfg, reg));
-    let addr = server::serve(coord, &args.str_or("addr", "127.0.0.1:7878"))?;
+    let addr = server::serve_with(coord, &args.str_or("addr", "127.0.0.1:7878"), opts)?;
     println!("deis serving on {addr} (models: {})", models.join(","));
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

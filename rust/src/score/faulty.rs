@@ -1,0 +1,198 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! [`FaultyEps`] wraps any [`EpsModel`] and misbehaves on *scripted* eval
+//! indices only: eval #k can stall for a fixed duration, panic, return
+//! non-finite values, or any combination (applied in that order, so a
+//! "stall then panic" eval deterministically overlaps a request deadline
+//! before it blows up). Everything off-script passes through bit-exactly,
+//! which is what lets the chaos battery assert bit-exact parity for
+//! requests that dodge the faults.
+//!
+//! The eval counter is the wrapper's own dispatch count (one merged
+//! scheduler eval = one tick), so a plan is deterministic as long as the
+//! test serializes the evals it wants to hit — e.g. one worker, or one
+//! request at a time.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+use super::EpsModel;
+
+/// What one scripted eval does, beyond (or instead of) real model math.
+/// Fields compose: `stall_ms` sleeps first, then `panic` unwinds, then the
+/// inner model runs and `nan` overwrites its output.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Fault {
+    /// Sleep this long before doing anything else.
+    pub stall_ms: u64,
+    /// Panic (after any stall) instead of evaluating.
+    pub panic: bool,
+    /// Overwrite the output with NaNs after evaluating.
+    pub nan: bool,
+}
+
+impl Fault {
+    pub fn is_noop(&self) -> bool {
+        *self == Fault::default()
+    }
+}
+
+/// A script of `(eval index, fault)` entries. Builder-style:
+///
+/// ```ignore
+/// let plan = FaultPlan::new().panic_on(0).panic_on(1).stall_on(2, 150).nan_on(3);
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    faults: Vec<(usize, Fault)>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    fn entry(&mut self, eval: usize) -> &mut Fault {
+        if let Some(pos) = self.faults.iter().position(|(e, _)| *e == eval) {
+            return &mut self.faults[pos].1;
+        }
+        self.faults.push((eval, Fault::default()));
+        &mut self.faults.last_mut().unwrap().1
+    }
+
+    /// Panic on eval #`eval`.
+    pub fn panic_on(mut self, eval: usize) -> FaultPlan {
+        self.entry(eval).panic = true;
+        self
+    }
+
+    /// Stall eval #`eval` for `ms` milliseconds (then run it normally,
+    /// unless another fault is also scripted for the same index).
+    pub fn stall_on(mut self, eval: usize, ms: u64) -> FaultPlan {
+        self.entry(eval).stall_ms = ms;
+        self
+    }
+
+    /// Return all-NaN output from eval #`eval`.
+    pub fn nan_on(mut self, eval: usize) -> FaultPlan {
+        self.entry(eval).nan = true;
+        self
+    }
+
+    /// The scripted fault for eval #`eval` (no-op if unscripted).
+    pub fn fault_for(&self, eval: usize) -> Fault {
+        self.faults
+            .iter()
+            .find(|(e, _)| *e == eval)
+            .map(|(_, f)| *f)
+            .unwrap_or_default()
+    }
+}
+
+/// An [`EpsModel`] that follows a [`FaultPlan`]. Off-script evals are
+/// bit-exact pass-throughs to the inner model.
+pub struct FaultyEps<M> {
+    inner: M,
+    plan: FaultPlan,
+    evals: AtomicUsize,
+}
+
+impl<M: EpsModel> FaultyEps<M> {
+    pub fn new(inner: M, plan: FaultPlan) -> FaultyEps<M> {
+        FaultyEps { inner, plan, evals: AtomicUsize::new(0) }
+    }
+
+    /// Evals dispatched so far (including panicked ones).
+    pub fn evals(&self) -> usize {
+        self.evals.load(Ordering::SeqCst)
+    }
+}
+
+impl<M: EpsModel> EpsModel for FaultyEps<M> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn eval(&self, x: &[f64], t: &[f64], b: usize, out: &mut [f64]) {
+        let idx = self.evals.fetch_add(1, Ordering::SeqCst);
+        let fault = self.plan.fault_for(idx);
+        if fault.stall_ms > 0 {
+            std::thread::sleep(Duration::from_millis(fault.stall_ms));
+        }
+        if fault.panic {
+            panic!("injected fault: ε-eval #{idx} panicked (FaultPlan)");
+        }
+        self.inner.eval(x, t, b, out);
+        if fault.nan {
+            for v in out[..b * self.inner.dim()].iter_mut() {
+                *v = f64::NAN;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::diffusion::Sde;
+    use crate::gmm::Gmm;
+    use crate::score::GmmEps;
+    use std::panic::AssertUnwindSafe;
+
+    fn oracle() -> GmmEps {
+        GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp())
+    }
+
+    #[test]
+    fn off_script_evals_are_bit_exact() {
+        let plain = oracle();
+        let faulty = FaultyEps::new(oracle(), FaultPlan::new().panic_on(99));
+        let x = vec![0.5, -0.5, 1.0, 2.0];
+        let t = vec![0.5, 0.5];
+        assert_eq!(faulty.eval_vec(&x, &t, 2), plain.eval_vec(&x, &t, 2));
+        assert_eq!(faulty.evals(), 1);
+    }
+
+    #[test]
+    fn scripted_panic_fires_on_exact_index() {
+        let faulty = FaultyEps::new(oracle(), FaultPlan::new().panic_on(1));
+        let x = vec![1.0, 0.0];
+        let t = vec![0.3];
+        let mut out = vec![0.0; 2];
+        faulty.eval(&x, &t, 1, &mut out); // eval #0: fine
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let mut out = vec![0.0; 2];
+            faulty.eval(&x, &t, 1, &mut out); // eval #1: scripted panic
+        }));
+        assert!(r.is_err(), "eval #1 must panic");
+        faulty.eval(&x, &t, 1, &mut out); // eval #2: recovered
+        assert_eq!(faulty.evals(), 3);
+    }
+
+    #[test]
+    fn nan_mode_poisons_every_output_value() {
+        let faulty = FaultyEps::new(oracle(), FaultPlan::new().nan_on(0));
+        let x = vec![0.5, -0.5, 1.0, 2.0];
+        let t = vec![0.5, 0.5];
+        let mut out = vec![0.0; 4];
+        faulty.eval(&x, &t, 2, &mut out);
+        assert!(out.iter().all(|v| v.is_nan()), "{out:?}");
+    }
+
+    #[test]
+    fn stall_composes_with_panic_and_plan_merges_entries() {
+        let plan = FaultPlan::new().stall_on(4, 120).panic_on(4);
+        let f = plan.fault_for(4);
+        assert_eq!(f, Fault { stall_ms: 120, panic: true, nan: false });
+        assert!(plan.fault_for(3).is_noop());
+
+        let faulty = FaultyEps::new(oracle(), FaultPlan::new().stall_on(0, 30));
+        let x = vec![1.0, 0.0];
+        let t = vec![0.3];
+        let mut out = vec![0.0; 2];
+        let t0 = std::time::Instant::now();
+        faulty.eval(&x, &t, 1, &mut out);
+        assert!(t0.elapsed() >= Duration::from_millis(25), "stall did not bite");
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+}

@@ -4,10 +4,12 @@
 //! against the PJRT-compiled network (serving), the rust-native MLP
 //! (sweeps + cross-check), or the analytic GMM oracle (exact-score studies).
 
+pub mod faulty;
 mod native;
 pub mod pjrt;
 pub mod pool;
 
+pub use faulty::{Fault, FaultPlan, FaultyEps};
 pub use native::NativeMlp;
 
 use std::sync::atomic::{AtomicUsize, Ordering};

@@ -33,18 +33,36 @@
 //! Introspection:
 //!   -> {"cmd":"stats"}            <- {"ok":true,"requests":...}
 //!   -> {"cmd":"models"}           <- {"ok":true,"models":[...]}
+//!   -> {"cmd":"health"}           <- {"ok":true,"draining":false,
+//!                                     "worker_panics":0,
+//!                                     "models":{"gmm2d":true,...}}
+//!
+//! `health` reports graceful-degradation state: `draining` is true once a
+//! graceful shutdown began (new requests are refused), `worker_panics`
+//! counts scheduler worker threads the supervisor has restarted, and
+//! `models` maps each model that has seen traffic to its circuit-breaker
+//! state (`true` = healthy/closed, `false` = open: that model's requests
+//! are being refused with {"ok":false,"error":"model ... unhealthy ..."}
+//! until the breaker's cooldown half-opens it).
 //!
 //! Stats keys: request lifecycle (`requests`, `completed`, `rejected`,
-//! `expired`, `samples`), admission merging (`batches`, `merged_requests`),
-//! scheduler effectiveness (`model_evals`, `sched_evals`,
-//! `sched_eval_requests`, `eval_occupancy`, `max_occupancy` — occupancy k
-//! means each scheduled network call served k requests on average), the
-//! shared solver-plan cache (`plan_cache_hits`, `plan_cache_misses` — a hit
-//! means admission reused a cached (grid, coefficients) plan instead of
-//! rebuilding it), and latency (`p50_us`, `p99_us`, `mean_us`). `rejected`
-//! covers every refusal at submit: global overload, per-model overload,
-//! out-of-range `nfe`, unknown model names and invalid sampling configs —
-//! so `requests == completed + rejected + expired` always balances.
+//! `expired`, `failed`, `samples`), admission merging (`batches`,
+//! `merged_requests`), scheduler effectiveness (`model_evals`,
+//! `sched_evals`, `sched_eval_requests`, `eval_occupancy`, `max_occupancy`
+//! — occupancy k means each scheduled network call served k requests on
+//! average), fault containment (`eval_panics` — merged ε-evals that
+//! panicked and were contained; `unhealthy` — refusals due to an open
+//! circuit breaker, a subset of `rejected`), the shared solver-plan cache
+//! (`plan_cache_hits`, `plan_cache_misses` — a hit means admission reused
+//! a cached (grid, coefficients) plan instead of rebuilding it), and
+//! latency (`p50_us`, `p99_us`, `mean_us`). `rejected` covers every
+//! refusal at submit: global overload, per-model overload, out-of-range
+//! `nfe`, unknown model names, invalid sampling configs, open circuit
+//! breakers and draining shutdowns; `failed` counts requests whose
+//! admitted work was lost to a contained fault (eval panic, non-finite
+//! model output, panicking solver advance, or work stranded past the drain
+//! window) — so `requests == completed + rejected + expired + failed`
+//! always balances.
 //!
 //! The coordinator is sharded by model (one scheduler shard per registered
 //! model; see `coordinator/scheduler.rs`), and the stats reply additionally
@@ -52,17 +70,36 @@
 //! that have received traffic), keyed by model name:
 //!
 //!   "per_model": {"gmm2d": {"requests":N,"completed":N,"rejected":N,
-//!                           "expired":N,"samples":N,"batches":N,
+//!                           "expired":N,"failed":N,"eval_panics":N,
+//!                           "unhealthy":N,"samples":N,"batches":N,
 //!                           "merged_requests":N,"model_evals":N,
 //!                           "sched_evals":N,"sched_eval_requests":N,
 //!                           "eval_occupancy":X,"max_occupancy":N}, ...}
 //!
 //! Per-model `rejected` counts only refusals attributable to that shard
-//! (per-model overload, invalid configs); global-overload, unknown-model
-//! and nfe-cap refusals appear only in the top-level `rejected`. Each
-//! model's lifecycle balances on its own: `requests == completed +
-//! rejected + expired` per entry. Existing clients that ignore unknown
-//! keys need no migration.
+//! (per-model overload, open breaker, invalid configs); global-overload,
+//! unknown-model, draining and nfe-cap refusals appear only in the
+//! top-level `rejected`. Each model's lifecycle balances on its own:
+//! `requests == completed + rejected + expired + failed` per entry.
+//! Existing clients that ignore unknown keys need no migration.
+//!
+//! Connection hygiene (see [`ServeOptions`]): at most `max_conns`
+//! concurrent connections (excess connections get one {"ok":false,
+//! "error":"server at connection capacity ..."} line and are closed),
+//! request lines are capped at `max_line_bytes` (an over-long line gets an
+//! error reply and the connection is closed — the reader never buffers
+//! unbounded input), and a connection that goes silent MID-line for longer
+//! than `read_timeout` is dropped (slowloris). Idle connections *between*
+//! requests are not timed out; they hold a connection slot, which
+//! `max_conns` bounds. Replies are written under `write_timeout`.
+//!
+//! Graceful shutdown is coordinator-level: once `Coordinator::begin_drain`
+//! runs (or a drain-based shutdown starts), every new submission — from
+//! any connection — is refused with {"ok":false,"error":"coordinator
+//! shutting down ..."} while already-admitted work finishes; work still
+//! stranded when the drain window closes is answered with the same error
+//! rather than left hanging. Introspection (`stats`/`models`/`health`)
+//! keeps working throughout, so clients can watch the drain.
 //!
 //! Latency semantics: latencies are recorded into a lock-free log-bucketed
 //! histogram (`coordinator::stats::LatencyHistogram`), not a raw list.
@@ -75,7 +112,9 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -104,7 +143,9 @@ pub fn parse_request(v: &Json) -> Result<SampleRequest> {
     req.sde = sde;
     req.grid = grid;
     req.t0 = v.opt("t0").map(|x| x.as_f64()).transpose()?.unwrap_or(sde.t0_default());
-    req.seed = v.opt("seed").map(|x| x.as_f64()).transpose()?.unwrap_or(0.0) as u64;
+    // Seeds are u64 and must stay lossless: routing them through f64 would
+    // silently collapse every seed above 2^53 (and truncate fractions).
+    req.seed = v.opt("seed").map(|x| x.as_u64()).transpose()?.unwrap_or(0);
     req.deadline_ms = v.opt("deadline_ms").map(|x| x.as_usize()).transpose()?.map(|ms| ms as u64);
     Ok(req)
 }
@@ -127,6 +168,9 @@ fn handle_line(coord: &Coordinator, line: &str) -> String {
                                     ("completed", Json::num(m.completed as f64)),
                                     ("rejected", Json::num(m.rejected as f64)),
                                     ("expired", Json::num(m.expired as f64)),
+                                    ("failed", Json::num(m.failed as f64)),
+                                    ("eval_panics", Json::num(m.eval_panics as f64)),
+                                    ("unhealthy", Json::num(m.unhealthy as f64)),
                                     ("samples", Json::num(m.samples as f64)),
                                     ("batches", Json::num(m.batches as f64)),
                                     ("merged_requests", Json::num(m.merged_requests as f64)),
@@ -148,6 +192,9 @@ fn handle_line(coord: &Coordinator, line: &str) -> String {
                         ("completed", Json::num(s.completed as f64)),
                         ("rejected", Json::num(s.rejected as f64)),
                         ("expired", Json::num(s.expired as f64)),
+                        ("failed", Json::num(s.failed as f64)),
+                        ("eval_panics", Json::num(s.eval_panics as f64)),
+                        ("unhealthy", Json::num(s.unhealthy as f64)),
                         ("samples", Json::num(s.samples as f64)),
                         ("batches", Json::num(s.batches as f64)),
                         ("merged_requests", Json::num(s.merged_requests as f64)),
@@ -171,6 +218,17 @@ fn handle_line(coord: &Coordinator, line: &str) -> String {
                         Json::Arr(coord.models().iter().map(|m| Json::str(m)).collect()),
                     ),
                 ])),
+                "health" => {
+                    let h = coord.health();
+                    let models: std::collections::BTreeMap<String, Json> =
+                        h.models.into_iter().map(|(n, up)| (n, Json::Bool(up))).collect();
+                    Ok(Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("draining", Json::Bool(h.draining)),
+                        ("worker_panics", Json::uint(h.worker_panics)),
+                        ("models", Json::Obj(models)),
+                    ]))
+                }
                 other => bail!("unknown cmd '{other}'"),
             };
         }
@@ -204,34 +262,192 @@ fn handle_line(coord: &Coordinator, line: &str) -> String {
     }
 }
 
-/// Serve until the process dies. Returns the bound address (port 0 allowed).
+/// Front-end hardening knobs. The defaults keep a well-behaved client
+/// entirely unaffected; they exist to bound what a misbehaving one can
+/// cost the process.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Concurrent connections (one thread each). Excess connections get
+    /// one "server at connection capacity" error line and are closed.
+    pub max_conns: usize,
+    /// Longest a connection may sit silent MID-line before it is dropped
+    /// (slowloris guard). Idle connections between requests are exempt.
+    pub read_timeout: Duration,
+    /// Longest a reply write may block on an unread socket.
+    pub write_timeout: Duration,
+    /// Request-line byte cap: the reader never buffers more than this for
+    /// one line. Over-long lines get an error reply and the connection is
+    /// closed (the rest of the line is unread, so resync is impossible).
+    pub max_line_bytes: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            max_conns: 1024,
+            read_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(30),
+            max_line_bytes: 256 * 1024,
+        }
+    }
+}
+
+/// Serve until the process dies, with default [`ServeOptions`]. Returns
+/// the bound address (port 0 allowed).
 pub fn serve(coord: Arc<Coordinator>, addr: &str) -> Result<std::net::SocketAddr> {
+    serve_with(coord, addr, ServeOptions::default())
+}
+
+/// RAII connection slot: decrements the live-connection count when the
+/// connection thread finishes, however it finishes.
+struct ConnSlot(Arc<AtomicUsize>);
+
+impl Drop for ConnSlot {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Serve until the process dies, with explicit hardening options.
+pub fn serve_with(
+    coord: Arc<Coordinator>,
+    addr: &str,
+    opts: ServeOptions,
+) -> Result<std::net::SocketAddr> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
+    let conns = Arc::new(AtomicUsize::new(0));
     std::thread::spawn(move || {
         for stream in listener.incoming().flatten() {
+            // Admission at the accept loop: a full house sheds the new
+            // connection with one error line instead of spawning a thread
+            // the box has no budget for.
+            if conns.fetch_add(1, Ordering::SeqCst) >= opts.max_conns.max(1) {
+                conns.fetch_sub(1, Ordering::SeqCst);
+                let mut s = stream;
+                let _ = s.set_write_timeout(Some(opts.write_timeout));
+                let _ = s.write_all(
+                    Json::obj(vec![
+                        ("ok", Json::Bool(false)),
+                        (
+                            "error",
+                            Json::str(&format!(
+                                "server at connection capacity ({}); retry later",
+                                opts.max_conns
+                            )),
+                        ),
+                    ])
+                    .to_string()
+                    .as_bytes(),
+                );
+                let _ = s.write_all(b"\n");
+                continue;
+            }
+            let slot = ConnSlot(conns.clone());
             let coord = coord.clone();
             std::thread::spawn(move || {
-                let _ = handle_conn(&coord, stream);
+                let _slot = slot;
+                let _ = handle_conn(&coord, stream, opts);
             });
         }
     });
     Ok(local)
 }
 
-fn handle_conn(coord: &Coordinator, stream: TcpStream) -> Result<()> {
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+/// One bounded request line. `Eof` ends the connection; `TooLong` means
+/// the cap was hit (the line's remainder is still un-read — the caller
+/// must close, since resynchronizing on the next newline could buffer
+/// arbitrarily slowly).
+enum LineRead {
+    Line(Vec<u8>),
+    TooLong,
+    Eof,
+}
+
+/// Read one newline-terminated line without ever buffering more than
+/// `max` bytes, tolerating read-timeout wakeups while the line is empty
+/// (an idle connection between requests) but not once bytes have arrived
+/// (a slowloris trickling a request forever).
+fn read_line_bounded(reader: &mut BufReader<TcpStream>, max: usize) -> Result<LineRead> {
+    let mut out: Vec<u8> = Vec::new();
+    loop {
+        let chunk = match reader.fill_buf() {
+            Ok(c) => c,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if out.is_empty() {
+                    continue; // idle between requests: keep waiting
+                }
+                bail!("read timed out mid-request-line");
+            }
+            Err(e) => return Err(e.into()),
+        };
+        if chunk.is_empty() {
+            // EOF. A trailing unterminated line still gets served (same
+            // contract as BufRead::lines).
+            return Ok(if out.is_empty() { LineRead::Eof } else { LineRead::Line(out) });
         }
-        let reply = handle_line(coord, &line);
-        writer.write_all(reply.as_bytes())?;
-        writer.write_all(b"\n")?;
+        match chunk.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                if out.len() + pos > max {
+                    reader.consume(pos + 1);
+                    return Ok(LineRead::TooLong);
+                }
+                out.extend_from_slice(&chunk[..pos]);
+                reader.consume(pos + 1);
+                return Ok(LineRead::Line(out));
+            }
+            None => {
+                let n = chunk.len();
+                if out.len() + n > max {
+                    reader.consume(n);
+                    return Ok(LineRead::TooLong);
+                }
+                out.extend_from_slice(chunk);
+                reader.consume(n);
+            }
+        }
     }
-    Ok(())
+}
+
+fn handle_conn(coord: &Coordinator, stream: TcpStream, opts: ServeOptions) -> Result<()> {
+    stream.set_read_timeout(Some(opts.read_timeout))?;
+    stream.set_write_timeout(Some(opts.write_timeout))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        match read_line_bounded(&mut reader, opts.max_line_bytes)? {
+            LineRead::Eof => return Ok(()),
+            LineRead::TooLong => {
+                let reply = Json::obj(vec![
+                    ("ok", Json::Bool(false)),
+                    (
+                        "error",
+                        Json::str(&format!(
+                            "request line too long (max {} bytes)",
+                            opts.max_line_bytes
+                        )),
+                    ),
+                ]);
+                writer.write_all(reply.to_string().as_bytes())?;
+                writer.write_all(b"\n")?;
+                return Ok(()); // cannot resync past an unread tail: close
+            }
+            LineRead::Line(bytes) => {
+                let line = String::from_utf8_lossy(&bytes);
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let reply = handle_line(coord, &line);
+                writer.write_all(reply.as_bytes())?;
+                writer.write_all(b"\n")?;
+            }
+        }
+    }
 }
 
 /// Minimal blocking client for tests/examples.
@@ -324,5 +540,91 @@ mod tests {
                 });
             assert!(!resp.get("ok").unwrap().as_bool().unwrap(), "{bad}");
         }
+    }
+
+    /// Seeds are u64 end to end: a seed above 2^53 must parse losslessly
+    /// (the old path went through f64, which silently collapses adjacent
+    /// seeds), and a lossy/fractional seed is a parse error, not a guess.
+    #[test]
+    fn seed_above_2_53_parses_exactly() {
+        let seed = (1u64 << 60) + 1;
+        let line =
+            format!(r#"{{"model":"gmm2d","solver":"tab3","nfe":10,"n":4,"seed":{seed}}}"#);
+        let req = parse_request(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(req.seed, seed, "seed must not round-trip through f64");
+        let bad = r#"{"model":"gmm2d","solver":"tab3","nfe":10,"n":4,"seed":1.5}"#;
+        assert!(parse_request(&Json::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn health_reports_draining_and_model_state() {
+        let c = coord();
+        let addr = serve(c.clone(), "127.0.0.1:0").unwrap();
+        let mut cl = Client::connect(addr).unwrap();
+        let sample = Json::parse(r#"{"model":"gmm2d","solver":"ddim","nfe":5,"n":2}"#).unwrap();
+        assert!(cl.call(&sample).unwrap().get("ok").unwrap().as_bool().unwrap());
+        let h = cl.call(&Json::parse(r#"{"cmd":"health"}"#).unwrap()).unwrap();
+        assert!(h.get("ok").unwrap().as_bool().unwrap());
+        assert!(!h.get("draining").unwrap().as_bool().unwrap());
+        assert!(h.get("models").unwrap().get("gmm2d").unwrap().as_bool().unwrap());
+        // Draining: sampling is refused, introspection keeps working.
+        c.begin_drain();
+        let h = cl.call(&Json::parse(r#"{"cmd":"health"}"#).unwrap()).unwrap();
+        assert!(h.get("draining").unwrap().as_bool().unwrap());
+        let r = cl.call(&sample).unwrap();
+        assert!(!r.get("ok").unwrap().as_bool().unwrap());
+        assert!(r.get("error").unwrap().as_str().unwrap().contains("shutting down"));
+    }
+
+    #[test]
+    fn over_long_request_lines_error_and_close() {
+        let c = coord();
+        let addr = serve_with(
+            c,
+            "127.0.0.1:0",
+            ServeOptions { max_line_bytes: 128, ..Default::default() },
+        )
+        .unwrap();
+        let mut cl = Client::connect(addr).unwrap();
+        let huge = "x".repeat(4096);
+        cl.writer.write_all(huge.as_bytes()).unwrap();
+        cl.writer.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        cl.reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(&line).unwrap();
+        assert!(!resp.get("ok").unwrap().as_bool().unwrap());
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("too long"));
+        let mut l2 = String::new();
+        assert_eq!(
+            cl.reader.read_line(&mut l2).unwrap(),
+            0,
+            "server must close the connection after an over-long line"
+        );
+    }
+
+    #[test]
+    fn connection_cap_sheds_excess_connections_with_an_error() {
+        let c = coord();
+        let addr = serve_with(
+            c,
+            "127.0.0.1:0",
+            ServeOptions { max_conns: 1, ..Default::default() },
+        )
+        .unwrap();
+        let mut keep = Client::connect(addr).unwrap();
+        let models = Json::parse(r#"{"cmd":"models"}"#).unwrap();
+        // A served call proves the first connection is accepted + counted.
+        assert!(keep.call(&models).unwrap().get("ok").unwrap().as_bool().unwrap());
+        let mut shed = Client::connect(addr).unwrap();
+        let mut line = String::new();
+        shed.reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(&line).unwrap();
+        assert!(!resp.get("ok").unwrap().as_bool().unwrap());
+        assert!(
+            resp.get("error").unwrap().as_str().unwrap().contains("connection capacity"),
+            "{resp:?}"
+        );
+        // The surviving connection is unaffected by the shed one.
+        assert!(keep.call(&models).unwrap().get("ok").unwrap().as_bool().unwrap());
     }
 }

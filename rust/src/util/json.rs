@@ -1,9 +1,16 @@
 //! Minimal JSON parser/writer (serde is not in the offline registry).
 //!
 //! Covers the full JSON grammar we exchange with the build path: objects,
-//! arrays, numbers (f64), strings with escapes, bool, null. Used to read
+//! arrays, numbers, strings with escapes, bool, null. Used to read
 //! artifacts/meta.json, weights_*.json, checks_*.json, the parity fixtures,
 //! and for the line-JSON wire protocol of `server`.
+//!
+//! Numbers: unsigned integer tokens are kept exact as [`Json::Int`] (u64),
+//! everything else is f64 ([`Json::Num`]). The split exists because RNG
+//! seeds ride this format: a u64 seed ≥ 2^53 routed through f64 silently
+//! collapses onto a neighbouring even value, so `{"seed": …}` would sample
+//! a different trajectory than the client asked for. `as_f64` accepts both
+//! variants; `as_u64` is the lossless accessor for seed-shaped fields.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -15,6 +22,8 @@ pub enum Json {
     Null,
     Bool(bool),
     Num(f64),
+    /// Unsigned integer token, kept exact (f64 loses integers above 2^53).
+    Int(u64),
     Str(String),
     Arr(Vec<Json>),
     Obj(BTreeMap<String, Json>),
@@ -56,16 +65,42 @@ impl Json {
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(x) => Ok(*x),
+            Json::Int(u) => Ok(*u as f64),
             _ => bail!("not a number"),
         }
     }
 
     pub fn as_usize(&self) -> Result<usize> {
+        if let Json::Int(u) = self {
+            return Ok(*u as usize);
+        }
         let x = self.as_f64()?;
         if x < 0.0 || x.fract() != 0.0 {
             bail!("not a non-negative integer: {x}");
         }
         Ok(x as usize)
+    }
+
+    /// Lossless u64 accessor. Accepts exact integer tokens of any u64
+    /// magnitude; accepts float-typed values only when they are non-negative
+    /// integers small enough (≤ 2^53) that no precision was lost on the way
+    /// in. Rejects negatives and non-integral values.
+    pub fn as_u64(&self) -> Result<u64> {
+        match self {
+            Json::Int(u) => Ok(*u),
+            Json::Num(x) => {
+                if *x < 0.0 || x.fract() != 0.0 {
+                    bail!("not a non-negative integer: {x}");
+                }
+                if *x > 9_007_199_254_740_992.0 {
+                    // 2^53: above this an f64 no longer identifies a unique
+                    // integer, so the original value is unrecoverable.
+                    bail!("integer too large to round-trip through f64: {x}");
+                }
+                Ok(*x as u64)
+            }
+            _ => bail!("not a number"),
+        }
     }
 
     pub fn as_str(&self) -> Result<&str> {
@@ -138,6 +173,9 @@ impl Json {
                     out.push_str("null"); // JSON has no inf/nan
                 }
             }
+            Json::Int(u) => {
+                let _ = write!(out, "{u}");
+            }
             Json::Str(s) => write_escaped(out, s),
             Json::Arr(v) => {
                 out.push('[');
@@ -172,6 +210,10 @@ impl Json {
 
     pub fn num(x: f64) -> Json {
         Json::Num(x)
+    }
+
+    pub fn uint(u: u64) -> Json {
+        Json::Int(u)
     }
 
     pub fn str(s: &str) -> Json {
@@ -361,6 +403,14 @@ impl<'a> Parser<'a> {
             self.i += 1;
         }
         let s = std::str::from_utf8(&self.b[start..self.i])?;
+        // Pure-digit tokens stay exact as u64 (seeds above 2^53 must not be
+        // squeezed through f64); anything signed/fractional/exponential — or
+        // too large even for u64 — takes the float path.
+        if s.bytes().all(|c| c.is_ascii_digit()) {
+            if let Ok(u) = s.parse::<u64>() {
+                return Ok(Json::Int(u));
+            }
+        }
         Ok(Json::Num(s.parse::<f64>().with_context(|| format!("bad number '{s}'"))?))
     }
 }
@@ -411,6 +461,37 @@ mod tests {
     fn unicode_escapes() {
         let v = Json::parse(r#""é😀""#).unwrap();
         assert_eq!(v.as_str().unwrap(), "é😀");
+    }
+
+    #[test]
+    fn u64_seeds_above_2_53_round_trip_exactly() {
+        // 2^60 + 1: adjacent f64s differ by 256 here, so any float detour
+        // would destroy the low bits. The exact-integer path must not.
+        let seed: u64 = (1u64 << 60) + 1;
+        let src = format!("{{\"seed\": {seed}}}");
+        let v = Json::parse(&src).unwrap();
+        assert_eq!(v.get("seed").unwrap().as_u64().unwrap(), seed);
+        // Writer emits it exactly and it reparses to the same value.
+        let again = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(again.get("seed").unwrap().as_u64().unwrap(), seed);
+        // u64::MAX survives too (would overflow i64 in the float writer).
+        let v = Json::parse(&format!("{}", u64::MAX)).unwrap();
+        assert_eq!(v.as_u64().unwrap(), u64::MAX);
+        assert_eq!(v.to_string(), format!("{}", u64::MAX));
+    }
+
+    #[test]
+    fn as_u64_rejects_lossy_and_negative_values() {
+        assert!(Json::parse("-3").unwrap().as_u64().is_err());
+        assert!(Json::parse("1.5").unwrap().as_u64().is_err());
+        assert!(Json::parse("\"7\"").unwrap().as_u64().is_err());
+        // A float-typed integral value within exact range is accepted…
+        assert_eq!(Json::Num(42.0).as_u64().unwrap(), 42);
+        // …but one beyond 2^53 is refused rather than silently rounded.
+        assert!(Json::Num(1e300).as_u64().is_err());
+        // Int tokens still satisfy the generic numeric accessors.
+        assert_eq!(Json::parse("7").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(Json::parse("7").unwrap().as_f64().unwrap(), 7.0);
     }
 
     #[test]

@@ -1,0 +1,101 @@
+//! Poison-tolerant lock acquisition.
+//!
+//! `std`'s mutexes poison on panic, and every `lock().unwrap()` downstream
+//! of a single panicking thread then turns one contained fault into a
+//! process-wide cascade. The coordinator's locks guard routing bookkeeping
+//! whose invariants are maintained by short, panic-free critical sections
+//! (all heavy work — ε-evals, solver advances, coefficient math — runs off
+//! the locks, and the fault-containment layer catches panics before they
+//! unwind through a guard). Recovering the guard is therefore sound: the
+//! protected state cannot have been left half-mutated by the panic that
+//! poisoned it, and the chaos battery (`rust/tests/chaos.rs`) verifies the
+//! bookkeeping still balances after injected faults.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// `mutex.lock()` that recovers the guard from a poisoned mutex instead of
+/// panicking.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `rwlock.read()` with poison recovery.
+pub fn read_recover<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `rwlock.write()` with poison recovery.
+pub fn write_recover<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `condvar.wait(guard)` with poison recovery.
+pub fn wait_recover<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::AssertUnwindSafe;
+    use std::sync::{Arc, RwLock};
+
+    #[test]
+    fn poisoned_mutex_recovers() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = m.clone();
+        // Poison it: panic while holding the guard.
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*lock_recover(&m), 7);
+        // Recovery is repeatable and writable.
+        *lock_recover(&m) = 8;
+        assert_eq!(*lock_recover(&m), 8);
+    }
+
+    #[test]
+    fn poisoned_rwlock_recovers() {
+        let l = Arc::new(RwLock::new(1usize));
+        let l2 = l.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison");
+        })
+        .join();
+        assert!(l.read().is_err(), "rwlock should be poisoned");
+        assert_eq!(*read_recover(&l), 1);
+        *write_recover(&l) = 2;
+        assert_eq!(*read_recover(&l), 2);
+    }
+
+    #[test]
+    fn condvar_wait_recovers_after_poison() {
+        // Poison the mutex first, then make sure a waiter can still ride
+        // the condvar: recover the guard, wait, observe the signalled state.
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        {
+            let p = pair.clone();
+            let _ = std::thread::spawn(move || {
+                let _g = p.0.lock().unwrap();
+                panic!("poison");
+            })
+            .join();
+        }
+        let p = pair.clone();
+        let waiter = std::thread::spawn(move || {
+            let mut g = lock_recover(&p.0);
+            while !*g {
+                g = wait_recover(&p.1, g);
+            }
+        });
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        *lock_recover(&pair.0) = true;
+        pair.1.notify_all();
+        let joined = std::panic::catch_unwind(AssertUnwindSafe(|| waiter.join().unwrap()));
+        assert!(joined.is_ok(), "waiter must survive the poisoned pair");
+    }
+}

@@ -1,0 +1,188 @@
+//! Chaos battery: a 4-worker multi-model TCP run where three of the four
+//! registered models misbehave on script — one panics its first two evals
+//! (opening its circuit breaker), one returns NaNs once, one stalls past a
+//! request deadline — while a healthy sibling keeps serving.
+//!
+//! What the battery pins down:
+//!   * every client gets exactly one reply (no request hangs or vanishes),
+//!   * the 4-term lifecycle balance `requests == completed + rejected +
+//!     expired + failed` holds globally AND per model,
+//!   * the breaker opens at its threshold, refuses with an "unhealthy"
+//!     error without dispatching an eval, and recovers after its cooldown,
+//!   * the healthy sibling's samples stay BIT-EXACT against an in-process
+//!     solo reference — fault containment means untouched traffic is not
+//!     perturbed at all, not merely "still completes".
+//!
+//! Determinism: each model's `FaultyEps` has its own eval counter and each
+//! fault phase drives its model with serialized blocking calls, so the
+//! scripted eval indices are hit exactly; the concurrent burst at the end
+//! runs entirely off-script.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use deis::coordinator::{Coordinator, CoordinatorConfig};
+use deis::score::FaultPlan;
+use deis::server::{serve, Client};
+use deis::solvers::SolverKind;
+use deis::util::json::Json;
+
+fn call(c: &mut Client, line: &str) -> Json {
+    c.call(&Json::parse(line).unwrap()).unwrap()
+}
+
+fn err_text(resp: &Json) -> String {
+    assert!(!resp.get("ok").unwrap().as_bool().unwrap(), "expected an error: {resp:?}");
+    resp.get("error").unwrap().as_str().unwrap().to_string()
+}
+
+#[test]
+fn chaos_battery_contains_faults_and_balances_the_lifecycle() {
+    // "gmm2d" healthy; "ring6" panics evals #0 and #1; "ring5" NaNs eval
+    // #0; "ring7" stalls eval #0 for 150 ms (vs a 40 ms deadline).
+    let reg = common::faulty_registry(&[
+        ("gmm2d", FaultPlan::new()),
+        ("ring6", FaultPlan::new().panic_on(0).panic_on(1)),
+        ("ring5", FaultPlan::new().nan_on(0)),
+        ("ring7", FaultPlan::new().stall_on(0, 150)),
+    ]);
+    let coord = Arc::new(Coordinator::new(
+        CoordinatorConfig {
+            workers: 4,
+            max_batch_samples: 512,
+            breaker_threshold: 2,
+            breaker_cooldown_ms: 200,
+            ..Default::default()
+        },
+        reg,
+    ));
+    let addr = serve(coord, "127.0.0.1:0").unwrap();
+    let mut c = Client::connect(addr).unwrap();
+
+    // Phase 1 — healthy baseline: bit-exact against the solo reference.
+    let want = common::solo_samples("gmm2d", SolverKind::Tab(2), 6, 8, 11);
+    let resp = call(
+        &mut c,
+        r#"{"model":"gmm2d","solver":"tab2","nfe":6,"n":8,"seed":11,"return_samples":true}"#,
+    );
+    assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp:?}");
+    assert_eq!(
+        resp.get("samples").unwrap().as_f64_vec().unwrap(),
+        want,
+        "healthy model must be bit-exact before any chaos"
+    );
+
+    // Phase 2 — panic model: two scripted eval panics are contained as
+    // per-request errors and trip the threshold-2 breaker.
+    for _ in 0..2 {
+        let e = err_text(&call(&mut c, r#"{"model":"ring6","solver":"ddim","nfe":3,"n":4}"#));
+        assert!(e.contains("panicked"), "{e}");
+    }
+    let h = call(&mut c, r#"{"cmd":"health"}"#);
+    assert!(
+        !h.get("models").unwrap().get("ring6").unwrap().as_bool().unwrap(),
+        "breaker must be open after 2 consecutive eval panics: {h:?}"
+    );
+    // Open circuit: refused at submit — no eval is dispatched, so the
+    // FaultyEps counter is NOT advanced and the recovery below still runs
+    // the clean eval #2.
+    let e = err_text(&call(&mut c, r#"{"model":"ring6","solver":"ddim","nfe":3,"n":4}"#));
+    assert!(e.contains("unhealthy"), "{e}");
+    // Half-open after the cooldown: a clean eval closes the breaker.
+    std::thread::sleep(Duration::from_millis(260));
+    let resp = call(&mut c, r#"{"model":"ring6","solver":"ddim","nfe":3,"n":4}"#);
+    assert!(resp.get("ok").unwrap().as_bool().unwrap(), "breaker must recover: {resp:?}");
+    let h = call(&mut c, r#"{"cmd":"health"}"#);
+    assert!(h.get("models").unwrap().get("ring6").unwrap().as_bool().unwrap(), "{h:?}");
+
+    // Phase 3 — NaN model: a non-finite eval fails the request with a
+    // clear error; the next request is served normally.
+    let e = err_text(&call(&mut c, r#"{"model":"ring5","solver":"ddim","nfe":3,"n":4}"#));
+    assert!(e.contains("non-finite"), "{e}");
+    let resp = call(&mut c, r#"{"model":"ring5","solver":"ddim","nfe":3,"n":4}"#);
+    assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{resp:?}");
+
+    // Phase 4 — stall model: the 150 ms stalled eval overruns the 40 ms
+    // deadline; the reply is a deadline error, never late samples.
+    let e = err_text(&call(
+        &mut c,
+        r#"{"model":"ring7","solver":"ddim","nfe":1,"n":4,"deadline_ms":40}"#,
+    ));
+    assert!(e.contains("deadline"), "{e}");
+
+    // Phase 5 — concurrent off-script burst across all four models on all
+    // four workers: every client must get a successful reply, and the
+    // healthy model must STILL be bit-exact (fault containment leaves no
+    // residue in sibling shards).
+    let mut handles = Vec::new();
+    for (i, model) in ["gmm2d", "ring6", "ring5", "ring7"].iter().cycle().take(8).enumerate() {
+        let model = model.to_string();
+        handles.push(std::thread::spawn(move || {
+            let mut cl = Client::connect(addr).unwrap();
+            let line = format!(
+                r#"{{"model":"{model}","solver":"tab2","nfe":6,"n":4,"seed":{}}}"#,
+                100 + i
+            );
+            let resp = cl.call(&Json::parse(&line).unwrap()).unwrap();
+            assert!(resp.get("ok").unwrap().as_bool().unwrap(), "{model}: {resp:?}");
+        }));
+    }
+    for handle in handles {
+        handle.join().unwrap();
+    }
+    let resp = call(
+        &mut c,
+        r#"{"model":"gmm2d","solver":"tab2","nfe":6,"n":8,"seed":11,"return_samples":true}"#,
+    );
+    assert_eq!(
+        resp.get("samples").unwrap().as_f64_vec().unwrap(),
+        want,
+        "healthy model must stay bit-exact after the chaos"
+    );
+
+    // Final accounting: the 4-term lifecycle balance, globally and per
+    // model, with every fault attributed exactly once.
+    let stats = call(&mut c, r#"{"cmd":"stats"}"#);
+    let g = |j: &Json, k: &str| j.get(k).unwrap().as_f64().unwrap() as u64;
+    let balance = |j: &Json, who: &str| {
+        assert_eq!(
+            g(j, "requests"),
+            g(j, "completed") + g(j, "rejected") + g(j, "expired") + g(j, "failed"),
+            "{who}: lifecycle out of balance: {j:?}"
+        );
+    };
+    balance(&stats, "global");
+    // gmm2d: baseline + parity + 2 burst, all completed.
+    let pm = stats.get("per_model").unwrap();
+    let m = pm.get("gmm2d").unwrap();
+    balance(m, "gmm2d");
+    assert_eq!(g(m, "completed"), 4);
+    assert_eq!(g(m, "failed") + g(m, "expired") + g(m, "rejected"), 0);
+    // ring6: 2 contained panics, 1 unhealthy refusal, recovery + 2 burst.
+    let m = pm.get("ring6").unwrap();
+    balance(m, "ring6");
+    assert_eq!(g(m, "failed"), 2);
+    assert_eq!(g(m, "eval_panics"), 2);
+    assert_eq!(g(m, "rejected"), 1);
+    assert_eq!(g(m, "unhealthy"), 1, "the breaker refusal is diagnosed as unhealthy");
+    assert_eq!(g(m, "completed"), 3);
+    // ring5: 1 non-finite failure, then clean service.
+    let m = pm.get("ring5").unwrap();
+    balance(m, "ring5");
+    assert_eq!(g(m, "failed"), 1);
+    assert_eq!(g(m, "eval_panics"), 0, "a NaN eval is a failure, not a panic");
+    assert_eq!(g(m, "completed"), 3);
+    // ring7: 1 deadline expiry (counted once — not also failed).
+    let m = pm.get("ring7").unwrap();
+    balance(m, "ring7");
+    assert_eq!(g(m, "expired"), 1);
+    assert_eq!(g(m, "failed"), 0);
+    assert_eq!(g(m, "completed"), 2);
+    // Global rollups agree with the per-model sums.
+    assert_eq!(g(&stats, "failed"), 3);
+    assert_eq!(g(&stats, "eval_panics"), 2);
+    assert_eq!(g(&stats, "unhealthy"), 1);
+    assert_eq!(g(&stats, "expired"), 1);
+}

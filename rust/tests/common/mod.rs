@@ -10,7 +10,8 @@ use std::time::Duration;
 use deis::coordinator::ModelRegistry;
 use deis::diffusion::Sde;
 use deis::gmm::Gmm;
-use deis::score::{EpsModel, GmmEps};
+use deis::score::{EpsModel, FaultPlan, FaultyEps, GmmEps};
+use deis::solvers::SolverKind;
 
 /// The standard 8-Gaussian-ring analytic oracle (no artifacts needed).
 pub fn oracle() -> GmmEps {
@@ -26,6 +27,7 @@ pub fn gmm_for(name: &str) -> Gmm {
         "gmm2d" => Gmm::ring2d(4.0, 8, 0.25),
         "ring6" => Gmm::ring2d(2.5, 6, 0.35),
         "ring5" => Gmm::ring2d(3.25, 5, 0.2),
+        "ring7" => Gmm::ring2d(3.75, 7, 0.3),
         other => panic!("no test mixture registered for model '{other}'"),
     }
 }
@@ -78,6 +80,41 @@ pub fn stall_registry(stall: Duration) -> ModelRegistry {
     let mut reg = ModelRegistry::new();
     reg.insert("gmm2d", Arc::new(StallOracle::new(stall)));
     reg
+}
+
+/// Registry of named analytic oracles wrapped in per-model fault scripts
+/// (an empty [`FaultPlan`] = a healthy model). Each entry gets its OWN
+/// [`FaultyEps`] eval counter, so one model's faults never shift another
+/// model's script — the chaos battery relies on that isolation.
+pub fn faulty_registry(entries: &[(&str, FaultPlan)]) -> ModelRegistry {
+    let mut reg = ModelRegistry::new();
+    for (name, plan) in entries {
+        reg.insert(name, Arc::new(FaultyEps::new(oracle_for(name), plan.clone())));
+    }
+    reg
+}
+
+/// Solo reference samples for one of the [`gmm_for`] models, replicating
+/// the serving engine's per-request RNG streams exactly (priors from
+/// `seed`, stochastic-solver noise from `seed ^ 0xD1F_F051`) — the
+/// bit-exact parity oracle for chaos tests: a healthy model served next
+/// to misbehaving ones must produce exactly these values.
+pub fn solo_samples(name: &str, kind: SolverKind, nfe: usize, n: usize, seed: u64) -> Vec<f64> {
+    let sde = Sde::vp();
+    let model = oracle_for(name);
+    let steps = kind.steps_for_nfe(nfe);
+    let grid =
+        deis::timegrid::build(deis::timegrid::GridKind::Quadratic, &sde, sde.t0_default(), 1.0, steps);
+    let solver = deis::solvers::build(kind, &sde, &grid);
+    let mut rng = deis::util::rng::Rng::new(seed);
+    let prior = sde.prior_std(1.0);
+    let mut x = vec![0.0; n * model.dim()];
+    for v in x.iter_mut() {
+        *v = prior * rng.normal();
+    }
+    let mut srng = deis::util::rng::Rng::new(seed ^ 0xD1F_F051);
+    solver.sample(&model, &mut x, n, &mut srng);
+    x
 }
 
 /// Registry with three DISTINCT stalling models ("gmm2d", "ring6",

@@ -164,6 +164,48 @@ fn deadline_firing_during_checked_out_eval_yields_error_not_late_samples() {
 }
 
 #[test]
+fn deadline_firing_during_panicking_checked_out_eval_counts_exactly_once() {
+    // The deadline/failure interplay: the flight is checked out, its only
+    // eval stalls 120ms (overrunning the 40ms deadline) and THEN panics.
+    // Two accounting paths now claim the same part — expiry and fault
+    // containment — and it must be counted exactly once, as expired (the
+    // deadline fired first), with the deadline error text on the wire.
+    let coord = Arc::new(Coordinator::new(
+        CoordinatorConfig { workers: 1, max_batch_samples: 512, ..Default::default() },
+        common::faulty_registry(&[(
+            "gmm2d",
+            deis::score::FaultPlan::new().stall_on(0, 120).panic_on(0),
+        )]),
+    ));
+    let addr = serve(coord, "127.0.0.1:0").unwrap();
+    let mut c = Client::connect(addr).unwrap();
+    let t0 = std::time::Instant::now();
+    let resp = c
+        .call(&Json::parse(
+            r#"{"model":"gmm2d","solver":"ddim","nfe":1,"n":4,"deadline_ms":40}"#,
+        ).unwrap())
+        .unwrap();
+    let elapsed = t0.elapsed();
+    assert!(!resp.get("ok").unwrap().as_bool().unwrap(), "{resp:?}");
+    assert!(
+        resp.get("error").unwrap().as_str().unwrap().contains("deadline"),
+        "expired-before-panic must surface as a deadline error: {resp:?}"
+    );
+    // The reply arriving only after the stall proves the deadline fired
+    // during the checked-out (and then panicking) eval.
+    assert!(
+        elapsed >= Duration::from_millis(90),
+        "reply after {elapsed:?}: deadline did not race the panicking eval"
+    );
+    let stats = c.call(&Json::parse(r#"{"cmd":"stats"}"#).unwrap()).unwrap();
+    let g = |k: &str| stats.get(k).unwrap().as_f64().unwrap() as u64;
+    assert_eq!(g("expired"), 1, "counted as expired (deadline fired first)");
+    assert_eq!(g("failed"), 0, "the same part must not ALSO count as failed");
+    assert_eq!(g("eval_panics"), 1, "the contained panic is still diagnosed");
+    assert_eq!(g("requests"), g("completed") + g("rejected") + g("expired") + g("failed"));
+}
+
+#[test]
 fn overload_is_reported_over_the_wire() {
     // One in-flight slot and a stalled worker: while the first request is
     // integrating, further submissions must be refused with the documented
