@@ -20,10 +20,12 @@ use deis::coordinator::{Coordinator, CoordinatorConfig, ModelRegistry, SampleReq
 use deis::diffusion::Sde;
 use deis::gmm::Gmm;
 use deis::runtime::Runtime;
-use deis::score::{pjrt::PjrtEps, EpsModel, GmmEps, NativeMlp};
+use deis::score::{pjrt::PjrtEps, EpsModel, GmmEps, NativeMlp, Precision};
 use deis::solvers::{self, deis_combine, SolverKind};
+use deis::tensor::{fma_supported, Kernel, KernelPath, Mat};
 use deis::timegrid::{build, GridKind};
 use deis::util::bench::{bench_for, black_box, budget_or_quick, CsvSink, JsonSink};
+use deis::util::json::Json;
 use deis::util::rng::Rng;
 
 fn main() {
@@ -44,6 +46,79 @@ fn main() {
 
     let rt = Runtime::global();
     let mut rng = Rng::new(1);
+
+    // --- L0: tensor kernels, per path and precision -------------------------
+    // The eps-net hot loop in isolation (§Kernels): one fused matmul+GELU at
+    // the serving shape b=256, k=n=64, on each kernel path via an explicit
+    // `run_with` (no process-global force). Acceptance row: tiled f64 must
+    // beat the reference scalar kernel; the FMA rows appear only where the
+    // CPU supports AVX2+FMA.
+    {
+        let (b, k, n) = (256, 64, 64);
+        let x64 = rng.normal_vec(b * k);
+        let w64 = Mat::from_rows(k, n, rng.normal_vec(k * n));
+        let bias64 = rng.normal_vec(n);
+        let mut out64 = vec![0.0f64; b * n];
+        let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+        let w32 = Mat::<f32>::from_f64_rows(k, n, &w64.data);
+        let bias32: Vec<f32> = bias64.iter().map(|&v| v as f32).collect();
+        let mut out32 = vec![0.0f32; b * n];
+        let kern = Kernel::overwrite_gelu();
+        let mut f64_paths = vec![
+            (KernelPath::Reference, "scalar reference"),
+            (KernelPath::Tiled, "tiled"),
+        ];
+        if fma_supported() {
+            f64_paths.push((KernelPath::Fma, "fma"));
+        }
+        for (path, label) in &f64_paths {
+            log(bench_for(
+                &format!("kernel matmul+gelu b256 k64 n64 f64 {label}"),
+                budget,
+                || {
+                    kern.run_with(*path, &x64, k, &w64, &bias64, &mut out64);
+                    black_box(&out64);
+                },
+            ));
+        }
+        let mut f32_paths = vec![(KernelPath::Tiled, "tiled")];
+        if fma_supported() {
+            f32_paths.push((KernelPath::Fma, "fma"));
+        }
+        for (path, label) in &f32_paths {
+            log(bench_for(
+                &format!("kernel matmul+gelu b256 k64 n64 f32 {label}"),
+                budget,
+                || {
+                    kern.run_with(*path, &x32, k, &w32, &bias32, &mut out32);
+                    black_box(&out32);
+                },
+            ));
+        }
+    }
+
+    // --- L0: native forward, f64 vs f32 engine (synthetic weights) ---------
+    // Artifact-independent end-to-end engine rows: the same synthetic net at
+    // both precisions, uniform-t (the solver-step shape). The f32/f64 ratio
+    // here is the headline number for the opt-in f32 inference mode.
+    {
+        let root = Json::parse(&synthetic_weights_json(&mut rng, 8, 64, 16, 3)).unwrap();
+        let b = 256;
+        let x = rng.normal_vec(b * 8);
+        let t_uni = vec![0.5; b];
+        let mut out = vec![0.0; b * 8];
+        for precision in [Precision::F64, Precision::F32] {
+            let net = NativeMlp::from_json_with(&root, precision).unwrap();
+            log(bench_for(
+                &format!("native mlp synthetic b256 h64 uniform-t {}", precision.name()),
+                budget,
+                || {
+                    net.eval(&x, &t_uni, b, &mut out);
+                    black_box(&out);
+                },
+            ));
+        }
+    }
 
     // --- L1/L2: PJRT execution, pallas-kernel vs plain-XLA lowering -------
     for (name, label, d) in [
@@ -257,6 +332,47 @@ fn main() {
     if let Err(e) = json.flush() {
         eprintln!("warning: could not write BENCH_hotpath.json: {e}");
     }
+}
+
+/// Deterministic synthetic eps-net weights JSON (values ~N(0, 0.15) — small
+/// enough that a 3-block net stays well-conditioned), so the kernel rows
+/// run without `make artifacts`.
+fn synthetic_weights_json(
+    rng: &mut Rng,
+    dim: usize,
+    hidden: usize,
+    embed: usize,
+    n_blocks: usize,
+) -> String {
+    fn vec_json(rng: &mut Rng, n: usize) -> String {
+        let vals: Vec<String> = (0..n).map(|_| format!("{:.4}", 0.15 * rng.normal())).collect();
+        format!("[{}]", vals.join(","))
+    }
+    fn mat_json(rng: &mut Rng, r: usize, c: usize) -> String {
+        let rows: Vec<String> = (0..r).map(|_| vec_json(rng, c)).collect();
+        format!("[{}]", rows.join(","))
+    }
+    let blocks: Vec<String> = (0..n_blocks)
+        .map(|_| {
+            format!(
+                r#"{{"w1": {}, "b1": {}, "u": {}, "w2": {}, "b2": {}}}"#,
+                mat_json(rng, hidden, hidden),
+                vec_json(rng, hidden),
+                mat_json(rng, embed, hidden),
+                mat_json(rng, hidden, hidden),
+                vec_json(rng, hidden)
+            )
+        })
+        .collect();
+    format!(
+        r#"{{"dim": {dim}, "hidden": {hidden}, "embed": {embed}, "n_blocks": {n_blocks},
+            "params": {{"w_in": {}, "b_in": {}, "w_out": {}, "b_out": {}, "blocks": [{}]}}}}"#,
+        mat_json(rng, dim, hidden),
+        vec_json(rng, hidden),
+        mat_json(rng, hidden, dim),
+        vec_json(rng, dim),
+        blocks.join(",")
+    )
 }
 
 /// The PR-4 contended row body, factored so the single-model and 4-model

@@ -85,10 +85,17 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::score::EpsModel;
+use crate::score::{EpsModel, Precision};
 use crate::solvers::PlanCache;
 
 use self::scheduler::{ShardMap, WakeRail};
+
+/// Registry-name suffix for a model's f32 engine. An `"dtype":"f32"`
+/// request is rewritten to `<model>@f32` at submit time, so shard routing,
+/// batch keys and per-model stats all key on the precision-qualified name
+/// with zero scheduler changes — and f32 and f64 traffic can never be
+/// co-batched by construction.
+pub const F32_SUFFIX: &str = "@f32";
 
 /// Model registry: name -> eps backend.
 #[derive(Default)]
@@ -255,9 +262,16 @@ impl Coordinator {
     /// [`PlanCache`] lookup in the steady state, a (concurrency-friendly)
     /// build on the first sighting of a config. Only the owning shard's
     /// mutex is taken at the end, for the queue push.
-    pub fn submit(&self, req: SampleRequest) -> Receiver<anyhow::Result<SampleResult>> {
+    pub fn submit(&self, mut req: SampleRequest) -> Receiver<anyhow::Result<SampleResult>> {
         let (tx, rx) = sync_channel(1);
         let sh = &*self.shared;
+        // Precision routing: an f32 request runs on the model's registered
+        // f32 sibling ("<name>@f32", see [`F32_SUFFIX`]), so everything
+        // downstream — shards, batch keys, stats — keys on the rewritten
+        // name and needs no dtype awareness.
+        if req.dtype == Precision::F32 && !req.model.ends_with(F32_SUFFIX) {
+            req.model.push_str(F32_SUFFIX);
+        }
         sh.stats.requests.fetch_add(1, Ordering::Relaxed);
         // Drain gate: a coordinator shutting down finishes what it has and
         // refuses everything new — checked before any reservation so the
@@ -304,7 +318,16 @@ impl Coordinator {
             None => {
                 sh.inflight_parts.fetch_sub(1, Ordering::SeqCst);
                 sh.stats.rejected.fetch_add(1, Ordering::Relaxed);
-                let _ = tx.send(Err(anyhow::anyhow!("unknown model '{}'", req.model)));
+                // An f32 request for a model whose base name IS registered
+                // deserves a precise diagnosis, not "unknown model".
+                let msg = match req.model.strip_suffix(F32_SUFFIX) {
+                    Some(base) if sh.registry.get(base).is_some() => anyhow::anyhow!(
+                        "model '{base}' has no f32 engine registered \
+                         (serve with --precision f32)"
+                    ),
+                    _ => anyhow::anyhow!("unknown model '{}'", req.model),
+                };
+                let _ = tx.send(Err(msg));
                 return rx;
             }
         };

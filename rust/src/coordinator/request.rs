@@ -1,6 +1,7 @@
 //! Request/response types and the batch-compatibility key.
 
 use crate::diffusion::Sde;
+use crate::score::Precision;
 use crate::solvers::SolverKind;
 use crate::timegrid::GridKind;
 
@@ -27,6 +28,11 @@ pub struct SampleRequest {
     /// the reply is still an error, never late samples. Not part of the
     /// batch key.
     pub deadline_ms: Option<u64>,
+    /// Inference precision. F64 (default) runs the model as registered;
+    /// F32 routes to the model's "<name>@f32" registry sibling at submit
+    /// time (see `Coordinator::submit`), so the batch key needs no extra
+    /// field — the rewritten model name carries the dtype.
+    pub dtype: Precision,
 }
 
 impl SampleRequest {
@@ -42,6 +48,7 @@ impl SampleRequest {
             n_samples,
             seed: 0,
             deadline_ms: None,
+            dtype: Precision::default(),
         }
     }
 

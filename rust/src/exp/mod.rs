@@ -14,7 +14,7 @@ use crate::diffusion::Sde;
 use crate::gmm::Gmm;
 use crate::metrics;
 use crate::runtime::Runtime;
-use crate::score::{pjrt::PjrtEps, Counting, EpsModel, GmmEps, NativeMlp};
+use crate::score::{pjrt::PjrtEps, Counting, EpsModel, GmmEps, NativeMlp, Precision};
 use crate::solvers::{self, SolverKind};
 use crate::timegrid::{self, GridKind};
 use crate::util::rng::Rng;
@@ -25,6 +25,18 @@ use crate::util::rng::Rng;
 ///   gmm2d_oracle    analytic GMM in rust (exact score)
 ///   gmm2d_exact     analytic GMM via PJRT artifact
 pub fn default_registry(names: &[String]) -> Result<ModelRegistry> {
+    default_registry_with(names, Precision::F64)
+}
+
+/// [`default_registry`] plus precision: with `Precision::F32`, every
+/// `*_native` model additionally gets an f32 engine registered under
+/// `<name>@f32` (the submit-time dtype routing target — see
+/// [`crate::coordinator::F32_SUFFIX`]). Only the native MLP has an f32
+/// engine; analytic oracles are exact-math reference models and PJRT
+/// executables have their precision baked in at compile time, so their f32
+/// requests are refused at submit with a clear error instead of silently
+/// serving a different numeric class.
+pub fn default_registry_with(names: &[String], precision: Precision) -> Result<ModelRegistry> {
     let mut reg = ModelRegistry::new();
     for name in names {
         match name.as_str() {
@@ -35,7 +47,12 @@ pub fn default_registry(names: &[String]) -> Result<ModelRegistry> {
                 let base = n.trim_end_matches("_native");
                 let rt = Runtime::global();
                 let path = rt.artifacts_dir().join(format!("weights_{base}.json"));
-                reg.insert(n, Arc::new(NativeMlp::load(&path.to_string_lossy())?));
+                let path = path.to_string_lossy();
+                reg.insert(n, Arc::new(NativeMlp::load(&path)?));
+                if precision == Precision::F32 {
+                    let f32_name = format!("{n}{}", crate::coordinator::F32_SUFFIX);
+                    reg.insert(&f32_name, Arc::new(NativeMlp::load_with(&path, Precision::F32)?));
+                }
             }
             "gmm2d_exact" => {
                 let rt = Runtime::global();

@@ -2,12 +2,17 @@
 //!
 //! Subcommands:
 //!   serve   --addr 127.0.0.1:7878 --workers 4 --models gmm2d,gmm2d_exact
-//!           [--max-batch 1024] [--max-inflight 4096]
+//!           [--precision f64|f32] [--max-batch 1024] [--max-inflight 4096]
 //!           [--max-inflight-per-model 4096]
 //!           [--breaker-threshold 5] [--breaker-cooldown-ms 1000]
 //!           [--max-conns 1024] [--read-timeout-ms 30000]
 //!           [--write-timeout-ms 30000] [--max-line-bytes 262144]
 //!   sample  --model gmm2d_exact --solver tab3 --nfe 10 --n 1000 [--metric]
+//!           [--precision f64|f32]
+//!
+//! `--precision f32` additionally registers an f32 engine per native model
+//! (served to requests carrying "dtype":"f32"); f64 remains the default
+//! numeric class for every request that does not opt in.
 //!   info    (artifact + platform inventory)
 
 use std::sync::Arc;
@@ -15,10 +20,11 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use deis::coordinator::{Coordinator, CoordinatorConfig, SampleRequest};
-use deis::exp::default_registry;
+use deis::exp::default_registry_with;
 use deis::gmm::Gmm;
 use deis::metrics;
 use deis::runtime::Runtime;
+use deis::score::Precision;
 use deis::server;
 use deis::solvers::SolverKind;
 use deis::timegrid::GridKind;
@@ -43,7 +49,8 @@ fn main() -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let models = args.list_or("models", "gmm2d,gmm2d_exact,gmm2d_oracle");
-    let reg = default_registry(&models)?;
+    let precision = parse_precision(args)?;
+    let reg = default_registry_with(&models, precision)?;
     let max_inflight = args.usize_or("max-inflight", 4096);
     let cfg = CoordinatorConfig {
         workers: args.usize_or("workers", 4),
@@ -78,11 +85,13 @@ fn cmd_sample(args: &Args) -> Result<()> {
     let model = args.str_or("model", "gmm2d_oracle");
     let solver = SolverKind::parse(&args.str_or("solver", "tab3"))
         .context("unknown solver")?;
-    let reg = default_registry(&[model.clone()])?;
+    let precision = parse_precision(args)?;
+    let reg = default_registry_with(&[model.clone()], precision)?;
     let coord = Coordinator::new(CoordinatorConfig::default(), reg);
     let mut req = SampleRequest::new(&model, solver, args.usize_or("nfe", 10),
         args.usize_or("n", 1000));
     req.seed = args.u64_or("seed", 0);
+    req.dtype = precision;
     if let Some(g) = args.get("grid") {
         req.grid = GridKind::parse(g).context("unknown grid")?;
     }
@@ -103,6 +112,12 @@ fn cmd_sample(args: &Args) -> Result<()> {
     }
     coord.shutdown();
     Ok(())
+}
+
+fn parse_precision(args: &Args) -> Result<Precision> {
+    let s = args.str_or("precision", "f64");
+    Precision::parse(&s)
+        .with_context(|| format!("unknown --precision '{s}' (expected f32 or f64)"))
 }
 
 fn cmd_info() -> Result<()> {

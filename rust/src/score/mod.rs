@@ -10,7 +10,7 @@ pub mod pjrt;
 pub mod pool;
 
 pub use faulty::{Fault, FaultPlan, FaultyEps};
-pub use native::NativeMlp;
+pub use native::{NativeMlp, Precision};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 

@@ -3,9 +3,9 @@
 //! Mirrors python/compile/model.py::apply_eps exactly (same sinusoidal
 //! embedding, same tanh-GELU). Used to (a) cross-check PJRT numerics against
 //! an independent implementation (checks_*.json fixtures) and (b) drive the
-//! big table sweeps without PJRT dispatch overhead.
+//! big table sweeps and the serving hot path without PJRT dispatch overhead.
 //!
-//! §Perf iteration 3 (EXPERIMENTS.md): the forward is now a zero-allocation
+//! §Perf iteration 3 (EXPERIMENTS.md): the forward is a zero-allocation
 //! engine in the steady state.
 //!
 //!   * Batch chunks fan out over the persistent [`crate::score::pool`]
@@ -19,10 +19,26 @@
 //!     row-identical. They are computed once per eval into a
 //!     [`UniformScratch`] and folded into each block's first bias, deleting
 //!     one of the two matmuls per residual block; the GELU epilogue is
-//!     fused into the remaining one (`matmul_rows::<false, true>`).
+//!     fused into the remaining one ([`Kernel::overwrite_gelu`]).
 //!
-//! `rust/tests/zero_alloc.rs` pins the no-steady-state-allocation claim
-//! with a counting global allocator.
+//! §Kernels (this PR): the engine is generic over the tensor
+//! [`Element`] type. [`NativeMlp`] wraps an f64 or an f32 [`MlpCore`]
+//! chosen at weight-load time via [`Precision`]:
+//!
+//!   * **f64** (default) — bit-compatible with the python oracle and with
+//!     the pre-generic engine (pinned by `tests/kernel_paths.rs`).
+//!   * **f32** (opt-in, `--precision f32` / `"dtype":"f32"`) — weights are
+//!     narrowed once at load; each eval narrows x/t and widens the eps
+//!     output through thread-local [`Conv`] buffers, so `EpsModel` (and
+//!     therefore every solver and the whole scheduler) stays f64 and the
+//!     steady state stays allocation-free. Embedding angles are still
+//!     computed in f64 (sin/cos of large `TIME_SCALE * t` angles lose real
+//!     precision in f32) and then narrowed. Tolerance story:
+//!     EXPERIMENTS.md §Kernels; parity pinned by
+//!     `tests/precision_parity.rs`.
+//!
+//! `rust/tests/zero_alloc.rs` pins the no-steady-state-allocation claim for
+//! both precisions with a counting global allocator.
 
 use std::cell::RefCell;
 
@@ -30,7 +46,7 @@ use anyhow::{Context, Result};
 
 use crate::score::pool::WorkerPool;
 use crate::score::EpsModel;
-use crate::tensor::{gelu_slice, matmul_rows, Mat};
+use crate::tensor::{Element, Kernel, Mat};
 use crate::util::json::Json;
 
 const TIME_SCALE: f64 = 1000.0; // keep in sync with kernels/ref.py
@@ -39,25 +55,59 @@ const TIME_SCALE: f64 = 1000.0; // keep in sync with kernels/ref.py
 /// it, dispatch overhead dominates the matmul work).
 const PARALLEL_FLOPS: usize = 1 << 22;
 
-struct Block {
-    w1: Mat,
-    b1: Vec<f64>,
-    u: Mat,
-    w2: Mat,
-    b2: Vec<f64>,
+/// Inference precision of a native eps-net engine. `F64` is the default
+/// and the numeric reference; `F32` trades ~half the mantissa for ~2x the
+/// SIMD width on the hot kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum Precision {
+    #[default]
+    F64,
+    F32,
 }
 
-pub struct NativeMlp {
+impl Precision {
+    /// Parse a wire/CLI dtype name ("f64" / "f32").
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f64" => Some(Precision::F64),
+            "f32" => Some(Precision::F32),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+}
+
+struct Block<E: Element> {
+    w1: Mat<E>,
+    b1: Vec<E>,
+    u: Mat<E>,
+    w2: Mat<E>,
+    b2: Vec<E>,
+}
+
+/// The eps-net engine at one concrete precision. All the math lives here;
+/// [`NativeMlp`] is the precision-erased wrapper the registry stores.
+struct MlpCore<E: Element> {
     dim: usize,
     embed: usize,
-    w_in: Mat,
-    b_in: Vec<f64>,
-    w_out: Mat,
-    b_out: Vec<f64>,
-    blocks: Vec<Block>,
+    w_in: Mat<E>,
+    b_in: Vec<E>,
+    w_out: Mat<E>,
+    b_out: Vec<E>,
+    blocks: Vec<Block<E>>,
+    /// Embedding frequencies stay f64 at every precision: the sinusoid
+    /// arguments (`TIME_SCALE * t * freq`) are large, so angle precision
+    /// matters more than multiply throughput (this is O(embed) per eval,
+    /// not a hot loop).
     freqs: Vec<f64>,
     /// All-zero [hidden] bias for accumulate-only matmuls (generic-t path).
-    zero_bias: Vec<f64>,
+    zero_bias: Vec<E>,
 }
 
 /// Per-thread activation arena. Buffers are length-adjusted in place (no
@@ -65,79 +115,128 @@ pub struct NativeMlp {
 /// before they are read, so reuse across differing (b, dim) shapes can
 /// never leak stale data — a property test below pins that.
 #[derive(Default)]
-struct Scratch {
+struct Scratch<E: Element> {
     /// [b, hidden] residual stream.
-    h: Vec<f64>,
+    h: Vec<E>,
     /// [b, hidden] block pre-activation.
-    z: Vec<f64>,
+    z: Vec<E>,
     /// [b, embed] per-row time embedding (generic-t path only).
-    e: Vec<f64>,
+    e: Vec<E>,
 }
 
 /// Per-eval uniform-t precompute: one embedding row and one combined
 /// `b1 + e @ u` bias per block, shared read-only by every chunk task.
 #[derive(Default)]
-struct UniformScratch {
-    e_row: Vec<f64>,
+struct UniformScratch<E: Element> {
+    e_row: Vec<E>,
     /// [n_blocks, hidden], block-major.
-    block_bias: Vec<f64>,
+    block_bias: Vec<E>,
 }
 
 /// Borrowed view of the uniform-t precompute handed to chunk tasks.
 #[derive(Clone, Copy)]
-struct UniformCtx<'a> {
+struct UniformCtx<'a, E: Element> {
     /// [n_blocks, hidden] combined first-layer biases.
-    block_bias: &'a [f64],
+    block_bias: &'a [E],
+}
+
+/// f64 ↔ f32 boundary buffers for the f32 engine: `EpsModel::eval` speaks
+/// f64 slices, so each eval narrows x/t once and widens the output once.
+/// Thread-local and length-managed like [`Scratch`], keeping the steady
+/// state allocation-free.
+#[derive(Default)]
+struct Conv {
+    x: Vec<f32>,
+    t: Vec<f32>,
+    out: Vec<f32>,
 }
 
 thread_local! {
-    /// Chunk-forward workspace, owned by whichever thread runs the chunk
-    /// (pool workers and dispatching callers alike).
-    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::default());
+    /// Chunk-forward workspaces, owned by whichever thread runs the chunk
+    /// (pool workers and dispatching callers alike) — one per precision,
+    /// routed through [`NativeElement`].
+    static SCRATCH_F64: RefCell<Scratch<f64>> = RefCell::new(Scratch::default());
+    static SCRATCH_F32: RefCell<Scratch<f32>> = RefCell::new(Scratch::default());
     /// Uniform-t precompute. Only the dispatching thread touches it; it is
     /// a separate thread-local from SCRATCH because the dispatcher holds
     /// the ctx borrow while itself executing chunk tasks (which need
     /// SCRATCH mutably).
-    static UNIFORM: RefCell<UniformScratch> = RefCell::new(UniformScratch::default());
+    static UNIFORM_F64: RefCell<UniformScratch<f64>> = RefCell::new(UniformScratch::default());
+    static UNIFORM_F32: RefCell<UniformScratch<f32>> = RefCell::new(UniformScratch::default());
+    /// f32-engine boundary buffers. Only the dispatching thread touches
+    /// them (chunk tasks read the already-narrowed slices), so like UNIFORM
+    /// they stay separate from SCRATCH.
+    static CONV: RefCell<Conv> = RefCell::new(Conv::default());
+}
+
+/// Private per-precision plumbing: generic code cannot name a
+/// `thread_local!` per monomorphization, so each element type routes to
+/// its own workspace statics.
+trait NativeElement: Element {
+    fn with_scratch<R>(f: impl FnOnce(&mut Scratch<Self>) -> R) -> R;
+    fn with_uniform<R>(f: impl FnOnce(&mut UniformScratch<Self>) -> R) -> R;
+}
+
+impl NativeElement for f64 {
+    fn with_scratch<R>(f: impl FnOnce(&mut Scratch<f64>) -> R) -> R {
+        SCRATCH_F64.with(|s| f(&mut s.borrow_mut()))
+    }
+
+    fn with_uniform<R>(f: impl FnOnce(&mut UniformScratch<f64>) -> R) -> R {
+        UNIFORM_F64.with(|u| f(&mut u.borrow_mut()))
+    }
+}
+
+impl NativeElement for f32 {
+    fn with_scratch<R>(f: impl FnOnce(&mut Scratch<f32>) -> R) -> R {
+        SCRATCH_F32.with(|s| f(&mut s.borrow_mut()))
+    }
+
+    fn with_uniform<R>(f: impl FnOnce(&mut UniformScratch<f32>) -> R) -> R {
+        UNIFORM_F32.with(|u| f(&mut u.borrow_mut()))
+    }
 }
 
 /// Adjust a workspace buffer's length, reusing capacity (new elements are
 /// zeroed; retained elements keep whatever the previous use left — callers
 /// fully overwrite before reading).
 #[inline]
-fn set_len(buf: &mut Vec<f64>, len: usize) {
-    buf.resize(len, 0.0);
+fn set_len<E: Element>(buf: &mut Vec<E>, len: usize) {
+    buf.resize(len, E::ZERO);
 }
 
-/// `*mut f64` wrapper so chunk tasks can carve disjoint output windows
+/// Raw-pointer wrapper so chunk tasks can carve disjoint output windows
 /// through a shared `Fn` closure.
-#[derive(Clone, Copy)]
-struct SendPtr(*mut f64);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
-
-impl NativeMlp {
-    pub fn load(path: &str) -> Result<NativeMlp> {
-        let root = Json::from_file(path)?;
-        Self::from_json(&root).with_context(|| format!("weights file {path}"))
+struct SendPtr<E>(*mut E);
+impl<E> Clone for SendPtr<E> {
+    fn clone(&self) -> Self {
+        SendPtr(self.0)
     }
+}
+impl<E> Copy for SendPtr<E> {}
+unsafe impl<E> Send for SendPtr<E> {}
+unsafe impl<E> Sync for SendPtr<E> {}
 
-    pub fn from_json(root: &Json) -> Result<NativeMlp> {
+impl<E: NativeElement> MlpCore<E> {
+    fn from_json(root: &Json) -> Result<MlpCore<E>> {
         let dim = root.get("dim")?.as_usize()?;
         let embed = root.get("embed")?.as_usize()?;
         let p = root.get("params")?;
-        let mat = |v: &Json| -> Result<Mat> {
+        let mat = |v: &Json| -> Result<Mat<E>> {
             let (r, c, data) = v.as_matrix()?;
-            Ok(Mat::from_rows(r, c, data))
+            Ok(Mat::from_f64_rows(r, c, &data))
+        };
+        let evec = |v: &Json| -> Result<Vec<E>> {
+            Ok(v.as_f64_vec()?.iter().map(|&x| E::from_f64(x)).collect())
         };
         let mut blocks = Vec::new();
         for blk in p.get("blocks")?.as_arr()? {
             blocks.push(Block {
                 w1: mat(blk.get("w1")?)?,
-                b1: blk.get("b1")?.as_f64_vec()?,
+                b1: evec(blk.get("b1")?)?,
                 u: mat(blk.get("u")?)?,
                 w2: mat(blk.get("w2")?)?,
-                b2: blk.get("b2")?.as_f64_vec()?,
+                b2: evec(blk.get("b2")?)?,
             });
         }
         let half = embed / 2;
@@ -145,50 +244,55 @@ impl NativeMlp {
             .map(|i| (-(10000.0f64).ln() * i as f64 / half as f64).exp())
             .collect();
         let w_in = mat(p.get("w_in")?)?;
-        let zero_bias = vec![0.0; w_in.cols];
-        Ok(NativeMlp {
+        let zero_bias = vec![E::ZERO; w_in.cols];
+        Ok(MlpCore {
             dim,
             embed,
             w_in,
-            b_in: p.get("b_in")?.as_f64_vec()?,
+            b_in: evec(p.get("b_in")?)?,
             w_out: mat(p.get("w_out")?)?,
-            b_out: p.get("b_out")?.as_f64_vec()?,
+            b_out: evec(p.get("b_out")?)?,
             blocks,
             freqs,
             zero_bias,
         })
     }
 
-    pub fn hidden(&self) -> usize {
+    fn hidden(&self) -> usize {
         self.w_in.cols
     }
 
-    /// Sinusoidal embedding of one scalar t into `row` ([embed]).
-    fn time_embed_row(&self, t: f64, row: &mut [f64]) {
+    /// Sinusoidal embedding of one scalar t into `row` ([embed]). Angles
+    /// are computed in f64 regardless of E (see `freqs`).
+    fn time_embed_row(&self, t: f64, row: &mut [E]) {
         let half = self.embed / 2;
         for (i, &f) in self.freqs.iter().enumerate() {
             let ang = TIME_SCALE * t * f;
-            row[i] = ang.sin();
-            row[half + i] = ang.cos();
+            row[i] = E::from_f64(ang.sin());
+            row[half + i] = E::from_f64(ang.cos());
         }
     }
 
     /// Uniform-t precompute: embedding row once, then fold `e @ u` into each
     /// block's first-layer bias (`bias_j = b1_j + e_row @ u_j`).
-    fn build_uniform_ctx<'a>(&self, t: f64, uni: &'a mut UniformScratch) -> UniformCtx<'a> {
+    fn build_uniform_ctx<'a>(
+        &self,
+        t: f64,
+        uni: &'a mut UniformScratch<E>,
+    ) -> UniformCtx<'a, E> {
         set_len(&mut uni.e_row, self.embed);
         if self.embed % 2 == 1 {
             // Odd embed: the element past the sin/cos halves is never
             // written by time_embed_row.
-            uni.e_row.fill(0.0);
+            uni.e_row.fill(E::ZERO);
         }
         self.time_embed_row(t, &mut uni.e_row);
         let hd = self.hidden();
         set_len(&mut uni.block_bias, self.blocks.len() * hd);
-        uni.block_bias.fill(0.0); // ACC kernel accumulates on top
+        uni.block_bias.fill(E::ZERO); // accumulating kernel adds on top
         let UniformScratch { e_row, block_bias } = uni;
         for (j, blk) in self.blocks.iter().enumerate() {
-            matmul_rows::<true, false>(
+            Kernel::accumulate().run(
                 &e_row[..],
                 self.embed,
                 &blk.u,
@@ -205,73 +309,75 @@ impl NativeMlp {
     /// per-row embedding and `e @ u` matmul run as in the generic math.
     fn forward_rows(
         &self,
-        x: &[f64],
-        t: Option<&[f64]>,
+        x: &[E],
+        t: Option<&[E]>,
         b: usize,
-        out: &mut [f64],
-        scr: &mut Scratch,
-        ctx: Option<UniformCtx<'_>>,
+        out: &mut [E],
+        scr: &mut Scratch<E>,
+        ctx: Option<UniformCtx<'_, E>>,
     ) {
         let hd = self.hidden();
         set_len(&mut scr.h, b * hd);
-        matmul_rows::<false, false>(x, self.dim, &self.w_in, &self.b_in, &mut scr.h);
+        Kernel::overwrite().run(x, self.dim, &self.w_in, &self.b_in, &mut scr.h);
         set_len(&mut scr.z, b * hd);
         match ctx {
             Some(c) => {
                 for (j, blk) in self.blocks.iter().enumerate() {
                     let bias = &c.block_bias[j * hd..(j + 1) * hd];
                     // z = gelu(h @ w1 + (b1 + e @ u)), GELU in the epilogue.
-                    matmul_rows::<false, true>(&scr.h, hd, &blk.w1, bias, &mut scr.z);
+                    Kernel::overwrite_gelu().run(&scr.h, hd, &blk.w1, bias, &mut scr.z);
                     // h += z @ w2 + b2, residual add in the epilogue.
-                    matmul_rows::<true, false>(&scr.z, hd, &blk.w2, &blk.b2, &mut scr.h);
+                    Kernel::accumulate().run(&scr.z, hd, &blk.w2, &blk.b2, &mut scr.h);
                 }
             }
             None => {
                 let t = t.expect("generic path needs per-row t");
                 set_len(&mut scr.e, b * self.embed);
                 if self.embed % 2 == 1 {
-                    scr.e.fill(0.0);
+                    scr.e.fill(E::ZERO);
                 }
                 for (r, &tv) in t.iter().enumerate() {
-                    self.time_embed_row(tv, &mut scr.e[r * self.embed..(r + 1) * self.embed]);
+                    self.time_embed_row(
+                        tv.to_f64(),
+                        &mut scr.e[r * self.embed..(r + 1) * self.embed],
+                    );
                 }
                 for blk in &self.blocks {
-                    // z = h @ w1 + b1 + e @ u, then GELU.
-                    matmul_rows::<false, false>(&scr.h, hd, &blk.w1, &blk.b1, &mut scr.z);
-                    matmul_rows::<true, false>(
+                    // z = h @ w1 + b1, then z = gelu(z + e @ u + 0) with the
+                    // GELU fused into the accumulating kernel's epilogue
+                    // (what used to be a separate gelu_slice pass).
+                    Kernel::overwrite().run(&scr.h, hd, &blk.w1, &blk.b1, &mut scr.z);
+                    Kernel::accumulate_gelu().run(
                         &scr.e,
                         self.embed,
                         &blk.u,
                         &self.zero_bias,
                         &mut scr.z,
                     );
-                    gelu_slice(&mut scr.z);
-                    matmul_rows::<true, false>(&scr.z, hd, &blk.w2, &blk.b2, &mut scr.h);
+                    Kernel::accumulate().run(&scr.z, hd, &blk.w2, &blk.b2, &mut scr.h);
                 }
             }
         }
-        matmul_rows::<false, false>(&scr.h, hd, &self.w_out, &self.b_out, out);
+        Kernel::overwrite().run(&scr.h, hd, &self.w_out, &self.b_out, out);
     }
 
     /// Split the batch into `n_chunks` row ranges and run them across the
     /// pool (the calling thread participates; with `n_chunks == 1` it runs
     /// the whole batch inline).
+    #[allow(clippy::too_many_arguments)]
     fn run_chunks(
         &self,
-        x: &[f64],
-        t: Option<&[f64]>,
+        x: &[E],
+        t: Option<&[E]>,
         b: usize,
-        out: &mut [f64],
+        out: &mut [E],
         n_chunks: usize,
-        ctx: Option<UniformCtx<'_>>,
+        ctx: Option<UniformCtx<'_, E>>,
         pool: &WorkerPool,
     ) {
         let d = self.dim;
         if n_chunks <= 1 {
-            SCRATCH.with(|s| {
-                let scr = &mut *s.borrow_mut();
-                self.forward_rows(x, t, b, out, scr, ctx);
-            });
+            E::with_scratch(|scr| self.forward_rows(x, t, b, out, scr, ctx));
             return;
         }
         let chunk_rows = b.div_ceil(n_chunks);
@@ -284,21 +390,14 @@ impl NativeMlp {
             let o = unsafe { std::slice::from_raw_parts_mut(optr.0.add(row0 * d), rows * d) };
             let xs = &x[row0 * d..(row0 + rows) * d];
             let ts = t.map(|tt| &tt[row0..row0 + rows]);
-            SCRATCH.with(|s| {
-                let scr = &mut *s.borrow_mut();
-                self.forward_rows(xs, ts, rows, o, scr, ctx);
-            });
+            E::with_scratch(|scr| self.forward_rows(xs, ts, rows, o, scr, ctx));
         };
         pool.run(nc, &task);
     }
-}
 
-impl EpsModel for NativeMlp {
-    fn dim(&self) -> usize {
-        self.dim
-    }
-
-    fn eval(&self, x: &[f64], t: &[f64], b: usize, out: &mut [f64]) {
+    /// Full eval at this precision: uniform-t detection, flop-gated pool
+    /// fan-out, per-chunk forward.
+    fn eval(&self, x: &[E], t: &[E], b: usize, out: &mut [E]) {
         let d = self.dim;
         assert_eq!(x.len(), b * d);
         assert_eq!(t.len(), b);
@@ -313,13 +412,103 @@ impl EpsModel for NativeMlp {
         // Solver stepping broadcasts a scalar t; detect it and take the
         // shared-embedding fast path.
         if t.iter().all(|&tv| tv == t[0]) {
-            UNIFORM.with(|u| {
-                let uni = &mut *u.borrow_mut();
-                let ctx = self.build_uniform_ctx(t[0], uni);
+            E::with_uniform(|uni| {
+                let ctx = self.build_uniform_ctx(t[0].to_f64(), uni);
                 self.run_chunks(x, None, b, out, n_chunks, Some(ctx), pool);
             });
         } else {
             self.run_chunks(x, Some(t), b, out, n_chunks, None, pool);
+        }
+    }
+}
+
+impl MlpCore<f32> {
+    /// f64-at-the-boundary eval: narrow x/t into the thread-local [`Conv`]
+    /// buffers, run the f32 engine, widen the output. Solvers and the
+    /// scheduler never see an f32 value.
+    fn eval_widening(&self, x: &[f64], t: &[f64], b: usize, out: &mut [f64]) {
+        CONV.with(|c| {
+            let conv = &mut *c.borrow_mut();
+            set_len(&mut conv.x, x.len());
+            for (dst, &src) in conv.x.iter_mut().zip(x) {
+                *dst = src as f32;
+            }
+            set_len(&mut conv.t, t.len());
+            for (dst, &src) in conv.t.iter_mut().zip(t) {
+                *dst = src as f32;
+            }
+            set_len(&mut conv.out, out.len());
+            self.eval(&conv.x, &conv.t, b, &mut conv.out);
+            for (dst, &src) in out.iter_mut().zip(&conv.out) {
+                *dst = src as f64;
+            }
+        });
+    }
+}
+
+/// Precision-erased native eps-net. The registry (and every `EpsModel`
+/// consumer) holds this; the precision is fixed when the weights are
+/// loaded.
+pub struct NativeMlp {
+    repr: Repr,
+}
+
+enum Repr {
+    F64(MlpCore<f64>),
+    F32(MlpCore<f32>),
+}
+
+impl NativeMlp {
+    pub fn load(path: &str) -> Result<NativeMlp> {
+        Self::load_with(path, Precision::F64)
+    }
+
+    pub fn load_with(path: &str, precision: Precision) -> Result<NativeMlp> {
+        let root = Json::from_file(path)?;
+        Self::from_json_with(&root, precision).with_context(|| format!("weights file {path}"))
+    }
+
+    pub fn from_json(root: &Json) -> Result<NativeMlp> {
+        Self::from_json_with(root, Precision::F64)
+    }
+
+    /// Parse weights (always stored as f64 JSON) into an engine at the
+    /// requested inference precision; f32 narrows once here.
+    pub fn from_json_with(root: &Json, precision: Precision) -> Result<NativeMlp> {
+        let repr = match precision {
+            Precision::F64 => Repr::F64(MlpCore::from_json(root)?),
+            Precision::F32 => Repr::F32(MlpCore::from_json(root)?),
+        };
+        Ok(NativeMlp { repr })
+    }
+
+    pub fn precision(&self) -> Precision {
+        match self.repr {
+            Repr::F64(_) => Precision::F64,
+            Repr::F32(_) => Precision::F32,
+        }
+    }
+
+    pub fn hidden(&self) -> usize {
+        match &self.repr {
+            Repr::F64(core) => core.hidden(),
+            Repr::F32(core) => core.hidden(),
+        }
+    }
+}
+
+impl EpsModel for NativeMlp {
+    fn dim(&self) -> usize {
+        match &self.repr {
+            Repr::F64(core) => core.dim,
+            Repr::F32(core) => core.dim,
+        }
+    }
+
+    fn eval(&self, x: &[f64], t: &[f64], b: usize, out: &mut [f64]) {
+        match &self.repr {
+            Repr::F64(core) => core.eval(x, t, b, out),
+            Repr::F32(core) => core.eval_widening(x, t, b, out),
         }
     }
 }
@@ -364,7 +553,7 @@ mod tests {
           "params": {"w_in": [[1.0]], "b_in": [0.0], "w_out": [[1.0]],
                      "b_out": [0.0], "blocks": []}
         }"#;
-        let net = NativeMlp::from_json(&Json::parse(json).unwrap()).unwrap();
+        let net: MlpCore<f64> = MlpCore::from_json(&Json::parse(json).unwrap()).unwrap();
         let mut e = [0.0; 4];
         net.time_embed_row(0.001, &mut e);
         // freqs = [1, exp(-ln(1e4)/2)] = [1, 0.01]; ang = [1.0, 0.01]
@@ -374,36 +563,57 @@ mod tests {
         assert!((e[3] - 0.01f64.cos()).abs() < 1e-12);
     }
 
-    fn rand_block(rng: &mut Rng, hidden: usize, embed: usize) -> Block {
+    #[test]
+    fn precision_parse_and_name_roundtrip() {
+        assert_eq!(Precision::parse("f64"), Some(Precision::F64));
+        assert_eq!(Precision::parse("f32"), Some(Precision::F32));
+        assert_eq!(Precision::parse("f16"), None);
+        assert_eq!(Precision::default().name(), "f64");
+        assert_eq!(Precision::F32.name(), "f32");
+    }
+
+    fn evec<E: Element>(v: Vec<f64>) -> Vec<E> {
+        v.iter().map(|&x| E::from_f64(x)).collect()
+    }
+
+    fn rand_block<E: NativeElement>(rng: &mut Rng, hidden: usize, embed: usize) -> Block<E> {
         Block {
-            w1: Mat::from_rows(hidden, hidden, rng.normal_vec(hidden * hidden)),
-            b1: rng.normal_vec(hidden),
-            u: Mat::from_rows(embed, hidden, rng.normal_vec(embed * hidden)),
-            w2: Mat::from_rows(hidden, hidden, rng.normal_vec(hidden * hidden)),
-            b2: rng.normal_vec(hidden),
+            w1: Mat::from_f64_rows(hidden, hidden, &rng.normal_vec(hidden * hidden)),
+            b1: evec(rng.normal_vec(hidden)),
+            u: Mat::from_f64_rows(embed, hidden, &rng.normal_vec(embed * hidden)),
+            w2: Mat::from_f64_rows(hidden, hidden, &rng.normal_vec(hidden * hidden)),
+            b2: evec(rng.normal_vec(hidden)),
         }
     }
 
-    fn rand_net(rng: &mut Rng, dim: usize, hidden: usize, embed: usize, n_blocks: usize)
-        -> NativeMlp {
+    /// Deterministic random net: the same `rng` seed yields the same
+    /// underlying f64 draws at any precision (f32 nets are narrowed from
+    /// identical values — exactly like weight loading).
+    fn rand_net<E: NativeElement>(
+        rng: &mut Rng,
+        dim: usize,
+        hidden: usize,
+        embed: usize,
+        n_blocks: usize,
+    ) -> MlpCore<E> {
         let half = embed / 2;
-        NativeMlp {
+        MlpCore {
             dim,
             embed,
-            w_in: Mat::from_rows(dim, hidden, rng.normal_vec(dim * hidden)),
-            b_in: rng.normal_vec(hidden),
-            w_out: Mat::from_rows(hidden, dim, rng.normal_vec(hidden * dim)),
-            b_out: rng.normal_vec(dim),
+            w_in: Mat::from_f64_rows(dim, hidden, &rng.normal_vec(dim * hidden)),
+            b_in: evec(rng.normal_vec(hidden)),
+            w_out: Mat::from_f64_rows(hidden, dim, &rng.normal_vec(hidden * dim)),
+            b_out: evec(rng.normal_vec(dim)),
             blocks: (0..n_blocks).map(|_| rand_block(rng, hidden, embed)).collect(),
             freqs: (0..half)
                 .map(|i| (-(10000.0f64).ln() * i as f64 / half as f64).exp())
                 .collect(),
-            zero_bias: vec![0.0; hidden],
+            zero_bias: vec![E::ZERO; hidden],
         }
     }
 
     /// Reference forward with a brand-new workspace (no shared state).
-    fn fresh_forward(net: &NativeMlp, x: &[f64], t: &[f64], b: usize) -> Vec<f64> {
+    fn fresh_forward(net: &MlpCore<f64>, x: &[f64], t: &[f64], b: usize) -> Vec<f64> {
         let mut out = vec![0.0; b * net.dim];
         let mut scr = Scratch::default();
         net.forward_rows(x, Some(t), b, &mut out, &mut scr, None);
@@ -413,7 +623,7 @@ mod tests {
     #[test]
     fn pooled_matches_single_thread() {
         let mut rng = Rng::new(11);
-        let net = rand_net(&mut rng, 3, 9, 6, 2);
+        let net: MlpCore<f64> = rand_net(&mut rng, 3, 9, 6, 2);
         let b = 37; // odd: exercises the tail-row kernel and ragged chunks
         let x = rng.normal_vec(b * 3);
         let t: Vec<f64> = (0..b).map(|_| rng.uniform_in(0.01, 1.0)).collect();
@@ -431,7 +641,7 @@ mod tests {
     fn uniform_fast_path_matches_generic() {
         let mut rng = Rng::new(13);
         for (dim, hidden, embed, n_blocks) in [(2, 8, 4, 1), (3, 7, 5, 3), (1, 4, 2, 0)] {
-            let net = rand_net(&mut rng, dim, hidden, embed, n_blocks);
+            let net: MlpCore<f64> = rand_net(&mut rng, dim, hidden, embed, n_blocks);
             let b = 19;
             let x = rng.normal_vec(b * dim);
             let tv = rng.uniform_in(0.01, 1.0);
@@ -450,7 +660,7 @@ mod tests {
         // one thread; the shared thread-local workspace must always produce
         // the same output as a fresh workspace.
         run_prop("workspace reuse", 29, 20, |rng| {
-            let mut nets = Vec::new();
+            let mut nets: Vec<MlpCore<f64>> = Vec::new();
             for _ in 0..3 {
                 let dim = 1 + rng.below(4);
                 let hidden = 1 + rng.below(12);
@@ -484,5 +694,67 @@ mod tests {
                 assert_close(&got, &want, 1e-12, "workspace reuse parity");
             }
         });
+    }
+
+    /// Unit-level f32 parity: same weights at both precisions through the
+    /// full f64-boundary eval (narrow → f32 engine → widen). Tolerance:
+    /// see EXPERIMENTS.md §Kernels — f32 eps ~1.2e-7 per op, O(hidden)
+    /// terms per matmul and a handful of layers keeps the relative error
+    /// under ~1e-4 for O(1)-scale nets; 1e-3 leaves slack for unlucky
+    /// cancellation.
+    #[test]
+    fn f32_engine_tracks_f64_within_tolerance() {
+        let mut data_rng = Rng::new(170);
+        for (i, (dim, hidden, embed, n_blocks, b)) in
+            [(2, 16, 8, 2, 21), (3, 12, 6, 1, 8), (1, 4, 2, 0, 5)].into_iter().enumerate()
+        {
+            // Same seed twice → identical f64 weight draws, narrowed for
+            // the f32 net exactly like weight loading does.
+            let net64: MlpCore<f64> =
+                rand_net(&mut Rng::new(17 + i as u64), dim, hidden, embed, n_blocks);
+            let net32: MlpCore<f32> =
+                rand_net(&mut Rng::new(17 + i as u64), dim, hidden, embed, n_blocks);
+            let x = data_rng.normal_vec(b * dim);
+            // Exercise both the uniform fast path and the generic path.
+            for uniform in [true, false] {
+                let t: Vec<f64> = if uniform {
+                    vec![data_rng.uniform_in(0.01, 1.0); b]
+                } else {
+                    (0..b).map(|_| data_rng.uniform_in(0.01, 1.0)).collect()
+                };
+                let mut o64 = vec![0.0; b * dim];
+                net64.eval(&x, &t, b, &mut o64);
+                let mut o32 = vec![0.0; b * dim];
+                net32.eval_widening(&x, &t, b, &mut o32);
+                for (a, f) in o64.iter().zip(&o32) {
+                    let tol = 1e-3 * (1.0 + a.abs());
+                    assert!((a - f).abs() < tol, "f32 parity: {a} vs {f}");
+                }
+            }
+        }
+    }
+
+    /// The wrapper reports what it was built as and routes eval correctly.
+    #[test]
+    fn wrapper_precision_and_dispatch() {
+        let json = r#"{
+          "dim": 1, "hidden": 2, "embed": 2, "n_blocks": 0,
+          "params": {"w_in": [[1.0, -1.0]], "b_in": [0.0, 0.5],
+                     "w_out": [[1.0], [2.0]], "b_out": [-0.25], "blocks": []}
+        }"#;
+        let root = Json::parse(json).unwrap();
+        let net64 = NativeMlp::from_json_with(&root, Precision::F64).unwrap();
+        let net32 = NativeMlp::from_json_with(&root, Precision::F32).unwrap();
+        assert_eq!(net64.precision(), Precision::F64);
+        assert_eq!(net32.precision(), Precision::F32);
+        assert_eq!(net64.dim(), 1);
+        assert_eq!(net32.dim(), 1);
+        assert_eq!(net64.hidden(), 2);
+        let (x, t) = ([0.75], [0.5]);
+        let mut o64 = [0.0];
+        let mut o32 = [0.0];
+        net64.eval(&x, &t, 1, &mut o64);
+        net32.eval(&x, &t, 1, &mut o32);
+        assert!((o64[0] - o32[0]).abs() < 1e-3 * (1.0 + o64[0].abs()), "{o64:?} vs {o32:?}");
     }
 }

@@ -7,9 +7,23 @@
 //! Sampling request:
 //!   -> {"model":"gmm2d","solver":"tab3","grid":"quadratic","nfe":10,
 //!       "n":256,"seed":1,"t0":1e-3,"sde":"vp","return_samples":false,
-//!       "deadline_ms":500}
+//!       "deadline_ms":500,"dtype":"f64"}
 //!   <- {"ok":true,"n":256,"dim":2,"nfe":10,"merged_with":3,"co_batched":5,
-//!       "queue_us":120,"solve_us":5300,"samples":[...]?}
+//!       "queue_us":120,"solve_us":5300,"dtype":"f64","samples":[...]?}
+//!
+//! `dtype` (optional, default "f64") selects the inference precision of
+//! the model eval. "f32" routes the request to the model's f32 engine —
+//! registered as `<model>@f32` when the server runs with `--precision
+//! f32`; if no f32 engine exists for the model, the reply is {"ok":false,
+//! "error":"model ... has no f32 engine registered ..."}. Any value other
+//! than "f32"/"f64" is rejected with {"ok":false,"error":"unknown dtype
+//! ..."}. The reply echoes the `dtype` that served the request. Samples
+//! are always f64 JSON numbers on the wire regardless of dtype (the f32
+//! engine widens its output at the model boundary); f32 results track f64
+//! within the documented tolerance (EXPERIMENTS.md §Kernels). f32 and f64
+//! requests are never merged or co-batched together — the rewritten model
+//! name keys the batch, so the precision class of a reply is exact. In the
+//! stats reply, f32 traffic appears under the "<model>@f32" per-model key.
 //!
 //! `deadline_ms` (optional) is a relative per-request deadline: if the
 //! request is still queued or still integrating when it fires, the reply is
@@ -120,6 +134,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{Coordinator, SampleRequest};
 use crate::diffusion::Sde;
+use crate::score::Precision;
 use crate::solvers::SolverKind;
 use crate::timegrid::GridKind;
 use crate::util::json::Json;
@@ -147,6 +162,10 @@ pub fn parse_request(v: &Json) -> Result<SampleRequest> {
     // silently collapse every seed above 2^53 (and truncate fractions).
     req.seed = v.opt("seed").map(|x| x.as_u64()).transpose()?.unwrap_or(0);
     req.deadline_ms = v.opt("deadline_ms").map(|x| x.as_usize()).transpose()?.map(|ms| ms as u64);
+    if let Some(s) = v.opt("dtype").map(|s| s.as_str()).transpose()? {
+        req.dtype = Precision::parse(s)
+            .with_context(|| format!("unknown dtype '{s}' (expected \"f32\" or \"f64\")"))?;
+    }
     Ok(req)
 }
 
@@ -236,6 +255,7 @@ fn handle_line(coord: &Coordinator, line: &str) -> String {
             v.opt("return_samples").map(|b| b.as_bool()).transpose()?.unwrap_or(false);
         let req = parse_request(&v)?;
         let n = req.n_samples;
+        let dtype = req.dtype;
         let res = coord.sample_blocking(req)?;
         let mut fields = vec![
             ("ok", Json::Bool(true)),
@@ -246,6 +266,7 @@ fn handle_line(coord: &Coordinator, line: &str) -> String {
             ("co_batched", Json::num(res.co_batched as f64)),
             ("queue_us", Json::num(res.queue_us as f64)),
             ("solve_us", Json::num(res.solve_us as f64)),
+            ("dtype", Json::str(dtype.name())),
         ];
         if return_samples {
             fields.push(("samples", Json::arr_f64(&res.samples)));

@@ -1,171 +1,367 @@
-//! Minimal dense row-major matrix ops for the rust-native eps backend.
+//! Precision-generic dense row-major matrix ops for the rust-native eps
+//! backend.
 //!
 //! The native backend exists to (a) cross-check PJRT numerics against an
-//! independent implementation and (b) run the huge table sweeps without
-//! per-call PJRT overhead. Hot path: `matmul_rows` — a blocked ikj kernel
-//! the compiler auto-vectorizes (see EXPERIMENTS.md §Perf), parameterized
-//! by two compile-time epilogues so the engine never takes a second pass
-//! over its activations:
+//! independent implementation and (b) run the huge table sweeps and the
+//! serving hot path without per-call PJRT overhead. DEIS makes the per-step
+//! eps eval the entire serving cost, so the matmul kernel here is *the*
+//! hot loop of the whole service.
 //!
-//!   * `ACC`  — accumulate into `out` instead of overwriting it, fusing the
-//!     residual `h += gelu(z) @ w2 + b2` update (was matmul + add_inplace).
-//!   * `GELU` — apply tanh-GELU to each finished output row while it is
-//!     still hot in cache (was matmul + a second full sweep).
+//! ## API
 //!
-//! The kernel takes raw slices, not `Mat`, so callers can feed workspace
-//! arenas and batch sub-ranges without copying; `Mat` wrappers remain for
+//! One descriptor type, [`Kernel`], replaces the old
+//! `matmul_rows::<ACC, GELU>` const-generic surface:
+//!
+//! ```text
+//! Kernel { acc, epilogue } . run(x, kdim, &w, bias, &mut out)
+//! ```
+//!
+//! computes `out[b, n] = x[b, k] @ w[k, n] (+ bias / epilogue variants)`
+//! with every epilogue fused into the store so the engine never takes a
+//! second pass over its activations:
+//!
+//!   * `acc = false`, [`Epilogue::None`]: `out  = bias + x @ w`
+//!   * `acc = true`,  [`Epilogue::None`]: `out += bias + x @ w`
+//!     (residual update `h += z @ w2 + b2`)
+//!   * [`Epilogue::Gelu`]: tanh-GELU applied to each finished value
+//!     (`z = gelu(h @ w1 + bias)`; with `acc` the GELU wraps the
+//!     accumulated value, fusing the old separate `gelu_slice` pass)
+//!   * [`Epilogue::GeluResidual`]: `out += gelu(bias + x @ w)` — the
+//!     residual-around-activation form, `acc` implied
+//!
+//! All kernels take raw slices, not `Mat`, so callers can feed workspace
+//! arenas and batch sub-ranges without copying; [`Mat`] remains for
 //! coefficient storage and tests.
+//!
+//! ## Element types
+//!
+//! Everything is generic over [`Element`] — `f64` (default, bit-compatible
+//! with the python oracles) or `f32` (opt-in inference precision, ~2x SIMD
+//! width; see EXPERIMENTS.md §Kernels for the tolerance story).
+//!
+//! ## Kernel paths
+//!
+//! Three interchangeable implementations, selectable per call with
+//! [`Kernel::run_with`] or process-wide with [`force_kernel_path`]:
+//!
+//!   * [`KernelPath::Reference`] — the original 2-row × 4-k scalar kernel,
+//!     kept verbatim as the numeric baseline.
+//!   * [`KernelPath::Tiled`] — register-tiled, cache-blocked microkernel
+//!     (4 rows × 8 columns of accumulators held across the whole k loop).
+//!     **Bit-identical to `Reference`** for every element type: each output
+//!     element sees exactly the same operation chain (seed, 4-k product
+//!     quads in k order, singles tail, epilogue), only the iteration order
+//!     *across* elements differs. Pinned by tests here and in
+//!     `tests/kernel_paths.rs`.
+//!   * [`KernelPath::Fma`] — `std::arch` x86-64 AVX2+FMA microkernel behind
+//!     runtime feature detection (scalar `Tiled` fallback elsewhere). Fused
+//!     multiply-add skips intermediate roundings, so this path is its own
+//!     numeric class: *not* bit-identical, but within a few ulps of the
+//!     scalar paths (property-tested).
+//!
+//! The auto-dispatched path ([`active_kernel_path`]) is `Fma` where the CPU
+//! supports it, else `Tiled`. Single-threaded by design: batch-level
+//! parallelism lives one level up (`score::NativeMlp` fans row chunks
+//! across the persistent `score::pool::WorkerPool` once per forward —
+//! §Perf in EXPERIMENTS.md showed per-matmul threading eats its own gains).
 
-/// Row-major matrix.
-#[derive(Clone, Debug, PartialEq)]
-pub struct Mat {
-    pub rows: usize,
-    pub cols: usize,
-    pub data: Vec<f64>,
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Scalar type the tensor kernels are generic over. Implemented for `f64`
+/// and `f32`; the ops bounds cover exactly what the kernels use, so the
+/// generic code monomorphizes to the same loops the old f64-only code had.
+pub trait Element:
+    Copy
+    + Send
+    + Sync
+    + Default
+    + PartialEq
+    + std::fmt::Debug
+    + std::fmt::Display
+    + std::ops::Add<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::AddAssign
+    + 'static
+{
+    const ZERO: Self;
+    /// Wire/CLI name of the dtype ("f64" / "f32").
+    const NAME: &'static str;
+    fn from_f64(v: f64) -> Self;
+    fn to_f64(self) -> f64;
+    /// tanh-approximate GELU in this type's native arithmetic.
+    fn gelu(self) -> Self;
+    /// Implementation hook, not part of the caller-facing API: run the
+    /// arch-specific FMA microkernel for this type if the CPU supports it.
+    /// Returns false when the caller must fall back to the tiled kernel.
+    fn fma_run(k: Kernel, x: &[Self], kdim: usize, w: &Mat<Self>, bias: &[Self], out: &mut [Self])
+        -> bool;
 }
 
-impl Mat {
-    pub fn zeros(rows: usize, cols: usize) -> Mat {
-        Mat { rows, cols, data: vec![0.0; rows * cols] }
+impl Element for f64 {
+    const ZERO: f64 = 0.0;
+    const NAME: &'static str = "f64";
+
+    #[inline(always)]
+    fn from_f64(v: f64) -> f64 {
+        v
     }
 
-    pub fn from_rows(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+
+    #[inline(always)]
+    fn gelu(self) -> f64 {
+        gelu(self)
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    fn fma_run(k: Kernel, x: &[f64], kdim: usize, w: &Mat<f64>, bias: &[f64], out: &mut [f64])
+        -> bool {
+        if !fma::available() {
+            return false;
+        }
+        // Safety: feature availability checked above; shapes validated by
+        // the `run_with` caller.
+        unsafe { fma::run_f64(k, x, kdim, w, bias, out) };
+        true
+    }
+
+    #[cfg(not(target_arch = "x86_64"))]
+    fn fma_run(_: Kernel, _: &[f64], _: usize, _: &Mat<f64>, _: &[f64], _: &mut [f64]) -> bool {
+        false
+    }
+}
+
+impl Element for f32 {
+    const ZERO: f32 = 0.0;
+    const NAME: &'static str = "f32";
+
+    #[inline(always)]
+    fn from_f64(v: f64) -> f32 {
+        v as f32
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+
+    #[inline(always)]
+    fn gelu(self) -> f32 {
+        gelu_f32(self)
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    fn fma_run(k: Kernel, x: &[f32], kdim: usize, w: &Mat<f32>, bias: &[f32], out: &mut [f32])
+        -> bool {
+        if !fma::available() {
+            return false;
+        }
+        // Safety: feature availability checked above; shapes validated by
+        // the `run_with` caller.
+        unsafe { fma::run_f32(k, x, kdim, w, bias, out) };
+        true
+    }
+
+    #[cfg(not(target_arch = "x86_64"))]
+    fn fma_run(_: Kernel, _: &[f32], _: usize, _: &Mat<f32>, _: &[f32], _: &mut [f32]) -> bool {
+        false
+    }
+}
+
+/// Row-major matrix over an [`Element`] type (defaults to f64, so existing
+/// `Mat` spellings keep meaning the double-precision matrix).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat<E: Element = f64> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<E>,
+}
+
+impl<E: Element> Mat<E> {
+    pub fn zeros(rows: usize, cols: usize) -> Mat<E> {
+        Mat { rows, cols, data: vec![E::ZERO; rows * cols] }
+    }
+
+    pub fn from_rows(rows: usize, cols: usize, data: Vec<E>) -> Mat<E> {
         assert_eq!(data.len(), rows * cols);
         Mat { rows, cols, data }
     }
 
+    /// Narrow (or pass through) f64 coefficient data into this precision —
+    /// the weight-loading conversion point.
+    pub fn from_f64_rows(rows: usize, cols: usize, data: &[f64]) -> Mat<E> {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data: data.iter().map(|&v| E::from_f64(v)).collect() }
+    }
+
     #[inline]
-    pub fn row(&self, r: usize) -> &[f64] {
+    pub fn row(&self, r: usize) -> &[E] {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
     #[inline]
-    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+    pub fn row_mut(&mut self, r: usize) -> &mut [E] {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 }
 
-/// out[b, n] = x[b, k] @ w[k, n] + bias[n]; `out` is fully overwritten.
-/// Thin `Mat` wrapper over [`matmul_rows`].
-pub fn matmul_bias_into(x: &Mat, w: &Mat, bias: &[f64], out: &mut Mat) {
-    assert_eq!((out.rows, out.cols), (x.rows, w.cols));
-    matmul_rows::<false, false>(&x.data, x.cols, w, bias, &mut out.data);
+/// Fused store transform applied to each finished output element.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Epilogue {
+    /// Plain store.
+    None,
+    /// `out = gelu(value)`.
+    Gelu,
+    /// `out += gelu(value)` — residual-around-activation; reads `out`
+    /// regardless of `acc` (which is implied and ignored for seeding).
+    GeluResidual,
 }
 
-/// x[rows, kdim] @ w + bias into `out[rows, w.cols]` (rows inferred from
-/// `out`). Compile-time epilogues:
-///   ACC  = false: out_row  = bias + x_row @ w
-///   ACC  = true:  out_row += bias + x_row @ w
-///   GELU = true:  out_row  = gelu(out_row)   (applied per finished row)
-///
-/// ikj order with 2-row x 4-k register blocking: each loaded w row is used
-/// for two output rows, halving weight-stream bandwidth (the bottleneck on
-/// narrow boxes). Single-threaded by design: batch-level parallelism lives
-/// one level up (`score::NativeMlp` fans row chunks across the persistent
-/// `score::pool::WorkerPool` once per forward — §Perf in EXPERIMENTS.md
-/// showed per-matmul threading eats its own gains).
-pub fn matmul_rows<const ACC: bool, const GELU: bool>(
-    x: &[f64],
-    kdim: usize,
-    w: &Mat,
-    bias: &[f64],
-    out: &mut [f64],
-) {
-    let n = w.cols;
-    assert_eq!(w.rows, kdim);
-    assert_eq!(bias.len(), n);
-    assert!(kdim > 0 && n > 0, "degenerate matmul shape");
-    let rows = out.len() / n;
-    assert_eq!(out.len(), rows * n);
-    assert_eq!(x.len(), rows * kdim);
+/// Matmul kernel descriptor: `value_j = seed_j + x_row @ w[:, j]` where the
+/// seed is `bias_j` (or `out_j + bias_j` when `acc`), then the [`Epilogue`]
+/// decides how `value` lands in `out`. One call-site shape for every fused
+/// variant the eps-net forward needs.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Kernel {
+    pub acc: bool,
+    pub epilogue: Epilogue,
+}
 
-    let mut r = 0;
-    while r + 2 <= rows {
-        let (o_lo, o_hi) = out[r * n..(r + 2) * n].split_at_mut(n);
-        if ACC {
-            for (o, &bv) in o_lo.iter_mut().zip(bias) {
-                *o += bv;
-            }
-            for (o, &bv) in o_hi.iter_mut().zip(bias) {
-                *o += bv;
-            }
-        } else {
-            o_lo.copy_from_slice(bias);
-            o_hi.copy_from_slice(bias);
-        }
-        let xa = &x[r * kdim..(r + 1) * kdim];
-        let xb = &x[(r + 1) * kdim..(r + 2) * kdim];
-        let mut k = 0;
-        while k + 4 <= kdim {
-            let (a0, a1, a2, a3) = (xa[k], xa[k + 1], xa[k + 2], xa[k + 3]);
-            let (b0, b1, b2, b3) = (xb[k], xb[k + 1], xb[k + 2], xb[k + 3]);
-            let w0 = &w.data[k * n..][..n];
-            let w1 = &w.data[(k + 1) * n..][..n];
-            let w2 = &w.data[(k + 2) * n..][..n];
-            let w3 = &w.data[(k + 3) * n..][..n];
-            for j in 0..n {
-                let (v0, v1, v2, v3) = (w0[j], w1[j], w2[j], w3[j]);
-                o_lo[j] += a0 * v0 + a1 * v1 + a2 * v2 + a3 * v3;
-                o_hi[j] += b0 * v0 + b1 * v1 + b2 * v2 + b3 * v3;
-            }
-            k += 4;
-        }
-        while k < kdim {
-            let (av, bv) = (xa[k], xb[k]);
-            let wrow = &w.data[k * n..][..n];
-            for j in 0..n {
-                o_lo[j] += av * wrow[j];
-                o_hi[j] += bv * wrow[j];
-            }
-            k += 1;
-        }
-        if GELU {
-            for v in o_lo.iter_mut() {
-                *v = gelu(*v);
-            }
-            for v in o_hi.iter_mut() {
-                *v = gelu(*v);
-            }
-        }
-        r += 2;
+impl Kernel {
+    /// `out = bias + x @ w`
+    pub const fn overwrite() -> Kernel {
+        Kernel { acc: false, epilogue: Epilogue::None }
     }
-    // Tail row (odd batch): plain 4-k unroll.
-    if r < rows {
-        let orow = &mut out[r * n..(r + 1) * n];
-        if ACC {
-            for (o, &bv) in orow.iter_mut().zip(bias) {
-                *o += bv;
+
+    /// `out = gelu(bias + x @ w)`
+    pub const fn overwrite_gelu() -> Kernel {
+        Kernel { acc: false, epilogue: Epilogue::Gelu }
+    }
+
+    /// `out += bias + x @ w`
+    pub const fn accumulate() -> Kernel {
+        Kernel { acc: true, epilogue: Epilogue::None }
+    }
+
+    /// `out = gelu(out + bias + x @ w)` — accumulate, then GELU the total.
+    pub const fn accumulate_gelu() -> Kernel {
+        Kernel { acc: true, epilogue: Epilogue::Gelu }
+    }
+
+    /// `out += gelu(bias + x @ w)`
+    pub const fn gelu_residual() -> Kernel {
+        Kernel { acc: true, epilogue: Epilogue::GeluResidual }
+    }
+
+    /// Run on the auto-dispatched path (see [`active_kernel_path`]).
+    #[inline]
+    pub fn run<E: Element>(self, x: &[E], kdim: usize, w: &Mat<E>, bias: &[E], out: &mut [E]) {
+        self.run_with(active_kernel_path(), x, kdim, w, bias, out);
+    }
+
+    /// Run on an explicit path — deterministic regardless of the process-
+    /// wide force, which is what correctness tests and benches use.
+    /// `x[rows, kdim] @ w[kdim, n] -> out[rows, n]`, rows inferred from
+    /// `out`. `Fma` silently falls back to `Tiled` on unsupported CPUs.
+    pub fn run_with<E: Element>(
+        self,
+        path: KernelPath,
+        x: &[E],
+        kdim: usize,
+        w: &Mat<E>,
+        bias: &[E],
+        out: &mut [E],
+    ) {
+        let n = w.cols;
+        assert_eq!(w.rows, kdim);
+        assert_eq!(bias.len(), n);
+        assert!(kdim > 0 && n > 0, "degenerate matmul shape");
+        let rows = out.len() / n;
+        assert_eq!(out.len(), rows * n);
+        assert_eq!(x.len(), rows * kdim);
+        match path {
+            // The pre-PR kernel never had a GeluResidual epilogue; the tiled
+            // kernel (bit-identical operation chain) covers it on every path.
+            KernelPath::Reference if self.epilogue != Epilogue::GeluResidual => {
+                reference::run(self, x, kdim, w, bias, out);
             }
-        } else {
-            orow.copy_from_slice(bias);
-        }
-        let xrow = &x[r * kdim..(r + 1) * kdim];
-        let mut k = 0;
-        while k + 4 <= kdim {
-            let (x0, x1, x2, x3) = (xrow[k], xrow[k + 1], xrow[k + 2], xrow[k + 3]);
-            let w0 = &w.data[k * n..][..n];
-            let w1 = &w.data[(k + 1) * n..][..n];
-            let w2 = &w.data[(k + 2) * n..][..n];
-            let w3 = &w.data[(k + 3) * n..][..n];
-            for j in 0..n {
-                orow[j] += x0 * w0[j] + x1 * w1[j] + x2 * w2[j] + x3 * w3[j];
+            KernelPath::Reference | KernelPath::Tiled => {
+                tiled::run(self, x, kdim, w, bias, out);
             }
-            k += 4;
-        }
-        while k < kdim {
-            let xv = xrow[k];
-            let wrow = &w.data[k * n..][..n];
-            for (o, &wv) in orow.iter_mut().zip(wrow) {
-                *o += xv * wv;
-            }
-            k += 1;
-        }
-        if GELU {
-            for v in orow.iter_mut() {
-                *v = gelu(*v);
+            KernelPath::Fma => {
+                if !E::fma_run(self, x, kdim, w, bias, out) {
+                    tiled::run(self, x, kdim, w, bias, out);
+                }
             }
         }
     }
+}
+
+/// Which matmul implementation executes (see the module doc for the
+/// numeric contract of each).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum KernelPath {
+    Reference,
+    Tiled,
+    Fma,
+}
+
+/// Process-wide kernel-path override for [`Kernel::run`] callers.
+/// 0 = auto, 1 = Reference, 2 = Tiled, 3 = Fma-if-available.
+static FORCED_PATH: AtomicU8 = AtomicU8::new(0);
+
+/// Force every auto-dispatched kernel call onto one path (`None` restores
+/// auto). Process-global and racy across threads by nature — intended for
+/// single-test binaries and benches, not for concurrent unit tests (those
+/// should pass an explicit path to [`Kernel::run_with`]).
+pub fn force_kernel_path(path: Option<KernelPath>) {
+    let v = match path {
+        None => 0,
+        Some(KernelPath::Reference) => 1,
+        Some(KernelPath::Tiled) => 2,
+        Some(KernelPath::Fma) => 3,
+    };
+    FORCED_PATH.store(v, Ordering::Relaxed);
+}
+
+/// True when the CPU has the AVX2+FMA features the [`KernelPath::Fma`]
+/// microkernels need (always false off x86-64).
+#[cfg(target_arch = "x86_64")]
+pub fn fma_supported() -> bool {
+    fma::available()
+}
+
+/// True when the CPU has the AVX2+FMA features the [`KernelPath::Fma`]
+/// microkernels need (always false off x86-64).
+#[cfg(not(target_arch = "x86_64"))]
+pub fn fma_supported() -> bool {
+    false
+}
+
+/// The path [`Kernel::run`] dispatches to right now: the forced path if one
+/// is set, else `Fma` where supported, else `Tiled`.
+pub fn active_kernel_path() -> KernelPath {
+    match FORCED_PATH.load(Ordering::Relaxed) {
+        1 => KernelPath::Reference,
+        2 => KernelPath::Tiled,
+        _ => {
+            if fma_supported() {
+                KernelPath::Fma
+            } else {
+                KernelPath::Tiled
+            }
+        }
+    }
+}
+
+/// out[b, n] = x[b, k] @ w[k, n] + bias[n]; `out` is fully overwritten.
+/// Thin `Mat` wrapper over [`Kernel::overwrite`].
+pub fn matmul_bias_into<E: Element>(x: &Mat<E>, w: &Mat<E>, bias: &[E], out: &mut Mat<E>) {
+    assert_eq!((out.rows, out.cols), (x.rows, w.cols));
+    Kernel::overwrite().run(&x.data, x.cols, w, bias, &mut out.data);
 }
 
 /// tanh-approximate GELU — must match jax.nn.gelu(approximate=True) used by
@@ -176,30 +372,454 @@ pub fn gelu(x: f64) -> f64 {
     0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
 }
 
-pub fn gelu_inplace(m: &mut Mat) {
-    gelu_slice(&mut m.data);
+/// [`gelu`] computed in f32 arithmetic (the f32 inference mode's
+/// activation; its error is covered by the documented f32 tolerance).
+#[inline]
+pub fn gelu_f32(x: f32) -> f32 {
+    const C: f32 = 0.797_884_560_802_865_4_f64 as f32; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
 }
 
-/// GELU over a raw slice (workspace form of [`gelu_inplace`]).
-pub fn gelu_slice(xs: &mut [f64]) {
-    for v in xs.iter_mut() {
-        *v = gelu(*v);
+/// The original scalar kernel, generified over [`Element`] but otherwise
+/// kept verbatim: 2-row × 4-k register blocking, accumulating directly into
+/// `out`. This is the numeric baseline the tiled kernel must match bit for
+/// bit, and the scalar fallback pinned by `tests/kernel_paths.rs`.
+mod reference {
+    use super::{Element, Epilogue, Kernel, Mat};
+
+    pub(super) fn run<E: Element>(
+        k: Kernel,
+        x: &[E],
+        kdim: usize,
+        w: &Mat<E>,
+        bias: &[E],
+        out: &mut [E],
+    ) {
+        let n = w.cols;
+        let rows = out.len() / n;
+        let acc = k.acc;
+        let gelu_ep = k.epilogue == Epilogue::Gelu;
+
+        let mut r = 0;
+        while r + 2 <= rows {
+            let (o_lo, o_hi) = out[r * n..(r + 2) * n].split_at_mut(n);
+            if acc {
+                for (o, &bv) in o_lo.iter_mut().zip(bias) {
+                    *o += bv;
+                }
+                for (o, &bv) in o_hi.iter_mut().zip(bias) {
+                    *o += bv;
+                }
+            } else {
+                o_lo.copy_from_slice(bias);
+                o_hi.copy_from_slice(bias);
+            }
+            let xa = &x[r * kdim..(r + 1) * kdim];
+            let xb = &x[(r + 1) * kdim..(r + 2) * kdim];
+            let mut k_ = 0;
+            while k_ + 4 <= kdim {
+                let (a0, a1, a2, a3) = (xa[k_], xa[k_ + 1], xa[k_ + 2], xa[k_ + 3]);
+                let (b0, b1, b2, b3) = (xb[k_], xb[k_ + 1], xb[k_ + 2], xb[k_ + 3]);
+                let w0 = &w.data[k_ * n..][..n];
+                let w1 = &w.data[(k_ + 1) * n..][..n];
+                let w2 = &w.data[(k_ + 2) * n..][..n];
+                let w3 = &w.data[(k_ + 3) * n..][..n];
+                for j in 0..n {
+                    let (v0, v1, v2, v3) = (w0[j], w1[j], w2[j], w3[j]);
+                    o_lo[j] += a0 * v0 + a1 * v1 + a2 * v2 + a3 * v3;
+                    o_hi[j] += b0 * v0 + b1 * v1 + b2 * v2 + b3 * v3;
+                }
+                k_ += 4;
+            }
+            while k_ < kdim {
+                let (av, bv) = (xa[k_], xb[k_]);
+                let wrow = &w.data[k_ * n..][..n];
+                for j in 0..n {
+                    o_lo[j] += av * wrow[j];
+                    o_hi[j] += bv * wrow[j];
+                }
+                k_ += 1;
+            }
+            if gelu_ep {
+                for v in o_lo.iter_mut() {
+                    *v = v.gelu();
+                }
+                for v in o_hi.iter_mut() {
+                    *v = v.gelu();
+                }
+            }
+            r += 2;
+        }
+        // Tail row (odd batch): plain 4-k unroll.
+        if r < rows {
+            let orow = &mut out[r * n..(r + 1) * n];
+            if acc {
+                for (o, &bv) in orow.iter_mut().zip(bias) {
+                    *o += bv;
+                }
+            } else {
+                orow.copy_from_slice(bias);
+            }
+            let xrow = &x[r * kdim..(r + 1) * kdim];
+            let mut k_ = 0;
+            while k_ + 4 <= kdim {
+                let (x0, x1, x2, x3) = (xrow[k_], xrow[k_ + 1], xrow[k_ + 2], xrow[k_ + 3]);
+                let w0 = &w.data[k_ * n..][..n];
+                let w1 = &w.data[(k_ + 1) * n..][..n];
+                let w2 = &w.data[(k_ + 2) * n..][..n];
+                let w3 = &w.data[(k_ + 3) * n..][..n];
+                for j in 0..n {
+                    orow[j] += x0 * w0[j] + x1 * w1[j] + x2 * w2[j] + x3 * w3[j];
+                }
+                k_ += 4;
+            }
+            while k_ < kdim {
+                let xv = xrow[k_];
+                let wrow = &w.data[k_ * n..][..n];
+                for (o, &wv) in orow.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
+                k_ += 1;
+            }
+            if gelu_ep {
+                for v in orow.iter_mut() {
+                    *v = v.gelu();
+                }
+            }
+        }
     }
 }
 
-/// out += a (elementwise).
-pub fn add_inplace(out: &mut Mat, a: &Mat) {
-    assert_eq!(out.data.len(), a.data.len());
-    for (o, &v) in out.data.iter_mut().zip(&a.data) {
-        *o += v;
+/// Register-tiled, cache-blocked kernel. MR × NR output accumulators live
+/// in locals across the entire k loop, so each output element is stored
+/// exactly once (the reference kernel re-loads and re-stores `out` on every
+/// k quad). Each loaded weight tile row is reused for MR output rows,
+/// halving weight-stream bandwidth again versus the reference's 2-row
+/// blocking.
+///
+/// Bit-identity with `reference`: for every output element the operation
+/// chain is *identical* — seed (`bias` or `out + bias`), then one
+/// `acc += a0*v0 + a1*v1 + a2*v2 + a3*v3` per k quad in k order, then
+/// `acc += a*v` singles, then the epilogue. Only the iteration order across
+/// elements changes, which cannot change any individual result.
+mod tiled {
+    use super::{Element, Epilogue, Kernel, Mat};
+
+    /// Tile height (output rows per register block).
+    pub(super) const MR: usize = 4;
+    /// Tile width (output columns per register block). 8 f64 accumulator
+    /// columns = two 512-bit or four 256-bit lanes per row — wide enough to
+    /// saturate autovectorization, small enough that MR×NR accumulators
+    /// plus a weight-tile row stay in registers.
+    pub(super) const NR: usize = 8;
+
+    pub(super) fn run<E: Element>(
+        k: Kernel,
+        x: &[E],
+        kdim: usize,
+        w: &Mat<E>,
+        bias: &[E],
+        out: &mut [E],
+    ) {
+        let rows = out.len() / w.cols;
+        run_range(k, x, kdim, w, bias, out, 0, rows, 0, w.cols);
+    }
+
+    /// Tiled kernel over output rows [r0, r1) and columns [c0, c1). The FMA
+    /// path reuses this for its row/column tail regions.
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn run_range<E: Element>(
+        k: Kernel,
+        x: &[E],
+        kdim: usize,
+        w: &Mat<E>,
+        bias: &[E],
+        out: &mut [E],
+        r0: usize,
+        r1: usize,
+        c0: usize,
+        c1: usize,
+    ) {
+        let mut r = r0;
+        while r + MR <= r1 {
+            tile_cols::<E, MR>(k, x, kdim, w, bias, out, r, c0, c1);
+            r += MR;
+        }
+        while r < r1 {
+            tile_cols::<E, 1>(k, x, kdim, w, bias, out, r, c0, c1);
+            r += 1;
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn tile_cols<E: Element, const M: usize>(
+        k: Kernel,
+        x: &[E],
+        kdim: usize,
+        w: &Mat<E>,
+        bias: &[E],
+        out: &mut [E],
+        r: usize,
+        c0: usize,
+        c1: usize,
+    ) {
+        let mut c = c0;
+        while c + NR <= c1 {
+            tile::<E, M>(k, x, kdim, w, bias, out, r, c, NR);
+            c += NR;
+        }
+        if c < c1 {
+            tile::<E, M>(k, x, kdim, w, bias, out, r, c, c1 - c);
+        }
+    }
+
+    /// One register tile: M output rows × wd (≤ NR) output columns.
+    #[inline(always)]
+    #[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+    fn tile<E: Element, const M: usize>(
+        k: Kernel,
+        x: &[E],
+        kdim: usize,
+        w: &Mat<E>,
+        bias: &[E],
+        out: &mut [E],
+        r: usize,
+        c: usize,
+        wd: usize,
+    ) {
+        let n = w.cols;
+        let mut acc = [[E::ZERO; NR]; M];
+        // Seed: bias, plus the prior output for accumulating kernels —
+        // out + bias FIRST, matching the reference order bit for bit.
+        let seed_out = k.acc && k.epilogue != Epilogue::GeluResidual;
+        for (mi, am) in acc.iter_mut().enumerate() {
+            let orow = &out[(r + mi) * n + c..(r + mi) * n + c + wd];
+            for ji in 0..wd {
+                am[ji] = if seed_out { orow[ji] + bias[c + ji] } else { bias[c + ji] };
+            }
+        }
+        let mut kk = 0;
+        while kk + 4 <= kdim {
+            let w0 = &w.data[kk * n + c..][..wd];
+            let w1 = &w.data[(kk + 1) * n + c..][..wd];
+            let w2 = &w.data[(kk + 2) * n + c..][..wd];
+            let w3 = &w.data[(kk + 3) * n + c..][..wd];
+            for (mi, am) in acc.iter_mut().enumerate() {
+                let xr = &x[(r + mi) * kdim + kk..];
+                let (a0, a1, a2, a3) = (xr[0], xr[1], xr[2], xr[3]);
+                for ji in 0..wd {
+                    am[ji] += a0 * w0[ji] + a1 * w1[ji] + a2 * w2[ji] + a3 * w3[ji];
+                }
+            }
+            kk += 4;
+        }
+        while kk < kdim {
+            let wrow = &w.data[kk * n + c..][..wd];
+            for (mi, am) in acc.iter_mut().enumerate() {
+                let a = x[(r + mi) * kdim + kk];
+                for ji in 0..wd {
+                    am[ji] += a * wrow[ji];
+                }
+            }
+            kk += 1;
+        }
+        for (mi, am) in acc.iter().enumerate() {
+            let orow = &mut out[(r + mi) * n + c..(r + mi) * n + c + wd];
+            match k.epilogue {
+                Epilogue::None => orow.copy_from_slice(&am[..wd]),
+                Epilogue::Gelu => {
+                    for (o, &v) in orow.iter_mut().zip(&am[..wd]) {
+                        *o = v.gelu();
+                    }
+                }
+                Epilogue::GeluResidual => {
+                    for (o, &v) in orow.iter_mut().zip(&am[..wd]) {
+                        *o += v.gelu();
+                    }
+                }
+            }
+        }
     }
 }
 
-/// out[r, :] += bias
-pub fn add_bias_inplace(out: &mut Mat, bias: &[f64]) {
-    for r in 0..out.rows {
-        for (o, &b) in out.row_mut(r).iter_mut().zip(bias) {
-            *o += b;
+/// x86-64 AVX2+FMA microkernels. Callers gate on [`available`]; the
+/// vectorized body covers full 4-row × NR-column tiles and hands row/column
+/// tails to the (bit-identical-to-reference) tiled kernel — tails are
+/// O(edge) work, and mixing scalar tails with FMA interiors is fine because
+/// the whole FMA path is already its own numeric class.
+#[cfg(target_arch = "x86_64")]
+mod fma {
+    use std::arch::x86_64::*;
+    use std::sync::OnceLock;
+
+    use super::{tiled, Epilogue, Kernel, Mat};
+
+    pub(super) fn available() -> bool {
+        static AVAIL: OnceLock<bool> = OnceLock::new();
+        *AVAIL.get_or_init(|| {
+            std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+        })
+    }
+
+    /// f64: 4 output rows × 8 columns (two 256-bit lanes per row).
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA (checked via [`available`]) and shape-validated
+    /// slices (done by `Kernel::run_with`).
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn run_f64(
+        k: Kernel,
+        x: &[f64],
+        kdim: usize,
+        w: &Mat<f64>,
+        bias: &[f64],
+        out: &mut [f64],
+    ) {
+        const MR: usize = 4;
+        const NR: usize = 8;
+        let n = w.cols;
+        let rows = out.len() / n;
+        let seed_out = k.acc && k.epilogue != Epilogue::GeluResidual;
+        let mut r = 0;
+        while r + MR <= rows {
+            let mut c = 0;
+            while c + NR <= n {
+                let b0 = _mm256_loadu_pd(bias.as_ptr().add(c));
+                let b1 = _mm256_loadu_pd(bias.as_ptr().add(c + 4));
+                let mut acc = [[b0, b1]; MR];
+                if seed_out {
+                    for (mi, am) in acc.iter_mut().enumerate() {
+                        let op = out.as_ptr().add((r + mi) * n + c);
+                        am[0] = _mm256_add_pd(_mm256_loadu_pd(op), b0);
+                        am[1] = _mm256_add_pd(_mm256_loadu_pd(op.add(4)), b1);
+                    }
+                }
+                for kk in 0..kdim {
+                    let wp = w.data.as_ptr().add(kk * n + c);
+                    let w0 = _mm256_loadu_pd(wp);
+                    let w1 = _mm256_loadu_pd(wp.add(4));
+                    for (mi, am) in acc.iter_mut().enumerate() {
+                        let a = _mm256_set1_pd(*x.get_unchecked((r + mi) * kdim + kk));
+                        am[0] = _mm256_fmadd_pd(a, w0, am[0]);
+                        am[1] = _mm256_fmadd_pd(a, w1, am[1]);
+                    }
+                }
+                for (mi, am) in acc.iter().enumerate() {
+                    let op = out.as_mut_ptr().add((r + mi) * n + c);
+                    match k.epilogue {
+                        Epilogue::None => {
+                            _mm256_storeu_pd(op, am[0]);
+                            _mm256_storeu_pd(op.add(4), am[1]);
+                        }
+                        Epilogue::Gelu | Epilogue::GeluResidual => {
+                            let mut tmp = [0.0f64; NR];
+                            _mm256_storeu_pd(tmp.as_mut_ptr(), am[0]);
+                            _mm256_storeu_pd(tmp.as_mut_ptr().add(4), am[1]);
+                            if k.epilogue == Epilogue::Gelu {
+                                for (i, &v) in tmp.iter().enumerate() {
+                                    *op.add(i) = super::gelu(v);
+                                }
+                            } else {
+                                for (i, &v) in tmp.iter().enumerate() {
+                                    *op.add(i) += super::gelu(v);
+                                }
+                            }
+                        }
+                    }
+                }
+                c += NR;
+            }
+            r += MR;
+        }
+        let r_main = rows - rows % MR;
+        let c_main = n - n % NR;
+        if c_main < n {
+            tiled::run_range(k, x, kdim, w, bias, out, 0, r_main, c_main, n);
+        }
+        if r_main < rows {
+            tiled::run_range(k, x, kdim, w, bias, out, r_main, rows, 0, n);
+        }
+    }
+
+    /// f32: 4 output rows × 16 columns (two 256-bit lanes per row, 8 f32
+    /// each) — the ~2x-width payoff of the f32 inference mode.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA (checked via [`available`]) and shape-validated
+    /// slices (done by `Kernel::run_with`).
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn run_f32(
+        k: Kernel,
+        x: &[f32],
+        kdim: usize,
+        w: &Mat<f32>,
+        bias: &[f32],
+        out: &mut [f32],
+    ) {
+        const MR: usize = 4;
+        const NR: usize = 16;
+        let n = w.cols;
+        let rows = out.len() / n;
+        let seed_out = k.acc && k.epilogue != Epilogue::GeluResidual;
+        let mut r = 0;
+        while r + MR <= rows {
+            let mut c = 0;
+            while c + NR <= n {
+                let b0 = _mm256_loadu_ps(bias.as_ptr().add(c));
+                let b1 = _mm256_loadu_ps(bias.as_ptr().add(c + 8));
+                let mut acc = [[b0, b1]; MR];
+                if seed_out {
+                    for (mi, am) in acc.iter_mut().enumerate() {
+                        let op = out.as_ptr().add((r + mi) * n + c);
+                        am[0] = _mm256_add_ps(_mm256_loadu_ps(op), b0);
+                        am[1] = _mm256_add_ps(_mm256_loadu_ps(op.add(8)), b1);
+                    }
+                }
+                for kk in 0..kdim {
+                    let wp = w.data.as_ptr().add(kk * n + c);
+                    let w0 = _mm256_loadu_ps(wp);
+                    let w1 = _mm256_loadu_ps(wp.add(8));
+                    for (mi, am) in acc.iter_mut().enumerate() {
+                        let a = _mm256_set1_ps(*x.get_unchecked((r + mi) * kdim + kk));
+                        am[0] = _mm256_fmadd_ps(a, w0, am[0]);
+                        am[1] = _mm256_fmadd_ps(a, w1, am[1]);
+                    }
+                }
+                for (mi, am) in acc.iter().enumerate() {
+                    let op = out.as_mut_ptr().add((r + mi) * n + c);
+                    match k.epilogue {
+                        Epilogue::None => {
+                            _mm256_storeu_ps(op, am[0]);
+                            _mm256_storeu_ps(op.add(8), am[1]);
+                        }
+                        Epilogue::Gelu | Epilogue::GeluResidual => {
+                            let mut tmp = [0.0f32; NR];
+                            _mm256_storeu_ps(tmp.as_mut_ptr(), am[0]);
+                            _mm256_storeu_ps(tmp.as_mut_ptr().add(8), am[1]);
+                            if k.epilogue == Epilogue::Gelu {
+                                for (i, &v) in tmp.iter().enumerate() {
+                                    *op.add(i) = super::gelu_f32(v);
+                                }
+                            } else {
+                                for (i, &v) in tmp.iter().enumerate() {
+                                    *op.add(i) += super::gelu_f32(v);
+                                }
+                            }
+                        }
+                    }
+                }
+                c += NR;
+            }
+            r += MR;
+        }
+        let r_main = rows - rows % MR;
+        let c_main = n - n % NR;
+        if c_main < n {
+            tiled::run_range(k, x, kdim, w, bias, out, 0, r_main, c_main, n);
+        }
+        if r_main < rows {
+            tiled::run_range(k, x, kdim, w, bias, out, r_main, rows, 0, n);
         }
     }
 }
@@ -208,6 +828,15 @@ pub fn add_bias_inplace(out: &mut Mat, bias: &[f64]) {
 mod tests {
     use super::*;
     use crate::util::{prop::run_prop, rng::Rng};
+
+    /// Every kernel variant the forward pass (or API) can issue.
+    const KERNELS: [Kernel; 5] = [
+        Kernel::overwrite(),
+        Kernel::overwrite_gelu(),
+        Kernel::accumulate(),
+        Kernel::accumulate_gelu(),
+        Kernel::gelu_residual(),
+    ];
 
     fn rand_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
         Mat::from_rows(r, c, rng.normal_vec(r * c))
@@ -251,11 +880,13 @@ mod tests {
         let x = rand_mat(&mut rng, b, k);
         let w = rand_mat(&mut rng, k, n);
         let bias = rng.normal_vec(n);
-        let mut got = Mat::zeros(b, n);
-        matmul_bias_into(&x, &w, &bias, &mut got);
-        let want = matmul_naive(&x, &w, &bias);
-        for (g, w_) in got.data.iter().zip(&want.data) {
-            assert!((g - w_).abs() < 1e-9);
+        for path in [KernelPath::Reference, KernelPath::Tiled, KernelPath::Fma] {
+            let mut got = Mat::zeros(b, n);
+            Kernel::overwrite().run_with(path, &x.data, k, &w, &bias, &mut got.data);
+            let want = matmul_naive(&x, &w, &bias);
+            for (g, w_) in got.data.iter().zip(&want.data) {
+                assert!((g - w_).abs() < 1e-9, "path {path:?}: {g} vs {w_}");
+            }
         }
     }
 
@@ -267,10 +898,12 @@ mod tests {
             let w = rand_mat(rng, k, n);
             let bias = rng.normal_vec(n);
             let mut fused = Mat::zeros(b, n);
-            matmul_rows::<false, true>(&x.data, k, &w, &bias, &mut fused.data);
+            Kernel::overwrite_gelu().run(&x.data, k, &w, &bias, &mut fused.data);
             let mut two_pass = Mat::zeros(b, n);
             matmul_bias_into(&x, &w, &bias, &mut two_pass);
-            gelu_inplace(&mut two_pass);
+            for v in two_pass.data.iter_mut() {
+                *v = gelu(*v);
+            }
             for (f, t) in fused.data.iter().zip(&two_pass.data) {
                 assert!((f - t).abs() < 1e-14, "{f} vs {t}");
             }
@@ -287,14 +920,151 @@ mod tests {
             let base = rand_mat(rng, b, n);
             // Fused: out starts at `base`, accumulates bias + x@w.
             let mut fused = base.clone();
-            matmul_rows::<true, false>(&x.data, k, &w, &bias, &mut fused.data);
+            Kernel::accumulate().run(&x.data, k, &w, &bias, &mut fused.data);
             // Reference: separate matmul then add.
             let mut tmp = Mat::zeros(b, n);
             matmul_bias_into(&x, &w, &bias, &mut tmp);
             let mut want = base;
-            add_inplace(&mut want, &tmp);
+            for (o, &v) in want.data.iter_mut().zip(&tmp.data) {
+                *o += v;
+            }
             for (f, t) in fused.data.iter().zip(&want.data) {
                 assert!((f - t).abs() < 1e-12, "{f} vs {t}");
+            }
+        });
+    }
+
+    #[test]
+    fn accumulate_gelu_matches_add_then_gelu() {
+        run_prop("matmul acc+gelu epilogue", 31, 30, |rng| {
+            let (b, k, n) = (1 + rng.below(7), 1 + rng.below(7), 1 + rng.below(7));
+            let x = rand_mat(rng, b, k);
+            let w = rand_mat(rng, k, n);
+            let bias = rng.normal_vec(n);
+            let base = rand_mat(rng, b, n);
+            let mut fused = base.clone();
+            Kernel::accumulate_gelu().run(&x.data, k, &w, &bias, &mut fused.data);
+            let mut want = base;
+            Kernel::accumulate().run(&x.data, k, &w, &bias, &mut want.data);
+            for v in want.data.iter_mut() {
+                *v = gelu(*v);
+            }
+            for (f, t) in fused.data.iter().zip(&want.data) {
+                assert!((f - t).abs() < 1e-12, "{f} vs {t}");
+            }
+        });
+    }
+
+    #[test]
+    fn gelu_residual_epilogue_matches_two_pass() {
+        run_prop("matmul gelu-residual epilogue", 37, 30, |rng| {
+            let (b, k, n) = (1 + rng.below(7), 1 + rng.below(7), 1 + rng.below(7));
+            let x = rand_mat(rng, b, k);
+            let w = rand_mat(rng, k, n);
+            let bias = rng.normal_vec(n);
+            let base = rand_mat(rng, b, n);
+            let mut fused = base.clone();
+            Kernel::gelu_residual().run(&x.data, k, &w, &bias, &mut fused.data);
+            // Reference: out += gelu(bias + x@w) in two passes.
+            let mut tmp = Mat::zeros(b, n);
+            matmul_bias_into(&x, &w, &bias, &mut tmp);
+            let mut want = base;
+            for (o, &v) in want.data.iter_mut().zip(&tmp.data) {
+                *o += gelu(v);
+            }
+            for (f, t) in fused.data.iter().zip(&want.data) {
+                assert!((f - t).abs() < 1e-12, "{f} vs {t}");
+            }
+        });
+    }
+
+    /// Tiled must equal Reference BIT FOR BIT (the acceptance-criteria
+    /// pin), and FMA must stay within a few ulps — for f64.
+    #[test]
+    fn kernel_paths_agree_f64() {
+        run_prop("kernel paths f64", 41, 40, |rng| {
+            // Shapes straddle every tile boundary: MR=4 rows, NR=8 cols.
+            let (b, k, n) = (1 + rng.below(13), 1 + rng.below(10), 1 + rng.below(19));
+            let x = rng.normal_vec(b * k);
+            let w = rand_mat(rng, k, n);
+            let bias = rng.normal_vec(n);
+            let base = rng.normal_vec(b * n);
+            for kern in KERNELS {
+                let mut o_ref = base.clone();
+                kern.run_with(KernelPath::Reference, &x, k, &w, &bias, &mut o_ref);
+                let mut o_tiled = base.clone();
+                kern.run_with(KernelPath::Tiled, &x, k, &w, &bias, &mut o_tiled);
+                for (a, t) in o_ref.iter().zip(&o_tiled) {
+                    assert_eq!(a.to_bits(), t.to_bits(), "{kern:?}: {a} vs {t} (tiled)");
+                }
+                if fma_supported() {
+                    let mut o_fma = base.clone();
+                    kern.run_with(KernelPath::Fma, &x, k, &w, &bias, &mut o_fma);
+                    for (a, f) in o_ref.iter().zip(&o_fma) {
+                        let tol = 1e-11 * (1.0 + a.abs());
+                        assert!((a - f).abs() < tol, "{kern:?}: {a} vs {f} (fma)");
+                    }
+                }
+            }
+        });
+    }
+
+    /// Same three-way agreement for f32 (bitwise Reference == Tiled; FMA
+    /// within f32 ulp noise).
+    #[test]
+    fn kernel_paths_agree_f32() {
+        run_prop("kernel paths f32", 43, 40, |rng| {
+            // f32 FMA tiles are 16 columns wide; straddle that too.
+            let (b, k, n) = (1 + rng.below(13), 1 + rng.below(10), 1 + rng.below(37));
+            let x: Vec<f32> = rng.normal_vec(b * k).iter().map(|&v| v as f32).collect();
+            let w = Mat::<f32>::from_f64_rows(k, n, &rng.normal_vec(k * n));
+            let bias: Vec<f32> = rng.normal_vec(n).iter().map(|&v| v as f32).collect();
+            let base: Vec<f32> = rng.normal_vec(b * n).iter().map(|&v| v as f32).collect();
+            for kern in KERNELS {
+                let mut o_ref = base.clone();
+                kern.run_with(KernelPath::Reference, &x, k, &w, &bias, &mut o_ref);
+                let mut o_tiled = base.clone();
+                kern.run_with(KernelPath::Tiled, &x, k, &w, &bias, &mut o_tiled);
+                for (a, t) in o_ref.iter().zip(&o_tiled) {
+                    assert_eq!(a.to_bits(), t.to_bits(), "{kern:?}: {a} vs {t} (tiled)");
+                }
+                if fma_supported() {
+                    let mut o_fma = base.clone();
+                    kern.run_with(KernelPath::Fma, &x, k, &w, &bias, &mut o_fma);
+                    for (a, f) in o_ref.iter().zip(&o_fma) {
+                        let tol = 1e-4 * (1.0 + a.abs());
+                        assert!((a - f).abs() < tol, "{kern:?}: {a} vs {f} (fma)");
+                    }
+                }
+            }
+        });
+    }
+
+    /// f32 kernels track the f64 result within single-precision tolerance
+    /// (the unit-level half of the precision-parity story; the end-to-end
+    /// half lives in tests/precision_parity.rs).
+    #[test]
+    fn f32_tracks_f64_within_tolerance() {
+        run_prop("f32 vs f64 matmul", 47, 30, |rng| {
+            let (b, k, n) = (1 + rng.below(9), 1 + rng.below(33), 1 + rng.below(17));
+            let x64 = rng.normal_vec(b * k);
+            let wdata = rng.normal_vec(k * n);
+            let bias64 = rng.normal_vec(n);
+            let w64 = Mat::from_rows(k, n, wdata.clone());
+            let w32 = Mat::<f32>::from_f64_rows(k, n, &wdata);
+            let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+            let bias32: Vec<f32> = bias64.iter().map(|&v| v as f32).collect();
+            for kern in [Kernel::overwrite(), Kernel::overwrite_gelu()] {
+                let mut o64 = vec![0.0f64; b * n];
+                kern.run(&x64, k, &w64, &bias64, &mut o64);
+                let mut o32 = vec![0.0f32; b * n];
+                kern.run(&x32, k, &w32, &bias32, &mut o32);
+                for (a, f) in o64.iter().zip(&o32) {
+                    // f32 eps ~1.2e-7 per op; k ≤ 32 terms of O(1) values
+                    // keeps the accumulated error well under 1e-4 relative.
+                    let tol = 1e-4 * (1.0 + a.abs());
+                    assert!((a - f.to_f64()).abs() < tol, "{kern:?}: {a} vs {f}");
+                }
             }
         });
     }
@@ -306,13 +1076,21 @@ mod tests {
         assert!((gelu(1.0) - 0.841192).abs() < 1e-5);
         assert!((gelu(-2.0) + 0.045402).abs() < 1e-5);
         assert!((gelu(10.0) - 10.0).abs() < 1e-6);
+        // f32 flavor tracks the f64 one at f32 precision.
+        for v in [-3.0, -0.7, 0.0, 0.9, 2.5] {
+            assert!((gelu_f32(v as f32).to_f64() - gelu(v)).abs() < 1e-6);
+        }
     }
 
     #[test]
-    fn add_ops() {
-        let mut a = Mat::from_rows(2, 2, vec![1., 2., 3., 4.]);
-        add_inplace(&mut a, &Mat::from_rows(2, 2, vec![10., 10., 10., 10.]));
-        add_bias_inplace(&mut a, &[1., -1.]);
-        assert_eq!(a.data, vec![12., 11., 14., 13.]);
+    fn active_path_defaults_to_best_supported() {
+        // No force set by this test binary's other tests (they all use
+        // run_with), so auto must pick FMA exactly when the CPU has it.
+        let p = active_kernel_path();
+        if fma_supported() {
+            assert_eq!(p, KernelPath::Fma);
+        } else {
+            assert_eq!(p, KernelPath::Tiled);
+        }
     }
 }

@@ -117,6 +117,58 @@ pub fn solo_samples(name: &str, kind: SolverKind, nfe: usize, n: usize, seed: u6
     x
 }
 
+/// Tiny deterministic value stream for synthetic weights ([-0.3, 0.3],
+/// small enough that stacked residual blocks and full solver trajectories
+/// through the net stay finite).
+fn lcg_next(state: &mut u64) -> f64 {
+    *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    ((*state >> 33) % 13) as f64 / 20.0 - 0.3
+}
+
+fn json_matrix(state: &mut u64, r: usize, c: usize) -> String {
+    let rows: Vec<String> = (0..r)
+        .map(|_| {
+            let vals: Vec<String> = (0..c).map(|_| format!("{:.2}", lcg_next(state))).collect();
+            format!("[{}]", vals.join(","))
+        })
+        .collect();
+    format!("[{}]", rows.join(","))
+}
+
+fn json_vector(state: &mut u64, n: usize) -> String {
+    let vals: Vec<String> = (0..n).map(|_| format!("{:.2}", lcg_next(state))).collect();
+    format!("[{}]", vals.join(","))
+}
+
+/// Deterministic synthetic eps-net weights JSON in the weights_*.json
+/// schema — lets precision/kernel tests load real [`deis::score::NativeMlp`]
+/// engines without any artifacts on disk.
+pub fn weights_json(dim: usize, hidden: usize, embed: usize, n_blocks: usize) -> String {
+    let mut st = 0x9E3779B97F4A7C15u64;
+    let blocks: Vec<String> = (0..n_blocks)
+        .map(|_| {
+            format!(
+                r#"{{"w1": {}, "b1": {}, "u": {}, "w2": {}, "b2": {}}}"#,
+                json_matrix(&mut st, hidden, hidden),
+                json_vector(&mut st, hidden),
+                json_matrix(&mut st, embed, hidden),
+                json_matrix(&mut st, hidden, hidden),
+                json_vector(&mut st, hidden)
+            )
+        })
+        .collect();
+    format!(
+        r#"{{"dim": {dim}, "hidden": {hidden}, "embed": {embed}, "n_blocks": {n_blocks},
+            "params": {{"w_in": {}, "b_in": {}, "w_out": {}, "b_out": {},
+                        "blocks": [{}]}}}}"#,
+        json_matrix(&mut st, dim, hidden),
+        json_vector(&mut st, hidden),
+        json_matrix(&mut st, hidden, dim),
+        json_vector(&mut st, dim),
+        blocks.join(",")
+    )
+}
+
 /// Registry with three DISTINCT stalling models ("gmm2d", "ring6",
 /// "ring5", each its own mixture — see [`gmm_for`]) for shard-routing
 /// tests: per-model bit-exact parity against [`oracle_for`] proves every

@@ -1,0 +1,142 @@
+//! Kernel-path numeric contract, pinned end to end (ISSUE 7 acceptance):
+//!
+//!   1. `KernelPath::Tiled` is BIT-IDENTICAL to `KernelPath::Reference` —
+//!      the pre-refactor scalar kernel kept verbatim as the baseline — for
+//!      every kernel variant, at the kernel level AND through a full native
+//!      forward AND a full multi-step solver trajectory.
+//!   2. `KernelPath::Fma` (where the CPU has AVX2+FMA) tracks the scalar
+//!      paths within a few ulps; fused multiply-adds skip intermediate
+//!      roundings, so it is its own numeric class and bit-equality is not
+//!      claimed for it.
+//!
+//! Everything lives in ONE #[test]: the engine-level comparisons steer the
+//! auto-dispatched path with the process-global `force_kernel_path`, which
+//! must not race with other tests in the same binary.
+
+mod common;
+
+use deis::diffusion::Sde;
+use deis::score::{EpsModel, NativeMlp};
+use deis::solvers::{self, SolverKind};
+use deis::tensor::{
+    fma_supported, force_kernel_path, Kernel, KernelPath, Mat,
+};
+use deis::timegrid::{build, GridKind};
+use deis::util::json::Json;
+use deis::util::rng::Rng;
+
+/// Every kernel variant the engine's forward pass can issue.
+const KERNELS: [Kernel; 5] = [
+    Kernel::overwrite(),
+    Kernel::overwrite_gelu(),
+    Kernel::accumulate(),
+    Kernel::accumulate_gelu(),
+    Kernel::gelu_residual(),
+];
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: element {i} differs: {x} vs {y}"
+        );
+    }
+}
+
+/// Run one full solver trajectory on the CURRENT auto-dispatched path.
+fn trajectory(net: &NativeMlp, kind: SolverKind, steps: usize, n: usize) -> Vec<f64> {
+    let sde = Sde::vp();
+    let grid = build(GridKind::Quadratic, &sde, 1e-3, 1.0, steps);
+    let solver = solvers::build(kind, &sde, &grid);
+    let d = net.dim();
+    let mut rng = Rng::new(41);
+    let prior = sde.prior_std(1.0);
+    let mut x = vec![0.0; n * d];
+    for v in x.iter_mut() {
+        *v = prior * rng.normal();
+    }
+    let mut srng = Rng::new(41 ^ 0xD1F_F051);
+    solver.sample(net, &mut x, n, &mut srng);
+    assert!(x.iter().all(|v| v.is_finite()), "{} diverged", solver.name());
+    x
+}
+
+#[test]
+fn tiled_path_is_bit_identical_to_the_reference_scalar_kernel() {
+    // ---- 1. kernel level: explicit paths, every variant, ragged shapes ----
+    // Shapes straddle the MR=4 / NR=8 tile boundaries in both directions.
+    let mut rng = Rng::new(7);
+    for (b, k, n) in [(1, 1, 1), (4, 8, 8), (5, 7, 9), (13, 5, 17), (64, 32, 24)] {
+        let x = rng.normal_vec(b * k);
+        let w = Mat::from_rows(k, n, rng.normal_vec(k * n));
+        let bias = rng.normal_vec(n);
+        let base = rng.normal_vec(b * n);
+        for kern in KERNELS {
+            let mut o_ref = base.clone();
+            kern.run_with(KernelPath::Reference, &x, k, &w, &bias, &mut o_ref);
+            let mut o_tiled = base.clone();
+            kern.run_with(KernelPath::Tiled, &x, k, &w, &bias, &mut o_tiled);
+            assert_bits_eq(&o_ref, &o_tiled, &format!("{kern:?} @ ({b},{k},{n})"));
+            if fma_supported() {
+                let mut o_fma = base.clone();
+                kern.run_with(KernelPath::Fma, &x, k, &w, &bias, &mut o_fma);
+                for (a, f) in o_ref.iter().zip(&o_fma) {
+                    let tol = 1e-11 * (1.0 + a.abs());
+                    assert!((a - f).abs() < tol, "{kern:?}: {a} vs {f} (fma)");
+                }
+            }
+        }
+    }
+
+    // ---- 2. engine level: full forward under the forced global path ------
+    // hidden=24 and b=21 are deliberately NOT multiples of the tile sizes.
+    let net = NativeMlp::from_json(&Json::parse(&common::weights_json(3, 24, 8, 2)).unwrap())
+        .unwrap();
+    let b = 21;
+    let x = rng.normal_vec(b * 3);
+    let t_uniform = vec![0.35; b];
+    let t_generic: Vec<f64> = (0..b).map(|_| rng.uniform_in(0.01, 1.0)).collect();
+    for (label, t) in [("uniform-t", &t_uniform), ("generic-t", &t_generic)] {
+        let mut eval_on = |path: KernelPath| {
+            force_kernel_path(Some(path));
+            let mut out = vec![0.0; b * 3];
+            net.eval(&x, t, b, &mut out);
+            out
+        };
+        let o_ref = eval_on(KernelPath::Reference);
+        let o_tiled = eval_on(KernelPath::Tiled);
+        assert_bits_eq(&o_ref, &o_tiled, &format!("forward ({label})"));
+        if fma_supported() {
+            let o_fma = eval_on(KernelPath::Fma);
+            for (a, f) in o_ref.iter().zip(&o_fma) {
+                let tol = 1e-10 * (1.0 + a.abs());
+                assert!((a - f).abs() < tol, "forward ({label}) fma: {a} vs {f}");
+            }
+        }
+    }
+
+    // ---- 3. trajectory level: multi-step solver runs stay bit-identical --
+    // Error through a trajectory would amplify any kernel difference; bit
+    // equality here is the strongest full-stack statement of the contract.
+    for kind in [SolverKind::Tab(3), SolverKind::RhoHeun] {
+        force_kernel_path(Some(KernelPath::Reference));
+        let x_ref = trajectory(&net, kind, 10, 16);
+        force_kernel_path(Some(KernelPath::Tiled));
+        let x_tiled = trajectory(&net, kind, 10, 16);
+        assert_bits_eq(&x_ref, &x_tiled, &format!("{kind:?} trajectory"));
+        if fma_supported() {
+            force_kernel_path(Some(KernelPath::Fma));
+            let x_fma = trajectory(&net, kind, 10, 16);
+            for (a, f) in x_ref.iter().zip(&x_fma) {
+                // Per-eval FMA deltas are ~1e-13; 10 solver steps through a
+                // mild (small-weight) net amplify them only modestly.
+                let tol = 1e-8 * (1.0 + a.abs());
+                assert!((a - f).abs() < tol, "{kind:?} fma trajectory: {a} vs {f}");
+            }
+        }
+    }
+
+    force_kernel_path(None);
+}

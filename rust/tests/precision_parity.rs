@@ -1,0 +1,220 @@
+//! f32 inference-mode parity, unit → trajectory → wire (ISSUE 7):
+//!
+//!   1. The f32 engine tracks the f64 engine on random MLP weights through
+//!      the public `EpsModel` boundary (narrow → f32 kernels → widen).
+//!   2. End to end through EVERY solver kind: trajectories driven by the
+//!      f32 engine land within a documented tolerance of the f64 ones.
+//!   3. The dtype wire contract: `"dtype":"f32"` is served and echoed,
+//!      unknown dtypes are rejected with a clear error, f32 requests
+//!      against a model without an f32 engine are refused, and f32 traffic
+//!      shows up under the "<model>@f32" per-model stats key.
+//!
+//! Tolerance rationale (EXPERIMENTS.md §Kernels): a single f32 op carries
+//! ~1.2e-7 relative error; one forward through hidden-width-H matmuls and a
+//! handful of layers stays under ~1e-4 relative for O(1)-scale nets. A
+//! solver trajectory then feeds eps errors back through 10–20 steps, which
+//! amplifies them by roughly the trajectory's Lipschitz factor — for the
+//! small-weight synthetic net used here that stays within ~1e-2 absolute.
+//! We assert 0.05*(1+|x|) per sample: an order of magnitude of slack, while
+//! still far below the inter-sample distances that would indicate a routing
+//! or kernel bug. The adaptive-step rk45 solver is the one exception —
+//! its accept/reject decisions can flip under an eps perturbation, so its
+//! two runs may take DIFFERENT step sequences; it is compared in
+//! distribution (per-dimension mean/std) instead of per sample.
+
+mod common;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use deis::coordinator::{Coordinator, CoordinatorConfig, ModelRegistry};
+use deis::diffusion::Sde;
+use deis::exp::run_solver;
+use deis::score::{EpsModel, NativeMlp, Precision};
+use deis::server;
+use deis::solvers::SolverKind;
+use deis::timegrid::GridKind;
+use deis::util::json::Json;
+use deis::util::rng::Rng;
+
+/// Every solver kind (mirrors solvers::plan's test list — deterministic
+/// and stochastic alike; the stochastic samplers share their seeded noise
+/// stream across the two runs, so they compare per sample too).
+fn all_kinds() -> Vec<SolverKind> {
+    use SolverKind::*;
+    vec![
+        Euler, EulerScore, EiScore, Tab(0), Tab(3), RhoAb(2), RhoMidpoint, RhoHeun,
+        RhoKutta3, RhoRk4, Rk45, Pndm, Ipndm(3), Dpm(1), Dpm(2), Dpm(3), EulerMaruyama,
+        StochDdim, ADdim,
+    ]
+}
+
+fn nets(dim: usize, hidden: usize, embed: usize, n_blocks: usize) -> (NativeMlp, NativeMlp) {
+    let root = Json::parse(&common::weights_json(dim, hidden, embed, n_blocks)).unwrap();
+    (
+        NativeMlp::from_json_with(&root, Precision::F64).unwrap(),
+        NativeMlp::from_json_with(&root, Precision::F32).unwrap(),
+    )
+}
+
+#[test]
+fn f32_eval_tracks_f64_on_random_weights() {
+    let mut rng = Rng::new(2024);
+    for (dim, hidden, embed, n_blocks) in [(2, 16, 8, 2), (3, 24, 6, 1), (1, 5, 3, 3)] {
+        let (net64, net32) = nets(dim, hidden, embed, n_blocks);
+        assert_eq!(net64.precision(), Precision::F64);
+        assert_eq!(net32.precision(), Precision::F32);
+        for b in [1, 7, 32] {
+            let x = rng.normal_vec(b * dim);
+            // Uniform and per-row t exercise both forward paths.
+            for uniform in [true, false] {
+                let t: Vec<f64> = if uniform {
+                    vec![rng.uniform_in(0.01, 1.0); b]
+                } else {
+                    (0..b).map(|_| rng.uniform_in(0.01, 1.0)).collect()
+                };
+                let o64 = net64.eval_vec(&x, &t, b);
+                let o32 = net32.eval_vec(&x, &t, b);
+                for (a, f) in o64.iter().zip(&o32) {
+                    let tol = 1e-3 * (1.0 + a.abs());
+                    assert!(
+                        (a - f).abs() < tol,
+                        "eval parity ({dim},{hidden},{embed},{n_blocks}) b={b}: {a} vs {f}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn mean_std_per_dim(x: &[f64], d: usize) -> Vec<(f64, f64)> {
+    let n = x.len() / d;
+    (0..d)
+        .map(|j| {
+            let col: Vec<f64> = (0..n).map(|i| x[i * d + j]).collect();
+            let mean = col.iter().sum::<f64>() / n as f64;
+            let var = col.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n as f64;
+            (mean, var.sqrt())
+        })
+        .collect()
+}
+
+#[test]
+fn every_solver_kind_agrees_across_precision_end_to_end() {
+    let (net64, net32) = nets(2, 16, 8, 2);
+    let sde = Sde::vp();
+    for kind in all_kinds() {
+        let (x64, nfe64) =
+            run_solver(&net64, &sde, kind, GridKind::Quadratic, 1e-3, 12, 48, 5);
+        let (x32, nfe32) =
+            run_solver(&net32, &sde, kind, GridKind::Quadratic, 1e-3, 12, 48, 5);
+        assert!(x64.iter().all(|v| v.is_finite()), "{kind:?} f64 diverged");
+        assert!(x32.iter().all(|v| v.is_finite()), "{kind:?} f32 diverged");
+        if kind == SolverKind::Rk45 {
+            // Adaptive stepping: accept/reject flips under eps perturbation
+            // ⇒ compare in distribution, not per sample.
+            for ((m64, s64), (m32, s32)) in
+                mean_std_per_dim(&x64, 2).iter().zip(mean_std_per_dim(&x32, 2))
+            {
+                assert!((m64 - m32).abs() < 0.05, "rk45 mean drift: {m64} vs {m32}");
+                assert!((s64 - s32).abs() < 0.05, "rk45 std drift: {s64} vs {s32}");
+            }
+        } else {
+            assert_eq!(nfe64, nfe32, "{kind:?}: fixed-grid NFE must not depend on dtype");
+            for (a, f) in x64.iter().zip(&x32) {
+                let tol = 0.05 * (1.0 + a.abs());
+                assert!((a - f).abs() < tol, "{kind:?} trajectory parity: {a} vs {f}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire contract
+// ---------------------------------------------------------------------------
+
+/// Minimal line-protocol client (the in-crate test client is private).
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: &std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        Client { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
+    }
+
+    fn call(&mut self, line: &str) -> Json {
+        writeln!(self.writer, "{line}").unwrap();
+        self.writer.flush().unwrap();
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).unwrap();
+        Json::parse(&reply).unwrap()
+    }
+}
+
+/// Registry shaped like `deis serve --precision f32 --models mlp,gmm-like`:
+/// "mlp" has both engines, "nof32" only the f64 one.
+fn precision_registry() -> ModelRegistry {
+    let root = Json::parse(&common::weights_json(2, 16, 8, 2)).unwrap();
+    let mut reg = ModelRegistry::new();
+    reg.insert("mlp", Arc::new(NativeMlp::from_json_with(&root, Precision::F64).unwrap()));
+    reg.insert(
+        "mlp@f32",
+        Arc::new(NativeMlp::from_json_with(&root, Precision::F32).unwrap()),
+    );
+    reg.insert("nof32", Arc::new(NativeMlp::from_json_with(&root, Precision::F64).unwrap()));
+    reg
+}
+
+#[test]
+fn dtype_wire_contract() {
+    let coord = Arc::new(Coordinator::new(CoordinatorConfig::default(), precision_registry()));
+    let addr = server::serve(coord, "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(&addr);
+
+    // Default dtype: served by the f64 engine, echoed as f64.
+    let r = client.call(r#"{"model":"mlp","solver":"tab3","nfe":8,"n":4,"seed":1}"#);
+    assert!(r.get("ok").unwrap().as_bool().unwrap());
+    assert_eq!(r.get("dtype").unwrap().as_str().unwrap(), "f64");
+
+    // Explicit f32: routed to the @f32 sibling, echoed as f32, samples sane.
+    let r = client.call(
+        r#"{"model":"mlp","solver":"tab3","nfe":8,"n":4,"seed":1,"dtype":"f32","return_samples":true}"#,
+    );
+    assert!(r.get("ok").unwrap().as_bool().unwrap(), "f32 request failed: {r:?}");
+    assert_eq!(r.get("dtype").unwrap().as_str().unwrap(), "f32");
+    let samples = r.get("samples").unwrap().as_f64_vec().unwrap();
+    assert_eq!(samples.len(), 4 * 2);
+    assert!(samples.iter().all(|v| v.is_finite()));
+
+    // The f32 run tracks the f64 run of the same request within tolerance.
+    let r64 = client.call(
+        r#"{"model":"mlp","solver":"tab3","nfe":8,"n":4,"seed":1,"dtype":"f64","return_samples":true}"#,
+    );
+    let samples64 = r64.get("samples").unwrap().as_f64_vec().unwrap();
+    for (a, f) in samples64.iter().zip(&samples) {
+        assert!((a - f).abs() < 0.05 * (1.0 + a.abs()), "wire f32 parity: {a} vs {f}");
+    }
+
+    // Unknown dtype: rejected before admission, with a pointed error.
+    let r = client.call(r#"{"model":"mlp","solver":"tab3","nfe":8,"n":4,"dtype":"f16"}"#);
+    assert!(!r.get("ok").unwrap().as_bool().unwrap());
+    let err = r.get("error").unwrap().as_str().unwrap().to_string();
+    assert!(err.contains("unknown dtype"), "error was: {err}");
+
+    // f32 against a model with no f32 engine: refused with a hint.
+    let r = client.call(r#"{"model":"nof32","solver":"tab3","nfe":8,"n":4,"dtype":"f32"}"#);
+    assert!(!r.get("ok").unwrap().as_bool().unwrap());
+    let err = r.get("error").unwrap().as_str().unwrap().to_string();
+    assert!(err.contains("no f32 engine"), "error was: {err}");
+
+    // Per-model stats key the f32 traffic under the rewritten name.
+    let stats = client.call(r#"{"cmd":"stats"}"#);
+    let pm32 = stats.get("per_model").unwrap().get("mlp@f32").unwrap();
+    assert_eq!(pm32.get("completed").unwrap().as_f64().unwrap(), 1.0);
+    let pm64 = stats.get("per_model").unwrap().get("mlp").unwrap();
+    assert_eq!(pm64.get("completed").unwrap().as_f64().unwrap(), 2.0);
+}

@@ -16,7 +16,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use deis::diffusion::Sde;
-use deis::score::{EpsModel, NativeMlp};
+use deis::score::{EpsModel, NativeMlp, Precision};
 use deis::solvers::{self, SolverKind};
 use deis::timegrid::{build, GridKind};
 use deis::util::json::Json;
@@ -161,6 +161,47 @@ fn native_engine_is_allocation_free_in_steady_state() {
     let before = allocs();
     net.eval(&xs, &ts, bs, &mut outs);
     assert_eq!(allocs() - before, 0, "small-batch eval allocated in steady state");
+
+    // ---- 1b. f32 engine: same discipline through the dtype boundary ------
+    // The f32 engine adds thread-local narrow/widen buffers (Conv) and its
+    // own per-precision scratch; all must reach a zero-allocation steady
+    // state exactly like the f64 path.
+    let net32 = NativeMlp::from_json_with(
+        &Json::parse(&weights_json(4, 32, 8, 2)).unwrap(),
+        Precision::F32,
+    )
+    .unwrap();
+    {
+        let xw = &x[..256 * 4];
+        let tw_u = &t_uniform[..256];
+        let tw_g = &t_generic[..256];
+        pool.run(pool.threads() * 4, &|_| {
+            let mut o = vec![0.0; 256 * 4];
+            net32.eval(xw, tw_u, 256, &mut o);
+            net32.eval(xw, tw_g, 256, &mut o);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        });
+    }
+    let mut warm_rounds = 0;
+    loop {
+        let before = allocs();
+        net32.eval(&x, &t_uniform, b, &mut out);
+        net32.eval(&x, &t_generic, b, &mut out);
+        if allocs() == before {
+            break;
+        }
+        warm_rounds += 1;
+        assert!(warm_rounds < 50, "f32 eval still allocating after 50 warmup rounds");
+    }
+    for (label, t) in [("uniform-t", &t_uniform), ("generic-t", &t_generic)] {
+        let before = allocs();
+        for _ in 0..5 {
+            net32.eval(&x, t, b, &mut out);
+        }
+        let n = allocs() - before;
+        assert_eq!(n, 0, "f32 {label} eval allocated {n} times in steady state");
+    }
+    assert!(out.iter().all(|v| v.is_finite()));
 
     // ---- 2. solver trajectories: allocations independent of step count ---
     let sde = Sde::vp();
