@@ -4,7 +4,7 @@
 
 CARGO = cd rust && cargo
 
-.PHONY: verify verify-full build test lint fmt clippy chaos bench bench-quick bench-diff serve-demo artifacts ci
+.PHONY: verify verify-full build test lint fmt clippy chaos serve-smoke bench bench-quick bench-diff serve-demo artifacts ci
 
 ## Tier-1 verify (ROADMAP): release build + full test suite.
 verify:
@@ -35,6 +35,13 @@ lint: fmt clippy
 chaos:
 	$(CARGO) test --test chaos -q
 	$(CARGO) test --release --test chaos -q
+
+## Serving frontend smoke (EXPERIMENTS.md §Serving): 64 concurrent mixed
+## clients (plain, JSON-sample, binary-frame, counted rejections) against
+## the readiness-driven event loop, then the 4-term stats balance check.
+## Release build: the burst is timing-sensitive under debug.
+serve-smoke:
+	$(CARGO) test --release --test serve_smoke -q
 
 fmt:
 	$(CARGO) fmt --check
@@ -72,4 +79,4 @@ artifacts:
 	python3 python/compile/fixtures.py --out rust/artifacts/fixtures
 
 ## Everything CI runs.
-ci: verify lint chaos bench-quick
+ci: verify lint chaos serve-smoke bench-quick

@@ -16,11 +16,14 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use deis::coordinator::{Coordinator, CoordinatorConfig, ModelRegistry, SampleRequest};
+use deis::coordinator::{
+    Coordinator, CoordinatorConfig, ModelRegistry, SampleRequest, SampleResult,
+};
 use deis::diffusion::Sde;
 use deis::gmm::Gmm;
 use deis::runtime::Runtime;
 use deis::score::{pjrt::PjrtEps, EpsModel, GmmEps, NativeMlp, Precision};
+use deis::server::{self, wire, wire::Frame, wire::ReplyMeta};
 use deis::solvers::{self, deis_combine, SolverKind};
 use deis::tensor::{fma_supported, Kernel, KernelPath, Mat};
 use deis::timegrid::{build, GridKind};
@@ -324,6 +327,62 @@ fn main() {
             for rx in rxs {
                 black_box(rx.recv().unwrap().unwrap());
             }
+        }));
+        coord.shutdown();
+    }
+
+    // --- L4: serving frontend wire costs ------------------------------------
+    // Request parse (zero-copy scanner vs owned tree — the same line, so the
+    // delta is pure allocation/tree cost), reply encode at the serving shape
+    // b=256 d=2 in both frames, and a full localhost round-trip through the
+    // readiness-driven event loop (results feed EXPERIMENTS.md §Serving).
+    {
+        let line = concat!(
+            r#"{"model":"gmm2d","solver":"tab3","grid":"quadratic","nfe":10,"#,
+            r#""n":256,"seed":12345,"t0":0.001,"sde":"vp","return_samples":true,"#,
+            r#""deadline_ms":500,"dtype":"f64","frame":"bin"}"#
+        );
+        log(bench_for("wire parse submit-line (zero-copy)", budget, || {
+            black_box(wire::parse_submit_fast(line).unwrap());
+        }));
+        log(bench_for("wire parse submit-line (owned tree)", budget, || {
+            let v = Json::parse(line).unwrap();
+            black_box(wire::submit_args_from_json(&v).unwrap());
+        }));
+
+        let res: anyhow::Result<SampleResult> = Ok(SampleResult {
+            samples: rng.normal_vec(256 * 2),
+            dim: 2,
+            nfe: 10,
+            merged_with: 3,
+            co_batched: 5,
+            queue_us: 120,
+            solve_us: 5300,
+        });
+        for (frame, label) in [(Frame::Json, "json"), (Frame::Bin, "bin")] {
+            let meta = ReplyMeta {
+                n: 256,
+                dtype: Precision::F64,
+                return_samples: true,
+                frame,
+            };
+            let mut out: Vec<u8> = Vec::new();
+            log(bench_for(&format!("wire write response b256 {label}"), budget, || {
+                out.clear();
+                wire::write_reply(&mut out, &meta, &res);
+                black_box(&out);
+            }));
+        }
+
+        let mut reg = ModelRegistry::new();
+        reg.insert("gmm2d", Arc::new(GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp())));
+        let coord = Arc::new(Coordinator::new(CoordinatorConfig::default(), reg));
+        let addr = server::serve(coord.clone(), "127.0.0.1:0").unwrap();
+        let mut client = server::Client::connect(addr).unwrap();
+        let req =
+            Json::parse(r#"{"model":"gmm2d","solver":"tab0","nfe":1,"n":256}"#).unwrap();
+        log(bench_for("server round-trip localhost n=256", budget, || {
+            black_box(client.call(&req).unwrap());
         }));
         coord.shutdown();
     }

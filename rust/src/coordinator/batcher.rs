@@ -10,8 +10,8 @@
 //! The queue is indexed by key: every pending request lives in its key's
 //! FIFO *lane* (`lanes`), and `key_fifo` orders the nonempty lanes by when
 //! they last became nonempty — so the front lane's head is always the
-//! globally oldest pending request. `pop_batch` therefore costs O(group)
-//! per pop: it drains the front lane up to the sample budget and never
+//! globally oldest pending request. `pop_batch` therefore costs O(front
+//! lane) per pop: it packs the front lane up to the sample budget and never
 //! looks at any other lane. The previous implementation popped and
 //! re-pushed the *entire* queue to find same-key requests — O(queue) per
 //! pop, recomputing every request's `batch_key()` along the way — which
@@ -99,30 +99,41 @@ impl<T> Batcher<T> {
     }
 
     /// Pop the next merged batch: the oldest queued request plus every
-    /// other request in its lane, in FIFO order, until the sample budget
-    /// fills. Returns (key, requests) or None if idle. O(group), not
-    /// O(queue): only the front lane is touched.
+    /// other request in its lane that fits the remaining sample budget, in
+    /// FIFO order. Returns (key, requests) or None if idle. O(front lane),
+    /// not O(queue): only the front lane is touched.
     ///
-    /// Budget semantics are strictly FIFO within the lane: the drain stops
-    /// at the first request that does not fit, rather than skipping it to
-    /// pack a smaller later one (the old scan did the latter, which could
-    /// starve a large request behind a stream of small same-key ones).
+    /// Budget packing is first-fit within the lane: the head is always
+    /// taken, and the scan continues PAST a request that does not fit to
+    /// pack smaller later same-key ones (a single big request must not
+    /// strand the rest of the budget — a steady small/large mix would
+    /// otherwise dispatch the small requests one batch late forever).
+    /// Skipped requests keep their relative order, and because the head is
+    /// unconditional, a skipped request heads the lane on the next pop —
+    /// it is at worst one batch late, never starved.
     pub fn pop_batch(&mut self) -> Option<(BatchKey, Vec<Pending<T>>)> {
         let key = self.key_fifo.pop_front()?;
         let lane = self.lanes.get_mut(&key).expect("key_fifo entry must have a lane");
         let head = lane.pop_front().expect("key_fifo lanes are nonempty by invariant");
         let mut total = head.req.n_samples;
         let mut group = vec![head];
-        while let Some(p) = lane.front() {
-            if total < self.max_batch_samples
-                && total + p.req.n_samples <= self.max_batch_samples
-            {
-                total += p.req.n_samples;
-                group.push(lane.pop_front().expect("front was just Some"));
-            } else {
+        let mut rest: VecDeque<Pending<T>> = VecDeque::new();
+        let mut drain = std::mem::take(lane).into_iter();
+        for p in drain.by_ref() {
+            if total >= self.max_batch_samples {
+                // Nothing further can fit (n_samples >= 1): stop sorting.
+                rest.push_back(p);
                 break;
             }
+            if total + p.req.n_samples <= self.max_batch_samples {
+                total += p.req.n_samples;
+                group.push(p);
+            } else {
+                rest.push_back(p);
+            }
         }
+        rest.extend(drain);
+        *lane = rest;
         self.len -= group.len();
         let leftover_head_seq = lane.front().map(|p| p.seq);
         match leftover_head_seq {
@@ -186,6 +197,29 @@ mod tests {
         // skipped requests retain order
         let (_, g2) = b.pop_batch().unwrap();
         assert_eq!(g2.iter().map(|p| p.tag).collect::<Vec<_>>(), vec![2, 3]);
+    }
+
+    /// The budget-drain regression: a big request that does not fit must
+    /// not stop the pack — smaller later same-key requests fill the rest
+    /// of the budget, the skipped big request keeps its place, and it
+    /// heads the very next batch (one pop late at worst, never starved).
+    #[test]
+    fn fill_after_big_request() {
+        let mut b: Batcher<usize> = Batcher::new(20);
+        for (i, n) in [8, 15, 5, 15, 7].into_iter().enumerate() {
+            b.push(req("m", SolverKind::Tab(3), 10, n), i);
+        }
+        let (_, g) = b.pop_batch().unwrap();
+        assert_eq!(
+            g.iter().map(|p| p.tag).collect::<Vec<_>>(),
+            vec![0, 2, 4],
+            "8+5+7 packs the budget past the non-fitting 15s"
+        );
+        let (_, g) = b.pop_batch().unwrap();
+        assert_eq!(g.iter().map(|p| p.tag).collect::<Vec<_>>(), vec![1]);
+        let (_, g) = b.pop_batch().unwrap();
+        assert_eq!(g.iter().map(|p| p.tag).collect::<Vec<_>>(), vec![3]);
+        assert!(b.pop_batch().is_none());
     }
 
     #[test]

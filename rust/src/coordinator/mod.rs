@@ -82,7 +82,7 @@ pub use stats::{ModelStats, ModelStatsSnapshot, Stats, StatsSnapshot};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::score::{EpsModel, Precision};
@@ -175,7 +175,45 @@ pub struct HealthSnapshot {
     pub models: Vec<(String, bool)>,
 }
 
-pub(crate) type Responder = SyncSender<anyhow::Result<SampleResult>>;
+/// How a finished (or refused) request's result reaches its requester.
+/// `Channel` is the blocking in-process path ([`Coordinator::submit`]);
+/// `Hook` carries an arbitrary completion callback — the readiness-driven
+/// server front end uses it to route results back to the owning I/O thread
+/// without parking a thread per request. Delivery is exactly-once for
+/// hooks (the callback is taken out of its slot before it runs); a channel
+/// send to a dropped receiver is ignored, as before.
+pub(crate) enum Responder {
+    Channel(SyncSender<anyhow::Result<SampleResult>>),
+    Hook(Mutex<Option<Box<dyn FnOnce(anyhow::Result<SampleResult>) + Send>>>),
+}
+
+impl Responder {
+    pub(crate) fn channel(tx: SyncSender<anyhow::Result<SampleResult>>) -> Responder {
+        Responder::Channel(tx)
+    }
+
+    pub(crate) fn hook(
+        f: impl FnOnce(anyhow::Result<SampleResult>) + Send + 'static,
+    ) -> Responder {
+        Responder::Hook(Mutex::new(Some(Box::new(f))))
+    }
+
+    pub(crate) fn send(&self, r: anyhow::Result<SampleResult>) {
+        match self {
+            Responder::Channel(tx) => {
+                let _ = tx.send(r);
+            }
+            Responder::Hook(slot) => {
+                // Take under the lock, run after dropping it: the callback
+                // may be arbitrarily heavy (it serializes the reply).
+                let f = crate::util::sync::lock_recover(slot).take();
+                if let Some(f) = f {
+                    f(r);
+                }
+            }
+        }
+    }
+}
 
 /// Upper bound on a request's NFE budget. NFE comes straight off the wire
 /// and sizes both the grid allocation and the coefficient quadrature behind
@@ -262,8 +300,18 @@ impl Coordinator {
     /// [`PlanCache`] lookup in the steady state, a (concurrency-friendly)
     /// build on the first sighting of a config. Only the owning shard's
     /// mutex is taken at the end, for the queue push.
-    pub fn submit(&self, mut req: SampleRequest) -> Receiver<anyhow::Result<SampleResult>> {
+    pub fn submit(&self, req: SampleRequest) -> Receiver<anyhow::Result<SampleResult>> {
         let (tx, rx) = sync_channel(1);
+        self.submit_with(req, Responder::channel(tx));
+        rx
+    }
+
+    /// Submit with an explicit [`Responder`] — the non-channel entry the
+    /// event-loop front end uses: refusals are delivered synchronously on
+    /// the calling thread, completions from wherever the scheduler finishes
+    /// the flight. Same admission path, same counters, same error texts as
+    /// [`Coordinator::submit`] (which is now a thin wrapper over this).
+    pub(crate) fn submit_with(&self, mut req: SampleRequest, responder: Responder) {
         let sh = &*self.shared;
         // Precision routing: an f32 request runs on the model's registered
         // f32 sibling ("<name>@f32", see [`F32_SUFFIX`]), so everything
@@ -278,21 +326,21 @@ impl Coordinator {
         // drain wait (inflight_parts -> 0) cannot be pushed back forever.
         if sh.draining.load(Ordering::SeqCst) {
             sh.stats.rejected.fetch_add(1, Ordering::Relaxed);
-            let _ = tx.send(Err(anyhow::anyhow!(
+            responder.send(Err(anyhow::anyhow!(
                 "coordinator shutting down: not accepting new requests"
             )));
-            return rx;
+            return;
         }
         let deadline = req.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms));
         // Cheap request sanity BEFORE any plan work: nfe comes off the wire
         // and sizes the grid allocation + coefficient quadrature.
         if req.nfe > MAX_REQUEST_NFE {
             sh.stats.rejected.fetch_add(1, Ordering::Relaxed);
-            let _ = tx.send(Err(anyhow::anyhow!(
+            responder.send(Err(anyhow::anyhow!(
                 "nfe {} out of range (max {MAX_REQUEST_NFE})",
                 req.nfe
             )));
-            return rx;
+            return;
         }
         // Global admission: reserve one in-flight slot atomically. An
         // overloaded coordinator must shed BEFORE paying for routing or
@@ -303,11 +351,11 @@ impl Coordinator {
         if cur >= sh.max_inflight {
             sh.inflight_parts.fetch_sub(1, Ordering::SeqCst);
             sh.stats.rejected.fetch_add(1, Ordering::Relaxed);
-            let _ = tx.send(Err(anyhow::anyhow!(
+            responder.send(Err(anyhow::anyhow!(
                 "coordinator overloaded: {cur} requests in flight (max {}); retry later",
                 sh.max_inflight
             )));
-            return rx;
+            return;
         }
         // Route to the model's shard (created lazily from the registry on
         // first sighting). Unknown models are refused here — no shard, no
@@ -327,8 +375,8 @@ impl Coordinator {
                     ),
                     _ => anyhow::anyhow!("unknown model '{}'", req.model),
                 };
-                let _ = tx.send(Err(msg));
-                return rx;
+                responder.send(Err(msg));
+                return;
             }
         };
         shard.stats.requests.fetch_add(1, Ordering::Relaxed);
@@ -343,13 +391,13 @@ impl Coordinator {
             sh.stats.unhealthy.fetch_add(1, Ordering::Relaxed);
             shard.stats.rejected.fetch_add(1, Ordering::Relaxed);
             shard.stats.unhealthy.fetch_add(1, Ordering::Relaxed);
-            let _ = tx.send(Err(anyhow::anyhow!(
+            responder.send(Err(anyhow::anyhow!(
                 "model '{}' unhealthy (circuit open after {} consecutive eval \
                  failures; retry after cooldown)",
                 req.model,
                 shard.breaker.threshold()
             )));
-            return rx;
+            return;
         }
         // Per-model admission: same reservation discipline against the
         // shard's own counter, so one hot model sheds before it can occupy
@@ -360,12 +408,12 @@ impl Coordinator {
             sh.inflight_parts.fetch_sub(1, Ordering::SeqCst);
             sh.stats.rejected.fetch_add(1, Ordering::Relaxed);
             shard.stats.rejected.fetch_add(1, Ordering::Relaxed);
-            let _ = tx.send(Err(anyhow::anyhow!(
+            responder.send(Err(anyhow::anyhow!(
                 "model '{}' overloaded: {scur} requests in flight (max {}); retry later",
                 req.model,
                 sh.max_inflight_per_model
             )));
-            return rx;
+            return;
         }
         // Grid/solver constructors assert on malformed configs (t0 out of
         // range, too few steps for PNDM, ...); turn panics into per-request
@@ -388,23 +436,22 @@ impl Coordinator {
                 sh.inflight_parts.fetch_sub(1, Ordering::SeqCst);
                 sh.stats.rejected.fetch_add(1, Ordering::Relaxed);
                 shard.stats.rejected.fetch_add(1, Ordering::Relaxed);
-                let _ = tx.send(Err(anyhow::anyhow!(
+                responder.send(Err(anyhow::anyhow!(
                     "invalid sampling configuration for solver '{}' (nfe {}, t0 {}): \
                      grid/solver constraints violated",
                     req.solver.name(),
                     req.nfe,
                     req.t0
                 )));
-                return rx;
+                return;
             }
         };
         {
             let mut st = shard.lock();
-            st.queue.push(req, (tx, Instant::now(), deadline, plan));
+            st.queue.push(req, (responder, Instant::now(), deadline, plan));
             shard.publish_load(&st);
         }
         sh.wake.wake();
-        rx
     }
 
     /// Submit and wait.

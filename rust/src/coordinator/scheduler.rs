@@ -884,10 +884,7 @@ fn build_flight(sh: &Shared, shard: &Shard, group: Vec<Pending<Tag>>) -> Option<
         if p.tag.2.is_some_and(|d| d <= now) {
             sh.stats.expired.fetch_add(1, Ordering::Relaxed);
             shard.stats.expired.fetch_add(1, Ordering::Relaxed);
-            let _ = p
-                .tag
-                .0
-                .send(Err(anyhow::anyhow!("deadline exceeded while queued")));
+            p.tag.0.send(Err(anyhow::anyhow!("deadline exceeded while queued")));
             release_inflight(sh, shard);
         } else {
             live.push(p);
@@ -939,7 +936,7 @@ fn build_flight(sh: &Shared, shard: &Shard, group: Vec<Pending<Tag>>) -> Option<
             for part in parts {
                 sh.stats.failed.fetch_add(1, Ordering::Relaxed);
                 shard.stats.failed.fetch_add(1, Ordering::Relaxed);
-                let _ = part.responder.send(Err(anyhow::anyhow!(
+                part.responder.send(Err(anyhow::anyhow!(
                     "solver cursor construction panicked (fault contained)"
                 )));
                 release_inflight(sh, shard);
@@ -979,7 +976,7 @@ fn expire_deadlines(sh: &Shared, shard: &Shard, st: &mut ShardState) {
                     if part.deadline.is_some_and(|d| d <= now) {
                         sh.stats.expired.fetch_add(1, Ordering::Relaxed);
                         shard.stats.expired.fetch_add(1, Ordering::Relaxed);
-                        let _ = part.responder.send(Err(anyhow::anyhow!(
+                        part.responder.send(Err(anyhow::anyhow!(
                             "deadline exceeded before sampling completed"
                         )));
                         release_inflight(sh, shard);
@@ -1178,13 +1175,13 @@ fn fail_flights(sh: &Shared, shard: &Shard, failed: Vec<(Flight, &str)>) {
             if part.deadline.is_some_and(|dl| dl <= now) {
                 sh.stats.expired.fetch_add(1, Ordering::Relaxed);
                 shard.stats.expired.fetch_add(1, Ordering::Relaxed);
-                let _ = part.responder.send(Err(anyhow::anyhow!(
+                part.responder.send(Err(anyhow::anyhow!(
                     "deadline exceeded before sampling completed"
                 )));
             } else {
                 sh.stats.failed.fetch_add(1, Ordering::Relaxed);
                 shard.stats.failed.fetch_add(1, Ordering::Relaxed);
-                let _ = part.responder.send(Err(anyhow::anyhow!("{msg}")));
+                part.responder.send(Err(anyhow::anyhow!("{msg}")));
             }
             release_inflight(sh, shard);
         }
@@ -1209,10 +1206,10 @@ pub(crate) fn abort_shard(sh: &Shared, shard: &Shard, msg: &str) {
         };
         let Some((_key, pending)) = group else { break };
         for p in pending {
-            let (tx, _enq, _deadline, _plan) = p.tag;
+            let (responder, _enq, _deadline, _plan) = p.tag;
             sh.stats.failed.fetch_add(1, Ordering::Relaxed);
             shard.stats.failed.fetch_add(1, Ordering::Relaxed);
-            let _ = tx.send(Err(anyhow::anyhow!("{msg}")));
+            responder.send(Err(anyhow::anyhow!("{msg}")));
             release_inflight(sh, shard);
         }
     }
@@ -1252,7 +1249,7 @@ fn complete_flight(sh: &Shared, shard: &Shard, mut flight: Flight) {
         if part.deadline.is_some_and(|dl| dl <= solve_end) {
             sh.stats.expired.fetch_add(1, Ordering::Relaxed);
             shard.stats.expired.fetch_add(1, Ordering::Relaxed);
-            let _ = part.responder.send(Err(anyhow::anyhow!(
+            part.responder.send(Err(anyhow::anyhow!(
                 "deadline exceeded before sampling completed"
             )));
             release_inflight(sh, shard);
@@ -1278,7 +1275,7 @@ fn complete_flight(sh: &Shared, shard: &Shard, mut flight: Flight) {
         sh.stats.record_latency(part.enqueued.elapsed().as_micros() as u64);
         shard.stats.samples.fetch_add(part.n as u64, Ordering::Relaxed);
         shard.stats.completed.fetch_add(1, Ordering::Relaxed);
-        let _ = part.responder.send(Ok(res));
+        part.responder.send(Ok(res));
         release_inflight(sh, shard);
     }
 }
@@ -1334,7 +1331,13 @@ mod tests {
         let now = Instant::now();
         let flight = Flight {
             cursor,
-            parts: vec![FlightPart { n, row0: 0, responder: tx, enqueued: now, deadline }],
+            parts: vec![FlightPart {
+                n,
+                row0: 0,
+                responder: Responder::channel(tx),
+                enqueued: now,
+                deadline,
+            }],
             nfe,
             dim: d,
             rows: n,

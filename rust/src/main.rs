@@ -7,6 +7,8 @@
 //!           [--breaker-threshold 5] [--breaker-cooldown-ms 1000]
 //!           [--max-conns 1024] [--read-timeout-ms 30000]
 //!           [--write-timeout-ms 30000] [--max-line-bytes 262144]
+//!           [--io-threads N]   (readiness-driven I/O threads; default
+//!                               min(4, cores))
 //!   sample  --model gmm2d_exact --solver tab3 --nfe 10 --n 1000 [--metric]
 //!           [--precision f64|f32]
 //!
@@ -72,6 +74,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             args.u64_or("write-timeout-ms", 30_000),
         ),
         max_line_bytes: args.usize_or("max-line-bytes", 256 * 1024),
+        io_threads: args
+            .usize_or("io-threads", server::ServeOptions::default().io_threads),
     };
     let coord = Arc::new(Coordinator::new(cfg, reg));
     let addr = server::serve_with(coord, &args.str_or("addr", "127.0.0.1:7878"), opts)?;

@@ -1,6 +1,12 @@
-//! Line-JSON TCP front end for the coordinator (std::net; tokio is not in
-//! the offline registry — one thread per connection, which is plenty for a
-//! sampling service whose unit of work is a whole diffusion trajectory).
+//! Line-JSON TCP front end for the coordinator — a readiness-driven event
+//! loop (tokio is not in the offline registry; `server/poll.rs` wraps raw
+//! epoll instead). A fixed pool of I/O threads ([`ServeOptions::io_threads`],
+//! default `min(4, cores)`) owns all sockets in non-blocking mode; each
+//! connection is a small state machine (read-accumulate -> parse -> submit
+//! -> pending-reply -> write-drain), so thousands of mostly-idle
+//! connections cost buffers, not threads. The accept loop deals new
+//! connections round-robin across the pool; coordinator completions come
+//! back through a per-thread completion queue and a pipe-based waker.
 //!
 //! Wire protocol, one JSON object per line.
 //!
@@ -10,6 +16,13 @@
 //!       "deadline_ms":500,"dtype":"f64"}
 //!   <- {"ok":true,"n":256,"dim":2,"nfe":10,"merged_with":3,"co_batched":5,
 //!       "queue_us":120,"solve_us":5300,"dtype":"f64","samples":[...]?}
+//!
+//! Submit lines are parsed zero-copy when possible (`server/wire.rs`
+//! borrows string slices straight out of the request line; no JSON tree is
+//! built); anything the borrowing parser cannot represent faithfully falls
+//! back to the owned tree parser, which keeps the error texts — so client
+//! visible behaviour is identical on both paths. Introspection commands
+//! and error replies always go through the tree.
 //!
 //! `dtype` (optional, default "f64") selects the inference precision of
 //! the model eval. "f32" routes the request to the model's f32 engine —
@@ -24,6 +37,19 @@
 //! requests are never merged or co-batched together — the rewritten model
 //! name keys the batch, so the precision class of a reply is exact. In the
 //! stats reply, f32 traffic appears under the "<model>@f32" per-model key.
+//!
+//! Binary sample frames: a submit carrying `"return_samples":true` may add
+//! `"frame":"bin"`. The reply is then a JSON header line whose `bin_bytes`
+//! key gives the exact byte length of the raw payload that follows the
+//! newline: `rows`×`dim` f64 values, row-major, little-endian, with no
+//! terminator of its own (the header's byte count delimits it). The values
+//! are bit-identical to what the JSON `samples` array would have carried —
+//! only the encoding changes, cutting the payload roughly 2.5× for typical
+//! samples. The header carries the same fields as the JSON success reply
+//! (minus `samples`) plus `frame`, `rows` and `bin_bytes`; `"frame":"bin"`
+//! without `"return_samples":true` degrades to the plain JSON reply, since
+//! there is no payload to frame. `"frame":"json"` is accepted and is the
+//! default. See [`Client::call_bin`] for the client side.
 //!
 //! `deadline_ms` (optional) is a relative per-request deadline: if the
 //! request is still queued or still integrating when it fires, the reply is
@@ -100,20 +126,29 @@
 //! Connection hygiene (see [`ServeOptions`]): at most `max_conns`
 //! concurrent connections (excess connections get one {"ok":false,
 //! "error":"server at connection capacity ..."} line and are closed),
-//! request lines are capped at `max_line_bytes` (an over-long line gets an
-//! error reply and the connection is closed — the reader never buffers
-//! unbounded input), and a connection that goes silent MID-line for longer
-//! than `read_timeout` is dropped (slowloris). Idle connections *between*
-//! requests are not timed out; they hold a connection slot, which
-//! `max_conns` bounds. Replies are written under `write_timeout`.
+//! request lines are capped at `max_line_bytes` — the per-connection read
+//! buffer never accumulates more than that for one line, and an over-long
+//! line gets an error reply and the connection is closed. A connection
+//! that goes silent MID-line for longer than `read_timeout` is dropped
+//! (slowloris; enforced by a periodic sweep of the event loop, so the
+//! bound is `read_timeout` plus at most one sweep tick). Idle connections
+//! *between* requests are not timed out; they hold a connection slot,
+//! which `max_conns` bounds. A reply that makes no write progress for
+//! longer than `write_timeout` drops the connection the same way, and a
+//! connection whose outbound backlog passes a high-water mark stops being
+//! read until the backlog drains (per-connection backpressure). One
+//! request is in flight per connection at a time: pipelined lines queue in
+//! the read buffer and are answered in order.
 //!
 //! Graceful shutdown is coordinator-level: once `Coordinator::begin_drain`
 //! runs (or a drain-based shutdown starts), every new submission — from
 //! any connection — is refused with {"ok":false,"error":"coordinator
 //! shutting down ..."} while already-admitted work finishes; work still
 //! stranded when the drain window closes is answered with the same error
-//! rather than left hanging. Introspection (`stats`/`models`/`health`)
-//! keeps working throughout, so clients can watch the drain.
+//! rather than left hanging — completions flow back through the event loop
+//! and pending replies are written out normally. Introspection
+//! (`stats`/`models`/`health`) keeps working throughout, so clients can
+//! watch the drain.
 //!
 //! Latency semantics: latencies are recorded into a lock-free log-bucketed
 //! histogram (`coordinator::stats::LatencyHistogram`), not a raw list.
@@ -124,20 +159,28 @@
 //! directly). The keys, types and meaning are otherwise unchanged from the
 //! previous sorted-list implementation; clients need no migration.
 
-use std::io::{BufRead, BufReader, Write};
+pub mod poll;
+pub mod wire;
+
+use std::io::{self, BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::os::unix::net::UnixStream;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{Coordinator, SampleRequest};
+use crate::coordinator::{Coordinator, Responder, SampleRequest, SampleResult};
 use crate::diffusion::Sde;
 use crate::score::Precision;
 use crate::solvers::SolverKind;
 use crate::timegrid::GridKind;
 use crate::util::json::Json;
+use crate::util::sync::lock_recover;
+
+use poll::{Event, Interest, Poller, Waker};
 
 /// Parse a request line into a SampleRequest.
 pub fn parse_request(v: &Json) -> Result<SampleRequest> {
@@ -169,117 +212,85 @@ pub fn parse_request(v: &Json) -> Result<SampleRequest> {
     Ok(req)
 }
 
-fn handle_line(coord: &Coordinator, line: &str) -> String {
-    let reply = (|| -> Result<Json> {
-        let v = Json::parse(line)?;
-        if let Some(cmd) = v.opt("cmd") {
-            return match cmd.as_str()? {
-                "stats" => {
-                    let s = coord.stats();
-                    let per_model: std::collections::BTreeMap<String, Json> = s
-                        .per_model
-                        .iter()
-                        .map(|(name, m)| {
-                            (
-                                name.clone(),
-                                Json::obj(vec![
-                                    ("requests", Json::num(m.requests as f64)),
-                                    ("completed", Json::num(m.completed as f64)),
-                                    ("rejected", Json::num(m.rejected as f64)),
-                                    ("expired", Json::num(m.expired as f64)),
-                                    ("failed", Json::num(m.failed as f64)),
-                                    ("eval_panics", Json::num(m.eval_panics as f64)),
-                                    ("unhealthy", Json::num(m.unhealthy as f64)),
-                                    ("samples", Json::num(m.samples as f64)),
-                                    ("batches", Json::num(m.batches as f64)),
-                                    ("merged_requests", Json::num(m.merged_requests as f64)),
-                                    ("model_evals", Json::num(m.model_evals as f64)),
-                                    ("sched_evals", Json::num(m.sched_evals as f64)),
-                                    (
-                                        "sched_eval_requests",
-                                        Json::num(m.sched_eval_requests as f64),
-                                    ),
-                                    ("eval_occupancy", Json::num(m.eval_occupancy)),
-                                    ("max_occupancy", Json::num(m.max_occupancy as f64)),
-                                ]),
-                            )
-                        })
-                        .collect();
-                    Ok(Json::obj(vec![
-                        ("ok", Json::Bool(true)),
-                        ("requests", Json::num(s.requests as f64)),
-                        ("completed", Json::num(s.completed as f64)),
-                        ("rejected", Json::num(s.rejected as f64)),
-                        ("expired", Json::num(s.expired as f64)),
-                        ("failed", Json::num(s.failed as f64)),
-                        ("eval_panics", Json::num(s.eval_panics as f64)),
-                        ("unhealthy", Json::num(s.unhealthy as f64)),
-                        ("samples", Json::num(s.samples as f64)),
-                        ("batches", Json::num(s.batches as f64)),
-                        ("merged_requests", Json::num(s.merged_requests as f64)),
-                        ("model_evals", Json::num(s.model_evals as f64)),
-                        ("sched_evals", Json::num(s.sched_evals as f64)),
-                        ("sched_eval_requests", Json::num(s.sched_eval_requests as f64)),
-                        ("eval_occupancy", Json::num(s.eval_occupancy)),
-                        ("max_occupancy", Json::num(s.max_occupancy as f64)),
-                        ("plan_cache_hits", Json::num(s.plan_cache_hits as f64)),
-                        ("plan_cache_misses", Json::num(s.plan_cache_misses as f64)),
-                        ("p50_us", Json::num(s.p50_us as f64)),
-                        ("p99_us", Json::num(s.p99_us as f64)),
-                        ("mean_us", Json::num(s.mean_us)),
-                        ("per_model", Json::Obj(per_model)),
-                    ]))
-                }
-                "models" => Ok(Json::obj(vec![
-                    ("ok", Json::Bool(true)),
+/// Serve one introspection command (`stats`/`models`/`health`). Submits do
+/// not come through here — they ride the asynchronous completion path.
+fn handle_cmd(coord: &Coordinator, v: &Json) -> Result<Json> {
+    match v.get("cmd")?.as_str()? {
+        "stats" => {
+            let s = coord.stats();
+            let per_model: std::collections::BTreeMap<String, Json> = s
+                .per_model
+                .iter()
+                .map(|(name, m)| {
                     (
-                        "models",
-                        Json::Arr(coord.models().iter().map(|m| Json::str(m)).collect()),
-                    ),
-                ])),
-                "health" => {
-                    let h = coord.health();
-                    let models: std::collections::BTreeMap<String, Json> =
-                        h.models.into_iter().map(|(n, up)| (n, Json::Bool(up))).collect();
-                    Ok(Json::obj(vec![
-                        ("ok", Json::Bool(true)),
-                        ("draining", Json::Bool(h.draining)),
-                        ("worker_panics", Json::uint(h.worker_panics)),
-                        ("models", Json::Obj(models)),
-                    ]))
-                }
-                other => bail!("unknown cmd '{other}'"),
-            };
+                        name.clone(),
+                        Json::obj(vec![
+                            ("requests", Json::num(m.requests as f64)),
+                            ("completed", Json::num(m.completed as f64)),
+                            ("rejected", Json::num(m.rejected as f64)),
+                            ("expired", Json::num(m.expired as f64)),
+                            ("failed", Json::num(m.failed as f64)),
+                            ("eval_panics", Json::num(m.eval_panics as f64)),
+                            ("unhealthy", Json::num(m.unhealthy as f64)),
+                            ("samples", Json::num(m.samples as f64)),
+                            ("batches", Json::num(m.batches as f64)),
+                            ("merged_requests", Json::num(m.merged_requests as f64)),
+                            ("model_evals", Json::num(m.model_evals as f64)),
+                            ("sched_evals", Json::num(m.sched_evals as f64)),
+                            (
+                                "sched_eval_requests",
+                                Json::num(m.sched_eval_requests as f64),
+                            ),
+                            ("eval_occupancy", Json::num(m.eval_occupancy)),
+                            ("max_occupancy", Json::num(m.max_occupancy as f64)),
+                        ]),
+                    )
+                })
+                .collect();
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("requests", Json::num(s.requests as f64)),
+                ("completed", Json::num(s.completed as f64)),
+                ("rejected", Json::num(s.rejected as f64)),
+                ("expired", Json::num(s.expired as f64)),
+                ("failed", Json::num(s.failed as f64)),
+                ("eval_panics", Json::num(s.eval_panics as f64)),
+                ("unhealthy", Json::num(s.unhealthy as f64)),
+                ("samples", Json::num(s.samples as f64)),
+                ("batches", Json::num(s.batches as f64)),
+                ("merged_requests", Json::num(s.merged_requests as f64)),
+                ("model_evals", Json::num(s.model_evals as f64)),
+                ("sched_evals", Json::num(s.sched_evals as f64)),
+                ("sched_eval_requests", Json::num(s.sched_eval_requests as f64)),
+                ("eval_occupancy", Json::num(s.eval_occupancy)),
+                ("max_occupancy", Json::num(s.max_occupancy as f64)),
+                ("plan_cache_hits", Json::num(s.plan_cache_hits as f64)),
+                ("plan_cache_misses", Json::num(s.plan_cache_misses as f64)),
+                ("p50_us", Json::num(s.p50_us as f64)),
+                ("p99_us", Json::num(s.p99_us as f64)),
+                ("mean_us", Json::num(s.mean_us)),
+                ("per_model", Json::Obj(per_model)),
+            ]))
         }
-        let return_samples =
-            v.opt("return_samples").map(|b| b.as_bool()).transpose()?.unwrap_or(false);
-        let req = parse_request(&v)?;
-        let n = req.n_samples;
-        let dtype = req.dtype;
-        let res = coord.sample_blocking(req)?;
-        let mut fields = vec![
+        "models" => Ok(Json::obj(vec![
             ("ok", Json::Bool(true)),
-            ("n", Json::num(n as f64)),
-            ("dim", Json::num(res.dim as f64)),
-            ("nfe", Json::num(res.nfe as f64)),
-            ("merged_with", Json::num(res.merged_with as f64)),
-            ("co_batched", Json::num(res.co_batched as f64)),
-            ("queue_us", Json::num(res.queue_us as f64)),
-            ("solve_us", Json::num(res.solve_us as f64)),
-            ("dtype", Json::str(dtype.name())),
-        ];
-        if return_samples {
-            fields.push(("samples", Json::arr_f64(&res.samples)));
+            (
+                "models",
+                Json::Arr(coord.models().iter().map(|m| Json::str(m)).collect()),
+            ),
+        ])),
+        "health" => {
+            let h = coord.health();
+            let models: std::collections::BTreeMap<String, Json> =
+                h.models.into_iter().map(|(n, up)| (n, Json::Bool(up))).collect();
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("draining", Json::Bool(h.draining)),
+                ("worker_panics", Json::uint(h.worker_panics)),
+                ("models", Json::Obj(models)),
+            ]))
         }
-        Ok(Json::obj(fields))
-    })();
-    match reply {
-        Ok(j) => j.to_string(),
-        Err(e) => Json::obj(vec![
-            ("ok", Json::Bool(false)),
-            ("error", Json::str(&format!("{e:#}"))),
-        ])
-        .to_string(),
+        other => bail!("unknown cmd '{other}'"),
     }
 }
 
@@ -288,18 +299,27 @@ fn handle_line(coord: &Coordinator, line: &str) -> String {
 /// cost the process.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeOptions {
-    /// Concurrent connections (one thread each). Excess connections get
-    /// one "server at connection capacity" error line and are closed.
+    /// Concurrent connections (each a slot in an I/O thread's table).
+    /// Excess connections get one "server at connection capacity" error
+    /// line and are closed.
     pub max_conns: usize,
     /// Longest a connection may sit silent MID-line before it is dropped
     /// (slowloris guard). Idle connections between requests are exempt.
+    /// Enforced by a periodic sweep: the effective bound is this plus at
+    /// most one sweep tick (a quarter of the smaller timeout, clamped to
+    /// [10ms, 1s]).
     pub read_timeout: Duration,
-    /// Longest a reply write may block on an unread socket.
+    /// Longest a reply may go without any write progress on an unread
+    /// socket before the connection is dropped (same sweep).
     pub write_timeout: Duration,
-    /// Request-line byte cap: the reader never buffers more than this for
-    /// one line. Over-long lines get an error reply and the connection is
-    /// closed (the rest of the line is unread, so resync is impossible).
+    /// Request-line byte cap: the connection buffer never accumulates more
+    /// than this for one line. Over-long lines get an error reply and the
+    /// connection is closed (the rest of the line is unread, so resync is
+    /// impossible).
     pub max_line_bytes: usize,
+    /// Readiness-driven I/O threads sharing the connection load. Each owns
+    /// its own epoll set; accepted connections are dealt round-robin.
+    pub io_threads: usize,
 }
 
 impl Default for ServeOptions {
@@ -309,6 +329,10 @@ impl Default for ServeOptions {
             read_timeout: Duration::from_secs(30),
             write_timeout: Duration::from_secs(30),
             max_line_bytes: 256 * 1024,
+            io_threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(4),
         }
     }
 }
@@ -320,12 +344,516 @@ pub fn serve(coord: Arc<Coordinator>, addr: &str) -> Result<std::net::SocketAddr
 }
 
 /// RAII connection slot: decrements the live-connection count when the
-/// connection thread finishes, however it finishes.
+/// connection is dropped, however it is dropped.
 struct ConnSlot(Arc<AtomicUsize>);
 
 impl Drop for ConnSlot {
     fn drop(&mut self) {
         self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Event-loop token for the wake pipe.
+const WAKER_TOKEN: u64 = u64::MAX;
+/// Event-loop token for the listener (thread 0 only).
+const LISTENER_TOKEN: u64 = u64::MAX - 1;
+/// Outbound-backlog high-water mark: a connection with this much unwritten
+/// reply data stops having new lines parsed (and stops being read) until
+/// the backlog drains below it — per-connection backpressure against a
+/// client that pipelines requests faster than it reads replies.
+const OUT_HIGH_WATER: usize = 256 * 1024;
+
+/// Slot index + generation packed into an epoll token. The generation
+/// guards against a stale kernel event (or a late coordinator completion)
+/// touching a slot that has since been recycled for a new connection.
+fn token(idx: u32, gen: u32) -> u64 {
+    ((gen as u64) << 32) | idx as u64
+}
+
+fn sweep_tick(opts: &ServeOptions) -> Duration {
+    (opts.read_timeout.min(opts.write_timeout) / 4)
+        .clamp(Duration::from_millis(10), Duration::from_secs(1))
+}
+
+/// A finished coordinator request routed back to its connection.
+type Completion = (u32, u32, anyhow::Result<SampleResult>);
+
+/// The cross-thread mailbox of one I/O thread: connections dealt to it by
+/// the accepting thread, completions pushed by coordinator workers, and
+/// the waker that gets its epoll loop to look.
+struct IoShared {
+    inbox: Mutex<Vec<(TcpStream, ConnSlot)>>,
+    completions: Mutex<Vec<Completion>>,
+    waker: Waker,
+}
+
+/// Per-connection state machine.
+struct Conn {
+    stream: TcpStream,
+    _slot: ConnSlot,
+    /// Generation of this occupancy of the slot (see [`token`]).
+    gen: u32,
+    /// Inbound bytes not yet consumed as request lines.
+    buf: Vec<u8>,
+    /// Prefix of `buf` already known to contain no newline (scan resume).
+    scanned: usize,
+    /// Outbound bytes; `written` of them are already on the socket.
+    out: Vec<u8>,
+    written: usize,
+    /// The in-flight request's reply shape, if one is at the coordinator.
+    /// While set, no further lines are parsed and the socket is not read:
+    /// one request per connection at a time, replies strictly in order.
+    pending: Option<wire::ReplyMeta>,
+    eof: bool,
+    /// Close once `out` drains (over-long line, fatal protocol state).
+    close_after_write: bool,
+    interest: Interest,
+    last_read_progress: Instant,
+    last_write_progress: Instant,
+}
+
+/// Stamp the write-progress clock when `out` is about to go from drained
+/// to non-empty, so `write_timeout` measures from when there was first
+/// something to write — not from the last reply's final byte.
+fn note_outbound(conn: &mut Conn) {
+    if conn.out.len() == conn.written {
+        conn.last_write_progress = Instant::now();
+    }
+}
+
+/// Drain as much of `out` as the socket accepts. Returns true if the
+/// connection is dead.
+fn write_some(conn: &mut Conn) -> bool {
+    while conn.written < conn.out.len() {
+        match (&conn.stream).write(&conn.out[conn.written..]) {
+            Ok(0) => return true,
+            Ok(n) => {
+                conn.written += n;
+                conn.last_write_progress = Instant::now();
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return true,
+        }
+    }
+    if conn.written > 0 && conn.written == conn.out.len() {
+        conn.out.clear();
+        conn.written = 0;
+    }
+    false
+}
+
+/// Read what the socket has, bounded per pass so one firehose connection
+/// cannot starve the loop (level-triggered epoll re-reports the rest).
+/// Returns true if the connection is dead.
+fn read_some(conn: &mut Conn) -> bool {
+    let mut tmp = [0u8; 16 * 1024];
+    let mut budget: usize = 16;
+    loop {
+        match (&conn.stream).read(&mut tmp) {
+            Ok(0) => {
+                conn.eof = true;
+                return false;
+            }
+            Ok(n) => {
+                conn.buf.extend_from_slice(&tmp[..n]);
+                conn.last_read_progress = Instant::now();
+                if n < tmp.len() {
+                    return false;
+                }
+                budget -= 1;
+                if budget == 0 {
+                    return false;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return false,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return true,
+        }
+    }
+}
+
+/// Queue the over-long-line error and doom the connection (the tail of the
+/// line is unread, so resynchronizing on a later newline is impossible).
+fn too_long(conn: &mut Conn, opts: &ServeOptions) {
+    note_outbound(conn);
+    wire::error_reply(
+        &mut conn.out,
+        &format!("request line too long (max {} bytes)", opts.max_line_bytes),
+    );
+    conn.buf.clear();
+    conn.scanned = 0;
+    conn.close_after_write = true;
+}
+
+/// Shed a connection refused at the accept gate: one error line, close.
+/// (Accepted sockets start in blocking mode — the listener's non-blocking
+/// flag is not inherited — so the write is bounded by a socket timeout.)
+fn shed(mut stream: TcpStream, opts: &ServeOptions) {
+    let _ = stream.set_write_timeout(Some(opts.write_timeout));
+    let mut out = Vec::new();
+    wire::error_reply(
+        &mut out,
+        &format!("server at connection capacity ({}); retry later", opts.max_conns),
+    );
+    let _ = stream.write_all(&out);
+}
+
+/// One I/O thread: an epoll set over its waker, its share of the
+/// connections, and (thread 0 only) the listener.
+struct IoThread {
+    poller: Poller,
+    waker_rx: UnixStream,
+    listener: Option<TcpListener>,
+    conns: Vec<Option<Conn>>,
+    free: Vec<u32>,
+    next_gen: u32,
+    /// Round-robin deal cursor (offset by thread index so a single-connection
+    /// workload does not pile onto thread 0).
+    rr: usize,
+    shared: Arc<IoShared>,
+    peers: Vec<Arc<IoShared>>,
+    coord: Arc<Coordinator>,
+    opts: ServeOptions,
+    conn_count: Arc<AtomicUsize>,
+}
+
+impl IoThread {
+    fn run(mut self) {
+        let tick = sweep_tick(&self.opts);
+        let mut events: Vec<Event> = Vec::new();
+        let mut ready: Vec<(u32, u32, bool)> = Vec::new();
+        let mut last_sweep = Instant::now();
+        loop {
+            events.clear();
+            ready.clear();
+            if self.poller.wait(&mut events, Some(tick)).is_err() {
+                return;
+            }
+            let mut woke = false;
+            let mut accept = false;
+            for ev in &events {
+                match ev.token {
+                    WAKER_TOKEN => woke = true,
+                    LISTENER_TOKEN => accept = true,
+                    t => ready.push(((t & 0xFFFF_FFFF) as u32, (t >> 32) as u32, ev.hangup)),
+                }
+            }
+            if woke {
+                poll::drain_waker(&self.waker_rx);
+            }
+            // Adopt connections dealt over by the accepting thread.
+            let inbox = std::mem::take(&mut *lock_recover(&self.shared.inbox));
+            for (stream, slot) in inbox {
+                self.add_conn(stream, slot);
+            }
+            // Finished coordinator work: write the reply, drive the socket.
+            let done = std::mem::take(&mut *lock_recover(&self.shared.completions));
+            for (idx, gen, res) in done {
+                self.complete(idx, gen, res);
+            }
+            if accept {
+                self.accept_burst();
+            }
+            for &(idx, gen, hangup) in &ready {
+                self.drive(idx, Some(gen), true, hangup);
+            }
+            if last_sweep.elapsed() >= tick {
+                self.sweep();
+                last_sweep = Instant::now();
+            }
+        }
+    }
+
+    fn accept_burst(&mut self) {
+        loop {
+            let res = match &self.listener {
+                Some(l) => l.accept(),
+                None => return,
+            };
+            match res {
+                Ok((stream, _addr)) => self.admit(stream),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => return,
+            }
+        }
+    }
+
+    /// Admission at the accept gate: a full house sheds the new connection
+    /// with one error line instead of registering a socket the box has no
+    /// budget for. Admitted connections are dealt round-robin.
+    fn admit(&mut self, stream: TcpStream) {
+        if self.conn_count.fetch_add(1, Ordering::SeqCst) >= self.opts.max_conns.max(1) {
+            self.conn_count.fetch_sub(1, Ordering::SeqCst);
+            shed(stream, &self.opts);
+            return;
+        }
+        let slot = ConnSlot(self.conn_count.clone());
+        let t = self.rr % self.peers.len();
+        self.rr = self.rr.wrapping_add(1);
+        if Arc::ptr_eq(&self.peers[t], &self.shared) {
+            self.add_conn(stream, slot);
+        } else {
+            lock_recover(&self.peers[t].inbox).push((stream, slot));
+            self.peers[t].waker.wake();
+        }
+    }
+
+    fn add_conn(&mut self, stream: TcpStream, slot: ConnSlot) {
+        if stream.set_nonblocking(true).is_err() {
+            return; // slot drops -> count released
+        }
+        let idx = match self.free.pop() {
+            Some(i) => i,
+            None => {
+                self.conns.push(None);
+                (self.conns.len() - 1) as u32
+            }
+        };
+        self.next_gen = self.next_gen.wrapping_add(1);
+        let gen = self.next_gen;
+        let now = Instant::now();
+        let fd = stream.as_raw_fd();
+        if self.poller.register(fd, token(idx, gen), Interest::READ).is_err() {
+            self.free.push(idx);
+            return;
+        }
+        self.conns[idx as usize] = Some(Conn {
+            stream,
+            _slot: slot,
+            gen,
+            buf: Vec::new(),
+            scanned: 0,
+            out: Vec::new(),
+            written: 0,
+            pending: None,
+            eof: false,
+            close_after_write: false,
+            interest: Interest::READ,
+            last_read_progress: now,
+            last_write_progress: now,
+        });
+    }
+
+    /// Advance one connection's state machine: drain writes, read if the
+    /// FSM wants input, consume buffered lines, then settle the epoll
+    /// interest set — or tear the connection down if it is done or dead.
+    fn drive(&mut self, idx: u32, gen: Option<u32>, do_read: bool, hangup: bool) {
+        let Some(slot) = self.conns.get_mut(idx as usize) else { return };
+        let Some(mut conn) = slot.take() else { return };
+        if let Some(g) = gen {
+            if conn.gen != g {
+                self.conns[idx as usize] = Some(conn); // stale event
+                return;
+            }
+        }
+        if hangup && conn.pending.is_some() {
+            // The peer is gone (HUP/ERR is level-triggered and reported
+            // regardless of interest, so keeping the registration would
+            // spin the loop until the coordinator finishes). Tear down
+            // now; the late completion is dropped by the generation check.
+            let _ = self.poller.deregister(conn.stream.as_raw_fd());
+            self.free.push(idx);
+            return;
+        }
+        let mut dead = write_some(&mut conn);
+        if !dead
+            && do_read
+            && conn.pending.is_none()
+            && !conn.eof
+            && !conn.close_after_write
+        {
+            dead |= read_some(&mut conn);
+        }
+        if !dead {
+            self.process_buffer(&mut conn, idx);
+            dead |= write_some(&mut conn);
+        }
+        let backlog = conn.out.len() - conn.written;
+        let finished = backlog == 0
+            && (conn.close_after_write
+                || (conn.eof && conn.pending.is_none() && conn.buf.is_empty()));
+        if dead || finished {
+            let _ = self.poller.deregister(conn.stream.as_raw_fd());
+            self.free.push(idx);
+            return; // conn drops; its ConnSlot releases the count
+        }
+        let want = Interest {
+            read: conn.pending.is_none()
+                && !conn.close_after_write
+                && !conn.eof
+                && backlog < OUT_HIGH_WATER,
+            write: backlog > 0,
+        };
+        if want != conn.interest {
+            if self
+                .poller
+                .modify(conn.stream.as_raw_fd(), token(idx, conn.gen), want)
+                .is_err()
+            {
+                let _ = self.poller.deregister(conn.stream.as_raw_fd());
+                self.free.push(idx);
+                return;
+            }
+            conn.interest = want;
+        }
+        self.conns[idx as usize] = Some(conn);
+    }
+
+    /// Consume complete request lines from the inbound buffer. Stops at a
+    /// pending request (one in flight per connection), a doomed
+    /// connection, or an outbound backlog past the high-water mark.
+    /// Invariant: `buf` always starts at a line boundary, and
+    /// `buf[..scanned]` is known to contain no newline.
+    fn process_buffer(&mut self, conn: &mut Conn, idx: u32) {
+        loop {
+            if conn.pending.is_some() || conn.close_after_write {
+                return;
+            }
+            if conn.out.len() - conn.written >= OUT_HIGH_WATER {
+                return;
+            }
+            match conn.buf[conn.scanned..].iter().position(|&b| b == b'\n') {
+                Some(rel) => {
+                    let pos = conn.scanned + rel;
+                    if pos > self.opts.max_line_bytes {
+                        too_long(conn, &self.opts);
+                        return;
+                    }
+                    let buf_taken = std::mem::take(&mut conn.buf);
+                    self.dispatch(conn, idx, &buf_taken[..pos]);
+                    conn.buf = buf_taken;
+                    conn.buf.drain(..=pos);
+                    conn.scanned = 0;
+                }
+                None => {
+                    conn.scanned = conn.buf.len();
+                    if conn.buf.len() > self.opts.max_line_bytes {
+                        too_long(conn, &self.opts);
+                    } else if conn.eof && !conn.buf.is_empty() {
+                        // A trailing unterminated line at EOF still gets
+                        // served (same contract as BufRead::lines).
+                        let taken = std::mem::take(&mut conn.buf);
+                        conn.scanned = 0;
+                        self.dispatch(conn, idx, &taken);
+                    }
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Serve one request line: zero-copy submit parse first, then the
+    /// owned tree for commands, fallbacks and error texts.
+    fn dispatch(&mut self, conn: &mut Conn, idx: u32, bytes: &[u8]) {
+        let owned;
+        let line = match std::str::from_utf8(bytes) {
+            Ok(s) => s,
+            Err(_) => {
+                owned = String::from_utf8_lossy(bytes).into_owned();
+                owned.as_str()
+            }
+        };
+        if line.trim().is_empty() {
+            return;
+        }
+        if let Ok(Some(args)) = wire::parse_submit_fast(line) {
+            self.submit(conn, idx, args);
+            return;
+        }
+        let v = match Json::parse(line) {
+            Ok(v) => v,
+            Err(e) => {
+                note_outbound(conn);
+                wire::error_reply(&mut conn.out, &format!("{e:#}"));
+                return;
+            }
+        };
+        if v.opt("cmd").is_some() {
+            note_outbound(conn);
+            match handle_cmd(&self.coord, &v) {
+                Ok(j) => {
+                    conn.out.extend_from_slice(j.to_string().as_bytes());
+                    conn.out.push(b'\n');
+                }
+                Err(e) => wire::error_reply(&mut conn.out, &format!("{e:#}")),
+            }
+            return;
+        }
+        match wire::submit_args_from_json(&v) {
+            Ok(args) => self.submit(conn, idx, args),
+            Err(e) => {
+                note_outbound(conn);
+                wire::error_reply(&mut conn.out, &format!("{e:#}"));
+            }
+        }
+    }
+
+    /// Hand a parsed request to the coordinator. The responder hook pushes
+    /// the result onto this thread's completion queue and wakes the loop —
+    /// including for synchronous refusals (overload, drain, unknown
+    /// model), which are answered on the next loop pass.
+    fn submit(&mut self, conn: &mut Conn, idx: u32, args: wire::SubmitArgs) {
+        conn.pending = Some(args.meta());
+        let shared = self.shared.clone();
+        let gen = conn.gen;
+        let responder = Responder::hook(move |res| {
+            lock_recover(&shared.completions).push((idx, gen, res));
+            shared.waker.wake();
+        });
+        self.coord.submit_with(args.req, responder);
+    }
+
+    /// Route one finished request back to its connection (if it is still
+    /// the same connection) and drive the reply out.
+    fn complete(&mut self, idx: u32, gen: u32, res: anyhow::Result<SampleResult>) {
+        {
+            let Some(Some(conn)) = self.conns.get_mut(idx as usize) else { return };
+            if conn.gen != gen {
+                return; // slot was recycled; the requester is long gone
+            }
+            let Some(meta) = conn.pending.take() else { return };
+            note_outbound(conn);
+            wire::write_reply(&mut conn.out, &meta, &res);
+            // The read clock was parked while the request was in flight;
+            // restart it so a buffered partial next line is not instantly
+            // judged stalled.
+            conn.last_read_progress = Instant::now();
+        }
+        self.drive(idx, Some(gen), false, false);
+    }
+
+    /// Periodic hygiene: drop connections stalled mid-request-line past
+    /// `read_timeout` (slowloris) and connections whose reply has made no
+    /// write progress past `write_timeout`. Idle connections between
+    /// requests and connections waiting on the coordinator are exempt.
+    fn sweep(&mut self) {
+        let now = Instant::now();
+        let mut doomed: Vec<u32> = Vec::new();
+        for (i, slot) in self.conns.iter().enumerate() {
+            let Some(conn) = slot else { continue };
+            let backlog = conn.out.len() - conn.written;
+            let write_stalled = backlog > 0
+                && now.duration_since(conn.last_write_progress) > self.opts.write_timeout;
+            let mid_line = conn.pending.is_none()
+                && !conn.eof
+                && backlog == 0
+                && !conn.buf.is_empty()
+                && !conn.buf.contains(&b'\n');
+            let read_stalled = mid_line
+                && now.duration_since(conn.last_read_progress) > self.opts.read_timeout;
+            if write_stalled || read_stalled {
+                doomed.push(i as u32);
+            }
+        }
+        for idx in doomed {
+            if let Some(conn) = self.conns[idx as usize].take() {
+                let _ = self.poller.deregister(conn.stream.as_raw_fd());
+                self.free.push(idx);
+                // Silent close, matching the old thread-per-conn bail.
+            }
+        }
     }
 }
 
@@ -337,138 +865,45 @@ pub fn serve_with(
 ) -> Result<std::net::SocketAddr> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
-    let conns = Arc::new(AtomicUsize::new(0));
-    std::thread::spawn(move || {
-        for stream in listener.incoming().flatten() {
-            // Admission at the accept loop: a full house sheds the new
-            // connection with one error line instead of spawning a thread
-            // the box has no budget for.
-            if conns.fetch_add(1, Ordering::SeqCst) >= opts.max_conns.max(1) {
-                conns.fetch_sub(1, Ordering::SeqCst);
-                let mut s = stream;
-                let _ = s.set_write_timeout(Some(opts.write_timeout));
-                let _ = s.write_all(
-                    Json::obj(vec![
-                        ("ok", Json::Bool(false)),
-                        (
-                            "error",
-                            Json::str(&format!(
-                                "server at connection capacity ({}); retry later",
-                                opts.max_conns
-                            )),
-                        ),
-                    ])
-                    .to_string()
-                    .as_bytes(),
-                );
-                let _ = s.write_all(b"\n");
-                continue;
-            }
-            let slot = ConnSlot(conns.clone());
-            let coord = coord.clone();
-            std::thread::spawn(move || {
-                let _slot = slot;
-                let _ = handle_conn(&coord, stream, opts);
-            });
+    listener.set_nonblocking(true)?;
+    let nthreads = opts.io_threads.max(1);
+    let conn_count = Arc::new(AtomicUsize::new(0));
+    let mut shareds: Vec<Arc<IoShared>> = Vec::with_capacity(nthreads);
+    let mut rxs: Vec<UnixStream> = Vec::with_capacity(nthreads);
+    for _ in 0..nthreads {
+        let (waker, rx) = poll::waker_pair()?;
+        shareds.push(Arc::new(IoShared {
+            inbox: Mutex::new(Vec::new()),
+            completions: Mutex::new(Vec::new()),
+            waker,
+        }));
+        rxs.push(rx);
+    }
+    let mut listener = Some(listener);
+    for (me, waker_rx) in rxs.into_iter().enumerate() {
+        let poller = Poller::new()?;
+        poller.register(waker_rx.as_raw_fd(), WAKER_TOKEN, Interest::READ)?;
+        let own_listener = listener.take(); // thread 0 (first pass) accepts
+        if let Some(l) = &own_listener {
+            poller.register(l.as_raw_fd(), LISTENER_TOKEN, Interest::READ)?;
         }
-    });
-    Ok(local)
-}
-
-/// One bounded request line. `Eof` ends the connection; `TooLong` means
-/// the cap was hit (the line's remainder is still un-read — the caller
-/// must close, since resynchronizing on the next newline could buffer
-/// arbitrarily slowly).
-enum LineRead {
-    Line(Vec<u8>),
-    TooLong,
-    Eof,
-}
-
-/// Read one newline-terminated line without ever buffering more than
-/// `max` bytes, tolerating read-timeout wakeups while the line is empty
-/// (an idle connection between requests) but not once bytes have arrived
-/// (a slowloris trickling a request forever).
-fn read_line_bounded(reader: &mut BufReader<TcpStream>, max: usize) -> Result<LineRead> {
-    let mut out: Vec<u8> = Vec::new();
-    loop {
-        let chunk = match reader.fill_buf() {
-            Ok(c) => c,
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                ) =>
-            {
-                if out.is_empty() {
-                    continue; // idle between requests: keep waiting
-                }
-                bail!("read timed out mid-request-line");
-            }
-            Err(e) => return Err(e.into()),
+        let io = IoThread {
+            poller,
+            waker_rx,
+            listener: own_listener,
+            conns: Vec::new(),
+            free: Vec::new(),
+            next_gen: 0,
+            rr: me,
+            shared: shareds[me].clone(),
+            peers: shareds.clone(),
+            coord: coord.clone(),
+            opts,
+            conn_count: conn_count.clone(),
         };
-        if chunk.is_empty() {
-            // EOF. A trailing unterminated line still gets served (same
-            // contract as BufRead::lines).
-            return Ok(if out.is_empty() { LineRead::Eof } else { LineRead::Line(out) });
-        }
-        match chunk.iter().position(|&b| b == b'\n') {
-            Some(pos) => {
-                if out.len() + pos > max {
-                    reader.consume(pos + 1);
-                    return Ok(LineRead::TooLong);
-                }
-                out.extend_from_slice(&chunk[..pos]);
-                reader.consume(pos + 1);
-                return Ok(LineRead::Line(out));
-            }
-            None => {
-                let n = chunk.len();
-                if out.len() + n > max {
-                    reader.consume(n);
-                    return Ok(LineRead::TooLong);
-                }
-                out.extend_from_slice(chunk);
-                reader.consume(n);
-            }
-        }
+        std::thread::spawn(move || io.run());
     }
-}
-
-fn handle_conn(coord: &Coordinator, stream: TcpStream, opts: ServeOptions) -> Result<()> {
-    stream.set_read_timeout(Some(opts.read_timeout))?;
-    stream.set_write_timeout(Some(opts.write_timeout))?;
-    let mut writer = stream.try_clone()?;
-    let mut reader = BufReader::new(stream);
-    loop {
-        match read_line_bounded(&mut reader, opts.max_line_bytes)? {
-            LineRead::Eof => return Ok(()),
-            LineRead::TooLong => {
-                let reply = Json::obj(vec![
-                    ("ok", Json::Bool(false)),
-                    (
-                        "error",
-                        Json::str(&format!(
-                            "request line too long (max {} bytes)",
-                            opts.max_line_bytes
-                        )),
-                    ),
-                ]);
-                writer.write_all(reply.to_string().as_bytes())?;
-                writer.write_all(b"\n")?;
-                return Ok(()); // cannot resync past an unread tail: close
-            }
-            LineRead::Line(bytes) => {
-                let line = String::from_utf8_lossy(&bytes);
-                if line.trim().is_empty() {
-                    continue;
-                }
-                let reply = handle_line(coord, &line);
-                writer.write_all(reply.as_bytes())?;
-                writer.write_all(b"\n")?;
-            }
-        }
-    }
+    Ok(local)
 }
 
 /// Minimal blocking client for tests/examples.
@@ -489,6 +924,28 @@ impl Client {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         Json::parse(&line)
+    }
+
+    /// Call expecting a binary-framed reply: returns the header object and
+    /// the decoded sample payload. A reply without `bin_bytes` (an error,
+    /// or a request that degraded to plain JSON) comes back with an empty
+    /// payload — check `header.opt("ok")` / `header.opt("samples")`.
+    pub fn call_bin(&mut self, req: &Json) -> Result<(Json, Vec<f64>)> {
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let header = Json::parse(&line)?;
+        let nbytes = header.opt("bin_bytes").map(|b| b.as_u64()).transpose()?.unwrap_or(0);
+        if nbytes > wire::MAX_BIN_REPLY_BYTES {
+            bail!(
+                "binary frame too large: {nbytes} bytes (max {})",
+                wire::MAX_BIN_REPLY_BYTES
+            );
+        }
+        let mut payload = vec![0u8; nbytes as usize];
+        self.reader.read_exact(&mut payload)?;
+        Ok((header, wire::samples_from_le_bytes(&payload)?))
     }
 }
 

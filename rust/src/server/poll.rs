@@ -1,0 +1,311 @@
+//! Tiny readiness layer over Linux `epoll`, declared straight against the
+//! C ABI (the offline registry has only `anyhow`, so no `libc`/`mio`).
+//! Everything the event-loop front end needs and nothing more:
+//!
+//! - [`Poller`]: level-triggered epoll instance — register/modify/
+//!   deregister a raw fd under a `u64` token, then [`Poller::wait`] for
+//!   readiness events with a timeout (the timeout doubles as the front
+//!   end's stall-sweep tick).
+//! - [`Waker`] / [`waker_pair`]: cross-thread wakeup for a parked
+//!   `epoll_wait`, built on a non-blocking `UnixStream` pair instead of an
+//!   `eventfd` FFI — the read end registers in the poller like any socket,
+//!   and [`drain_waker`] resets it.
+//! - [`raise_nofile_limit`]: best-effort `RLIMIT_NOFILE` bump so the
+//!   many-connection capacity test can actually open its sockets.
+//!
+//! The syscall surface is three functions (`epoll_create1`, `epoll_ctl`,
+//! `epoll_wait`) plus `getrlimit`/`setrlimit`, all resolved from the libc
+//! the binary links anyway. `std::io::Error::last_os_error()` reads errno,
+//! and `OwnedFd` owns the epoll fd, so there is no hand-rolled resource
+//! management. Level-triggered mode is deliberate: spurious or stale
+//! events degrade into a `WouldBlock` read/write, never a lost one, which
+//! keeps the connection state machines simple to reason about.
+
+use std::ffi::c_int;
+use std::io::{self, Read, Write};
+use std::os::fd::{AsRawFd, FromRawFd, OwnedFd, RawFd};
+use std::os::unix::net::UnixStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+const EPOLL_CLOEXEC: c_int = 0o2000000;
+const EPOLL_CTL_ADD: c_int = 1;
+const EPOLL_CTL_DEL: c_int = 2;
+const EPOLL_CTL_MOD: c_int = 3;
+const EPOLLIN: u32 = 0x001;
+const EPOLLOUT: u32 = 0x004;
+const EPOLLERR: u32 = 0x008;
+const EPOLLHUP: u32 = 0x010;
+
+/// Kernel event record. x86_64 packs this struct (a 32-bit `events` word
+/// directly followed by the 64-bit payload); other architectures use
+/// natural C alignment. Fields are only ever copied out by value — taking
+/// a reference into a packed struct would be UB-adjacent, so don't.
+#[repr(C)]
+#[cfg_attr(target_arch = "x86_64", repr(packed))]
+#[derive(Clone, Copy)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+extern "C" {
+    fn epoll_create1(flags: c_int) -> c_int;
+    fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+    fn epoll_wait(epfd: c_int, events: *mut EpollEvent, maxevents: c_int, timeout: c_int)
+        -> c_int;
+    fn getrlimit(resource: c_int, rlim: *mut RLimit) -> c_int;
+    fn setrlimit(resource: c_int, rlim: *const RLimit) -> c_int;
+}
+
+/// What a registration wants to hear about. Error/hangup conditions are
+/// always reported by the kernel regardless of interest.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Interest {
+    pub read: bool,
+    pub write: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest { read: true, write: false };
+
+    fn bits(self) -> u32 {
+        let mut e = 0;
+        if self.read {
+            e |= EPOLLIN;
+        }
+        if self.write {
+            e |= EPOLLOUT;
+        }
+        e
+    }
+}
+
+/// One readiness report. `hangup` covers both `EPOLLHUP` and `EPOLLERR`;
+/// the caller's correct reaction to either is to attempt the pending I/O
+/// and let the resulting error/EOF drive the close.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    pub hangup: bool,
+}
+
+const MAX_EVENTS: usize = 256;
+
+/// Level-triggered epoll instance.
+pub struct Poller {
+    ep: OwnedFd,
+}
+
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Poller { ep: unsafe { OwnedFd::from_raw_fd(fd) } })
+    }
+
+    fn ctl(&self, op: c_int, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+        let mut ev = EpollEvent { events, data: token };
+        let rc = unsafe { epoll_ctl(self.ep.as_raw_fd(), op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    pub fn register(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, interest.bits(), token)
+    }
+
+    pub fn modify(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, interest.bits(), token)
+    }
+
+    pub fn deregister(&self, fd: RawFd) -> io::Result<()> {
+        // The event argument must be non-null for portability (pre-2.6.9
+        // kernels faulted on NULL); the kernel ignores its contents on DEL.
+        self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Collect ready events into `out` (appending). `None` blocks forever;
+    /// `Some(d)` waits at most `d` (rounded up to a millisecond so a short
+    /// positive timeout cannot busy-spin). Returns after one wait, possibly
+    /// with zero events (timeout).
+    pub fn wait(&self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+        let ms: c_int = match timeout {
+            None => -1,
+            Some(d) => {
+                let ms = d.as_millis();
+                if ms == 0 && !d.is_zero() {
+                    1
+                } else {
+                    ms.min(i32::MAX as u128) as c_int
+                }
+            }
+        };
+        let mut buf = [EpollEvent { events: 0, data: 0 }; MAX_EVENTS];
+        loop {
+            let n = unsafe {
+                epoll_wait(self.ep.as_raw_fd(), buf.as_mut_ptr(), MAX_EVENTS as c_int, ms)
+            };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    continue;
+                }
+                return Err(e);
+            }
+            for ev in buf.iter().take(n as usize) {
+                // Copy the packed fields out by value before use.
+                let bits = { ev.events };
+                let token = { ev.data };
+                out.push(Event {
+                    token,
+                    readable: bits & EPOLLIN != 0,
+                    writable: bits & EPOLLOUT != 0,
+                    hangup: bits & (EPOLLERR | EPOLLHUP) != 0,
+                });
+            }
+            return Ok(());
+        }
+    }
+}
+
+/// Cross-thread wakeup handle: one byte down a non-blocking socket pair.
+/// `WouldBlock` on a full pipe is fine — a wakeup is already pending, and
+/// one pending wakeup is all a level-triggered poller needs.
+#[derive(Clone)]
+pub struct Waker {
+    tx: Arc<UnixStream>,
+}
+
+impl Waker {
+    pub fn wake(&self) {
+        let _ = (&*self.tx).write(&[1u8]);
+    }
+}
+
+/// Build a waker and the stream its target thread registers for reads.
+pub fn waker_pair() -> io::Result<(Waker, UnixStream)> {
+    let (rx, tx) = UnixStream::pair()?;
+    rx.set_nonblocking(true)?;
+    tx.set_nonblocking(true)?;
+    Ok((Waker { tx: Arc::new(tx) }, rx))
+}
+
+/// Drain every pending wakeup byte so the (level-triggered) readable state
+/// clears until the next `wake`.
+pub fn drain_waker(rx: &UnixStream) {
+    let mut buf = [0u8; 64];
+    while matches!((&*rx).read(&mut buf), Ok(n) if n > 0) {}
+}
+
+#[repr(C)]
+struct RLimit {
+    rlim_cur: u64,
+    rlim_max: u64,
+}
+
+const RLIMIT_NOFILE: c_int = 7;
+
+/// Best-effort raise of the soft open-file limit to at least `want`
+/// (capped by the hard limit). Returns the soft limit now in effect —
+/// callers that need thousands of sockets (the capacity test) check the
+/// return and skip rather than fail when the environment refuses.
+pub fn raise_nofile_limit(want: u64) -> u64 {
+    let mut r = RLimit { rlim_cur: 0, rlim_max: 0 };
+    if unsafe { getrlimit(RLIMIT_NOFILE, &mut r) } != 0 {
+        return 0;
+    }
+    if r.rlim_cur >= want {
+        return r.rlim_cur;
+    }
+    let bumped = RLimit { rlim_cur: want.min(r.rlim_max), rlim_max: r.rlim_max };
+    if unsafe { setrlimit(RLIMIT_NOFILE, &bumped) } == 0 {
+        bumped.rlim_cur
+    } else {
+        r.rlim_cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn readable_event_fires_with_token_and_timeout_is_quiet() {
+        let poller = Poller::new().unwrap();
+        let (a, b) = UnixStream::pair().unwrap();
+        a.set_nonblocking(true).unwrap();
+        poller.register(a.as_raw_fd(), 42, Interest::READ).unwrap();
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_millis(0))).unwrap();
+        assert!(events.is_empty(), "no data yet, wait must time out clean");
+        (&b).write_all(b"x").unwrap();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 42);
+        assert!(events[0].readable);
+        // Level-triggered: the event repeats until the data is consumed.
+        events.clear();
+        poller.wait(&mut events, Some(Duration::from_millis(50))).unwrap();
+        assert_eq!(events.len(), 1, "level-triggered events must persist");
+        let mut buf = [0u8; 8];
+        assert_eq!((&a).read(&mut buf).unwrap(), 1);
+        events.clear();
+        poller.wait(&mut events, Some(Duration::from_millis(0))).unwrap();
+        assert!(events.is_empty(), "consumed data clears the readable state");
+    }
+
+    #[test]
+    fn writability_and_interest_changes() {
+        let poller = Poller::new().unwrap();
+        let (a, _b) = UnixStream::pair().unwrap();
+        a.set_nonblocking(true).unwrap();
+        poller
+            .register(a.as_raw_fd(), 7, Interest { read: false, write: true })
+            .unwrap();
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == 7 && e.writable), "{events:?}");
+        // Dropping write interest silences the (still-writable) socket.
+        poller.modify(a.as_raw_fd(), 7, Interest { read: true, write: false }).unwrap();
+        events.clear();
+        poller.wait(&mut events, Some(Duration::from_millis(0))).unwrap();
+        assert!(events.is_empty());
+        poller.deregister(a.as_raw_fd()).unwrap();
+    }
+
+    #[test]
+    fn waker_wakes_and_drains() {
+        let poller = Poller::new().unwrap();
+        let (waker, rx) = waker_pair().unwrap();
+        poller.register(rx.as_raw_fd(), 1, Interest::READ).unwrap();
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_millis(0))).unwrap();
+        assert!(events.is_empty());
+        // Wake from another thread, as the responder hooks do.
+        let w2 = waker.clone();
+        std::thread::spawn(move || w2.wake()).join().unwrap();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == 1 && e.readable));
+        drain_waker(&rx);
+        events.clear();
+        poller.wait(&mut events, Some(Duration::from_millis(0))).unwrap();
+        assert!(events.is_empty(), "drained waker must go quiet");
+        // Repeated wakes without a drain never error (full pipe is fine).
+        for _ in 0..100_000 {
+            waker.wake();
+        }
+    }
+
+    #[test]
+    fn nofile_limit_is_reported() {
+        let cur = raise_nofile_limit(64);
+        assert!(cur >= 64, "any sane environment grants 64 fds (got {cur})");
+    }
+}

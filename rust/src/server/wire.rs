@@ -1,0 +1,466 @@
+//! Wire-cost layer for the serving front end: a zero-copy submit parse and
+//! a direct reply writer with an opt-in binary sample frame.
+//!
+//! ## Fast parse ([`parse_submit_fast`])
+//!
+//! The submit line is by far the most common thing a connection sends, and
+//! parsing it through [`Json::parse`] allocates an owned tree (a `BTreeMap`
+//! plus one `String` per key and string value) that is thrown away
+//! immediately after field extraction. The fast path scans the line once
+//! with [`Scanner`], borrowing every string straight from the line buffer,
+//! and builds the [`SampleRequest`] directly — the only allocations are the
+//! ones the request itself owns.
+//!
+//! Parity contract: the fast path succeeds **only** when it would produce
+//! exactly what the tree path produces. Anything else — a `"cmd"` key
+//! (introspection), an escape in a wanted string, a wrong-typed value,
+//! malformed JSON — returns `Ok(None)`/`Err`, and the caller re-parses
+//! through the owned tree, which remains the single source of truth for
+//! every error text a client sees. Duplicate keys resolve last-wins on both
+//! paths (the tree's `BTreeMap::insert` semantics).
+//!
+//! ## Reply writer ([`write_reply`])
+//!
+//! Replies are serialized straight into the connection's outbound byte
+//! buffer with no [`Json`] tree. The JSON form is byte-identical to the
+//! tree writer's (same alphabetical key order as `BTreeMap` iteration, same
+//! number formatting via [`write_f64`]) — pinned by a unit test, so
+//! existing clients cannot tell the difference.
+//!
+//! ## Binary sample frame (`"frame":"bin"`)
+//!
+//! Sample rows dominate response bytes (a shortest-roundtrip f64 averages
+//! ~21 JSON characters vs 8 raw bytes). A submit carrying `"frame":"bin"`
+//! together with `"return_samples":true` gets its samples as a
+//! length-prefixed binary frame instead of a JSON array:
+//!
+//! ```text
+//!   {"bin_bytes":4096,...,"frame":"bin",...,"ok":true,...,"rows":256,...}\n
+//!   <bin_bytes raw bytes: rows x dim little-endian f64, row-major>
+//! ```
+//!
+//! The header is a normal JSON reply line (all the usual keys except
+//! `samples`, plus `frame`, `rows` and `bin_bytes`); exactly `bin_bytes`
+//! payload bytes follow the newline, with **no** trailing newline — the
+//! next reply starts right after the payload. Error replies and
+//! `"return_samples":false` replies are always plain JSON lines, whatever
+//! frame was requested. Clients must bound `bin_bytes` before trusting it;
+//! [`MAX_BIN_REPLY_BYTES`] is the cap the built-in client enforces.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::{SampleRequest, SampleResult};
+use crate::diffusion::Sde;
+use crate::score::Precision;
+use crate::solvers::SolverKind;
+use crate::timegrid::GridKind;
+use crate::util::json::{write_escaped, write_f64, Json, NumTok, Scanner};
+
+use super::parse_request;
+
+/// How sample payloads ride the reply: a JSON array (the default) or the
+/// length-prefixed binary frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Frame {
+    Json,
+    Bin,
+}
+
+/// A fully parsed submit line: the request plus the reply-shaping options
+/// that are wire concerns, not coordinator concerns.
+#[derive(Clone, Debug)]
+pub struct SubmitArgs {
+    pub req: SampleRequest,
+    pub return_samples: bool,
+    pub frame: Frame,
+}
+
+/// What the reply writer needs to know about the request after the
+/// coordinator has taken ownership of it.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplyMeta {
+    /// Requested sample count (echoed as `n`).
+    pub n: usize,
+    /// Requested precision (echoed as `dtype`).
+    pub dtype: Precision,
+    pub return_samples: bool,
+    pub frame: Frame,
+}
+
+impl SubmitArgs {
+    pub fn meta(&self) -> ReplyMeta {
+        ReplyMeta {
+            n: self.req.n_samples,
+            dtype: self.req.dtype,
+            return_samples: self.return_samples,
+            frame: self.frame,
+        }
+    }
+}
+
+/// Hard cap a client puts on `bin_bytes` before allocating the payload
+/// buffer (1 GiB — far above any real reply, far below an allocation bomb).
+pub const MAX_BIN_REPLY_BYTES: u64 = 1 << 30;
+
+/// Zero-copy parse of one submit line. `Ok(None)` means the line carries a
+/// `"cmd"` key and belongs to the introspection path; `Err` means the fast
+/// path cannot represent the line faithfully (escapes, type surprises,
+/// malformed JSON, or a genuinely invalid request) and the caller must
+/// re-parse through the owned tree — which then owns the error text.
+pub fn parse_submit_fast(line: &str) -> Result<Option<SubmitArgs>> {
+    let mut sc = Scanner::new(line);
+    sc.begin_object()?;
+    let mut model: Option<&str> = None;
+    let mut solver: Option<&str> = None;
+    let mut sde: Option<&str> = None;
+    let mut grid: Option<&str> = None;
+    let mut nfe: Option<NumTok> = None;
+    let mut n: Option<NumTok> = None;
+    let mut t0: Option<NumTok> = None;
+    let mut seed: Option<NumTok> = None;
+    let mut deadline_ms: Option<NumTok> = None;
+    let mut dtype: Option<&str> = None;
+    let mut return_samples: Option<bool> = None;
+    let mut frame: Option<&str> = None;
+    while let Some(key) = sc.next_key()? {
+        match key {
+            "cmd" => return Ok(None),
+            "model" => model = Some(sc.value_str()?),
+            "solver" => solver = Some(sc.value_str()?),
+            "sde" => sde = Some(sc.value_str()?),
+            "grid" => grid = Some(sc.value_str()?),
+            "nfe" => nfe = Some(sc.value_num()?),
+            "n" => n = Some(sc.value_num()?),
+            "t0" => t0 = Some(sc.value_num()?),
+            "seed" => seed = Some(sc.value_num()?),
+            "deadline_ms" => deadline_ms = Some(sc.value_num()?),
+            "dtype" => dtype = Some(sc.value_str()?),
+            "return_samples" => return_samples = Some(sc.value_bool()?),
+            "frame" => frame = Some(sc.value_str()?),
+            _ => sc.skip_value()?,
+        }
+    }
+    sc.end()?;
+    // Conversion, in the exact order the owned path checks things
+    // (return_samples -> frame -> parse_request's field order). These error
+    // texts match the tree path's, but no client ever sees them: the caller
+    // falls back on ANY Err, and the re-parse reproduces the error.
+    let return_samples = return_samples.unwrap_or(false);
+    let frame = parse_frame(frame)?;
+    let model = model.ok_or_else(|| anyhow!("missing key 'model'"))?;
+    let solver = SolverKind::parse(solver.ok_or_else(|| anyhow!("missing key 'solver'"))?)
+        .with_context(|| "unknown solver")?;
+    let sde = match sde.unwrap_or("vp") {
+        "vp" => Sde::vp(),
+        "ve" => Sde::ve(),
+        other => bail!("unknown sde '{other}'"),
+    };
+    let grid = match grid {
+        Some(g) => GridKind::parse(g).with_context(|| "unknown grid")?,
+        None => GridKind::Quadratic,
+    };
+    let mut req = SampleRequest::new(
+        model,
+        solver,
+        nfe.ok_or_else(|| anyhow!("missing key 'nfe'"))?.as_usize()?,
+        n.ok_or_else(|| anyhow!("missing key 'n'"))?.as_usize()?,
+    );
+    req.sde = sde;
+    req.grid = grid;
+    req.t0 = t0.map(|x| x.as_f64()).unwrap_or(sde.t0_default());
+    req.seed = seed.map(|x| x.as_u64()).transpose()?.unwrap_or(0);
+    req.deadline_ms = deadline_ms.map(|x| x.as_usize()).transpose()?.map(|ms| ms as u64);
+    if let Some(s) = dtype {
+        req.dtype = Precision::parse(s)
+            .with_context(|| format!("unknown dtype '{s}' (expected \"f32\" or \"f64\")"))?;
+    }
+    Ok(Some(SubmitArgs { req, return_samples, frame }))
+}
+
+/// Owned-tree submit parse — the fallback and the reference. Shares
+/// [`parse_request`] with the tests that call it directly.
+pub fn submit_args_from_json(v: &Json) -> Result<SubmitArgs> {
+    let return_samples =
+        v.opt("return_samples").map(|b| b.as_bool()).transpose()?.unwrap_or(false);
+    let frame = parse_frame(v.opt("frame").map(|f| f.as_str()).transpose()?)?;
+    let req = parse_request(v)?;
+    Ok(SubmitArgs { req, return_samples, frame })
+}
+
+fn parse_frame(s: Option<&str>) -> Result<Frame> {
+    match s {
+        None | Some("json") => Ok(Frame::Json),
+        Some("bin") => Ok(Frame::Bin),
+        Some(other) => bail!("unknown frame '{other}' (expected \"json\" or \"bin\")"),
+    }
+}
+
+/// Append one complete reply (newline-terminated line, plus the binary
+/// payload when the request asked for it) to the connection's outbound
+/// buffer. The JSON form is byte-identical to the old tree-built reply.
+pub fn write_reply(out: &mut Vec<u8>, meta: &ReplyMeta, res: &Result<SampleResult>) {
+    match res {
+        Err(e) => error_reply(out, &format!("{e:#}")),
+        Ok(r) if meta.return_samples && meta.frame == Frame::Bin => {
+            let payload = samples_to_le_bytes(&r.samples);
+            let rows = r.samples.len() / r.dim.max(1);
+            let mut s = String::new();
+            s.push_str("{\"bin_bytes\":");
+            write_f64(&mut s, payload.len() as f64);
+            push_common_fields(&mut s, meta, r, true);
+            s.push_str(",\"rows\":");
+            write_f64(&mut s, rows as f64);
+            s.push_str(",\"solve_us\":");
+            write_f64(&mut s, r.solve_us as f64);
+            s.push_str("}\n");
+            out.extend_from_slice(s.as_bytes());
+            out.extend_from_slice(&payload);
+        }
+        Ok(r) => {
+            let mut s = String::new();
+            s.push_str("{\"co_batched\":");
+            write_f64(&mut s, r.co_batched as f64);
+            s.push_str(",\"dim\":");
+            write_f64(&mut s, r.dim as f64);
+            s.push_str(",\"dtype\":");
+            write_escaped(&mut s, meta.dtype.name());
+            push_tail_fields(&mut s, meta, r);
+            if meta.return_samples {
+                s.push_str(",\"samples\":[");
+                for (i, &x) in r.samples.iter().enumerate() {
+                    if i > 0 {
+                        s.push(',');
+                    }
+                    write_f64(&mut s, x);
+                }
+                s.push(']');
+            }
+            s.push_str(",\"solve_us\":");
+            write_f64(&mut s, r.solve_us as f64);
+            s.push_str("}\n");
+            out.extend_from_slice(s.as_bytes());
+        }
+    }
+}
+
+/// `co_batched` .. `queue_us` for the bin header (which interleaves its own
+/// keys to keep the alphabetical order the tree writer would have used).
+fn push_common_fields(s: &mut String, meta: &ReplyMeta, r: &SampleResult, bin: bool) {
+    s.push_str(",\"co_batched\":");
+    write_f64(s, r.co_batched as f64);
+    s.push_str(",\"dim\":");
+    write_f64(s, r.dim as f64);
+    s.push_str(",\"dtype\":");
+    write_escaped(s, meta.dtype.name());
+    if bin {
+        s.push_str(",\"frame\":\"bin\"");
+    }
+    push_tail_fields(s, meta, r);
+}
+
+/// `merged_with` .. `queue_us` — identical between the JSON and bin shapes.
+fn push_tail_fields(s: &mut String, meta: &ReplyMeta, r: &SampleResult) {
+    s.push_str(",\"merged_with\":");
+    write_f64(s, r.merged_with as f64);
+    s.push_str(",\"n\":");
+    write_f64(s, meta.n as f64);
+    s.push_str(",\"nfe\":");
+    write_f64(s, r.nfe as f64);
+    s.push_str(",\"ok\":true,\"queue_us\":");
+    write_f64(s, r.queue_us as f64);
+}
+
+/// Append the standard error reply line ({"error":...,"ok":false}\n —
+/// byte-identical to the tree-built form).
+pub fn error_reply(out: &mut Vec<u8>, msg: &str) {
+    let mut s = String::new();
+    s.push_str("{\"error\":");
+    write_escaped(&mut s, msg);
+    s.push_str(",\"ok\":false}\n");
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Row-major f64 samples -> little-endian payload bytes.
+pub fn samples_to_le_bytes(samples: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(samples.len() * 8);
+    for &x in samples {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Payload bytes -> f64 samples (bit-exact; errs on a ragged byte count).
+pub fn samples_from_le_bytes(bytes: &[u8]) -> Result<Vec<f64>> {
+    if bytes.len() % 8 != 0 {
+        bail!("binary frame length {} is not a multiple of 8", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().expect("chunks_exact(8)")))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast(line: &str) -> SubmitArgs {
+        parse_submit_fast(line).unwrap().expect("not a cmd line")
+    }
+
+    fn owned(line: &str) -> SubmitArgs {
+        submit_args_from_json(&Json::parse(line).unwrap()).unwrap()
+    }
+
+    fn assert_same(line: &str) {
+        let (a, b) = (fast(line), owned(line));
+        assert_eq!(a.req.model, b.req.model, "{line}");
+        assert_eq!(a.req.solver, b.req.solver, "{line}");
+        assert_eq!(a.req.sde.key_bits(), b.req.sde.key_bits(), "{line}");
+        assert_eq!(a.req.grid, b.req.grid, "{line}");
+        assert_eq!(a.req.t0.to_bits(), b.req.t0.to_bits(), "{line}");
+        assert_eq!(a.req.nfe, b.req.nfe, "{line}");
+        assert_eq!(a.req.n_samples, b.req.n_samples, "{line}");
+        assert_eq!(a.req.seed, b.req.seed, "{line}");
+        assert_eq!(a.req.deadline_ms, b.req.deadline_ms, "{line}");
+        assert_eq!(a.req.dtype, b.req.dtype, "{line}");
+        assert_eq!(a.return_samples, b.return_samples, "{line}");
+        assert_eq!(a.frame, b.frame, "{line}");
+    }
+
+    #[test]
+    fn fast_parse_matches_the_tree_parse() {
+        for line in [
+            r#"{"model":"gmm2d","solver":"tab3","nfe":10,"n":4}"#,
+            r#"{"model":"gmm2d","solver":"ddim","nfe":5,"n":4,"return_samples":true}"#,
+            // every optional key at once, plus whitespace tolerance
+            r#" {"model": "gmm2d", "solver": "rho-ab2", "sde": "ve", "grid": "uniform",
+                "nfe": 12, "n": 7, "t0": 1e-4, "seed": 42, "deadline_ms": 250,
+                "dtype": "f64", "return_samples": true, "frame": "bin"} "#,
+            // seed above 2^53 must stay exact on both paths
+            r#"{"model":"m","solver":"tab3","nfe":10,"n":4,"seed":1152921504606846977}"#,
+            // unknown keys are skipped, however deep
+            r#"{"model":"m","solver":"tab3","nfe":10,"n":4,"extra":{"deep":[1,"a\"b",{}]}}"#,
+            // duplicate keys resolve last-wins (the tree's BTreeMap::insert)
+            r#"{"model":"a","solver":"tab3","nfe":10,"n":4,"model":"b","nfe":3}"#,
+            r#"{"model":"m","solver":"tab3","nfe":10,"n":4,"frame":"json"}"#,
+        ] {
+            assert_same(line);
+        }
+    }
+
+    #[test]
+    fn fast_parse_defers_cmds_and_anything_it_cannot_borrow() {
+        // cmd lines route to the introspection path, wherever the key sits.
+        assert!(parse_submit_fast(r#"{"cmd":"stats"}"#).unwrap().is_none());
+        assert!(parse_submit_fast(r#"{"model":"m","cmd":"stats"}"#).unwrap().is_none());
+        // Everything else unrepresentable errs into the tree fallback.
+        for line in [
+            r#"{"model":"a\nb","solver":"tab3","nfe":10,"n":4}"#, // escape in wanted string
+            r#"{"model":"m","solver":"tab3","nfe":"ten","n":4}"#, // wrong-typed number
+            r#"{"model":"m","solver":"tab3","nfe":10,"n":4} x"#,  // trailing data
+            r#"not json"#,
+            r#"{"model":"m","solver":"tab3","nfe":10,"n":4"#, // truncated
+        ] {
+            assert!(parse_submit_fast(line).is_err(), "{line}");
+        }
+        // Semantically invalid requests err too (the fallback then owns the
+        // error text a client sees).
+        for line in [
+            r#"{"solver":"tab3","nfe":10,"n":4}"#,                    // missing model
+            r#"{"model":"m","solver":"bogus","nfe":10,"n":4}"#,       // unknown solver
+            r#"{"model":"m","solver":"tab3","nfe":10,"n":4,"frame":"hex"}"#,
+            r#"{"model":"m","solver":"tab3","nfe":10,"n":4,"seed":1.5}"#,
+        ] {
+            assert!(parse_submit_fast(line).is_err(), "{line}");
+            assert!(submit_args_from_json(&Json::parse(line).unwrap()).is_err(), "{line}");
+        }
+    }
+
+    fn sample_result() -> SampleResult {
+        SampleResult {
+            samples: vec![0.25, -1.5, 1e-3, 0.123456789012345678, -0.0, 3.0],
+            dim: 2,
+            nfe: 10,
+            merged_with: 2,
+            co_batched: 3,
+            queue_us: 120,
+            solve_us: 5300,
+        }
+    }
+
+    #[test]
+    fn json_reply_is_byte_identical_to_the_tree_writer() {
+        let r = sample_result();
+        for return_samples in [false, true] {
+            let meta = ReplyMeta {
+                n: 3,
+                dtype: Precision::F64,
+                return_samples,
+                frame: Frame::Json,
+            };
+            let mut out = Vec::new();
+            write_reply(&mut out, &meta, &Ok(r.clone()));
+            // The reference: the reply as the old tree path built it.
+            let mut fields = vec![
+                ("ok", Json::Bool(true)),
+                ("n", Json::num(meta.n as f64)),
+                ("dim", Json::num(r.dim as f64)),
+                ("nfe", Json::num(r.nfe as f64)),
+                ("merged_with", Json::num(r.merged_with as f64)),
+                ("co_batched", Json::num(r.co_batched as f64)),
+                ("queue_us", Json::num(r.queue_us as f64)),
+                ("solve_us", Json::num(r.solve_us as f64)),
+                ("dtype", Json::str(meta.dtype.name())),
+            ];
+            if return_samples {
+                fields.push(("samples", Json::arr_f64(&r.samples)));
+            }
+            let mut want = Json::obj(fields).to_string();
+            want.push('\n');
+            assert_eq!(String::from_utf8(out).unwrap(), want);
+        }
+        let mut out = Vec::new();
+        error_reply(&mut out, "boom \"quoted\"");
+        let mut want = Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("error", Json::str("boom \"quoted\"")),
+        ])
+        .to_string();
+        want.push('\n');
+        assert_eq!(String::from_utf8(out).unwrap(), want);
+    }
+
+    #[test]
+    fn bin_frame_roundtrips_bit_exactly() {
+        let r = sample_result();
+        let meta =
+            ReplyMeta { n: 3, dtype: Precision::F64, return_samples: true, frame: Frame::Bin };
+        let mut out = Vec::new();
+        write_reply(&mut out, &meta, &Ok(r.clone()));
+        let nl = out.iter().position(|&b| b == b'\n').unwrap();
+        let header = Json::parse(std::str::from_utf8(&out[..nl]).unwrap()).unwrap();
+        assert!(header.get("ok").unwrap().as_bool().unwrap());
+        assert_eq!(header.get("frame").unwrap().as_str().unwrap(), "bin");
+        assert_eq!(header.get("rows").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(header.get("dim").unwrap().as_usize().unwrap(), 2);
+        let bin_bytes = header.get("bin_bytes").unwrap().as_usize().unwrap();
+        assert_eq!(bin_bytes, r.samples.len() * 8);
+        assert!(header.opt("samples").is_none());
+        let payload = &out[nl + 1..];
+        assert_eq!(payload.len(), bin_bytes, "no trailing bytes after the payload");
+        let back = samples_from_le_bytes(payload).unwrap();
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back), bits(&r.samples), "bit-exact, -0.0 included");
+        // Ragged payloads are refused.
+        assert!(samples_from_le_bytes(&payload[..9]).is_err());
+        // A bin request without return_samples degrades to the plain JSON
+        // reply — no frame key, no payload.
+        let meta = ReplyMeta { return_samples: false, ..meta };
+        let mut out = Vec::new();
+        write_reply(&mut out, &meta, &Ok(r));
+        assert_eq!(*out.last().unwrap(), b'\n');
+        let j = Json::parse(std::str::from_utf8(&out[..out.len() - 1]).unwrap()).unwrap();
+        assert!(j.opt("frame").is_none() && j.opt("bin_bytes").is_none());
+    }
+}

@@ -162,17 +162,7 @@ impl Json {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
-            Json::Num(x) => {
-                if x.is_finite() {
-                    if x.fract() == 0.0 && x.abs() < 1e15 {
-                        let _ = write!(out, "{}", *x as i64);
-                    } else {
-                        let _ = write!(out, "{x:e}");
-                    }
-                } else {
-                    out.push_str("null"); // JSON has no inf/nan
-                }
-            }
+            Json::Num(x) => write_f64(out, *x),
             Json::Int(u) => {
                 let _ = write!(out, "{u}");
             }
@@ -225,7 +215,26 @@ impl Json {
     }
 }
 
-fn write_escaped(out: &mut String, s: &str) {
+/// Serialize one f64 exactly as the tree writer does (integers below 1e15
+/// as plain digits, everything else shortest-roundtrip `{:e}`, non-finite
+/// as `null`). Shared with the direct reply writer in `server/wire.rs` so
+/// a response built without a [`Json`] tree is byte-identical to one built
+/// with it — the binary-frame parity tests lean on that.
+pub fn write_f64(out: &mut String, x: f64) {
+    if x.is_finite() {
+        if x.fract() == 0.0 && x.abs() < 1e15 {
+            let _ = write!(out, "{}", x as i64);
+        } else {
+            let _ = write!(out, "{x:e}");
+        }
+    } else {
+        out.push_str("null"); // JSON has no inf/nan
+    }
+}
+
+/// Escape + quote `s` as a JSON string (the tree writer's string form,
+/// exported for the direct reply writer).
+pub fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
         match c {
@@ -424,6 +433,303 @@ fn utf8_len(first: u8) -> usize {
     }
 }
 
+/// One number token as the [`Scanner`] sees it, mirroring the tree
+/// parser's integer/float split (pure-digit tokens stay exact as u64).
+/// The conversion methods reproduce [`Json::as_usize`]/[`Json::as_u64`]/
+/// [`Json::as_f64`] — same rules, same error texts — so a value parsed
+/// through the scanner is indistinguishable from one parsed through the
+/// tree.
+#[derive(Clone, Copy, Debug)]
+pub enum NumTok {
+    Int(u64),
+    Float(f64),
+}
+
+impl NumTok {
+    pub fn as_f64(self) -> f64 {
+        match self {
+            NumTok::Int(u) => u as f64,
+            NumTok::Float(x) => x,
+        }
+    }
+
+    pub fn as_usize(self) -> Result<usize> {
+        match self {
+            NumTok::Int(u) => Ok(u as usize),
+            NumTok::Float(x) => {
+                if x < 0.0 || x.fract() != 0.0 {
+                    bail!("not a non-negative integer: {x}");
+                }
+                Ok(x as usize)
+            }
+        }
+    }
+
+    pub fn as_u64(self) -> Result<u64> {
+        match self {
+            NumTok::Int(u) => Ok(u),
+            NumTok::Float(x) => {
+                if x < 0.0 || x.fract() != 0.0 {
+                    bail!("not a non-negative integer: {x}");
+                }
+                if x > 9_007_199_254_740_992.0 {
+                    bail!("integer too large to round-trip through f64: {x}");
+                }
+                Ok(x as u64)
+            }
+        }
+    }
+}
+
+/// Pull-based zero-copy scanner over one flat JSON object: string values
+/// come back as slices borrowed from the input, and nothing allocates.
+/// Built for the wire hot path (`server/wire.rs` parses a submit line
+/// straight into a `SampleRequest` with no [`Json`] tree); the tree parser
+/// above remains the reference for everything else.
+///
+/// The scanner is deliberately *incomplete*: any construct it cannot
+/// handle borrowed — escape sequences in a wanted string, a non-number
+/// where a number is expected, structural surprises — is an `Err`, and the
+/// caller falls back to the tree parser. That split keeps the fast path
+/// honest: it may only ever succeed with exactly the value the tree parser
+/// would have produced, never fail where the tree parser would succeed
+/// *silently differently*. (`skip_value` does tolerate escapes and nesting
+/// — skipping needs no borrow.)
+pub struct Scanner<'a> {
+    b: &'a [u8],
+    s: &'a str,
+    i: usize,
+    /// Inside the object: whether a key/value pair has been consumed
+    /// (controls the `,` separator), and whether `}` has been seen.
+    first: bool,
+    closed: bool,
+}
+
+impl<'a> Scanner<'a> {
+    pub fn new(s: &'a str) -> Scanner<'a> {
+        Scanner { b: s.as_bytes(), s, i: 0, first: true, closed: false }
+    }
+
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b.get(self.i).copied().ok_or_else(|| anyhow!("unexpected end of input"))
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!("expected '{}' at byte {}", c as char, self.i);
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    /// Enter the top-level object. Must be called first.
+    pub fn begin_object(&mut self) -> Result<()> {
+        self.skip_ws();
+        self.eat(b'{')
+    }
+
+    /// Next key, borrowed, with its `:` consumed — the cursor rests on the
+    /// value. `None` once the object closes. Escaped keys are an `Err`
+    /// (fall back to the tree parser).
+    pub fn next_key(&mut self) -> Result<Option<&'a str>> {
+        if self.closed {
+            return Ok(None);
+        }
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            self.closed = true;
+            return Ok(None);
+        }
+        if self.first {
+            self.first = false;
+        } else {
+            self.eat(b',')?;
+            self.skip_ws();
+        }
+        let key = self.raw_string()?;
+        self.skip_ws();
+        self.eat(b':')?;
+        Ok(Some(key))
+    }
+
+    /// After the object closes: only trailing whitespace may remain (the
+    /// tree parser's "trailing data" rule).
+    pub fn end(&mut self) -> Result<()> {
+        if !self.closed {
+            bail!("object not closed");
+        }
+        self.skip_ws();
+        if self.i != self.b.len() {
+            bail!("trailing data at byte {}", self.i);
+        }
+        Ok(())
+    }
+
+    /// Borrowed string body. Errs on any backslash: an escaped string
+    /// cannot be returned as a slice of the input.
+    fn raw_string(&mut self) -> Result<&'a str> {
+        self.eat(b'"')?;
+        let start = self.i;
+        loop {
+            match self.peek()? {
+                b'"' => {
+                    let out = &self.s[start..self.i];
+                    self.i += 1;
+                    return Ok(out);
+                }
+                b'\\' => bail!("escape in string (no zero-copy)"),
+                _ => self.i += 1,
+            }
+        }
+    }
+
+    pub fn value_str(&mut self) -> Result<&'a str> {
+        self.skip_ws();
+        self.raw_string()
+    }
+
+    pub fn value_bool(&mut self) -> Result<bool> {
+        self.skip_ws();
+        if self.b[self.i..].starts_with(b"true") {
+            self.i += 4;
+            Ok(true)
+        } else if self.b[self.i..].starts_with(b"false") {
+            self.i += 5;
+            Ok(false)
+        } else {
+            bail!("expected bool at byte {}", self.i)
+        }
+    }
+
+    /// Number token, split exactly like the tree parser: pure digits stay
+    /// u64, everything else (sign/fraction/exponent) is f64. Non-number
+    /// values are an `Err` (fall back).
+    pub fn value_num(&mut self) -> Result<NumTok> {
+        self.skip_ws();
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        if self.i == start {
+            bail!("expected number at byte {}", start);
+        }
+        let s = &self.s[start..self.i];
+        if s.bytes().all(|c| c.is_ascii_digit()) {
+            if let Ok(u) = s.parse::<u64>() {
+                return Ok(NumTok::Int(u));
+            }
+        }
+        Ok(NumTok::Float(s.parse::<f64>().with_context(|| format!("bad number '{s}'"))?))
+    }
+
+    /// Skip any value (nested containers, escaped strings, literals) —
+    /// the unknown-key path. Skipping validates the same grammar the tree
+    /// parser accepts (separators, bracket matching, literals): the fast
+    /// path may never bless a line the tree parser would reject. Anything
+    /// past the recursion bound errs into the tree-parser fallback instead.
+    pub fn skip_value(&mut self) -> Result<()> {
+        self.skip_value_rec(0)
+    }
+
+    fn skip_value_rec(&mut self, depth: u32) -> Result<()> {
+        if depth > 64 {
+            bail!("nesting too deep (no zero-copy)");
+        }
+        self.skip_ws();
+        match self.peek()? {
+            b'{' => {
+                self.i += 1;
+                self.skip_ws();
+                if self.peek()? == b'}' {
+                    self.i += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.skip_ws();
+                    self.skip_string()?;
+                    self.skip_ws();
+                    self.eat(b':')?;
+                    self.skip_value_rec(depth + 1)?;
+                    self.skip_ws();
+                    match self.peek()? {
+                        b',' => self.i += 1,
+                        b'}' => {
+                            self.i += 1;
+                            return Ok(());
+                        }
+                        _ => bail!("expected ',' or '}}' at byte {}", self.i),
+                    }
+                }
+            }
+            b'[' => {
+                self.i += 1;
+                self.skip_ws();
+                if self.peek()? == b']' {
+                    self.i += 1;
+                    return Ok(());
+                }
+                loop {
+                    self.skip_value_rec(depth + 1)?;
+                    self.skip_ws();
+                    match self.peek()? {
+                        b',' => self.i += 1,
+                        b']' => {
+                            self.i += 1;
+                            return Ok(());
+                        }
+                        _ => bail!("expected ',' or ']' at byte {}", self.i),
+                    }
+                }
+            }
+            b'"' => self.skip_string(),
+            b't' => self.skip_lit("true"),
+            b'f' => self.skip_lit("false"),
+            b'n' => self.skip_lit("null"),
+            b'N' => self.skip_lit("NaN"),
+            b'I' => self.skip_lit("Infinity"),
+            b'-' if self.b[self.i..].starts_with(b"-Infinity") => self.skip_lit("-Infinity"),
+            _ => self.value_num().map(|_| ()),
+        }
+    }
+
+    fn skip_lit(&mut self, word: &str) -> Result<()> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(())
+        } else {
+            bail!("invalid literal at byte {}", self.i)
+        }
+    }
+
+    fn skip_string(&mut self) -> Result<()> {
+        self.eat(b'"')?;
+        loop {
+            match self.peek()? {
+                b'"' => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                b'\\' => {
+                    self.i += 1;
+                    self.peek()?; // escaped byte must exist
+                    self.i += 1;
+                }
+                _ => self.i += 1,
+            }
+        }
+    }
+
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -499,5 +805,83 @@ mod tests {
         let x = 0.123456789012345678;
         let v = Json::parse(&Json::Num(x).to_string()).unwrap();
         assert!((v.as_f64().unwrap() - x).abs() < 1e-15);
+    }
+
+    #[test]
+    fn scanner_borrows_slices_from_the_input() {
+        let src = r#"{"model":"gmm2d","nfe":10,"seed":1152921504606846977,"t0":1e-3}"#;
+        let mut sc = Scanner::new(src);
+        sc.begin_object().unwrap();
+        let range = src.as_bytes().as_ptr_range();
+        while let Some(key) = sc.next_key().unwrap() {
+            assert!(range.contains(&key.as_ptr()), "key must borrow from the input");
+            match key {
+                "model" => {
+                    let v = sc.value_str().unwrap();
+                    assert_eq!(v, "gmm2d");
+                    assert!(range.contains(&v.as_ptr()), "value must borrow from the input");
+                }
+                "nfe" => assert_eq!(sc.value_num().unwrap().as_usize().unwrap(), 10),
+                "seed" => {
+                    // Above 2^53: the integer split must keep it exact.
+                    assert_eq!(sc.value_num().unwrap().as_u64().unwrap(), (1u64 << 60) + 1);
+                }
+                "t0" => assert_eq!(sc.value_num().unwrap().as_f64(), 1e-3),
+                other => panic!("unexpected key {other}"),
+            }
+        }
+        sc.end().unwrap();
+    }
+
+    #[test]
+    fn scanner_skips_unknown_values_and_rejects_trailing_data() {
+        let src = r#"{"x":{"deep":[1,"a\"b",{}]},"y":[true,null,-1.5e3],"z":"k"}"#;
+        let mut sc = Scanner::new(src);
+        sc.begin_object().unwrap();
+        let mut z = "";
+        while let Some(key) = sc.next_key().unwrap() {
+            if key == "z" {
+                z = sc.value_str().unwrap();
+            } else {
+                sc.skip_value().unwrap();
+            }
+        }
+        assert_eq!(z, "k");
+        sc.end().unwrap();
+
+        let mut sc = Scanner::new(r#"{"a":1} extra"#);
+        sc.begin_object().unwrap();
+        while let Some(_k) = sc.next_key().unwrap() {
+            sc.skip_value().unwrap();
+        }
+        assert!(sc.end().is_err(), "trailing bytes must be rejected");
+    }
+
+    #[test]
+    fn scanner_refuses_what_it_cannot_borrow() {
+        // Escaped wanted-string: must err so callers fall back to the tree.
+        let mut sc = Scanner::new(r#"{"model":"a\nb"}"#);
+        sc.begin_object().unwrap();
+        assert_eq!(sc.next_key().unwrap(), Some("model"));
+        assert!(sc.value_str().is_err());
+        // Wrong-typed number: err, never a silent coercion.
+        let mut sc = Scanner::new(r#"{"nfe":"ten"}"#);
+        sc.begin_object().unwrap();
+        sc.next_key().unwrap();
+        assert!(sc.value_num().is_err());
+        // NumTok conversions mirror the tree accessors' rules.
+        assert!(NumTok::Float(1.5).as_usize().is_err());
+        assert!(NumTok::Float(-1.0).as_u64().is_err());
+        assert!(NumTok::Float(1e300).as_u64().is_err());
+        assert_eq!(NumTok::Float(42.0).as_u64().unwrap(), 42);
+    }
+
+    #[test]
+    fn write_f64_matches_the_tree_writer() {
+        for x in [0.0, 1.0, -3.5, 1e-3, 0.123456789012345678, 1e300, f64::NAN, 2.0f64.powi(53)] {
+            let mut direct = String::new();
+            write_f64(&mut direct, x);
+            assert_eq!(direct, Json::Num(x).to_string(), "mismatch for {x}");
+        }
     }
 }

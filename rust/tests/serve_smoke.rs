@@ -1,0 +1,101 @@
+//! `make serve-smoke`: 64 concurrent clients with a mixed workload — plain
+//! submits, JSON-sample submits, binary-frame submits, and counted
+//! rejections — against the readiness-driven frontend, then the stats
+//! lifecycle balance (`requests == completed + rejected + expired +
+//! failed`) globally and per model. Wired into `make ci`.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use deis::coordinator::{Coordinator, CoordinatorConfig};
+use deis::server::{serve, Client};
+use deis::util::json::Json;
+
+#[test]
+fn mixed_concurrent_battery_balances_the_books() {
+    let coord = Arc::new(Coordinator::new(
+        CoordinatorConfig { workers: 4, ..Default::default() },
+        // A tiny stall keeps evals overlapping so the burst really is
+        // concurrent (merging/co-batching paths engage), without making
+        // the smoke slow.
+        common::stall_registry(Duration::from_millis(2)),
+    ));
+    let addr = serve(coord, "127.0.0.1:0").unwrap();
+
+    let mut handles = Vec::new();
+    for i in 0..64u64 {
+        handles.push(std::thread::spawn(move || {
+            let mut cl = Client::connect(addr).unwrap();
+            match i % 4 {
+                0 => {
+                    // Plain submit, no samples on the wire.
+                    let req = format!(
+                        r#"{{"model":"gmm2d","solver":"tab2","nfe":6,"n":16,"seed":{i}}}"#
+                    );
+                    let r = cl.call(&Json::parse(&req).unwrap()).unwrap();
+                    assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
+                }
+                1 => {
+                    // JSON sample array.
+                    let req = format!(
+                        r#"{{"model":"gmm2d","solver":"ddim","nfe":5,"n":16,"seed":{i},"return_samples":true}}"#
+                    );
+                    let r = cl.call(&Json::parse(&req).unwrap()).unwrap();
+                    assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
+                    assert_eq!(r.get("samples").unwrap().as_arr().unwrap().len(), 32);
+                }
+                2 => {
+                    // Binary frame.
+                    let req = format!(
+                        r#"{{"model":"gmm2d","solver":"ddim","nfe":5,"n":16,"seed":{i},"return_samples":true,"frame":"bin"}}"#
+                    );
+                    let (h, samples) = cl.call_bin(&Json::parse(&req).unwrap()).unwrap();
+                    assert!(h.get("ok").unwrap().as_bool().unwrap(), "{h:?}");
+                    assert_eq!(h.get("frame").unwrap().as_str().unwrap(), "bin");
+                    assert_eq!(samples.len(), 32);
+                }
+                _ => {
+                    // A counted rejection (unknown model reaches the
+                    // coordinator, unlike a parse error), then a good call
+                    // on the same connection: errors must not poison it.
+                    let bad = r#"{"model":"nope","solver":"tab2","nfe":6,"n":4}"#;
+                    let r = cl.call(&Json::parse(bad).unwrap()).unwrap();
+                    assert!(!r.get("ok").unwrap().as_bool().unwrap());
+                    assert!(r.get("error").unwrap().as_str().unwrap().contains("unknown model"));
+                    let good = format!(
+                        r#"{{"model":"gmm2d","solver":"tab2","nfe":6,"n":16,"seed":{i}}}"#
+                    );
+                    let r = cl.call(&Json::parse(&good).unwrap()).unwrap();
+                    assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let mut cl = Client::connect(addr).unwrap();
+    let s = cl.call(&Json::parse(r#"{"cmd":"stats"}"#).unwrap()).unwrap();
+    let g = |k: &str| s.get(k).unwrap().as_f64().unwrap();
+    // 48 direct successes + 16 post-rejection successes; 16 rejections.
+    assert_eq!(g("completed"), 64.0);
+    assert_eq!(g("rejected"), 16.0);
+    assert_eq!(
+        g("requests"),
+        g("completed") + g("rejected") + g("expired") + g("failed"),
+        "global lifecycle must balance: {s:?}"
+    );
+    // Per-model books balance too (unknown-model refusals are global-only,
+    // so gmm2d sees exactly the 64 served requests).
+    let pm = s.get("per_model").unwrap().get("gmm2d").unwrap();
+    let p = |k: &str| pm.get(k).unwrap().as_f64().unwrap();
+    assert_eq!(p("completed"), 64.0);
+    assert_eq!(
+        p("requests"),
+        p("completed") + p("rejected") + p("expired") + p("failed"),
+        "per-model lifecycle must balance: {pm:?}"
+    );
+}
