@@ -4,7 +4,7 @@
 
 CARGO = cd rust && cargo
 
-.PHONY: verify verify-full build test lint fmt clippy chaos serve-smoke bench bench-quick bench-diff serve-demo artifacts ci
+.PHONY: verify verify-full build test lint fmt clippy chaos serve-smoke loadgen-smoke bench bench-quick bench-diff serve-demo loadgen-demo artifacts ci
 
 ## Tier-1 verify (ROADMAP): release build + full test suite.
 verify:
@@ -43,6 +43,14 @@ chaos:
 serve-smoke:
 	$(CARGO) test --release --test serve_smoke -q
 
+## Loadgen smoke (EXPERIMENTS.md §Load): deterministic open-loop plan per
+## seed, then a short fixed-seed run against an in-process server asserting
+## non-zero completions and EXACT client-vs-stats-wire reconciliation
+## (global + per_model, deadline_hit/deadline_missed included). Release:
+## the run replays a timed arrival schedule.
+loadgen-smoke:
+	$(CARGO) test --release --test loadgen_smoke -q
+
 fmt:
 	$(CARGO) fmt --check
 
@@ -71,6 +79,12 @@ bench-diff:
 serve-demo:
 	$(CARGO) run --release -- serve --models gmm2d_oracle --workers 4
 
+## Quick production-shaped load run against an in-process server (boots
+## its own; pass --addr HOST:PORT after -- to target a live one). See
+## EXPERIMENTS.md §Load for the full oldest-vs-EDF methodology.
+loadgen-demo:
+	$(CARGO) run --release --example loadgen -- --quick
+
 ## Build-time artifacts (JAX training + AOT lowering; needs the python env).
 ## Written to rust/artifacts: cargo runs tests/benches with cwd = rust/, and
 ## that is where the integration tests and the runtime default look.
@@ -79,4 +93,4 @@ artifacts:
 	python3 python/compile/fixtures.py --out rust/artifacts/fixtures
 
 ## Everything CI runs.
-ci: verify lint chaos serve-smoke bench-quick
+ci: verify lint chaos serve-smoke loadgen-smoke bench-quick

@@ -1,0 +1,102 @@
+//! Open-loop production load generator for the DEIS serving stack
+//! (EXPERIMENTS.md §Load). Speaks the real wire protocol — JSON lines and
+//! `"frame":"bin"` — against either an in-process server it boots itself
+//! or an external one (`--addr`), and is fully deterministic from `--seed`:
+//! Poisson arrivals at `--rps`, Zipf popularity over `--models`, and a
+//! mixed solver/NFE/deadline/framing profile, replayed over `--conns`
+//! connections. Reports p50/p99 latency, deadline-hit rate, throughput and
+//! the rejected/expired/failed split, then cross-checks every client-side
+//! count against the live `{"cmd":"stats"}` wire (global + per_model) and
+//! exits nonzero on any mismatch.
+//!
+//!     cargo run --release --example loadgen -- --rps 300 --duration-s 2
+//!     cargo run --release --example loadgen -- --sched-policy edf --quick
+//!
+//! Flags: --seed 0 --rps 200 --duration-s 1 --conns 8
+//!        --models gmm2d_oracle[,..] --zipf-s 1.1
+//!        --deadline-share 0.5 --tight-ms 50 --loose-ms 2000
+//!        --samples-share 0.5 --bin-share 0.5
+//!        --nfes 5,10,20 --n-choices 4,16,64 --solvers tab3,ddim,tab2
+//!        --workers 4 --sched-policy oldest|edf   (in-process server)
+//!        --addr HOST:PORT    (target an external server instead; skips
+//!                             booting one)
+//!        --skip-reconcile    (for shared servers with other traffic)
+//!        --quick             (caps duration at 0.25s for CI)
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use deis::coordinator::{Coordinator, CoordinatorConfig, SchedPolicy};
+use deis::exp::default_registry;
+use deis::server;
+use deis::server::loadgen::{self, LoadProfile};
+use deis::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let models = args.list_or("models", "gmm2d_oracle");
+    let mut duration_s = args.f64_or("duration-s", 1.0);
+    if args.bool("quick") {
+        duration_s = duration_s.min(0.25);
+    }
+    let profile = LoadProfile {
+        seed: args.u64_or("seed", 0),
+        rps: args.f64_or("rps", 200.0),
+        duration: Duration::from_secs_f64(duration_s),
+        models: models.clone(),
+        zipf_s: args.f64_or("zipf-s", 1.1),
+        deadline_share: args.f64_or("deadline-share", 0.5),
+        tight_ms: args.u64_or("tight-ms", 50),
+        loose_ms: args.u64_or("loose-ms", 2000),
+        samples_share: args.f64_or("samples-share", 0.5),
+        bin_share: args.f64_or("bin-share", 0.5),
+        nfes: args.usize_list_or("nfes", "5,10,20"),
+        n_choices: args.usize_list_or("n-choices", "4,16,64"),
+        solvers: args.list_or("solvers", "tab3,ddim,tab2"),
+    };
+    let conns = args.usize_or("conns", 8);
+
+    // Either drive an external server or boot one in-process on port 0.
+    let (addr, own_coord) = match args.get("addr") {
+        Some(a) => (a.parse()?, None),
+        None => {
+            let policy = SchedPolicy::parse(&args.str_or("sched-policy", "oldest"))?;
+            let reg = default_registry(&models)?;
+            let cfg = CoordinatorConfig {
+                workers: args.usize_or("workers", 4),
+                sched_policy: policy,
+                ..Default::default()
+            };
+            let coord = Arc::new(Coordinator::new(cfg, reg));
+            let addr = server::serve(coord.clone(), "127.0.0.1:0")?;
+            println!("loadgen: in-process server on {addr} (policy {policy:?})");
+            (addr, Some(coord))
+        }
+    };
+
+    println!(
+        "loadgen: seed {} | {} rps for {:.2}s over {} conns | models {}",
+        profile.seed,
+        profile.rps,
+        profile.duration.as_secs_f64(),
+        conns,
+        models.join(",")
+    );
+    let report = loadgen::run(addr, &profile, conns)?;
+    print!("{}", loadgen::format_report(&report));
+
+    if args.bool("skip-reconcile") {
+        println!("stats reconciliation skipped (--skip-reconcile)");
+    } else {
+        let stats = loadgen::fetch_stats(addr)?;
+        loadgen::reconcile(&report, &stats)?;
+        println!("stats reconciliation: OK (client tallies == server wire)");
+    }
+    // The in-process server's worker/I/O threads are detached; process
+    // exit reaps them (same as `deis serve`). Dropping our handle last
+    // keeps the coordinator alive through the final stats call.
+    drop(own_coord);
+    Ok(())
+}

@@ -77,6 +77,7 @@ mod scheduler;
 pub mod stats;
 
 pub use request::{BatchKey, SampleRequest, SampleResult};
+pub use scheduler::{SchedPolicy, DEFAULT_EDF_AGE_GUARD};
 pub use stats::{ModelStats, ModelStatsSnapshot, Stats, StatsSnapshot};
 
 use std::collections::HashMap;
@@ -147,6 +148,11 @@ pub struct CoordinatorConfig {
     /// (admitting again with the failure streak retained, so one more
     /// failure re-opens instantly while one clean eval closes it).
     pub breaker_cooldown_ms: u64,
+    /// Anchor-selection policy for every shard's ready heap. The default
+    /// (`Oldest`) is bit-compatible with the pre-policy scheduler; `Edf`
+    /// anchors the tightest part deadline first with an age-based
+    /// starvation guard for deadline-less parts (`--sched-policy`).
+    pub sched_policy: SchedPolicy,
 }
 
 impl Default for CoordinatorConfig {
@@ -158,6 +164,7 @@ impl Default for CoordinatorConfig {
             max_inflight_per_model: 4096,
             breaker_threshold: 5,
             breaker_cooldown_ms: 1000,
+            sched_policy: SchedPolicy::Oldest,
         }
     }
 }
@@ -264,7 +271,7 @@ impl Coordinator {
             cooldown: Duration::from_millis(cfg.breaker_cooldown_ms),
         };
         let shared = Arc::new(Shared {
-            shards: ShardMap::new(cfg.max_batch_samples.max(1), breaker),
+            shards: ShardMap::new(cfg.max_batch_samples.max(1), breaker, cfg.sched_policy),
             wake: WakeRail::new(),
             shutdown: AtomicBool::new(false),
             draining: AtomicBool::new(false),

@@ -29,10 +29,16 @@
 //!   Groups admitted in the same tick with the same grid stay in lockstep
 //!   and merge on *every* step, including across different solvers.
 //!
-//! Scheduling policy per shard: pick the bucket containing the
-//! longest-waiting trajectory group (FIFO fairness keeps lockstep groups
-//! together), cap it at `max_batch_samples`, run the eval, scatter the eps
-//! slices back through each cursor and advance it.
+//! Scheduling policy per shard ([`SchedPolicy`]): pick the bucket
+//! containing the highest-priority trajectory group, cap it at
+//! `max_batch_samples`, run the eval, scatter the eps slices back through
+//! each cursor and advance it. Under the default `oldest` policy the
+//! priority is the group's earliest enqueue time (FIFO fairness keeps
+//! lockstep groups together — bit-compatible with the pre-policy
+//! scheduler). Under `edf` the priority is the group's earliest part
+//! deadline, clamped at `oldest + age_guard` so deadline-less (or
+//! far-deadline) groups are never starved past the age guard by a stream
+//! of tight-deadline arrivals.
 //!
 //! # Workers, affinity and stealing
 //!
@@ -92,11 +98,12 @@
 //!   O(bucket), and a bucket is exactly one merged dispatch candidate.
 //!   (The model key the single-state index carried is gone: a shard serves
 //!   one model by construction.)
-//! * `ready`: a min-heap of `(oldest, generation, slot)` — anchor selection
-//!   (the shard's longest-waiting ready flight) is O(log flights)
-//!   amortized. Entries are lazily invalidated: each slot carries a
-//!   generation bumped on every (re)occupancy, and stale entries are
-//!   discarded when they surface at the top.
+//! * `ready`: a min-heap of `(priority, generation, slot)` — anchor
+//!   selection (the shard's highest-priority ready flight under its
+//!   [`SchedPolicy`]) is O(log flights) amortized. Entries are lazily
+//!   invalidated: each slot carries a generation bumped on every
+//!   (re)occupancy, and stale entries are discarded when they surface at
+//!   the top.
 //! * `free_slots`: vacant slot indices, so admission is a pop instead of a
 //!   linear scan for a `None`.
 //!
@@ -180,6 +187,49 @@ use crate::util::sync::{lock_recover, read_recover, wait_recover, write_recover}
 /// resolved at submit (so admission does no grid/coefficient work).
 pub(crate) type Tag = (Responder, Instant, Option<Instant>, Arc<SolverPlan>);
 
+/// Default EDF starvation guard: a flight is anchored no later than it
+/// would be if a deadline fired this long after its earliest enqueue.
+pub const DEFAULT_EDF_AGE_GUARD: Duration = Duration::from_millis(250);
+
+/// Anchor-selection policy for the per-shard ready heap (`--sched-policy`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// FIFO fairness: anchor the longest-waiting ready flight. The default,
+    /// bit-compatible with the pre-policy scheduler.
+    Oldest,
+    /// Earliest-deadline-first: anchor the ready flight whose tightest part
+    /// deadline fires soonest. Deadline-less (or far-deadline) flights rank
+    /// as if a deadline fired `age_guard` after their earliest enqueue, so
+    /// a stream of tight-deadline arrivals can delay them by at most the
+    /// guard relative to FIFO — never starve them.
+    Edf {
+        /// Starvation bound for deadline-less parts.
+        age_guard: Duration,
+    },
+}
+
+impl SchedPolicy {
+    /// EDF with the default starvation guard.
+    pub fn edf() -> SchedPolicy {
+        SchedPolicy::Edf { age_guard: DEFAULT_EDF_AGE_GUARD }
+    }
+
+    /// Parse a `--sched-policy` value (`oldest` | `edf`).
+    pub fn parse(s: &str) -> anyhow::Result<SchedPolicy> {
+        match s {
+            "oldest" => Ok(SchedPolicy::Oldest),
+            "edf" => Ok(SchedPolicy::edf()),
+            other => anyhow::bail!("unknown sched policy '{other}' (expected oldest|edf)"),
+        }
+    }
+}
+
+impl Default for SchedPolicy {
+    fn default() -> SchedPolicy {
+        SchedPolicy::Oldest
+    }
+}
+
 /// One client request inside a trajectory group.
 struct FlightPart {
     n: usize,
@@ -214,6 +264,28 @@ struct Flight {
     started: Option<Instant>,
     /// Earliest enqueue time over parts — the FIFO fairness key.
     oldest: Instant,
+}
+
+impl Flight {
+    /// Ready-heap ordering key under `policy` (smaller anchors first).
+    /// `Oldest` reproduces the pre-policy heap key exactly. `Edf` ranks by
+    /// the tightest part deadline, clamped at `oldest + age_guard`: the
+    /// clamp is both the deadline-less ranking AND the starvation guard —
+    /// once a flight has aged past the guard its key is in the past, where
+    /// no future deadline can outrank it.
+    fn priority(&self, policy: SchedPolicy) -> Instant {
+        match policy {
+            SchedPolicy::Oldest => self.oldest,
+            SchedPolicy::Edf { age_guard } => {
+                let guard = self.oldest + age_guard;
+                self.parts
+                    .iter()
+                    .filter_map(|p| p.deadline)
+                    .min()
+                    .map_or(guard, |d| d.min(guard))
+            }
+        }
+    }
 }
 
 /// Circuit-breaker configuration, shared by every shard of a coordinator.
@@ -327,6 +399,7 @@ impl Shard {
         model: Arc<dyn EpsModel>,
         max_batch_samples: usize,
         breaker: BreakerConfig,
+        policy: SchedPolicy,
     ) -> Shard {
         let dim = model.dim();
         Shard {
@@ -334,7 +407,7 @@ impl Shard {
             model,
             dim,
             breaker: Breaker::new(breaker),
-            state: Mutex::new(ShardState::new(max_batch_samples)),
+            state: Mutex::new(ShardState::new(max_batch_samples, policy)),
             load: AtomicUsize::new(0),
             inflight: AtomicUsize::new(0),
             stats: ModelStats::default(),
@@ -378,6 +451,7 @@ pub(crate) struct ShardMap {
     version: AtomicU64,
     max_batch_samples: usize,
     breaker: BreakerConfig,
+    policy: SchedPolicy,
 }
 
 #[derive(Default)]
@@ -388,12 +462,17 @@ struct ShardMapInner {
 }
 
 impl ShardMap {
-    pub(crate) fn new(max_batch_samples: usize, breaker: BreakerConfig) -> ShardMap {
+    pub(crate) fn new(
+        max_batch_samples: usize,
+        breaker: BreakerConfig,
+        policy: SchedPolicy,
+    ) -> ShardMap {
         ShardMap {
             inner: RwLock::new(ShardMapInner::default()),
             version: AtomicU64::new(0),
             max_batch_samples,
             breaker,
+            policy,
         }
     }
 
@@ -413,7 +492,8 @@ impl ShardMap {
         if let Some(s) = w.by_name.get(name) {
             return Some(s.clone()); // racing creator won; use its shard
         }
-        let shard = Arc::new(Shard::new(name, model, self.max_batch_samples, self.breaker));
+        let shard =
+            Arc::new(Shard::new(name, model, self.max_batch_samples, self.breaker, self.policy));
         w.by_name.insert(name.to_string(), shard.clone());
         w.ordered.push(shard.clone());
         drop(w);
@@ -545,9 +625,12 @@ pub(crate) struct ShardState {
     /// Ready index: `pending_t bits -> slots` pending that eval. The model
     /// is implied by the shard.
     buckets: HashMap<u64, Vec<usize>>,
-    /// Min-heap (via `Reverse`) of `(oldest, generation, slot)` over ready
-    /// flights; stale entries are skipped/discarded lazily at the top.
+    /// Min-heap (via `Reverse`) of `(priority, generation, slot)` over
+    /// ready flights, keyed by [`Flight::priority`] under `policy`; stale
+    /// entries are skipped/discarded lazily at the top.
     ready: BinaryHeap<Reverse<(Instant, u64, usize)>>,
+    /// Anchor-selection policy; fixed at shard creation.
+    policy: SchedPolicy,
     /// Occupied slots — with `queue.len()`, the shard's published load.
     slotted: usize,
     /// Slotted-or-checked-out parts that carry a deadline. When zero — the
@@ -557,7 +640,7 @@ pub(crate) struct ShardState {
 }
 
 impl ShardState {
-    pub(crate) fn new(max_batch_samples: usize) -> ShardState {
+    pub(crate) fn new(max_batch_samples: usize, policy: SchedPolicy) -> ShardState {
         ShardState {
             queue: Batcher::new(max_batch_samples),
             flights: Vec::new(),
@@ -565,6 +648,7 @@ impl ShardState {
             free_slots: Vec::new(),
             buckets: HashMap::new(),
             ready: BinaryHeap::new(),
+            policy,
             slotted: 0,
             deadline_parts: 0,
         }
@@ -586,7 +670,7 @@ impl ShardState {
         debug_assert!(self.flights[slot].is_none(), "insert into an occupied slot");
         self.slot_gen[slot] = self.slot_gen[slot].wrapping_add(1);
         self.buckets.entry(t_bits).or_default().push(slot);
-        self.ready.push(Reverse((f.oldest, self.slot_gen[slot], slot)));
+        self.ready.push(Reverse((f.priority(self.policy), self.slot_gen[slot], slot)));
         self.flights[slot] = Some(f);
         self.slotted += 1;
     }
@@ -643,10 +727,11 @@ impl ShardState {
                             .iter()
                             .filter(|Reverse((o, g, s))| *s == slot
                                 && *g == self.slot_gen[slot]
-                                && *o == f.oldest)
+                                && *o == f.priority(self.policy))
                             .count(),
                         1,
-                        "slot {slot} must have exactly one live heap entry"
+                        "slot {slot} must have exactly one live heap entry \
+                         keyed by the policy priority"
                     );
                     assert!(!self.free_slots.contains(&slot), "occupied slot {slot} on free list");
                 }
@@ -883,7 +968,9 @@ fn build_flight(sh: &Shared, shard: &Shard, group: Vec<Pending<Tag>>) -> Option<
     for p in group {
         if p.tag.2.is_some_and(|d| d <= now) {
             sh.stats.expired.fetch_add(1, Ordering::Relaxed);
+            sh.stats.deadline_missed.fetch_add(1, Ordering::Relaxed);
             shard.stats.expired.fetch_add(1, Ordering::Relaxed);
+            shard.stats.deadline_missed.fetch_add(1, Ordering::Relaxed);
             p.tag.0.send(Err(anyhow::anyhow!("deadline exceeded while queued")));
             release_inflight(sh, shard);
         } else {
@@ -975,7 +1062,9 @@ fn expire_deadlines(sh: &Shared, shard: &Shard, st: &mut ShardState) {
                 f.parts.retain(|part| {
                     if part.deadline.is_some_and(|d| d <= now) {
                         sh.stats.expired.fetch_add(1, Ordering::Relaxed);
+                        sh.stats.deadline_missed.fetch_add(1, Ordering::Relaxed);
                         shard.stats.expired.fetch_add(1, Ordering::Relaxed);
+                        shard.stats.deadline_missed.fetch_add(1, Ordering::Relaxed);
                         part.responder.send(Err(anyhow::anyhow!(
                             "deadline exceeded before sampling completed"
                         )));
@@ -994,24 +1083,32 @@ fn expire_deadlines(sh: &Shared, shard: &Shard, st: &mut ShardState) {
             // No live requester left: abort the trajectory, reclaiming
             // its remaining eval budget.
             drop(st.remove_flight(slot));
+        } else if removed > 0 && matches!(st.policy, SchedPolicy::Edf { .. }) {
+            // Under EDF the flight's priority depends on its surviving
+            // parts' deadlines; re-slot it so the heap key (and the index
+            // invariant) track the new tightest deadline. The generation
+            // bump lazily stales the old entry.
+            let f = st.remove_flight(slot);
+            st.insert_flight(f);
         }
     }
 }
 
 /// Choose the next merged eval: the `t` bucket containing the shard's
-/// longest-waiting ready flight, filled in FIFO order up to the sample
-/// budget — and **check the members out of their slots**, transferring
-/// ownership to the calling worker so gather/eval/scatter/advance all run
-/// without the shard mutex.
+/// highest-priority ready flight (under its [`SchedPolicy`]), filled in
+/// priority order up to the sample budget — and **check the members out of
+/// their slots**, transferring ownership to the calling worker so
+/// gather/eval/scatter/advance all run without the shard mutex.
 ///
 /// Anchor selection peeks the ready heap (discarding stale entries at the
 /// top) instead of scanning the slots; member gathering reads only the
 /// anchor's bucket. Cost: O(log flights + bucket), independent of the total
 /// flight count.
 fn pick_group(st: &mut ShardState, budget: usize) -> Option<GroupJob> {
-    // Anchor: the oldest live ready flight. Peek, don't pop — in the rare
-    // tie case where an equally-old bucket mate wins the sort below and the
-    // budget excludes the anchor, its entry must survive for the next tick.
+    // Anchor: the highest-priority live ready flight. Peek, don't pop — in
+    // the rare tie case where an equal-priority bucket mate wins the sort
+    // below and the budget excludes the anchor, its entry must survive for
+    // the next tick.
     let a = loop {
         let &Reverse((_, gen, slot)) = st.ready.peek()?;
         if st.heap_entry_live(gen, slot) {
@@ -1020,11 +1117,11 @@ fn pick_group(st: &mut ShardState, budget: usize) -> Option<GroupJob> {
         st.ready.pop();
     };
     let t = st.flights[a].as_ref().unwrap().cursor.pending_t().unwrap();
-    // Every ready flight pending the same t — the anchor's bucket — oldest
-    // first. The anchor is the bucket's (possibly tied) minimum.
+    // Every ready flight pending the same t — the anchor's bucket — in
+    // priority order. The anchor is the bucket's (possibly tied) minimum.
     let mut members: Vec<(Instant, usize)> = st.buckets[&t.to_bits()]
         .iter()
-        .map(|&s| (st.flights[s].as_ref().unwrap().oldest, s))
+        .map(|&s| (st.flights[s].as_ref().unwrap().priority(st.policy), s))
         .collect();
     members.sort_unstable();
     let started = Instant::now();
@@ -1174,7 +1271,9 @@ fn fail_flights(sh: &Shared, shard: &Shard, failed: Vec<(Flight, &str)>) {
         for part in flight.parts {
             if part.deadline.is_some_and(|dl| dl <= now) {
                 sh.stats.expired.fetch_add(1, Ordering::Relaxed);
+                sh.stats.deadline_missed.fetch_add(1, Ordering::Relaxed);
                 shard.stats.expired.fetch_add(1, Ordering::Relaxed);
+                shard.stats.deadline_missed.fetch_add(1, Ordering::Relaxed);
                 part.responder.send(Err(anyhow::anyhow!(
                     "deadline exceeded before sampling completed"
                 )));
@@ -1248,7 +1347,9 @@ fn complete_flight(sh: &Shared, shard: &Shard, mut flight: Flight) {
     for part in flight.parts {
         if part.deadline.is_some_and(|dl| dl <= solve_end) {
             sh.stats.expired.fetch_add(1, Ordering::Relaxed);
+            sh.stats.deadline_missed.fetch_add(1, Ordering::Relaxed);
             shard.stats.expired.fetch_add(1, Ordering::Relaxed);
+            shard.stats.deadline_missed.fetch_add(1, Ordering::Relaxed);
             part.responder.send(Err(anyhow::anyhow!(
                 "deadline exceeded before sampling completed"
             )));
@@ -1275,6 +1376,13 @@ fn complete_flight(sh: &Shared, shard: &Shard, mut flight: Flight) {
         sh.stats.record_latency(part.enqueued.elapsed().as_micros() as u64);
         shard.stats.samples.fetch_add(part.n as u64, Ordering::Relaxed);
         shard.stats.completed.fetch_add(1, Ordering::Relaxed);
+        // A delivered deadline-carrying part beat its deadline: with the
+        // miss counts at every expiry site, hit/(hit+missed) is the
+        // deadline-hit rate, global and per model.
+        if part.deadline.is_some() {
+            sh.stats.deadline_hit.fetch_add(1, Ordering::Relaxed);
+            shard.stats.deadline_hit.fetch_add(1, Ordering::Relaxed);
+        }
         part.responder.send(Ok(res));
         release_inflight(sh, shard);
     }
@@ -1296,7 +1404,7 @@ mod tests {
     fn test_shard() -> Shard {
         let model: Arc<dyn EpsModel> =
             Arc::new(GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp()));
-        Shard::new("gmm2d", model, 1024, BreakerConfig::default())
+        Shard::new("gmm2d", model, 1024, BreakerConfig::default(), SchedPolicy::Oldest)
     }
 
     /// A slottable flight over the analytic oracle with `n` rows, one part.
@@ -1355,7 +1463,7 @@ mod tests {
 
     #[test]
     fn ready_index_invariants_hold_across_mutations() {
-        let mut st = ShardState::new(1024);
+        let mut st = ShardState::new(1024, SchedPolicy::Oldest);
         let mut rxs = Vec::new();
         // Insert: two fresh flights (shared t_N = 1.0 bucket) plus one
         // pre-advanced flight, which pends a later grid node and is the
@@ -1418,7 +1526,7 @@ mod tests {
 
     #[test]
     fn pick_group_is_fifo_and_respects_budget() {
-        let mut st = ShardState::new(1024);
+        let mut st = ShardState::new(1024, SchedPolicy::Oldest);
         let mut rxs = Vec::new();
         // Three bucket-mates with rows 1, 2, 3, inserted oldest-first.
         for (seed, n) in [(1u64, 1usize), (2, 2), (3, 3)] {
@@ -1442,9 +1550,112 @@ mod tests {
         assert!(pick_group(&mut st, 1024).is_none(), "no ready flights left");
     }
 
+    #[test]
+    fn edf_anchors_tightest_deadline_ahead_of_an_older_flight() {
+        let far = Instant::now() + Duration::from_secs(5);
+        let soon = Instant::now() + Duration::from_millis(50);
+        // EDF: the YOUNGER flight with the tighter deadline (rows 3)
+        // anchors ahead of the older loose-deadline flight (rows 2). The
+        // flights pend different t's (pre_advance), so the anchor's bucket
+        // is exactly one flight and `rows` identifies the winner.
+        let mut st = ShardState::new(1024, SchedPolicy::edf());
+        let (loose, _rx1) = test_flight(1, 9, 2, Some(far), 1);
+        let (tight, _rx2) = test_flight(2, 6, 3, Some(soon), 0);
+        slot_in(&mut st, loose);
+        slot_in(&mut st, tight);
+        st.assert_ready_invariants();
+        let job = pick_group(&mut st, 1024).unwrap();
+        assert_eq!(job.rows, 3, "EDF must anchor the tightest deadline, not the oldest");
+        st.assert_ready_invariants();
+
+        // The identical shape under the default policy anchors the older
+        // flight — deadlines must not influence `oldest` (bit-compat).
+        let mut st = ShardState::new(1024, SchedPolicy::Oldest);
+        let (loose, _rx3) = test_flight(1, 9, 2, Some(far), 1);
+        let (tight, _rx4) = test_flight(2, 6, 3, Some(soon), 0);
+        slot_in(&mut st, loose);
+        slot_in(&mut st, tight);
+        let job = pick_group(&mut st, 1024).unwrap();
+        assert_eq!(job.rows, 2, "oldest-first must ignore deadlines");
+        st.assert_ready_invariants();
+    }
+
+    #[test]
+    fn edf_age_guard_keeps_deadline_less_flights_from_starving() {
+        let guard = Duration::from_millis(10);
+        // A deadline-less flight aged past the guard outranks a fresh
+        // tight-deadline arrival: its clamp (oldest + guard) is already in
+        // the past, where no future deadline can reach.
+        let mut st = ShardState::new(1024, SchedPolicy::Edf { age_guard: guard });
+        let (mut aged, _rx1) = test_flight(1, 9, 2, None, 1);
+        aged.oldest = Instant::now() - guard - Duration::from_millis(50);
+        let (tight, _rx2) =
+            test_flight(2, 6, 3, Some(Instant::now() + Duration::from_millis(5)), 0);
+        slot_in(&mut st, aged);
+        slot_in(&mut st, tight);
+        st.assert_ready_invariants();
+        let job = pick_group(&mut st, 1024).unwrap();
+        assert_eq!(job.rows, 2, "a flight aged past the guard must not be starved");
+        st.assert_ready_invariants();
+
+        // A FRESH deadline-less flight yields to the tight deadline —
+        // that reordering is what EDF buys, bounded by the guard above.
+        let mut st = ShardState::new(1024, SchedPolicy::Edf { age_guard: guard });
+        let (fresh, _rx3) = test_flight(1, 9, 2, None, 1);
+        let (tight, _rx4) =
+            test_flight(2, 6, 3, Some(Instant::now() + Duration::from_millis(5)), 0);
+        slot_in(&mut st, fresh);
+        slot_in(&mut st, tight);
+        let job = pick_group(&mut st, 1024).unwrap();
+        assert_eq!(job.rows, 3, "a fresh deadline-less flight must yield to a tight deadline");
+        st.assert_ready_invariants();
+    }
+
+    #[test]
+    fn edf_rekeys_a_flight_when_its_tightest_deadline_part_expires() {
+        let sh = bare_shared();
+        let shard = test_shard();
+        let mut st = ShardState::new(1024, SchedPolicy::edf());
+        // Two-part flight: the tight part is already expired, the loose one
+        // lives on. After the sweep the flight's priority is governed by
+        // the surviving deadline — the invariant check fails if the heap
+        // key were left at the expired part's deadline.
+        let (mut f, _rx0) = test_flight(1, 6, 4, None, 0);
+        let (tx1, rx1) = sync_channel(1);
+        let (tx2, _rx2) = sync_channel(1);
+        let now = Instant::now();
+        f.parts = vec![
+            FlightPart {
+                n: 2,
+                row0: 0,
+                responder: Responder::channel(tx1),
+                enqueued: now,
+                deadline: Some(now - Duration::from_millis(1)),
+            },
+            FlightPart {
+                n: 2,
+                row0: 2,
+                responder: Responder::channel(tx2),
+                enqueued: now,
+                deadline: Some(now + Duration::from_secs(5)),
+            },
+        ];
+        sh.inflight_parts.fetch_add(2, Ordering::SeqCst);
+        shard.inflight.fetch_add(2, Ordering::SeqCst);
+        slot_in(&mut st, f);
+        expire_deadlines(&sh, &shard, &mut st);
+        st.assert_ready_invariants();
+        assert_eq!(st.slotted, 1, "the flight survives on its live part");
+        assert_eq!(st.deadline_parts, 1);
+        assert!(rx1.try_recv().unwrap().is_err(), "expired part must get an error");
+        assert_eq!(shard.stats.snapshot().deadline_missed, 1);
+        assert_eq!(sh.stats.snapshot().deadline_missed, 1);
+        assert_eq!(sh.inflight_parts.load(Ordering::SeqCst), 1);
+    }
+
     fn bare_shared() -> Shared {
         Shared {
-            shards: ShardMap::new(64, BreakerConfig::default()),
+            shards: ShardMap::new(64, BreakerConfig::default(), SchedPolicy::Oldest),
             wake: WakeRail::new(),
             shutdown: std::sync::atomic::AtomicBool::new(false),
             draining: std::sync::atomic::AtomicBool::new(false),
@@ -1488,6 +1699,8 @@ mod tests {
         st.assert_ready_invariants();
         assert_eq!(shard.stats.snapshot().expired, 1);
         assert_eq!(sh.stats.snapshot().expired, 1, "sweep must count globally too");
+        assert_eq!(shard.stats.snapshot().deadline_missed, 1, "expiry is a deadline miss");
+        assert_eq!(sh.stats.snapshot().deadline_missed, 1);
         assert_eq!(st.deadline_parts, 0);
         assert_eq!(st.slotted, 1, "only the live flight remains");
         assert_eq!(sh.inflight_parts.load(Ordering::SeqCst), 1);
@@ -1566,6 +1779,7 @@ mod tests {
             model,
             1024,
             BreakerConfig { threshold: 2, cooldown: Duration::from_millis(50) },
+            SchedPolicy::Oldest,
         );
         let (f, rx) = test_flight(1, 6, 2, None, 0);
         sh.inflight_parts.fetch_add(1, Ordering::SeqCst);
@@ -1607,6 +1821,7 @@ mod tests {
             model2,
             1024,
             BreakerConfig { threshold: 2, cooldown: Duration::from_millis(50) },
+            SchedPolicy::Oldest,
         );
         for seed in [3u64, 4] {
             let (f, _rx) = test_flight(seed, 6, 2, None, 0);
@@ -1631,7 +1846,7 @@ mod tests {
             GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp()),
             crate::score::FaultPlan::new().nan_on(0),
         ));
-        let shard = Shard::new("nan", model, 1024, BreakerConfig::default());
+        let shard = Shard::new("nan", model, 1024, BreakerConfig::default(), SchedPolicy::Oldest);
         let (f, rx) = test_flight(1, 6, 2, None, 0);
         sh.inflight_parts.fetch_add(1, Ordering::SeqCst);
         shard.inflight.fetch_add(1, Ordering::SeqCst);
@@ -1676,7 +1891,7 @@ mod tests {
         let mut reg = ModelRegistry::new();
         reg.insert("a", Arc::new(GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp())));
         reg.insert("b", Arc::new(GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp())));
-        let map = ShardMap::new(64, BreakerConfig::default());
+        let map = ShardMap::new(64, BreakerConfig::default(), SchedPolicy::Oldest);
         assert_eq!(map.count(), 0, "no shards before traffic");
         let a1 = map.get_or_create("a", &reg).expect("registered model must resolve");
         assert_eq!(map.count(), 1);

@@ -11,6 +11,16 @@
 //!     panicking cursor, or work abandoned by a forced shutdown). The
 //!     lifecycle therefore balances: every submitted request lands in
 //!     exactly one of `completed`/`rejected`/`expired`/`failed`.
+//!   * `deadline_hit` / `deadline_missed` — the deadline-carrying subset
+//!     of the lifecycle: a `deadline_hit` is a completed request that was
+//!     submitted with `deadline_ms` and delivered in time; a
+//!     `deadline_missed` is counted at every site that counts `expired`
+//!     (queue expiry, the slotted sweep, delivery re-check, and a failing
+//!     flight whose deadline had already fired), so `deadline_missed ==
+//!     expired` always and `deadline_hit / (deadline_hit +
+//!     deadline_missed)` is the deadline-hit rate. A deadline-carrying
+//!     request that is `rejected` or `failed` before its deadline fires
+//!     counts in neither.
 //!   * `eval_panics` — ε-eval dispatches that panicked (one per panicking
 //!     merged call, not per affected request; the affected requests land in
 //!     `failed`/`expired`). `unhealthy` — submits refused because the
@@ -179,6 +189,8 @@ pub struct ModelStats {
     pub rejected: AtomicU64,
     pub expired: AtomicU64,
     pub failed: AtomicU64,
+    pub deadline_hit: AtomicU64,
+    pub deadline_missed: AtomicU64,
     pub eval_panics: AtomicU64,
     pub unhealthy: AtomicU64,
     pub samples: AtomicU64,
@@ -200,6 +212,8 @@ pub struct ModelStatsSnapshot {
     pub rejected: u64,
     pub expired: u64,
     pub failed: u64,
+    pub deadline_hit: u64,
+    pub deadline_missed: u64,
     pub eval_panics: u64,
     pub unhealthy: u64,
     pub samples: u64,
@@ -231,6 +245,8 @@ impl ModelStats {
             rejected: self.rejected.load(Ordering::Relaxed),
             expired: self.expired.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
+            deadline_hit: self.deadline_hit.load(Ordering::Relaxed),
+            deadline_missed: self.deadline_missed.load(Ordering::Relaxed),
             eval_panics: self.eval_panics.load(Ordering::Relaxed),
             unhealthy: self.unhealthy.load(Ordering::Relaxed),
             samples: self.samples.load(Ordering::Relaxed),
@@ -256,6 +272,8 @@ pub struct Stats {
     pub rejected: AtomicU64,
     pub expired: AtomicU64,
     pub failed: AtomicU64,
+    pub deadline_hit: AtomicU64,
+    pub deadline_missed: AtomicU64,
     pub eval_panics: AtomicU64,
     pub unhealthy: AtomicU64,
     pub samples: AtomicU64,
@@ -278,6 +296,8 @@ pub struct StatsSnapshot {
     pub rejected: u64,
     pub expired: u64,
     pub failed: u64,
+    pub deadline_hit: u64,
+    pub deadline_missed: u64,
     pub eval_panics: u64,
     pub unhealthy: u64,
     pub samples: u64,
@@ -327,6 +347,8 @@ impl Stats {
             rejected: self.rejected.load(Ordering::Relaxed),
             expired: self.expired.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
+            deadline_hit: self.deadline_hit.load(Ordering::Relaxed),
+            deadline_missed: self.deadline_missed.load(Ordering::Relaxed),
             eval_panics: self.eval_panics.load(Ordering::Relaxed),
             unhealthy: self.unhealthy.load(Ordering::Relaxed),
             samples: self.samples.load(Ordering::Relaxed),

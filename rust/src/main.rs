@@ -5,6 +5,7 @@
 //!           [--precision f64|f32] [--max-batch 1024] [--max-inflight 4096]
 //!           [--max-inflight-per-model 4096]
 //!           [--breaker-threshold 5] [--breaker-cooldown-ms 1000]
+//!           [--sched-policy oldest|edf] [--edf-age-guard-ms 250]
 //!           [--max-conns 1024] [--read-timeout-ms 30000]
 //!           [--write-timeout-ms 30000] [--max-line-bytes 262144]
 //!           [--io-threads N]   (readiness-driven I/O threads; default
@@ -21,7 +22,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use deis::coordinator::{Coordinator, CoordinatorConfig, SampleRequest};
+use deis::coordinator::{Coordinator, CoordinatorConfig, SampleRequest, SchedPolicy};
 use deis::exp::default_registry_with;
 use deis::gmm::Gmm;
 use deis::metrics;
@@ -66,6 +67,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // lasts before a retry is admitted. 0 disables the breaker.
         breaker_threshold: args.u64_or("breaker-threshold", 5) as u32,
         breaker_cooldown_ms: args.u64_or("breaker-cooldown-ms", 1000),
+        sched_policy: parse_sched_policy(args)?,
     };
     let opts = server::ServeOptions {
         max_conns: args.usize_or("max-conns", 1024),
@@ -116,6 +118,20 @@ fn cmd_sample(args: &Args) -> Result<()> {
     }
     coord.shutdown();
     Ok(())
+}
+
+fn parse_sched_policy(args: &Args) -> Result<SchedPolicy> {
+    let policy = SchedPolicy::parse(&args.str_or("sched-policy", "oldest"))?;
+    Ok(match policy {
+        SchedPolicy::Edf { .. } if args.get("edf-age-guard-ms").is_some() => {
+            SchedPolicy::Edf {
+                age_guard: std::time::Duration::from_millis(
+                    args.u64_or("edf-age-guard-ms", 250),
+                ),
+            }
+        }
+        p => p,
+    })
 }
 
 fn parse_precision(args: &Args) -> Result<Precision> {

@@ -1,0 +1,567 @@
+//! Open-loop load-generation engine for the wire protocol — the library
+//! half of `examples/loadgen.rs`, shared with `tests/loadgen_smoke.rs`.
+//!
+//! The plan is built up front and is *fully deterministic from the seed*:
+//! [`schedule`] turns a [`LoadProfile`] into a concrete list of
+//! [`PlannedRequest`]s — Poisson arrival times at the target RPS, Zipf
+//! model popularity over the profile's model list, and a per-request mix
+//! of solver/NFE/batch-size/deadline/framing drawn from a second RNG
+//! stream. Two calls with the same profile produce byte-identical plans,
+//! so a load experiment is reproducible from `--seed` alone.
+//!
+//! [`run`] then replays the plan against a live server in open-loop
+//! fashion: requests are dealt round-robin across a fixed pool of
+//! connections, and each connection thread sleeps until a request's
+//! scheduled arrival time before sending it — arrivals do not wait for
+//! earlier replies, except that one connection carries one request at a
+//! time (the wire protocol's ordering contract), so the pool size bounds
+//! how many replies may be outstanding. With enough connections the
+//! offered load tracks the schedule even when the server is slow.
+//!
+//! Replies are classified client-side into the same four lifecycle terms
+//! the server counts (`completed` / `rejected` / `expired` / `failed`),
+//! and [`reconcile`] cross-checks the client tallies against the live
+//! `{"cmd":"stats"}` wire — global and `per_model` — so a loadgen run is
+//! also an end-to-end audit of the server's accounting. Reconciliation
+//! assumes the generator is the server's only client.
+
+use std::collections::BTreeMap;
+use std::net::SocketAddr;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::stats::LatencyHistogram;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::sync::lock_recover;
+
+use super::Client;
+
+/// XOR tag deriving the request-mix RNG stream from the arrival stream's
+/// seed, so the two draws cannot alias.
+const MIX_STREAM_TAG: u64 = 0xD1FF_0517;
+
+/// What traffic to offer. Every field participates in the deterministic
+/// plan; [`LoadProfile::default`] is a sane mixed workload against the
+/// artifact-free `gmm2d_oracle` model.
+#[derive(Clone, Debug)]
+pub struct LoadProfile {
+    /// Master seed: same seed + same profile ⇒ identical plan.
+    pub seed: u64,
+    /// Target offered load, requests per second (Poisson arrivals).
+    pub rps: f64,
+    /// Length of the arrival window; requests are scheduled in `[0, dur)`.
+    pub duration: Duration,
+    /// Models to spread traffic over, most-popular first (Zipf rank 1..).
+    pub models: Vec<String>,
+    /// Zipf exponent for model popularity (0 = uniform).
+    pub zipf_s: f64,
+    /// Fraction of requests that carry a `deadline_ms`.
+    pub deadline_share: f64,
+    /// Tight/loose deadline values; deadline-carrying requests split
+    /// evenly between the two.
+    pub tight_ms: u64,
+    pub loose_ms: u64,
+    /// Fraction of requests asking for `return_samples`.
+    pub samples_share: f64,
+    /// Of the `return_samples` requests, fraction using `"frame":"bin"`.
+    pub bin_share: f64,
+    /// NFE choices, drawn uniformly.
+    pub nfes: Vec<usize>,
+    /// Batch-size (`n`) choices, drawn uniformly.
+    pub n_choices: Vec<usize>,
+    /// Solver names (wire spelling), drawn uniformly.
+    pub solvers: Vec<String>,
+}
+
+impl Default for LoadProfile {
+    fn default() -> LoadProfile {
+        LoadProfile {
+            seed: 0,
+            rps: 200.0,
+            duration: Duration::from_secs(1),
+            models: vec!["gmm2d_oracle".to_string()],
+            zipf_s: 1.1,
+            deadline_share: 0.5,
+            tight_ms: 50,
+            loose_ms: 2000,
+            samples_share: 0.5,
+            bin_share: 0.5,
+            nfes: vec![5, 10, 20],
+            n_choices: vec![4, 16, 64],
+            solvers: vec!["tab3".to_string(), "ddim".to_string(), "tab2".to_string()],
+        }
+    }
+}
+
+/// One concrete request in the plan: when to send it and exactly what to
+/// send. `bin` implies `return_samples` (a bin frame with no payload
+/// degrades server-side, so the plan never produces that combination).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlannedRequest {
+    /// Scheduled arrival, relative to the start of the run.
+    pub at: Duration,
+    pub model: String,
+    pub solver: String,
+    pub nfe: usize,
+    pub n: usize,
+    pub seed: u64,
+    pub deadline_ms: Option<u64>,
+    pub return_samples: bool,
+    pub bin: bool,
+}
+
+impl PlannedRequest {
+    /// The wire line for this request.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("model", Json::str(&self.model)),
+            ("solver", Json::str(&self.solver)),
+            ("nfe", Json::num(self.nfe as f64)),
+            ("n", Json::num(self.n as f64)),
+            ("seed", Json::uint(self.seed)),
+        ];
+        if let Some(ms) = self.deadline_ms {
+            pairs.push(("deadline_ms", Json::num(ms as f64)));
+        }
+        if self.return_samples {
+            pairs.push(("return_samples", Json::Bool(true)));
+        }
+        if self.bin {
+            pairs.push(("frame", Json::str("bin")));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Zipf CDF over ranks 1..=n with exponent s (s = 0 ⇒ uniform). The CDF
+/// is precomputed once; a uniform draw picks the model index.
+fn zipf_cdf(n: usize, s: f64) -> Vec<f64> {
+    let weights: Vec<f64> = (1..=n).map(|r| (r as f64).powf(-s)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut acc = 0.0;
+    weights
+        .iter()
+        .map(|w| {
+            acc += w / total;
+            acc
+        })
+        .collect()
+}
+
+/// Build the deterministic request plan. Arrival times come from one RNG
+/// stream (exponential inter-arrival gaps at `rps`), the per-request mix
+/// from a second independent stream, so e.g. adding a model to the mix
+/// does not shift the arrival schedule.
+pub fn schedule(profile: &LoadProfile) -> Vec<PlannedRequest> {
+    assert!(!profile.models.is_empty(), "profile needs at least one model");
+    assert!(!profile.nfes.is_empty() && !profile.n_choices.is_empty());
+    assert!(!profile.solvers.is_empty());
+    assert!(profile.rps > 0.0, "rps must be positive");
+    let mut arrivals = Rng::new(profile.seed);
+    let mut mix = Rng::new(profile.seed ^ MIX_STREAM_TAG);
+    let cdf = zipf_cdf(profile.models.len(), profile.zipf_s);
+    let horizon = profile.duration.as_secs_f64();
+    let mut plan = Vec::new();
+    let mut t = 0.0f64;
+    loop {
+        // Exponential gap; uniform() < 1 so the log argument is positive.
+        t += -(1.0 - arrivals.uniform()).ln() / profile.rps;
+        if t >= horizon {
+            return plan;
+        }
+        let u = mix.uniform();
+        let model_idx = cdf.iter().position(|&c| u < c).unwrap_or(cdf.len() - 1);
+        let deadline_ms = if mix.uniform() < profile.deadline_share {
+            Some(if mix.uniform() < 0.5 { profile.tight_ms } else { profile.loose_ms })
+        } else {
+            None
+        };
+        let return_samples = mix.uniform() < profile.samples_share;
+        let bin = return_samples && mix.uniform() < profile.bin_share;
+        plan.push(PlannedRequest {
+            at: Duration::from_secs_f64(t),
+            model: profile.models[model_idx].clone(),
+            solver: profile.solvers[mix.below(profile.solvers.len())].clone(),
+            nfe: profile.nfes[mix.below(profile.nfes.len())],
+            n: profile.n_choices[mix.below(profile.n_choices.len())],
+            seed: mix.next_u64(),
+            deadline_ms,
+            return_samples,
+            bin,
+        });
+    }
+}
+
+/// Client-side lifecycle tallies, mirroring the server's four-term
+/// balance plus the deadline split.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Tally {
+    pub sent: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub expired: u64,
+    pub failed: u64,
+    /// Completed requests that carried a deadline.
+    pub deadline_hit: u64,
+    /// Requests dropped because their deadline fired (== `expired`).
+    pub deadline_missed: u64,
+}
+
+impl Tally {
+    fn add(&mut self, other: &Tally) {
+        self.sent += other.sent;
+        self.completed += other.completed;
+        self.rejected += other.rejected;
+        self.expired += other.expired;
+        self.failed += other.failed;
+        self.deadline_hit += other.deadline_hit;
+        self.deadline_missed += other.deadline_missed;
+    }
+}
+
+/// What a [`run`] measured.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub global: Tally,
+    pub per_model: BTreeMap<String, Tally>,
+    /// Client-observed request latency (send → full reply), microseconds,
+    /// bucketed like the server's histogram.
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub mean_us: f64,
+    /// Wall time from first scheduled send to last reply.
+    pub wall: Duration,
+}
+
+impl LoadReport {
+    /// Completed requests per wall second.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall.as_secs_f64() > 0.0 {
+            self.global.completed as f64 / self.wall.as_secs_f64()
+        } else {
+            0.0
+        }
+    }
+
+    /// `deadline_hit / (deadline_hit + deadline_missed)`; 1.0 when no
+    /// deadline-carrying request resolved either way.
+    pub fn deadline_hit_rate(&self) -> f64 {
+        let denom = self.global.deadline_hit + self.global.deadline_missed;
+        if denom == 0 {
+            1.0
+        } else {
+            self.global.deadline_hit as f64 / denom as f64
+        }
+    }
+}
+
+/// Classify one reply into a lifecycle term. Mirrors the server's
+/// accounting (wire doc in `server/mod.rs`): deadline errors are
+/// `expired`; every refusal-at-submit text is `rejected`; anything else
+/// not-ok is `failed` (contained faults: panics, non-finite output,
+/// drain-stranded work).
+fn classify(deadline: Option<u64>, ok: bool, error: &str, tally: &mut Tally) {
+    if ok {
+        tally.completed += 1;
+        if deadline.is_some() {
+            tally.deadline_hit += 1;
+        }
+        return;
+    }
+    if error.contains("deadline exceeded") {
+        tally.expired += 1;
+        tally.deadline_missed += 1;
+    } else if ["overloaded", "unknown model", "unhealthy", "out of range",
+               "shutting down", "unknown solver", "unknown grid", "unknown sde",
+               "unknown dtype"]
+        .iter()
+        .any(|s| error.contains(s))
+    {
+        tally.rejected += 1;
+    } else {
+        tally.failed += 1;
+    }
+}
+
+/// Replay the plan against a live server over `conns` connections and
+/// collect the report. Blocks until every reply is in.
+pub fn run(addr: SocketAddr, profile: &LoadProfile, conns: usize) -> Result<LoadReport> {
+    let plan = schedule(profile);
+    run_plan(addr, &plan, conns)
+}
+
+/// [`run`] over a prebuilt plan (lets tests replay the exact same plan
+/// they inspected).
+pub fn run_plan(
+    addr: SocketAddr,
+    plan: &[PlannedRequest],
+    conns: usize,
+) -> Result<LoadReport> {
+    let conns = conns.max(1);
+    let hist = LatencyHistogram::default();
+    let acc: Mutex<(Tally, BTreeMap<String, Tally>)> = Mutex::new(Default::default());
+    let start = Instant::now();
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::with_capacity(conns);
+        for c in 0..conns {
+            let hist = &hist;
+            let acc = &acc;
+            // Round-robin deal: thread c owns plan[c], plan[c+conns], ...
+            // Each thread's slice is time-ordered because the plan is.
+            let mine: Vec<&PlannedRequest> =
+                plan.iter().skip(c).step_by(conns).collect();
+            handles.push(scope.spawn(move || -> Result<()> {
+                if mine.is_empty() {
+                    return Ok(());
+                }
+                let mut client = Client::connect(addr)
+                    .with_context(|| format!("loadgen conn {c}"))?;
+                let mut global = Tally::default();
+                let mut per_model: BTreeMap<String, Tally> = BTreeMap::new();
+                for req in mine {
+                    let now = start.elapsed();
+                    if req.at > now {
+                        std::thread::sleep(req.at - now);
+                    }
+                    let line = req.to_json();
+                    let sent_at = Instant::now();
+                    let header = if req.bin {
+                        client.call_bin(&line)?.0
+                    } else {
+                        client.call(&line)?
+                    };
+                    let us = sent_at.elapsed().as_micros().min(u64::MAX as u128);
+                    hist.record(us as u64);
+                    let ok = header.get("ok")?.as_bool()?;
+                    let error = if ok {
+                        String::new()
+                    } else {
+                        header.get("error")?.as_str()?.to_string()
+                    };
+                    for t in [&mut global, per_model.entry(req.model.clone()).or_default()]
+                    {
+                        t.sent += 1;
+                        classify(req.deadline_ms, ok, &error, t);
+                    }
+                }
+                let mut locked = lock_recover(acc);
+                locked.0.add(&global);
+                for (m, t) in &per_model {
+                    locked.1.entry(m.clone()).or_default().add(t);
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().expect("loadgen thread panicked")?;
+        }
+        Ok(())
+    })?;
+    let wall = start.elapsed();
+    let (global, per_model) = lock_recover(&acc).clone();
+    Ok(LoadReport {
+        global,
+        per_model,
+        p50_us: hist.quantile(0.5),
+        p99_us: hist.quantile(0.99),
+        mean_us: hist.mean(),
+        wall,
+    })
+}
+
+/// Fetch the live `{"cmd":"stats"}` object from the server.
+pub fn fetch_stats(addr: SocketAddr) -> Result<Json> {
+    let mut client = Client::connect(addr)?;
+    client.call(&Json::obj(vec![("cmd", Json::str("stats"))]))
+}
+
+fn stat_u64(v: &Json, key: &str) -> Result<u64> {
+    Ok(v.get(key)?.as_f64()? as u64)
+}
+
+fn check(scope: &str, key: &str, client: u64, server: u64) -> Result<()> {
+    if client != server {
+        bail!("{scope}: client {key}={client} but server reports {server}");
+    }
+    Ok(())
+}
+
+fn reconcile_tally(scope: &str, t: &Tally, v: &Json) -> Result<()> {
+    check(scope, "requests", t.sent, stat_u64(v, "requests")?)?;
+    check(scope, "completed", t.completed, stat_u64(v, "completed")?)?;
+    check(scope, "expired", t.expired, stat_u64(v, "expired")?)?;
+    check(scope, "deadline_hit", t.deadline_hit, stat_u64(v, "deadline_hit")?)?;
+    check(
+        scope,
+        "deadline_missed",
+        t.deadline_missed,
+        stat_u64(v, "deadline_missed")?,
+    )?;
+    // rejected/failed cannot be attributed per-scope symmetrically when
+    // refusals land only in the global counters (unknown model, global
+    // overload), so reconcile their SUM through the 4-term balance:
+    // server requests == completed + rejected + expired + failed must
+    // match the client's same sum.
+    let client_sum = t.completed + t.rejected + t.expired + t.failed;
+    let server_sum = stat_u64(v, "completed")?
+        + stat_u64(v, "rejected")?
+        + stat_u64(v, "expired")?
+        + stat_u64(v, "failed")?;
+    check(scope, "lifecycle sum", client_sum, server_sum)?;
+    Ok(())
+}
+
+/// Cross-check a client-side [`LoadReport`] against the server's stats
+/// wire, global and per model. Assumes the loadgen was the only client
+/// (any other traffic shows up as a mismatch) and that every model in the
+/// plan is registered on the server — an unknown model is refused before
+/// a stats shard exists for it, so its per-model entry cannot reconcile.
+pub fn reconcile(report: &LoadReport, stats: &Json) -> Result<()> {
+    reconcile_tally("global", &report.global, stats)?;
+    let per_model = stats.get("per_model")?;
+    for (model, tally) in &report.per_model {
+        let entry = per_model
+            .get(model)
+            .with_context(|| format!("server stats missing per_model entry '{model}'"))?;
+        reconcile_tally(&format!("per_model.{model}"), tally, entry)?;
+    }
+    Ok(())
+}
+
+/// Human-readable report block (example output; tests assert on fields).
+pub fn format_report(report: &LoadReport) -> String {
+    let g = &report.global;
+    let mut s = String::new();
+    s.push_str(&format!(
+        "sent {} | completed {} rejected {} expired {} failed {}\n",
+        g.sent, g.completed, g.rejected, g.expired, g.failed
+    ));
+    s.push_str(&format!(
+        "deadline hit rate {:.3} ({} hit / {} missed)\n",
+        report.deadline_hit_rate(),
+        g.deadline_hit,
+        g.deadline_missed
+    ));
+    s.push_str(&format!(
+        "latency p50 {} us  p99 {} us  mean {:.0} us\n",
+        report.p50_us, report.p99_us, report.mean_us
+    ));
+    s.push_str(&format!(
+        "throughput {:.1} req/s over {:.2}s wall\n",
+        report.throughput_rps(),
+        report.wall.as_secs_f64()
+    ));
+    for (model, t) in &report.per_model {
+        s.push_str(&format!(
+            "  {model}: sent {} completed {} rejected {} expired {} failed {}\n",
+            t.sent, t.completed, t.rejected, t.expired, t.failed
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile() -> LoadProfile {
+        LoadProfile {
+            seed: 42,
+            rps: 500.0,
+            duration: Duration::from_secs(2),
+            models: vec!["a".into(), "b".into(), "c".into()],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_per_seed() {
+        let p = profile();
+        assert_eq!(schedule(&p), schedule(&p));
+        let mut p2 = profile();
+        p2.seed = 43;
+        assert_ne!(schedule(&p), schedule(&p2));
+    }
+
+    #[test]
+    fn arrivals_are_monotone_within_the_horizon() {
+        let p = profile();
+        let plan = schedule(&p);
+        // ~rps * duration arrivals, within loose Poisson slack.
+        assert!(plan.len() > 800 && plan.len() < 1200, "{}", plan.len());
+        for w in plan.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        assert!(plan.last().unwrap().at < p.duration);
+    }
+
+    #[test]
+    fn zipf_ranks_models_by_popularity() {
+        let plan = schedule(&profile());
+        let count = |m: &str| plan.iter().filter(|r| r.model == m).count();
+        let (a, b, c) = (count("a"), count("b"), count("c"));
+        assert_eq!(a + b + c, plan.len());
+        assert!(a > b && b > c, "zipf order violated: a={a} b={b} c={c}");
+    }
+
+    #[test]
+    fn bin_frames_always_carry_samples() {
+        let plan = schedule(&profile());
+        assert!(plan.iter().any(|r| r.bin), "mix never produced a bin frame");
+        assert!(plan.iter().any(|r| r.deadline_ms.is_some()));
+        assert!(plan.iter().any(|r| r.deadline_ms.is_none()));
+        for r in &plan {
+            assert!(!r.bin || r.return_samples);
+        }
+    }
+
+    #[test]
+    fn mix_is_independent_of_the_arrival_stream() {
+        // Same seed, different rps: the request mix (model/solver/nfe/...)
+        // must be identical request-for-request; only `at` changes.
+        let p = profile();
+        let mut faster = profile();
+        faster.rps = 1000.0;
+        let a = schedule(&p);
+        let b = schedule(&faster);
+        let n = a.len().min(b.len());
+        for i in 0..n {
+            let (mut x, mut y) = (a[i].clone(), b[i].clone());
+            x.at = Duration::ZERO;
+            y.at = Duration::ZERO;
+            assert_eq!(x, y, "mix diverged at request {i}");
+        }
+    }
+
+    #[test]
+    fn classify_matches_server_accounting() {
+        let mut t = Tally::default();
+        classify(Some(50), true, "", &mut t);
+        classify(None, true, "", &mut t);
+        classify(Some(50), false, "deadline exceeded after 50ms", &mut t);
+        classify(None, false, "coordinator overloaded (4096 in flight)", &mut t);
+        classify(None, false, "unknown model 'nope'", &mut t);
+        classify(None, false, "model eval panicked", &mut t);
+        assert_eq!(t.completed, 2);
+        assert_eq!(t.deadline_hit, 1);
+        assert_eq!(t.expired, 1);
+        assert_eq!(t.deadline_missed, 1);
+        assert_eq!(t.rejected, 2);
+        assert_eq!(t.failed, 1);
+    }
+
+    #[test]
+    fn zipf_cdf_ends_at_one() {
+        for (n, s) in [(1, 1.0), (3, 0.0), (8, 1.3)] {
+            let cdf = zipf_cdf(n, s);
+            assert_eq!(cdf.len(), n);
+            assert!((cdf[n - 1] - 1.0).abs() < 1e-12);
+            for w in cdf.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+    }
+}

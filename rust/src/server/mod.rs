@@ -94,8 +94,19 @@
 //! panicked and were contained; `unhealthy` — refusals due to an open
 //! circuit breaker, a subset of `rejected`), the shared solver-plan cache
 //! (`plan_cache_hits`, `plan_cache_misses` — a hit means admission reused
-//! a cached (grid, coefficients) plan instead of rebuilding it), and
-//! latency (`p50_us`, `p99_us`, `mean_us`). `rejected` covers every
+//! a cached (grid, coefficients) plan instead of rebuilding it), deadline
+//! outcomes (`deadline_hit` — delivered requests that carried a
+//! `deadline_ms`; `deadline_missed` — requests dropped because their
+//! deadline fired, always equal to `expired`; hit rate is
+//! `deadline_hit / (deadline_hit + deadline_missed)`, and deadline-carrying
+//! requests that were rejected or failed before the deadline fired count in
+//! neither), and latency (`p50_us`, `p99_us`, `mean_us`). The scheduler's
+//! anchor-selection policy is a serve-time knob (`--sched-policy
+//! oldest|edf`, default `oldest`; see `coordinator/scheduler.rs`) — `edf`
+//! orders ready work by tightest surviving deadline with an age-based
+//! starvation guard for deadline-less requests, which is what moves the
+//! `deadline_hit`/`deadline_missed` split under contention. `rejected`
+//! covers every
 //! refusal at submit: global overload, per-model overload, out-of-range
 //! `nfe`, unknown model names, invalid sampling configs, open circuit
 //! breakers and draining shutdowns; `failed` counts requests whose
@@ -110,7 +121,9 @@
 //! that have received traffic), keyed by model name:
 //!
 //!   "per_model": {"gmm2d": {"requests":N,"completed":N,"rejected":N,
-//!                           "expired":N,"failed":N,"eval_panics":N,
+//!                           "expired":N,"failed":N,
+//!                           "deadline_hit":N,"deadline_missed":N,
+//!                           "eval_panics":N,
 //!                           "unhealthy":N,"samples":N,"batches":N,
 //!                           "merged_requests":N,"model_evals":N,
 //!                           "sched_evals":N,"sched_eval_requests":N,
@@ -159,6 +172,7 @@
 //! directly). The keys, types and meaning are otherwise unchanged from the
 //! previous sorted-list implementation; clients need no migration.
 
+pub mod loadgen;
 pub mod poll;
 pub mod wire;
 
@@ -230,6 +244,11 @@ fn handle_cmd(coord: &Coordinator, v: &Json) -> Result<Json> {
                             ("rejected", Json::num(m.rejected as f64)),
                             ("expired", Json::num(m.expired as f64)),
                             ("failed", Json::num(m.failed as f64)),
+                            ("deadline_hit", Json::num(m.deadline_hit as f64)),
+                            (
+                                "deadline_missed",
+                                Json::num(m.deadline_missed as f64),
+                            ),
                             ("eval_panics", Json::num(m.eval_panics as f64)),
                             ("unhealthy", Json::num(m.unhealthy as f64)),
                             ("samples", Json::num(m.samples as f64)),
@@ -254,6 +273,8 @@ fn handle_cmd(coord: &Coordinator, v: &Json) -> Result<Json> {
                 ("rejected", Json::num(s.rejected as f64)),
                 ("expired", Json::num(s.expired as f64)),
                 ("failed", Json::num(s.failed as f64)),
+                ("deadline_hit", Json::num(s.deadline_hit as f64)),
+                ("deadline_missed", Json::num(s.deadline_missed as f64)),
                 ("eval_panics", Json::num(s.eval_panics as f64)),
                 ("unhealthy", Json::num(s.unhealthy as f64)),
                 ("samples", Json::num(s.samples as f64)),

@@ -64,6 +64,15 @@ impl Args {
         self.str_or(key, default).split(',').map(|s| s.trim().to_string())
             .filter(|s| !s.is_empty()).collect()
     }
+
+    /// Comma-separated list of usize values; entries that fail to parse are
+    /// dropped (consistent with the lenient scalar accessors above).
+    pub fn usize_list_or(&self, key: &str, default: &str) -> Vec<usize> {
+        self.list_or(key, default)
+            .iter()
+            .filter_map(|s| s.parse().ok())
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -84,6 +93,14 @@ mod tests {
         assert!(a.bool("verbose"));
         assert_eq!(a.positional, vec!["pos1"]);
         assert_eq!(a.list_or("seeds", ""), vec!["1", "2", "3"]);
+    }
+
+    #[test]
+    fn usize_lists_parse_and_drop_junk() {
+        let a = args("--nfes 5,10,20 --bad 3,x,7");
+        assert_eq!(a.usize_list_or("nfes", ""), vec![5, 10, 20]);
+        assert_eq!(a.usize_list_or("bad", ""), vec![3, 7]);
+        assert_eq!(a.usize_list_or("missing", "8,16"), vec![8, 16]);
     }
 
     #[test]

@@ -1,0 +1,98 @@
+//! Loadgen determinism + end-to-end smoke (EXPERIMENTS.md §Load): the
+//! open-loop plan must be byte-identical per seed, and a short in-process
+//! run's client-side tallies must reconcile EXACTLY with the server's
+//! `{"cmd":"stats"}` wire — global and per model — including the new
+//! `deadline_hit`/`deadline_missed` counters and binary sample frames.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use deis::coordinator::{Coordinator, CoordinatorConfig};
+use deis::server::loadgen::{self, LoadProfile};
+use deis::server::serve;
+
+/// The smoke profile: three registered models under Zipf popularity, a
+/// mixed solver/NFE/framing profile, and only LOOSE deadlines — the
+/// stall-free oracles answer in microseconds, so every request completes
+/// and the reconciliation is exact-by-construction (no rejected/expired/
+/// failed slop to absorb a miscount).
+fn smoke_profile(seed: u64) -> LoadProfile {
+    LoadProfile {
+        seed,
+        rps: 400.0,
+        duration: Duration::from_millis(400),
+        models: vec!["gmm2d".to_string(), "ring6".to_string(), "ring5".to_string()],
+        zipf_s: 1.1,
+        deadline_share: 0.5,
+        tight_ms: 2_000,
+        loose_ms: 10_000,
+        samples_share: 0.5,
+        bin_share: 0.5,
+        nfes: vec![4, 6, 8],
+        n_choices: vec![2, 4, 8],
+        solvers: vec!["tab2".to_string(), "ddim".to_string(), "tab3".to_string()],
+    }
+}
+
+#[test]
+fn same_seed_yields_an_identical_plan_and_different_seeds_differ() {
+    let a = loadgen::schedule(&smoke_profile(7));
+    let b = loadgen::schedule(&smoke_profile(7));
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "same seed must reproduce the arrival schedule and mix exactly");
+    let c = loadgen::schedule(&smoke_profile(8));
+    assert_ne!(a, c, "a different seed must produce a different plan");
+
+    // The plan exercises the full wire surface this smoke claims to cover.
+    assert!(a.iter().any(|r| r.bin), "plan must include binary-framed requests");
+    assert!(a.iter().any(|r| r.return_samples && !r.bin));
+    assert!(a.iter().any(|r| r.deadline_ms.is_some()));
+    assert!(a.iter().any(|r| r.deadline_ms.is_none()));
+    for model in ["gmm2d", "ring6", "ring5"] {
+        assert!(a.iter().any(|r| r.model == model), "no traffic planned for {model}");
+    }
+}
+
+#[test]
+fn client_tallies_reconcile_exactly_with_the_stats_wire() {
+    let coord = Arc::new(Coordinator::new(
+        CoordinatorConfig { workers: 4, ..Default::default() },
+        common::multi_stall_registry(Duration::ZERO),
+    ));
+    let addr = serve(coord, "127.0.0.1:0").unwrap();
+
+    let profile = smoke_profile(7);
+    let plan = loadgen::schedule(&profile);
+    let report = loadgen::run_plan(addr, &plan, 6).unwrap();
+
+    // Non-zero completions, and with stall-free oracles + loose deadlines
+    // + in-cap load, nothing is shed: every planned request completes.
+    assert_eq!(report.global.sent, plan.len() as u64);
+    assert!(report.global.completed > 0, "smoke must complete requests");
+    assert_eq!(report.global.completed, report.global.sent, "{:?}", report.global);
+    assert_eq!(report.global.rejected, 0);
+    assert_eq!(report.global.expired, 0);
+    assert_eq!(report.global.failed, 0);
+    // Deadline accounting: every completed deadline-carrying request is a
+    // hit, and the plan mixes deadline and deadline-less traffic.
+    let planned_deadlines =
+        plan.iter().filter(|r| r.deadline_ms.is_some()).count() as u64;
+    assert!(planned_deadlines > 0 && planned_deadlines < plan.len() as u64);
+    assert_eq!(report.global.deadline_hit, planned_deadlines);
+    assert_eq!(report.global.deadline_missed, 0);
+    assert!(report.p50_us > 0, "client latency histogram must record");
+    // Every model drew traffic, with the Zipf rank-1 model clearly the
+    // most popular. (The full three-way ordering is pinned by the
+    // larger-sample unit test in `server/loadgen.rs`; at this short
+    // duration the two tail models are too close to assert apart.)
+    let sent = |m: &str| report.per_model.get(m).map_or(0, |t| t.sent);
+    assert!(sent("gmm2d") > sent("ring6") && sent("gmm2d") > sent("ring5"));
+    assert!(sent("ring6") > 0 && sent("ring5") > 0);
+
+    // The headline acceptance check: exact reconciliation of the client
+    // tallies against the live stats wire, global and per model.
+    let stats = loadgen::fetch_stats(addr).unwrap();
+    loadgen::reconcile(&report, &stats).unwrap();
+}

@@ -8,7 +8,7 @@ mod common;
 use std::sync::Arc;
 use std::time::Duration;
 
-use deis::coordinator::{Coordinator, CoordinatorConfig, SampleRequest};
+use deis::coordinator::{Coordinator, CoordinatorConfig, SampleRequest, SchedPolicy, StatsSnapshot};
 use deis::server::{serve, Client};
 use deis::solvers::{self, SolverKind};
 use deis::timegrid;
@@ -480,6 +480,132 @@ fn single_model_hotspot_keeps_all_workers_busy_via_stealing() {
     let s = coord.stats();
     assert_eq!(s.completed, 3 + W as u64);
     coord.shutdown();
+}
+
+/// One contended run for the EDF-vs-oldest policy comparison: 4 workers on
+/// a 10ms-stall model, 6 long loose-deadline flights submitted first, then
+/// 6 short tight-deadline flights. Every request gets its own t0, so
+/// batch keys AND time buckets are distinct — no admission merging and
+/// (past the shared t_N = 1.0 first eval) no co-batching: 12 independent
+/// flights compete for 4 workers, and the anchor policy alone decides who
+/// runs first. Timing is sleep-dominated with hard lower bounds: a loose
+/// flight needs 50 evals x 10ms >= 500ms, so under oldest-first no worker
+/// can reach a tight flight before its 400ms deadline fires — while under
+/// EDF the tights (~50ms each, two waves) finish with ~270ms to spare.
+/// Returns the outcome per tight request plus the final stats snapshot.
+fn run_contended(policy: SchedPolicy) -> (Vec<anyhow::Result<()>>, StatsSnapshot) {
+    let coord = Coordinator::new(
+        CoordinatorConfig {
+            workers: 4,
+            max_batch_samples: 4096,
+            sched_policy: policy,
+            ..Default::default()
+        },
+        common::stall_registry(Duration::from_millis(10)),
+    );
+    let mk = |nfe: usize, t0: f64, deadline_ms: u64, seed: u64| {
+        let mut r = SampleRequest::new("gmm2d", SolverKind::parse("ddim").unwrap(), nfe, 2);
+        r.t0 = t0;
+        r.deadline_ms = Some(deadline_ms);
+        r.seed = seed;
+        r
+    };
+    // Loose first (older), tight second: oldest-first must serve the loose
+    // flights to completion before the tights, EDF must not.
+    let loose_rxs: Vec<_> = (0..6)
+        .map(|i| coord.submit(mk(50, 1e-3 + i as f64 * 2e-5, 10_000, 100 + i as u64)))
+        .collect();
+    let tight_rxs: Vec<_> = (0..6)
+        .map(|i| coord.submit(mk(5, 2e-3 + i as f64 * 2e-5, 400, 200 + i as u64)))
+        .collect();
+    for rx in loose_rxs {
+        assert!(
+            rx.recv().unwrap().is_ok(),
+            "loose flights (10s deadline) must complete under either policy"
+        );
+    }
+    let tight: Vec<anyhow::Result<()>> =
+        tight_rxs.into_iter().map(|rx| rx.recv().unwrap().map(|_| ())).collect();
+    let s = coord.stats();
+    coord.shutdown();
+    (tight, s)
+}
+
+/// Per-run invariants that must hold under BOTH policies: the 4-term
+/// lifecycle balance (`requests == completed + rejected + expired +
+/// failed`) globally and per model, `deadline_missed == expired` (every
+/// request in this scenario carries a deadline), and `deadline_hit ==
+/// completed` for the same reason.
+fn assert_contended_balance(s: &StatsSnapshot, policy: &str) {
+    assert_eq!(s.requests, 12, "{policy}");
+    assert_eq!(s.rejected, 0, "{policy}");
+    assert_eq!(s.failed, 0, "{policy}");
+    assert_eq!(
+        s.requests,
+        s.completed + s.rejected + s.expired + s.failed,
+        "{policy}: global lifecycle must balance"
+    );
+    assert_eq!(s.deadline_missed, s.expired, "{policy}");
+    assert_eq!(s.deadline_hit, s.completed, "{policy}");
+    assert_eq!(s.per_model.len(), 1, "{policy}: single-model run");
+    let (name, m) = &s.per_model[0];
+    assert_eq!(name, "gmm2d", "{policy}");
+    assert_eq!(m.requests, 12, "{policy}");
+    assert_eq!(
+        m.requests,
+        m.completed + m.rejected + m.expired + m.failed,
+        "{policy}: per-model lifecycle must balance"
+    );
+    assert_eq!(m.completed, s.completed, "{policy}");
+    assert_eq!(m.expired, s.expired, "{policy}");
+    assert_eq!(m.deadline_hit, s.deadline_hit, "{policy}");
+    assert_eq!(m.deadline_missed, s.deadline_missed, "{policy}");
+}
+
+/// The policy-outcome battery: identical offered load under oldest-first
+/// and under EDF. Oldest-first starves the tight-deadline flights behind
+/// older loose ones (all 6 expire); EDF anchors the tights first (all 6
+/// hit), strictly reducing the expired count at the same load. The EDF
+/// age guard is set far above the loose deadlines so it cannot mask the
+/// deadline ordering under test (the guard's own semantics have dedicated
+/// unit tests in `coordinator/scheduler.rs`).
+#[test]
+fn edf_strictly_reduces_expired_count_vs_oldest_first_under_contention() {
+    let (tight_oldest, s_oldest) = run_contended(SchedPolicy::Oldest);
+    let (tight_edf, s_edf) =
+        run_contended(SchedPolicy::Edf { age_guard: Duration::from_secs(2) });
+
+    assert_contended_balance(&s_oldest, "oldest");
+    assert_contended_balance(&s_edf, "edf");
+
+    // Oldest-first: every tight flight expires waiting behind the loose
+    // backlog, and the error says so.
+    for (i, r) in tight_oldest.iter().enumerate() {
+        let err = r.as_ref().expect_err(&format!(
+            "oldest: tight flight {i} cannot beat a 400ms deadline behind \
+             >=500ms of older loose work"
+        ));
+        assert!(err.to_string().contains("deadline"), "tight {i}: {err:#}");
+    }
+    assert_eq!(s_oldest.completed, 6, "oldest: only the loose flights finish");
+    assert_eq!(s_oldest.expired, 6);
+
+    // EDF: the tights are anchored ahead of the older loose flights and
+    // all hit their deadlines; nothing expires.
+    for (i, r) in tight_edf.iter().enumerate() {
+        assert!(r.is_ok(), "edf: tight flight {i} must hit its deadline: {r:?}");
+    }
+    assert_eq!(s_edf.completed, 12, "edf: every flight completes");
+    assert_eq!(s_edf.expired, 0);
+
+    // The acceptance criterion proper: strictly fewer expired parts under
+    // EDF at identical offered load.
+    assert!(
+        s_edf.expired < s_oldest.expired,
+        "EDF must strictly reduce the expired count ({} vs {})",
+        s_edf.expired,
+        s_oldest.expired
+    );
 }
 
 #[test]
