@@ -4,7 +4,7 @@
 
 CARGO = cd rust && cargo
 
-.PHONY: verify verify-full build test lint fmt clippy chaos serve-smoke loadgen-smoke bench bench-quick bench-diff serve-demo loadgen-demo artifacts ci
+.PHONY: verify verify-full build test lint fmt clippy chaos serve-smoke loadgen-smoke router-smoke bench bench-quick bench-diff serve-demo loadgen-demo artifacts ci
 
 ## Tier-1 verify (ROADMAP): release build + full test suite.
 verify:
@@ -51,6 +51,16 @@ serve-smoke:
 loadgen-smoke:
 	$(CARGO) test --release --test loadgen_smoke -q
 
+## Router smoke (EXPERIMENTS.md §Router): the multi-process sharding tier —
+## rendezvous placement, bit-exact proxy parity (JSON + bin), stats/health
+## fan-in sums, worker death mid-flight (error + re-home, counters balance),
+## drain behind the router, and the --spawn-workers e2e path; then a short
+## loadgen run THROUGH a 2-worker router with exact aggregated-stats
+## reconciliation. Release: kill/drain timing is tight under debug.
+router-smoke:
+	$(CARGO) test --release --test router -q
+	$(CARGO) run --release --example loadgen -- --router 2 --quick
+
 fmt:
 	$(CARGO) fmt --check
 
@@ -93,4 +103,4 @@ artifacts:
 	python3 python/compile/fixtures.py --out rust/artifacts/fixtures
 
 ## Everything CI runs.
-ci: verify lint chaos serve-smoke loadgen-smoke bench-quick
+ci: verify lint chaos serve-smoke loadgen-smoke router-smoke bench-quick

@@ -20,6 +20,11 @@
 //!        --workers 4 --sched-policy oldest|edf   (in-process server)
 //!        --addr HOST:PORT    (target an external server instead; skips
 //!                             booting one)
+//!        --router N          (boot N in-process workers AND a router over
+//!                             them, and drive the ROUTER — reconcile then
+//!                             audits the aggregated stats fan-in)
+//!        --upstream H:P,...  (boot a router over pre-started external
+//!                             workers and drive it)
 //!        --skip-reconcile    (for shared servers with other traffic)
 //!        --quick             (caps duration at 0.25s for CI)
 
@@ -30,6 +35,7 @@ use anyhow::Result;
 
 use deis::coordinator::{Coordinator, CoordinatorConfig, SchedPolicy};
 use deis::exp::default_registry;
+use deis::router;
 use deis::server;
 use deis::server::loadgen::{self, LoadProfile};
 use deis::util::cli::Args;
@@ -58,22 +64,51 @@ fn main() -> Result<()> {
     };
     let conns = args.usize_or("conns", 8);
 
-    // Either drive an external server or boot one in-process on port 0.
-    let (addr, own_coord) = match args.get("addr") {
-        Some(a) => (a.parse()?, None),
-        None => {
-            let policy = SchedPolicy::parse(&args.str_or("sched-policy", "oldest"))?;
-            let reg = default_registry(&models)?;
-            let cfg = CoordinatorConfig {
-                workers: args.usize_or("workers", 4),
-                sched_policy: policy,
-                ..Default::default()
-            };
-            let coord = Arc::new(Coordinator::new(cfg, reg));
-            let addr = server::serve(coord.clone(), "127.0.0.1:0")?;
-            println!("loadgen: in-process server on {addr} (policy {policy:?})");
-            (addr, Some(coord))
+    let boot_worker = |policy: SchedPolicy| -> Result<(std::net::SocketAddr, Arc<Coordinator>)> {
+        let reg = default_registry(&models)?;
+        let cfg = CoordinatorConfig {
+            workers: args.usize_or("workers", 4),
+            sched_policy: policy,
+            ..Default::default()
+        };
+        let coord = Arc::new(Coordinator::new(cfg, reg));
+        let addr = server::serve(coord.clone(), "127.0.0.1:0")?;
+        Ok((addr, coord))
+    };
+
+    // Drive an external server (--addr), an external fleet behind a router
+    // we boot (--upstream), an in-process sharded fleet behind a router
+    // (--router N), or a single in-process server (default).
+    let mut own_coords: Vec<Arc<Coordinator>> = Vec::new();
+    let router_n = args.usize_or("router", 0);
+    let upstreams = args.list_or("upstream", "");
+    let addr = if let Some(a) = args.get("addr") {
+        a.parse()?
+    } else if !upstreams.is_empty() {
+        let addr = router::serve(upstreams.clone(), "127.0.0.1:0")?;
+        println!("loadgen: router on {addr} over {}", upstreams.join(","));
+        addr
+    } else if router_n > 0 {
+        let policy = SchedPolicy::parse(&args.str_or("sched-policy", "oldest"))?;
+        let mut workers = Vec::with_capacity(router_n);
+        for _ in 0..router_n {
+            let (waddr, coord) = boot_worker(policy)?;
+            workers.push(waddr.to_string());
+            own_coords.push(coord);
         }
+        let addr = router::serve(workers.clone(), "127.0.0.1:0")?;
+        println!(
+            "loadgen: router on {addr} over {router_n} in-process workers \
+             ({}) (policy {policy:?})",
+            workers.join(",")
+        );
+        addr
+    } else {
+        let policy = SchedPolicy::parse(&args.str_or("sched-policy", "oldest"))?;
+        let (addr, coord) = boot_worker(policy)?;
+        own_coords.push(coord);
+        println!("loadgen: in-process server on {addr} (policy {policy:?})");
+        addr
     };
 
     println!(
@@ -92,11 +127,18 @@ fn main() -> Result<()> {
     } else {
         let stats = loadgen::fetch_stats(addr)?;
         loadgen::reconcile(&report, &stats)?;
-        println!("stats reconciliation: OK (client tallies == server wire)");
+        if stats.opt("router").is_some() {
+            println!(
+                "stats reconciliation: OK (client tallies == aggregated worker wire \
+                 + router balance)"
+            );
+        } else {
+            println!("stats reconciliation: OK (client tallies == server wire)");
+        }
     }
-    // The in-process server's worker/I/O threads are detached; process
-    // exit reaps them (same as `deis serve`). Dropping our handle last
-    // keeps the coordinator alive through the final stats call.
-    drop(own_coord);
+    // The in-process servers' worker/I/O threads are detached; process
+    // exit reaps them (same as `deis serve`). Dropping our handles last
+    // keeps the coordinators alive through the final stats call.
+    drop(own_coords);
     Ok(())
 }

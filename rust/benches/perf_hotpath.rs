@@ -384,7 +384,30 @@ fn main() {
         log(bench_for("server round-trip localhost n=256", budget, || {
             black_box(client.call(&req).unwrap());
         }));
-        coord.shutdown();
+
+        // Same request through the router tier over two workers: the delta
+        // against the direct row above is the router's added hop cost
+        // (parse-one-key + two relays on one event loop).
+        let mut reg2 = ModelRegistry::new();
+        reg2.insert("gmm2d", Arc::new(GmmEps::new(Gmm::ring2d(4.0, 8, 0.25), Sde::vp())));
+        let coord2 = Arc::new(Coordinator::new(CoordinatorConfig::default(), reg2));
+        let addr2 = server::serve(coord2.clone(), "127.0.0.1:0").unwrap();
+        let raddr = deis::router::serve(
+            vec![addr.to_string(), addr2.to_string()],
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let mut rclient = server::Client::connect(raddr).unwrap();
+        log(bench_for("router round-trip localhost n=256", budget, || {
+            black_box(rclient.call(&req).unwrap());
+        }));
+        // The serve() I/O threads hold clones; a failed unwrap just means
+        // process exit reaps them (same as `deis serve`).
+        for c in [coord, coord2] {
+            if let Ok(c) = Arc::try_unwrap(c) {
+                c.shutdown();
+            }
+        }
     }
 
     drop(log);

@@ -78,6 +78,8 @@ pub mod stats;
 
 pub use request::{BatchKey, SampleRequest, SampleResult};
 pub use scheduler::{SchedPolicy, DEFAULT_EDF_AGE_GUARD};
+// The router reuses the per-model breaker shape for per-upstream health.
+pub(crate) use scheduler::{Breaker, BreakerConfig};
 pub use stats::{ModelStats, ModelStatsSnapshot, Stats, StatsSnapshot};
 
 use std::collections::HashMap;

@@ -324,7 +324,7 @@ pub(crate) struct Breaker {
 }
 
 impl Breaker {
-    fn new(cfg: BreakerConfig) -> Breaker {
+    pub(crate) fn new(cfg: BreakerConfig) -> Breaker {
         Breaker {
             cfg,
             epoch: Instant::now(),

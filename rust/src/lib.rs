@@ -23,6 +23,7 @@ pub mod gmm;
 pub mod likelihood;
 pub mod metrics;
 pub mod quad;
+pub mod router;
 pub mod runtime;
 pub mod score;
 pub mod server;

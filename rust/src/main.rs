@@ -10,6 +10,14 @@
 //!           [--write-timeout-ms 30000] [--max-line-bytes 262144]
 //!           [--io-threads N]   (readiness-driven I/O threads; default
 //!                               min(4, cores))
+//!   router  --addr 127.0.0.1:7800 (--upstream host:port,... | --spawn-workers N)
+//!           [--pool-per-worker 8] [--connect-timeout-ms 250]
+//!           [--cooldown-ms 1000] [--max-conns 1024]
+//!           [--read-timeout-ms 30000] [--write-timeout-ms 30000]
+//!           [--max-line-bytes 262144]
+//!           (--spawn-workers forks N `deis serve` children of this same
+//!            binary on ephemeral ports and forwards the serve flags —
+//!            --models/--workers/--precision/... — to each of them)
 //!   sample  --model gmm2d_exact --solver tab3 --nfe 10 --n 1000 [--metric]
 //!           [--precision f64|f32]
 //!
@@ -44,6 +52,7 @@ fn main() -> Result<()> {
     let args = Args::parse(argv);
     match cmd.as_str() {
         "serve" => cmd_serve(&args),
+        "router" => cmd_router(&args),
         "sample" => cmd_sample(&args),
         "info" => cmd_info(),
         other => bail!("unknown command '{other}'"),
@@ -82,6 +91,87 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let coord = Arc::new(Coordinator::new(cfg, reg));
     let addr = server::serve_with(coord, &args.str_or("addr", "127.0.0.1:7878"), opts)?;
     println!("deis serving on {addr} (models: {})", models.join(","));
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// Serve flags forwarded verbatim to each `--spawn-workers` child, so a
+/// spawned fleet behaves exactly like hand-started `deis serve` processes.
+const FORWARDED_SERVE_FLAGS: &[&str] = &[
+    "models",
+    "workers",
+    "precision",
+    "max-batch",
+    "max-inflight",
+    "max-inflight-per-model",
+    "breaker-threshold",
+    "breaker-cooldown-ms",
+    "sched-policy",
+    "edf-age-guard-ms",
+    "io-threads",
+];
+
+fn cmd_router(args: &Args) -> Result<()> {
+    let mut upstreams = args.list_or("upstream", "");
+    // Keep the Child handles alive for the process lifetime; the router
+    // process IS the fleet supervisor in spawn mode.
+    let mut children: Vec<std::process::Child> = Vec::new();
+    let spawn_n = args.usize_or("spawn-workers", 0);
+    if spawn_n > 0 && !upstreams.is_empty() {
+        bail!("--spawn-workers and --upstream are mutually exclusive");
+    }
+    if spawn_n > 0 {
+        let exe = std::env::current_exe().context("locating own binary")?;
+        for i in 0..spawn_n {
+            let mut cmd = std::process::Command::new(&exe);
+            cmd.arg("serve").arg("--addr").arg("127.0.0.1:0");
+            for flag in FORWARDED_SERVE_FLAGS {
+                if let Some(v) = args.get(flag) {
+                    cmd.arg(format!("--{flag}")).arg(v);
+                }
+            }
+            cmd.stdout(std::process::Stdio::piped());
+            let mut child = cmd.spawn().with_context(|| format!("spawning worker {i}"))?;
+            let stdout = child.stdout.take().expect("stdout piped");
+            let mut reader = std::io::BufReader::new(stdout);
+            let mut banner = String::new();
+            std::io::BufRead::read_line(&mut reader, &mut banner)
+                .with_context(|| format!("reading worker {i} banner"))?;
+            let addr = deis::router::parse_serve_banner(&banner).ok_or_else(|| {
+                anyhow::anyhow!("worker {i} printed no serve banner (got {banner:?})")
+            })?;
+            // Drain the rest of the child's stdout so it never blocks on a
+            // full pipe.
+            std::thread::spawn(move || {
+                std::io::copy(&mut reader, &mut std::io::sink()).ok();
+            });
+            upstreams.push(addr.to_string());
+            children.push(child);
+        }
+    }
+    if upstreams.is_empty() {
+        bail!("router needs --upstream host:port,... or --spawn-workers N");
+    }
+    let opts = deis::router::RouterOptions {
+        max_conns: args.usize_or("max-conns", 1024),
+        read_timeout: std::time::Duration::from_millis(args.u64_or("read-timeout-ms", 30_000)),
+        write_timeout: std::time::Duration::from_millis(
+            args.u64_or("write-timeout-ms", 30_000),
+        ),
+        max_line_bytes: args.usize_or("max-line-bytes", 256 * 1024),
+        pool_per_worker: args.usize_or("pool-per-worker", 8),
+        connect_timeout: std::time::Duration::from_millis(
+            args.u64_or("connect-timeout-ms", 250),
+        ),
+        cooldown: std::time::Duration::from_millis(args.u64_or("cooldown-ms", 1000)),
+    };
+    let addr = deis::router::serve_with(
+        upstreams.clone(),
+        &args.str_or("addr", "127.0.0.1:7800"),
+        opts,
+    )?;
+    println!("deis router on {addr} (workers: {})", upstreams.join(","));
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

@@ -1,0 +1,149 @@
+//! Rendezvous (highest-random-weight) hashing over upstream workers.
+//!
+//! Every router instance, and every test, must agree on which worker owns a
+//! model given only the worker address list — no shared state, no
+//! coordination. HRW gives that: `score(worker, key)` is a deterministic
+//! 64-bit mix of the two identities, the owner is the argmax over workers,
+//! and the *rank order* (scores sorted descending) is the failover sequence.
+//! Its two properties carry the whole router design:
+//!
+//! * **Minimal disruption** — adding a worker re-homes only the keys whose
+//!   new argmax IS the new worker (≈ 1/N of them); removing a worker
+//!   re-homes only the keys it owned, each to its rank-2 worker. No other
+//!   key moves, so co-batching concentration survives membership churn.
+//! * **Stateless failover** — when a worker's breaker is open the router
+//!   just walks the rank order past it; when the breaker closes, traffic
+//!   returns to the true owner automatically.
+//!
+//! The hash is FNV-1a per identity with a splitmix64-style finalizer over
+//! the combination — not cryptographic, but well-mixed enough that 2–64
+//! workers get an even key split (asserted by the unit tests below).
+
+use crate::coordinator::F32_SUFFIX;
+
+/// FNV-1a 64-bit over raw bytes.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// splitmix64 finalizer: spreads FNV's weak low-bit avalanche.
+fn mix(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    x
+}
+
+/// The HRW score of one (worker, routing-key) pair. Higher wins.
+pub fn score(worker: &str, key: &str) -> u64 {
+    mix(fnv1a(worker.as_bytes()) ^ mix(fnv1a(key.as_bytes())))
+}
+
+/// The routing key for a model name: the `@f32` precision suffix is
+/// stripped so `model@f32` siblings land on the same worker as `model` —
+/// they share eval batches worker-side, and splitting them would halve the
+/// co-batching opportunity the router exists to concentrate.
+pub fn routing_key(model: &str) -> &str {
+    model.strip_suffix(F32_SUFFIX).unwrap_or(model)
+}
+
+/// Index of the worker that owns `key` (pre-stripped via [`routing_key`]),
+/// or `None` for an empty worker list. Ties (astronomically unlikely)
+/// break toward the lower index, deterministically.
+pub fn pick(workers: &[String], key: &str) -> Option<usize> {
+    let (mut best_score, mut best) = (score(workers.first()?, key), 0);
+    for (i, w) in workers.iter().enumerate().skip(1) {
+        let s = score(w, key);
+        if s > best_score {
+            (best_score, best) = (s, i);
+        }
+    }
+    Some(best)
+}
+
+/// Full failover order for `key`: worker indices sorted by score
+/// descending (ties toward the lower index). `rank(..)[0] == pick(..)`.
+pub fn rank(workers: &[String], key: &str) -> Vec<usize> {
+    let mut scored: Vec<(u64, usize)> =
+        workers.iter().enumerate().map(|(i, w)| (score(w, key), i)).collect();
+    scored.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    scored.into_iter().map(|(_, i)| i).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn workers(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("127.0.0.1:{}", 7000 + i)).collect()
+    }
+
+    fn keys(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("model_{i}")).collect()
+    }
+
+    #[test]
+    fn pick_matches_rank_head_and_rank_is_a_permutation() {
+        let w = workers(5);
+        for key in keys(64) {
+            let r = rank(&w, &key);
+            let mut sorted = r.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..5).collect::<Vec<_>>());
+            assert_eq!(Some(r[0]), pick(&w, &key));
+        }
+    }
+
+    #[test]
+    fn keys_split_roughly_evenly() {
+        let w = workers(4);
+        let mut counts = [0usize; 4];
+        for key in keys(4000) {
+            counts[pick(&w, &key).unwrap()] += 1;
+        }
+        for &c in &counts {
+            // Expect 1000 per worker; a 2x band catches any gross bias
+            // (a broken mix collapses to one worker entirely).
+            assert!((500..2000).contains(&c), "uneven split: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn adding_a_worker_moves_only_the_new_workers_share() {
+        let before = workers(2);
+        let mut after = before.clone();
+        after.push("127.0.0.1:7999".to_string());
+        let n = 1000;
+        let mut moved = 0;
+        for key in keys(n) {
+            let old = pick(&before, &key).unwrap();
+            let new = pick(&after, &key).unwrap();
+            if new != old {
+                // The HRW guarantee: every mover moves TO the new worker.
+                assert_eq!(new, 2, "key '{key}' moved {old}->{new}, not to the new worker");
+                moved += 1;
+            }
+        }
+        // Expected share is 1/3; accept a generous band around it.
+        let frac = moved as f64 / n as f64;
+        assert!((0.15..0.55).contains(&frac), "moved fraction {frac}");
+    }
+
+    #[test]
+    fn f32_siblings_share_an_owner() {
+        let w = workers(7);
+        for key in keys(32) {
+            assert_eq!(routing_key(&key), key);
+            let sibling = format!("{key}@f32");
+            assert_eq!(routing_key(&sibling), key);
+            assert_eq!(pick(&w, routing_key(&sibling)), pick(&w, &key));
+        }
+    }
+}

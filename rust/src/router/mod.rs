@@ -1,0 +1,1234 @@
+//! Multi-process sharded serving: the router tier.
+//!
+//! One process can only scale co-batching as far as its cores; this module
+//! multiplies that by proxying the existing line protocol across N
+//! independent worker processes (`deis serve`), with the property that
+//! makes sharding *worth it* for a batching sampler: all traffic for a
+//! model — including its `@f32` precision sibling — deterministically
+//! lands on ONE worker, so the per-model co-batching opportunity
+//! concentrates instead of fragmenting. See the "Router tier" section of
+//! the wire doc in [`crate::server`] for the client-visible contract; this
+//! doc covers the machinery.
+//!
+//! ## Structure
+//!
+//! A single event-loop thread (the same epoll [`Poller`] the server
+//! frontend runs on) owns everything: the listener, every client
+//! connection, and every upstream connection. Single-threaded on purpose —
+//! the router does no math; it parses one key per line ([`route_scan`],
+//! zero-copy via [`Scanner`]) and shovels bytes, so one core saturates
+//! well past what N workers can solve, and single ownership means every
+//! counter is a plain `u64` and every FIFO is a plain `VecDeque`.
+//!
+//! * **Routing** — rendezvous (HRW) hashing over the configured upstream
+//!   address strings ([`hash`]): owner = argmax score, failover = walk the
+//!   rank order past upstreams with open breakers. Stateless, so every
+//!   router (and every test) independently agrees on placement.
+//! * **Upstream pooling** ([`pool`]) — per worker, a lazily-grown pool of
+//!   at most `pool_per_worker` pipelined connections; the per-connection
+//!   reply FIFO is the complete matching state (one reply per line, in
+//!   order). A worker admits one request per connection at a time, so the
+//!   pool size IS the per-worker concurrency.
+//! * **Binary passthrough** — a relayed reply line is scanned for
+//!   `bin_bytes` ([`crate::server::wire::reply_bin_bytes`], O(first key)
+//!   on bin headers); the payload is then forwarded as raw bytes, never
+//!   decoded. Proxied replies are byte-identical to direct ones.
+//! * **Fan-in** ([`stats`]) — stats/health/models commands broadcast to
+//!   every reachable worker; replies aggregate under an [`Agg`] ticket and
+//!   merge into one reply in the worker wire schema plus a `"router"`
+//!   object. The client's pending flag holds its reply order meanwhile.
+//!
+//! ## Failure semantics
+//!
+//! Any connect failure, connection death, or protocol corruption on an
+//! upstream fails the WHOLE upstream: its breaker (the per-model
+//! `Breaker`
+//! shape, threshold 1) opens for `cooldown`, every pooled connection is
+//! torn down, and every in-flight FIFO entry is answered immediately with
+//! an `"upstream unavailable"` error — counted in `upstream_errors` and
+//! attributed per model, so the router's own balance
+//! (`requests == forwarded + upstream_errors + in_flight`) always holds.
+//! Replies already buffered from the dying worker are relayed first: a
+//! reply the worker managed to send is never lost. The one un-answerable
+//! case — the worker died mid-binary-payload, after header bytes reached
+//! the client — tears the client connection down, because an error line
+//! injected into a half-delivered payload would be corruption, not help.
+//! Subsequent submits for the dead worker's models re-home to the next
+//! worker in rendezvous rank order; after `cooldown` the next submit
+//! probes the original owner and traffic snaps back on success.
+//!
+//! ## Deliberate trade-offs
+//!
+//! * The lazy upstream connect is a *blocking* `connect_timeout` on the
+//!   loop thread (bounded by `connect_timeout`, default 250ms). The
+//!   threshold-1 breaker caps the stall rate at one probe per cooldown
+//!   per dead worker; localhost/rack connects to a live worker are tens
+//!   of microseconds.
+//! * The router imposes no per-request timeout of its own: end-to-end
+//!   latency budgets belong to the request's `deadline_ms` (the worker
+//!   enforces it); a hung worker process is surfaced on connection death
+//!   or by the client's own read timeout, exactly as with a direct
+//!   connection.
+//! * Merged `p50_us`/`p99_us` take the per-worker MAX (the wire carries
+//!   quantiles, not histograms); `mean_us` is request-weighted and exact.
+
+pub mod hash;
+pub(crate) mod pool;
+pub mod stats;
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::os::fd::AsRawFd;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::server::poll::{Event, Interest, Poller};
+use crate::server::wire;
+use crate::util::json::{Json, Scanner};
+
+use pool::{Route, Upstream, UpstreamConn};
+use stats::{RouterStats, WorkerView};
+
+/// Router hardening knobs. The client-facing ones mirror
+/// [`crate::server::ServeOptions`]; the upstream ones are router-specific.
+#[derive(Clone, Copy, Debug)]
+pub struct RouterOptions {
+    /// Concurrent CLIENT connections; excess get one "router at connection
+    /// capacity" error line and are closed.
+    pub max_conns: usize,
+    /// Mid-line client read stall bound (slowloris guard, swept).
+    pub read_timeout: Duration,
+    /// Client write-progress stall bound (swept).
+    pub write_timeout: Duration,
+    /// Client request-line byte cap.
+    pub max_line_bytes: usize,
+    /// Pooled connections per worker — also the per-worker concurrency
+    /// cap, since a worker serializes requests per connection.
+    pub pool_per_worker: usize,
+    /// Bound on the blocking lazy upstream connect (see module doc).
+    pub connect_timeout: Duration,
+    /// Upstream breaker cooldown after a failure.
+    pub cooldown: Duration,
+}
+
+impl Default for RouterOptions {
+    fn default() -> RouterOptions {
+        RouterOptions {
+            max_conns: 1024,
+            read_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(30),
+            max_line_bytes: 256 * 1024,
+            pool_per_worker: 8,
+            connect_timeout: Duration::from_millis(250),
+            cooldown: Duration::from_secs(1),
+        }
+    }
+}
+
+/// Route the router's listener reports on.
+const LISTENER_TOKEN: u64 = u64::MAX;
+/// Token bit distinguishing upstream connections from clients.
+const UPSTREAM_BIT: u64 = 1 << 63;
+/// Generations are 31 bits so a client token never sets [`UPSTREAM_BIT`].
+const GEN_MASK: u32 = 0x7FFF_FFFF;
+/// Same per-connection outbound backpressure bound as the server.
+const OUT_HIGH_WATER: usize = 256 * 1024;
+
+fn client_token(idx: u32, gen: u32) -> u64 {
+    ((gen as u64) << 32) | idx as u64
+}
+
+fn upstream_token(widx: usize, pidx: usize, gen: u32) -> u64 {
+    UPSTREAM_BIT | ((gen as u64) << 32) | ((widx as u64) << 16) | pidx as u64
+}
+
+/// Per-client-connection state machine. Same shape as the server's `Conn`
+/// except `pending` is a bare flag: the reply is produced by an upstream
+/// (or a fan-in merge), not by a local coordinator completion.
+struct ClientConn {
+    stream: TcpStream,
+    gen: u32,
+    buf: Vec<u8>,
+    scanned: usize,
+    out: Vec<u8>,
+    written: usize,
+    /// A request is in flight (proxied or aggregating). While set, no
+    /// further lines are parsed and the socket is not read: one request
+    /// per connection at a time, replies strictly in order — exactly the
+    /// worker frontend's contract, so a client cannot tell the tiers
+    /// apart.
+    pending: bool,
+    eof: bool,
+    close_after_write: bool,
+    interest: Interest,
+    last_read_progress: Instant,
+    last_write_progress: Instant,
+}
+
+/// See `note_outbound` in the server frontend: stamp the write clock when
+/// `out` goes from drained to non-empty.
+fn note_outbound(conn: &mut ClientConn) {
+    if conn.out.len() == conn.written {
+        conn.last_write_progress = Instant::now();
+    }
+}
+
+/// Drain as much of `out` as the socket accepts. True = dead.
+fn write_client(conn: &mut ClientConn) -> bool {
+    while conn.written < conn.out.len() {
+        match (&conn.stream).write(&conn.out[conn.written..]) {
+            Ok(0) => return true,
+            Ok(n) => {
+                conn.written += n;
+                conn.last_write_progress = Instant::now();
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return true,
+        }
+    }
+    if conn.written > 0 && conn.written == conn.out.len() {
+        conn.out.clear();
+        conn.written = 0;
+    }
+    false
+}
+
+/// Budgeted read (level-triggered epoll re-reports the rest). True = dead.
+fn read_client(conn: &mut ClientConn) -> bool {
+    let mut tmp = [0u8; 16 * 1024];
+    let mut budget: usize = 16;
+    loop {
+        match (&conn.stream).read(&mut tmp) {
+            Ok(0) => {
+                conn.eof = true;
+                return false;
+            }
+            Ok(n) => {
+                conn.buf.extend_from_slice(&tmp[..n]);
+                conn.last_read_progress = Instant::now();
+                if n < tmp.len() {
+                    return false;
+                }
+                budget -= 1;
+                if budget == 0 {
+                    return false;
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return false,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return true,
+        }
+    }
+}
+
+fn write_upstream(uc: &mut UpstreamConn) -> bool {
+    while uc.written < uc.out.len() {
+        match (&uc.stream).write(&uc.out[uc.written..]) {
+            Ok(0) => return true,
+            Ok(n) => uc.written += n,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return true,
+        }
+    }
+    if uc.written > 0 && uc.written == uc.out.len() {
+        uc.out.clear();
+        uc.written = 0;
+    }
+    false
+}
+
+/// Returns (dead, eof). EOF is not "dead" yet: buffered complete replies
+/// are relayed before the upstream is failed, so nothing a worker managed
+/// to send is ever lost.
+fn read_upstream(uc: &mut UpstreamConn) -> (bool, bool) {
+    let mut tmp = [0u8; 16 * 1024];
+    let mut budget: usize = 16;
+    loop {
+        match (&uc.stream).read(&mut tmp) {
+            Ok(0) => return (false, true),
+            Ok(n) => {
+                uc.buf.extend_from_slice(&tmp[..n]);
+                if n < tmp.len() {
+                    return (false, false);
+                }
+                budget -= 1;
+                if budget == 0 {
+                    return (false, false);
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return (false, false),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return (true, false),
+        }
+    }
+}
+
+/// Over-long client line: one error, doom the connection (the line's tail
+/// is unread; resync is impossible). Same contract as the worker.
+fn too_long(conn: &mut ClientConn, opts: &RouterOptions) {
+    note_outbound(conn);
+    wire::error_reply(
+        &mut conn.out,
+        &format!("request line too long (max {} bytes)", opts.max_line_bytes),
+    );
+    conn.buf.clear();
+    conn.scanned = 0;
+    conn.close_after_write = true;
+}
+
+/// Shed a connection refused at the accept gate: one error line, close.
+fn shed(mut stream: TcpStream, opts: &RouterOptions) {
+    let _ = stream.set_write_timeout(Some(opts.write_timeout));
+    let mut out = Vec::new();
+    wire::error_reply(
+        &mut out,
+        &format!("router at connection capacity ({}); retry later", opts.max_conns),
+    );
+    let _ = stream.write_all(&out);
+}
+
+/// What the zero-copy routing scan learned about one client line.
+#[derive(Debug, PartialEq)]
+enum Scan {
+    /// A submit line; the value is its routing model ("" when absent —
+    /// the worker owns the resulting "missing model" error text).
+    Submit(String),
+    /// Anything the scanner cannot settle — a `cmd` key, string escapes,
+    /// malformed JSON — falls back to the owned tree parse.
+    Tree,
+}
+
+/// Extract just the `model` key from a submit line, zero-copy. Mirrors the
+/// scan-loop shape of [`wire::parse_submit_fast`], including last-wins
+/// duplicate keys, but looks at nothing else: the router routes, the
+/// worker validates.
+fn route_scan(line: &str) -> Scan {
+    let mut sc = Scanner::new(line);
+    if sc.begin_object().is_err() {
+        return Scan::Tree;
+    }
+    let mut model: Option<&str> = None;
+    loop {
+        match sc.next_key() {
+            Ok(Some("cmd")) => return Scan::Tree,
+            Ok(Some("model")) => match sc.value_str() {
+                Ok(s) => model = Some(s),
+                Err(_) => return Scan::Tree,
+            },
+            Ok(Some(_)) => {
+                if sc.skip_value().is_err() {
+                    return Scan::Tree;
+                }
+            }
+            Ok(None) => break,
+            Err(_) => return Scan::Tree,
+        }
+    }
+    if sc.end().is_err() {
+        return Scan::Tree;
+    }
+    Scan::Submit(model.unwrap_or("").to_string())
+}
+
+/// Reproduce the worker's cmd-name extraction exactly (same calls, same
+/// error texts) so a bad cmd line gets an identical reply via either tier.
+fn cmd_name(v: &Json) -> Result<&str> {
+    v.get("cmd")?.as_str()
+}
+
+#[derive(Clone, Copy, Debug)]
+enum CmdKind {
+    Stats,
+    Health,
+    Models,
+}
+
+/// One in-progress stats/health/models fan-out.
+struct Agg {
+    client: (u32, u32),
+    kind: CmdKind,
+    /// Per-worker reply slot; `None` = unreachable (or failed mid-cmd).
+    results: Vec<Option<Json>>,
+    outstanding: usize,
+}
+
+/// Parse the `deis serving on ADDR (models: ...)` banner a worker prints
+/// once its listener is bound — how `--spawn-workers` learns each child's
+/// ephemeral port.
+pub fn parse_serve_banner(line: &str) -> Option<SocketAddr> {
+    let rest = line.trim().strip_prefix("deis serving on ")?;
+    rest.split_whitespace().next()?.parse().ok()
+}
+
+struct Router {
+    poller: Poller,
+    listener: TcpListener,
+    conns: Vec<Option<ClientConn>>,
+    free: Vec<u32>,
+    next_gen: u32,
+    next_ugen: u32,
+    conn_count: usize,
+    /// Upstream identities in slot order — the rendezvous universe.
+    names: Vec<String>,
+    upstreams: Vec<Upstream>,
+    aggs: HashMap<u64, Agg>,
+    next_agg: u64,
+    stats: RouterStats,
+    opts: RouterOptions,
+}
+
+/// Start a router over the given upstream workers with default options.
+/// Returns the bound address (port 0 allowed). Workers need not be up yet
+/// — connections are opened lazily per routed request.
+pub fn serve(upstreams: Vec<String>, addr: &str) -> Result<SocketAddr> {
+    serve_with(upstreams, addr, RouterOptions::default())
+}
+
+/// [`serve`] with explicit options.
+pub fn serve_with(
+    upstreams: Vec<String>,
+    addr: &str,
+    opts: RouterOptions,
+) -> Result<SocketAddr> {
+    if upstreams.is_empty() {
+        bail!("router needs at least one upstream worker");
+    }
+    if upstreams.len() > 0xFFFF {
+        bail!("router supports at most 65535 upstream workers");
+    }
+    let pool = opts.pool_per_worker.clamp(1, 0xFFFF);
+    let mut ups = Vec::with_capacity(upstreams.len());
+    for name in &upstreams {
+        let resolved = name
+            .to_socket_addrs()
+            .with_context(|| format!("resolving upstream '{name}'"))?
+            .next()
+            .ok_or_else(|| anyhow!("upstream '{name}' resolved to no address"))?;
+        ups.push(Upstream::new(resolved, name.clone(), opts.cooldown, pool));
+    }
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("binding router to {addr}"))?;
+    let local = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let poller = Poller::new()?;
+    poller.register(listener.as_raw_fd(), LISTENER_TOKEN, Interest::READ)?;
+    let stats = RouterStats::new(upstreams.len());
+    let router = Router {
+        poller,
+        listener,
+        conns: Vec::new(),
+        free: Vec::new(),
+        next_gen: 0,
+        next_ugen: 0,
+        conn_count: 0,
+        names: upstreams,
+        upstreams: ups,
+        aggs: HashMap::new(),
+        next_agg: 0,
+        stats,
+        opts,
+    };
+    std::thread::Builder::new()
+        .name("deis-router".to_string())
+        .spawn(move || router.run())?;
+    Ok(local)
+}
+
+impl Router {
+    fn run(mut self) {
+        let tick = (self.opts.read_timeout.min(self.opts.write_timeout) / 4)
+            .clamp(Duration::from_millis(10), Duration::from_secs(1));
+        let mut events: Vec<Event> = Vec::new();
+        let mut last_sweep = Instant::now();
+        loop {
+            events.clear();
+            if self.poller.wait(&mut events, Some(tick)).is_err() {
+                return;
+            }
+            let ready: Vec<(u64, bool)> =
+                events.iter().map(|ev| (ev.token, ev.hangup)).collect();
+            for (token, hangup) in ready {
+                if token == LISTENER_TOKEN {
+                    self.accept_burst();
+                } else if token & UPSTREAM_BIT != 0 {
+                    let gen = ((token >> 32) & GEN_MASK as u64) as u32;
+                    let widx = ((token >> 16) & 0xFFFF) as usize;
+                    let pidx = (token & 0xFFFF) as usize;
+                    self.drive_upstream(widx, pidx, Some(gen), hangup);
+                } else {
+                    let idx = (token & 0xFFFF_FFFF) as u32;
+                    let gen = ((token >> 32) & GEN_MASK as u64) as u32;
+                    self.drive_client(idx, Some(gen), true, hangup);
+                }
+            }
+            if last_sweep.elapsed() >= tick {
+                self.sweep();
+                last_sweep = Instant::now();
+            }
+        }
+    }
+
+    fn accept_burst(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _addr)) => self.admit(stream),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn admit(&mut self, stream: TcpStream) {
+        if self.conn_count >= self.opts.max_conns.max(1) {
+            shed(stream, &self.opts);
+            return;
+        }
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        let idx = match self.free.pop() {
+            Some(i) => i,
+            None => {
+                self.conns.push(None);
+                (self.conns.len() - 1) as u32
+            }
+        };
+        self.next_gen = self.next_gen.wrapping_add(1) & GEN_MASK;
+        let gen = self.next_gen;
+        if self.poller.register(stream.as_raw_fd(), client_token(idx, gen), Interest::READ).is_err()
+        {
+            self.free.push(idx);
+            return;
+        }
+        let now = Instant::now();
+        self.conns[idx as usize] = Some(ClientConn {
+            stream,
+            gen,
+            buf: Vec::new(),
+            scanned: 0,
+            out: Vec::new(),
+            written: 0,
+            pending: false,
+            eof: false,
+            close_after_write: false,
+            interest: Interest::READ,
+            last_read_progress: now,
+            last_write_progress: now,
+        });
+        self.conn_count += 1;
+    }
+
+    fn client_mut(&mut self, idx: u32, gen: u32) -> Option<&mut ClientConn> {
+        self.conns.get_mut(idx as usize)?.as_mut().filter(|c| c.gen == gen)
+    }
+
+    fn drop_client(&mut self, idx: u32, conn: ClientConn) {
+        let _ = self.poller.deregister(conn.stream.as_raw_fd());
+        self.free.push(idx);
+        self.conn_count -= 1;
+    }
+
+    fn teardown_client(&mut self, idx: u32, gen: u32) {
+        let Some(slot) = self.conns.get_mut(idx as usize) else { return };
+        if slot.as_ref().is_some_and(|c| c.gen == gen) {
+            let conn = slot.take().expect("slot checked non-empty");
+            self.drop_client(idx, conn);
+        }
+    }
+
+    /// Advance one client's state machine (the server frontend's `drive`,
+    /// with upstream dispatch instead of coordinator submit). Upstream
+    /// connections touched by dispatched lines are flushed AFTER the
+    /// client slot is settled, because a flush failure fails a whole
+    /// worker and may need to write errors back into this very slot.
+    fn drive_client(&mut self, idx: u32, gen: Option<u32>, do_read: bool, hangup: bool) {
+        let Some(slot) = self.conns.get_mut(idx as usize) else { return };
+        let Some(mut conn) = slot.take() else { return };
+        if let Some(g) = gen {
+            if conn.gen != g {
+                self.conns[idx as usize] = Some(conn); // stale event
+                return;
+            }
+        }
+        if hangup && conn.pending {
+            // Peer gone mid-request: HUP is reported regardless of
+            // interest, so keeping the slot would spin the loop until the
+            // upstream replies. The in-flight FIFO entry later misses the
+            // recycled generation and is dropped (forwarded still counts).
+            self.drop_client(idx, conn);
+            return;
+        }
+        let mut touched: Vec<(usize, usize)> = Vec::new();
+        let mut dead = write_client(&mut conn);
+        if !dead && do_read && !conn.pending && !conn.eof && !conn.close_after_write {
+            dead |= read_client(&mut conn);
+        }
+        if !dead {
+            self.process_client_buffer(&mut conn, idx, &mut touched);
+            dead |= write_client(&mut conn);
+        }
+        let backlog = conn.out.len() - conn.written;
+        let finished = backlog == 0
+            && (conn.close_after_write || (conn.eof && !conn.pending && conn.buf.is_empty()));
+        if dead || finished {
+            self.drop_client(idx, conn);
+        } else {
+            let want = Interest {
+                read: !conn.pending
+                    && !conn.close_after_write
+                    && !conn.eof
+                    && backlog < OUT_HIGH_WATER,
+                write: backlog > 0,
+            };
+            let mut ok = true;
+            if want != conn.interest {
+                if self
+                    .poller
+                    .modify(conn.stream.as_raw_fd(), client_token(idx, conn.gen), want)
+                    .is_ok()
+                {
+                    conn.interest = want;
+                } else {
+                    ok = false;
+                }
+            }
+            if ok {
+                self.conns[idx as usize] = Some(conn);
+            } else {
+                self.drop_client(idx, conn);
+            }
+        }
+        let mut drives: Vec<(u32, u32)> = Vec::new();
+        for &(w, p) in &touched {
+            self.flush_upstream(w, p, &mut drives);
+        }
+        for (i, g) in drives {
+            self.drive_client(i, Some(g), false, false);
+        }
+    }
+
+    /// Consume complete client lines; same invariants as the server's
+    /// `process_buffer`.
+    fn process_client_buffer(
+        &mut self,
+        conn: &mut ClientConn,
+        idx: u32,
+        touched: &mut Vec<(usize, usize)>,
+    ) {
+        loop {
+            if conn.pending || conn.close_after_write {
+                return;
+            }
+            if conn.out.len() - conn.written >= OUT_HIGH_WATER {
+                return;
+            }
+            match conn.buf[conn.scanned..].iter().position(|&b| b == b'\n') {
+                Some(rel) => {
+                    let pos = conn.scanned + rel;
+                    if pos > self.opts.max_line_bytes {
+                        too_long(conn, &self.opts);
+                        return;
+                    }
+                    let buf_taken = std::mem::take(&mut conn.buf);
+                    self.dispatch_client(conn, idx, &buf_taken[..pos], touched);
+                    conn.buf = buf_taken;
+                    conn.buf.drain(..=pos);
+                    conn.scanned = 0;
+                }
+                None => {
+                    conn.scanned = conn.buf.len();
+                    if conn.buf.len() > self.opts.max_line_bytes {
+                        too_long(conn, &self.opts);
+                    } else if conn.eof && !conn.buf.is_empty() {
+                        let taken = std::mem::take(&mut conn.buf);
+                        conn.scanned = 0;
+                        self.dispatch_client(conn, idx, &taken, touched);
+                    }
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Classify and route one client line.
+    fn dispatch_client(
+        &mut self,
+        conn: &mut ClientConn,
+        idx: u32,
+        bytes: &[u8],
+        touched: &mut Vec<(usize, usize)>,
+    ) {
+        let owned;
+        let line = match std::str::from_utf8(bytes) {
+            Ok(s) => s,
+            Err(_) => {
+                owned = String::from_utf8_lossy(bytes).into_owned();
+                owned.as_str()
+            }
+        };
+        if line.trim().is_empty() {
+            // Workers send no reply for blank lines; forwarding one would
+            // desynchronize the per-connection reply FIFO. Skip locally.
+            return;
+        }
+        if let Scan::Submit(model) = route_scan(line) {
+            self.submit_route(conn, idx, line, &model, touched);
+            return;
+        }
+        match Json::parse(line) {
+            Ok(v) => {
+                if v.opt("cmd").is_some() {
+                    self.cmd_route(conn, idx, &v, touched);
+                } else {
+                    // Valid JSON the scanner couldn't settle (escapes in
+                    // the model name, say): still a submit; the tree
+                    // supplies the routing key and the worker validates.
+                    let model =
+                        v.opt("model").and_then(|m| m.as_str().ok()).unwrap_or("").to_string();
+                    self.submit_route(conn, idx, line, &model, touched);
+                }
+            }
+            Err(e) => {
+                // Same tree parser, same `{e:#}` formatting => the error
+                // text is byte-identical to the worker's.
+                self.stats.bad_lines += 1;
+                note_outbound(conn);
+                wire::error_reply(&mut conn.out, &format!("{e:#}"));
+            }
+        }
+    }
+
+    /// Route one submit line to a healthy worker in rendezvous rank order,
+    /// forwarding the line verbatim.
+    fn submit_route(
+        &mut self,
+        conn: &mut ClientConn,
+        idx: u32,
+        line: &str,
+        model: &str,
+        touched: &mut Vec<(usize, usize)>,
+    ) {
+        self.stats.requests += 1;
+        let key = hash::routing_key(model);
+        for widx in hash::rank(&self.names, key) {
+            if self.upstreams[widx].breaker.is_open() {
+                continue;
+            }
+            let Some(pidx) = self.ensure_upstream_conn(widx) else { continue };
+            let Some(uc) = self.upstreams[widx].conns[pidx].as_mut() else { continue };
+            uc.out.extend_from_slice(line.as_bytes());
+            uc.out.push(b'\n');
+            uc.fifo.push_back(Route::Client { idx, gen: conn.gen, model: model.to_string() });
+            self.stats.per_worker[widx].routed += 1;
+            conn.pending = true;
+            touched.push((widx, pidx));
+            return;
+        }
+        // Nothing reachable: answer locally, on the router's own balance.
+        self.stats.upstream_errors += 1;
+        *self.stats.per_model_errors.entry(model.to_string()).or_insert(0) += 1;
+        note_outbound(conn);
+        wire::error_reply(
+            &mut conn.out,
+            &format!("upstream unavailable: no healthy worker (model '{model}')"),
+        );
+    }
+
+    /// Fan a stats/health/models command out to every reachable worker.
+    fn cmd_route(
+        &mut self,
+        conn: &mut ClientConn,
+        idx: u32,
+        v: &Json,
+        touched: &mut Vec<(usize, usize)>,
+    ) {
+        let cmd = match cmd_name(v) {
+            Ok(c) => c,
+            Err(e) => {
+                note_outbound(conn);
+                wire::error_reply(&mut conn.out, &format!("{e:#}"));
+                return;
+            }
+        };
+        let kind = match cmd {
+            "stats" => CmdKind::Stats,
+            "health" => CmdKind::Health,
+            "models" => CmdKind::Models,
+            other => {
+                // Answered locally, with the worker's exact text.
+                note_outbound(conn);
+                wire::error_reply(&mut conn.out, &format!("unknown cmd '{other}'"));
+                return;
+            }
+        };
+        self.stats.cmds += 1;
+        let line = format!("{{\"cmd\":\"{cmd}\"}}\n");
+        let id = self.next_agg;
+        self.next_agg += 1;
+        let results: Vec<Option<Json>> = (0..self.upstreams.len()).map(|_| None).collect();
+        let mut outstanding = 0;
+        for widx in 0..self.upstreams.len() {
+            if self.upstreams[widx].breaker.is_open() {
+                continue;
+            }
+            let Some(pidx) = self.ensure_upstream_conn(widx) else { continue };
+            let Some(uc) = self.upstreams[widx].conns[pidx].as_mut() else { continue };
+            uc.out.extend_from_slice(line.as_bytes());
+            uc.fifo.push_back(Route::Agg { id, widx });
+            outstanding += 1;
+            touched.push((widx, pidx));
+        }
+        if outstanding == 0 {
+            // Every worker down: merge all-None immediately (stats still
+            // answer — that is exactly when an operator needs them).
+            let reply = self.finalize_kind(kind, &results, None);
+            note_outbound(conn);
+            conn.out.extend_from_slice(reply.to_string().as_bytes());
+            conn.out.push(b'\n');
+        } else {
+            self.aggs.insert(id, Agg { client: (idx, conn.gen), kind, results, outstanding });
+            conn.pending = true;
+        }
+    }
+
+    /// A live connection to `widx`, growing the pool or probing a lazy
+    /// connect as needed. `None` = the worker is unreachable right now
+    /// (its breaker has been notified).
+    fn ensure_upstream_conn(&mut self, widx: usize) -> Option<usize> {
+        if let Some(p) = self.upstreams[widx].idle_conn() {
+            return Some(p);
+        }
+        let timeout = self.opts.connect_timeout;
+        if let Some(p) = self.upstreams[widx].free_slot() {
+            match self.upstreams[widx].connect(timeout) {
+                Ok(stream) => {
+                    self.next_ugen = self.next_ugen.wrapping_add(1) & GEN_MASK;
+                    let gen = self.next_ugen;
+                    let token = upstream_token(widx, p, gen);
+                    if self.poller.register(stream.as_raw_fd(), token, Interest::READ).is_ok() {
+                        self.upstreams[widx].breaker.on_success();
+                        self.upstreams[widx].conns[p] = Some(UpstreamConn::new(stream, gen));
+                        return Some(p);
+                    }
+                }
+                Err(_) => {
+                    // A refused grow-connect opens the breaker even while
+                    // sibling connections still work — the worker is
+                    // degraded either way, and the cooldown re-probe
+                    // restores it.
+                    self.upstreams[widx].breaker.on_failure();
+                    return self.upstreams[widx].least_loaded();
+                }
+            }
+        }
+        self.upstreams[widx].least_loaded()
+    }
+
+    /// Write an upstream's queued request bytes and settle its interest.
+    fn flush_upstream(&mut self, widx: usize, pidx: usize, drives: &mut Vec<(u32, u32)>) {
+        let (dead, fd, gen, want, cur) = {
+            let Some(uc) = self.upstreams[widx].conns[pidx].as_mut() else { return };
+            let dead = write_upstream(uc);
+            let backlog = uc.out.len() - uc.written;
+            (
+                dead,
+                uc.stream.as_raw_fd(),
+                uc.gen,
+                Interest { read: true, write: backlog > 0 },
+                uc.interest,
+            )
+        };
+        if dead {
+            self.fail_worker(widx, drives);
+            return;
+        }
+        if want != cur {
+            if self.poller.modify(fd, upstream_token(widx, pidx, gen), want).is_ok() {
+                if let Some(uc) = self.upstreams[widx].conns[pidx].as_mut() {
+                    uc.interest = want;
+                }
+            } else {
+                self.fail_worker(widx, drives);
+            }
+        }
+    }
+
+    /// Advance one upstream connection: write queued requests, read reply
+    /// bytes, relay complete replies, then settle or fail.
+    fn drive_upstream(&mut self, widx: usize, pidx: usize, gen: Option<u32>, _hangup: bool) {
+        let Some(mut uc) = self
+            .upstreams
+            .get_mut(widx)
+            .and_then(|w| w.conns.get_mut(pidx))
+            .and_then(Option::take)
+        else {
+            return;
+        };
+        if let Some(g) = gen {
+            if uc.gen != g {
+                self.upstreams[widx].conns[pidx] = Some(uc); // stale event
+                return;
+            }
+        }
+        let mut drives: Vec<(u32, u32)> = Vec::new();
+        let mut dead = write_upstream(&mut uc);
+        let (d2, eof) = read_upstream(&mut uc);
+        dead |= d2;
+        // Relay even when dying: replies the worker delivered before the
+        // failure still reach their clients.
+        let corrupt = self.relay_upstream(widx, &mut uc, &mut drives);
+        let mut failed = dead || eof || corrupt;
+        if !failed {
+            let backlog = uc.out.len() - uc.written;
+            let want = Interest { read: true, write: backlog > 0 };
+            if want != uc.interest {
+                let token = upstream_token(widx, pidx, uc.gen);
+                if self.poller.modify(uc.stream.as_raw_fd(), token, want).is_ok() {
+                    uc.interest = want;
+                } else {
+                    failed = true;
+                }
+            }
+        }
+        if failed {
+            let _ = self.poller.deregister(uc.stream.as_raw_fd());
+            self.fail_conn_routes(widx, uc, &mut drives);
+            self.fail_worker(widx, &mut drives);
+        } else {
+            self.upstreams[widx].conns[pidx] = Some(uc);
+        }
+        for (i, g) in drives {
+            self.drive_client(i, Some(g), false, false);
+        }
+    }
+
+    /// Consume the upstream's inbound buffer: reply lines relayed
+    /// verbatim, binary payloads streamed through by byte count. Returns
+    /// true on protocol corruption (unsolicited bytes, unparseable reply,
+    /// absurd payload size) — the caller fails the worker.
+    fn relay_upstream(
+        &mut self,
+        widx: usize,
+        uc: &mut UpstreamConn,
+        drives: &mut Vec<(u32, u32)>,
+    ) -> bool {
+        loop {
+            if uc.bin_remaining > 0 {
+                if uc.buf.is_empty() {
+                    return false;
+                }
+                let k = uc.buf.len().min(uc.bin_remaining as usize);
+                if uc.bin_to_client {
+                    let target = match uc.fifo.front() {
+                        Some(Route::Client { idx, gen, .. }) => Some((*idx, *gen)),
+                        _ => None,
+                    };
+                    match target.and_then(|(i, g)| self.client_mut(i, g).map(|c| (i, g, c))) {
+                        Some((i, g, conn)) => {
+                            note_outbound(conn);
+                            conn.out.extend_from_slice(&uc.buf[..k]);
+                            drives.push((i, g));
+                        }
+                        // Client vanished mid-payload: drain and discard
+                        // the rest so the FIFO stays aligned.
+                        None => uc.bin_to_client = false,
+                    }
+                }
+                uc.buf.drain(..k);
+                uc.scanned = 0;
+                uc.bin_remaining -= k as u64;
+                if uc.bin_remaining == 0 {
+                    self.complete_head(widx, uc, None, drives);
+                }
+                continue;
+            }
+            let Some(rel) = uc.buf[uc.scanned..].iter().position(|&b| b == b'\n') else {
+                uc.scanned = uc.buf.len();
+                return false;
+            };
+            let pos = uc.scanned + rel;
+            let buf_taken = std::mem::take(&mut uc.buf);
+            let corrupt = self.relay_line(widx, uc, &buf_taken[..pos], drives);
+            uc.buf = buf_taken;
+            uc.buf.drain(..=pos);
+            uc.scanned = 0;
+            if corrupt {
+                return true;
+            }
+        }
+    }
+
+    /// Relay one complete upstream reply line to its FIFO-head owner.
+    fn relay_line(
+        &mut self,
+        widx: usize,
+        uc: &mut UpstreamConn,
+        bytes: &[u8],
+        drives: &mut Vec<(u32, u32)>,
+    ) -> bool {
+        enum Head {
+            Client(u32, u32),
+            Agg,
+        }
+        let Ok(line) = std::str::from_utf8(bytes) else { return true };
+        let head = match uc.fifo.front() {
+            // A reply with nothing in flight (e.g. a worker-side shed
+            // line) means the FIFO and the wire disagree: corruption.
+            None => return true,
+            Some(Route::Client { idx, gen, .. }) => Head::Client(*idx, *gen),
+            Some(Route::Agg { .. }) => Head::Agg,
+        };
+        match head {
+            Head::Client(cidx, cgen) => {
+                let bin = match wire::reply_bin_bytes(line) {
+                    Ok(n) => n.unwrap_or(0),
+                    Err(_) => return true,
+                };
+                if bin > wire::MAX_BIN_REPLY_BYTES {
+                    return true;
+                }
+                let alive = match self.client_mut(cidx, cgen) {
+                    Some(conn) => {
+                        note_outbound(conn);
+                        conn.out.extend_from_slice(line.as_bytes());
+                        conn.out.push(b'\n');
+                        drives.push((cidx, cgen));
+                        true
+                    }
+                    None => false,
+                };
+                if bin > 0 {
+                    uc.bin_remaining = bin;
+                    uc.bin_to_client = alive;
+                } else {
+                    self.complete_head(widx, uc, None, drives);
+                }
+                false
+            }
+            Head::Agg => match Json::parse(line) {
+                Ok(v) => {
+                    self.complete_head(widx, uc, Some(v), drives);
+                    false
+                }
+                Err(_) => true,
+            },
+        }
+    }
+
+    /// The FIFO head's reply is fully relayed (or, for a fan-out leg,
+    /// parsed): retire it.
+    fn complete_head(
+        &mut self,
+        widx: usize,
+        uc: &mut UpstreamConn,
+        agg_value: Option<Json>,
+        drives: &mut Vec<(u32, u32)>,
+    ) {
+        uc.bin_to_client = false;
+        match uc.fifo.pop_front() {
+            Some(Route::Client { idx, gen, .. }) => {
+                self.stats.forwarded += 1;
+                self.stats.per_worker[widx].forwarded += 1;
+                if let Some(conn) = self.client_mut(idx, gen) {
+                    conn.pending = false;
+                    drives.push((idx, gen));
+                }
+            }
+            Some(Route::Agg { id, widx: awidx }) => {
+                self.agg_record(id, awidx, agg_value, Some(widx), drives);
+            }
+            None => {}
+        }
+    }
+
+    /// Record one fan-out leg's result; finalize the merge when the last
+    /// leg lands. `live` marks a worker slot whose connection is
+    /// momentarily checked out of the pool (it must still read as up).
+    fn agg_record(
+        &mut self,
+        id: u64,
+        widx: usize,
+        value: Option<Json>,
+        live: Option<usize>,
+        drives: &mut Vec<(u32, u32)>,
+    ) {
+        let Some(agg) = self.aggs.get_mut(&id) else { return };
+        agg.results[widx] = value;
+        agg.outstanding -= 1;
+        if agg.outstanding > 0 {
+            return;
+        }
+        let agg = self.aggs.remove(&id).expect("agg present");
+        let reply = self.finalize_kind(agg.kind, &agg.results, live);
+        let (cidx, cgen) = agg.client;
+        if let Some(conn) = self.client_mut(cidx, cgen) {
+            note_outbound(conn);
+            conn.out.extend_from_slice(reply.to_string().as_bytes());
+            conn.out.push(b'\n');
+            conn.pending = false;
+            drives.push((cidx, cgen));
+        }
+    }
+
+    fn worker_views(&self, live: Option<usize>) -> Vec<WorkerView> {
+        self.upstreams
+            .iter()
+            .enumerate()
+            .map(|(i, u)| WorkerView { addr: u.name.clone(), up: u.up() || Some(i) == live })
+            .collect()
+    }
+
+    fn finalize_kind(&self, kind: CmdKind, results: &[Option<Json>], live: Option<usize>) -> Json {
+        match kind {
+            CmdKind::Stats => stats::merge_stats(&self.stats, &self.worker_views(live), results),
+            CmdKind::Health => stats::merge_health(&self.worker_views(live), results),
+            CmdKind::Models => stats::merge_models(results),
+        }
+    }
+
+    /// Fail every connection of one worker: open its breaker, tear the
+    /// pool down, answer everything in flight.
+    fn fail_worker(&mut self, widx: usize, drives: &mut Vec<(u32, u32)>) {
+        self.upstreams[widx].breaker.on_failure();
+        for pidx in 0..self.upstreams[widx].conns.len() {
+            if let Some(uc) = self.upstreams[widx].conns[pidx].take() {
+                let _ = self.poller.deregister(uc.stream.as_raw_fd());
+                self.fail_conn_routes(widx, uc, drives);
+            }
+        }
+    }
+
+    /// Answer every FIFO entry of a dead connection: proxied submits get
+    /// the `upstream unavailable` error (or a teardown, if their binary
+    /// payload was already part-delivered), fan-out legs record `None`.
+    fn fail_conn_routes(
+        &mut self,
+        widx: usize,
+        mut uc: UpstreamConn,
+        drives: &mut Vec<(u32, u32)>,
+    ) {
+        let name = self.upstreams[widx].name.clone();
+        let mut mid_payload = uc.bin_remaining > 0 && uc.bin_to_client;
+        while let Some(route) = uc.fifo.pop_front() {
+            match route {
+                Route::Client { idx, gen, model } => {
+                    self.stats.upstream_errors += 1;
+                    self.stats.per_worker[widx].upstream_errors += 1;
+                    *self.stats.per_model_errors.entry(model.clone()).or_insert(0) += 1;
+                    if mid_payload {
+                        // Part of this reply's binary payload is already
+                        // on the client's stream; an error line here would
+                        // corrupt it, not help. Cut the connection.
+                        self.teardown_client(idx, gen);
+                    } else if let Some(conn) = self.client_mut(idx, gen) {
+                        note_outbound(conn);
+                        wire::error_reply(
+                            &mut conn.out,
+                            &format!(
+                                "upstream unavailable: worker {name} failed (model '{model}')"
+                            ),
+                        );
+                        conn.pending = false;
+                        drives.push((idx, gen));
+                    }
+                }
+                Route::Agg { id, widx: awidx } => {
+                    self.agg_record(id, awidx, None, None, drives)
+                }
+            }
+            mid_payload = false;
+        }
+    }
+
+    /// Client hygiene sweep — identical policy to the worker frontend.
+    /// Upstream connections are exempt: requests parked at a worker have
+    /// no router-side deadline (see the module doc), and a worker that
+    /// stops reading shows up as a connection failure soon enough.
+    fn sweep(&mut self) {
+        let now = Instant::now();
+        let mut doomed: Vec<u32> = Vec::new();
+        for (i, slot) in self.conns.iter().enumerate() {
+            let Some(conn) = slot else { continue };
+            let backlog = conn.out.len() - conn.written;
+            let write_stalled = backlog > 0
+                && now.duration_since(conn.last_write_progress) > self.opts.write_timeout;
+            let mid_line = !conn.pending
+                && !conn.eof
+                && backlog == 0
+                && !conn.buf.is_empty()
+                && !conn.buf.contains(&b'\n');
+            let read_stalled = mid_line
+                && now.duration_since(conn.last_read_progress) > self.opts.read_timeout;
+            if write_stalled || read_stalled {
+                doomed.push(i as u32);
+            }
+        }
+        for idx in doomed {
+            if let Some(conn) = self.conns[idx as usize].take() {
+                self.drop_client(idx, conn);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_banner_parses_and_rejects() {
+        let addr = parse_serve_banner("deis serving on 127.0.0.1:7878 (models: gmm2d)\n");
+        assert_eq!(addr, Some("127.0.0.1:7878".parse().unwrap()));
+        let addr = parse_serve_banner("deis serving on 0.0.0.0:80 (models: a,b)");
+        assert_eq!(addr, Some("0.0.0.0:80".parse().unwrap()));
+        assert_eq!(parse_serve_banner("deis router on 127.0.0.1:1 (workers: x)"), None);
+        assert_eq!(parse_serve_banner("deis serving on not-an-addr (models: m)"), None);
+        assert_eq!(parse_serve_banner(""), None);
+    }
+
+    #[test]
+    fn route_scan_extracts_the_model_and_nothing_else() {
+        assert_eq!(
+            route_scan(r#"{"model":"gmm2d","solver":"tab3","nfe":10,"n":4}"#),
+            Scan::Submit("gmm2d".to_string())
+        );
+        // Last-wins duplicates, matching the fast submit parser.
+        assert_eq!(
+            route_scan(r#"{"model":"a","model":"b"}"#),
+            Scan::Submit("b".to_string())
+        );
+        // No model: routed under "" — the WORKER owns the error text.
+        assert_eq!(route_scan(r#"{"solver":"tab3"}"#), Scan::Submit(String::new()));
+        // Commands, escapes and malformed lines fall back to the tree.
+        assert_eq!(route_scan(r#"{"cmd":"stats"}"#), Scan::Tree);
+        assert_eq!(route_scan(r#"{"model":"a\"b"}"#), Scan::Tree);
+        assert_eq!(route_scan(r#"{"model":"a""#), Scan::Tree);
+        assert_eq!(route_scan("not json"), Scan::Tree);
+    }
+
+    #[test]
+    fn tokens_pack_and_unpack() {
+        let t = client_token(7, 0x7FFF_FFFF);
+        assert_eq!(t & UPSTREAM_BIT, 0);
+        assert_eq!((t & 0xFFFF_FFFF) as u32, 7);
+        assert_eq!(((t >> 32) & GEN_MASK as u64) as u32, 0x7FFF_FFFF);
+        let t = upstream_token(3, 5, 0x7FFF_FFFF);
+        assert_ne!(t & UPSTREAM_BIT, 0);
+        assert_eq!(((t >> 16) & 0xFFFF) as usize, 3);
+        assert_eq!((t & 0xFFFF) as usize, 5);
+        assert_eq!(((t >> 32) & GEN_MASK as u64) as u32, 0x7FFF_FFFF);
+        assert_ne!(client_token(0, 0), LISTENER_TOKEN);
+        assert_ne!(upstream_token(0xFFFF, 0xFFFF, GEN_MASK), LISTENER_TOKEN);
+    }
+
+    #[test]
+    fn serve_refuses_an_empty_upstream_list() {
+        assert!(serve(Vec::new(), "127.0.0.1:0").is_err());
+        assert!(serve(vec!["definitely-not-resolvable.invalid:1".into()], "127.0.0.1:0").is_err());
+    }
+}

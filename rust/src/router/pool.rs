@@ -1,0 +1,142 @@
+//! Pooled, pipelined upstream connections.
+//!
+//! Each upstream worker gets a small fixed pool of non-blocking TCP
+//! connections, grown lazily up to `pool_per_worker`. Requests are
+//! pipelined FIFO per connection: the wire protocol guarantees exactly one
+//! reply per request, in order, so a `VecDeque<Route>` alongside each
+//! connection is the complete reply-matching state — no request IDs on the
+//! wire. The pool matters because a WORKER admits only one request per
+//! connection at a time (its frontend parses the next line only after
+//! replying), so per-worker concurrency equals the number of pooled
+//! connections, and concentrating a model's traffic on one worker only
+//! pays off in co-batching if several of its requests can be in the
+//! worker's scheduler at once.
+//!
+//! Health is a per-upstream [`Breaker`] (the PR-6 shape, threshold 1):
+//! any connect failure or connection death opens it for the cooldown, the
+//! event loop re-homes the upstream's models by walking the rendezvous
+//! rank past it, and the first submit after cooldown probes it again.
+
+use std::collections::VecDeque;
+use std::io;
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use crate::coordinator::{Breaker, BreakerConfig};
+use crate::server::poll::Interest;
+
+/// Who gets the reply at the head of a connection's FIFO.
+#[derive(Clone, Debug)]
+pub(crate) enum Route {
+    /// A proxied submit: relay the reply line (and any binary payload)
+    /// to this client slot, if its generation still matches.
+    Client { idx: u32, gen: u32, model: String },
+    /// One leg of a stats/health/models fan-out: record the parsed reply
+    /// under aggregate `id` at worker slot `widx`.
+    Agg { id: u64, widx: usize },
+}
+
+/// One pooled non-blocking connection to a worker.
+pub(crate) struct UpstreamConn {
+    pub stream: TcpStream,
+    /// Stale-event guard, same scheme as client slots.
+    pub gen: u32,
+    /// Inbound bytes from the worker (reply lines + binary payloads).
+    pub buf: Vec<u8>,
+    /// Prefix of `buf` already scanned for a newline.
+    pub scanned: usize,
+    /// Binary payload bytes still owed to the head route's reply.
+    pub bin_remaining: u64,
+    /// Whether that payload is being relayed (false once the head client
+    /// vanished mid-payload: the rest is drained and discarded).
+    pub bin_to_client: bool,
+    /// Outbound request bytes not yet written.
+    pub out: Vec<u8>,
+    pub written: usize,
+    /// Reply owners, oldest first.
+    pub fifo: VecDeque<Route>,
+    pub interest: Interest,
+}
+
+impl UpstreamConn {
+    pub fn new(stream: TcpStream, gen: u32) -> UpstreamConn {
+        UpstreamConn {
+            stream,
+            gen,
+            buf: Vec::new(),
+            scanned: 0,
+            bin_remaining: 0,
+            bin_to_client: false,
+            out: Vec::new(),
+            written: 0,
+            fifo: VecDeque::new(),
+            interest: Interest::READ,
+        }
+    }
+}
+
+/// One upstream worker: its address, health breaker, and connection pool.
+pub(crate) struct Upstream {
+    /// Resolved connect target.
+    pub addr: SocketAddr,
+    /// The address string as configured — the rendezvous identity, and the
+    /// key used for this worker in stats/health replies.
+    pub name: String,
+    pub breaker: Breaker,
+    pub conns: Vec<Option<UpstreamConn>>,
+}
+
+impl Upstream {
+    pub fn new(addr: SocketAddr, name: String, cooldown: Duration, pool: usize) -> Upstream {
+        Upstream {
+            addr,
+            name,
+            // Threshold 1: a worker process is either there or it isn't —
+            // unlike a flaky model eval there is no partial-failure mode
+            // worth retrying into, and an open breaker is what bounds how
+            // often the (blocking, bounded) connect probe can stall the
+            // event loop.
+            breaker: Breaker::new(BreakerConfig { threshold: 1, cooldown }),
+            conns: (0..pool.max(1)).map(|_| None).collect(),
+        }
+    }
+
+    /// Bounded blocking connect (the one deliberate stall in the event
+    /// loop — see the module doc in `router/mod.rs`), then non-blocking +
+    /// nodelay for the pipelined request path.
+    pub fn connect(&self, timeout: Duration) -> io::Result<TcpStream> {
+        let stream = TcpStream::connect_timeout(&self.addr, timeout)?;
+        stream.set_nonblocking(true)?;
+        stream.set_nodelay(true)?;
+        Ok(stream)
+    }
+
+    /// Any live pooled connection?
+    pub fn up(&self) -> bool {
+        self.conns.iter().any(Option::is_some)
+    }
+
+    /// Live connection with nothing in flight, if any — preferred over
+    /// pipelining onto a busy one, since the worker serializes per conn.
+    pub fn idle_conn(&self) -> Option<usize> {
+        self.conns
+            .iter()
+            .position(|c| c.as_ref().is_some_and(|uc| uc.fifo.is_empty()))
+    }
+
+    /// Unused pool slot, if the pool hasn't grown to its cap yet.
+    pub fn free_slot(&self) -> Option<usize> {
+        self.conns.iter().position(Option::is_none)
+    }
+
+    /// Live connection with the shortest FIFO (fallback when every
+    /// connection is busy and the pool is full).
+    pub fn least_loaded(&self) -> Option<usize> {
+        self.conns
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| c.as_ref().map(|uc| (uc.fifo.len(), i)))
+            .min()
+            .map(|(_, i)| i)
+    }
+}

@@ -1,0 +1,410 @@
+//! Router-side counters and the stats/health/models fan-in merge.
+//!
+//! The router keeps its own small counter set (plain `u64`s — the event
+//! loop is single-threaded, so no atomics) and answers `{"cmd":"stats"}` /
+//! `{"cmd":"health"}` / `{"cmd":"models"}` by fanning the command out to
+//! every reachable worker and merging the replies into ONE object with the
+//! worker wire schema, so existing clients (loadgen's `reconcile`, the
+//! `nc` one-liners in the Makefile) work unchanged against the router.
+//!
+//! Merge rules, per key class (see the wire doc in `server/mod.rs`):
+//!
+//! * lifecycle / volume counters — SUMMED across workers,
+//! * `max_occupancy`, `p50_us`, `p99_us` — MAX (a documented
+//!   approximation for the percentiles: the true merged quantile needs
+//!   the histograms, which the wire does not carry; max is the
+//!   conservative bound),
+//! * `eval_occupancy` — recomputed from the summed numerator/denominator
+//!   (`sched_eval_requests` / `sched_evals`), never averaged,
+//! * `mean_us` — weighted by each worker's `requests`,
+//! * `per_model` — unioned (each model lives on one worker, so "union"
+//!   is normally disjoint; after a re-home both shards contribute and the
+//!   same rules merge the two partial rows),
+//! * plus a `"router"` object carrying the router's own counters — these
+//!   are deliberately OUTSIDE the worker key set so the worker-level
+//!   4-term balance stays checkable and the router's own balance
+//!   (`requests == forwarded + upstream_errors + in_flight`) is separate.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::util::json::Json;
+
+/// Per-worker slice of the router's own counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerCounters {
+    /// Submits enqueued toward this worker.
+    pub routed: u64,
+    /// Replies relayed back from this worker.
+    pub forwarded: u64,
+    /// Submits failed by this worker's death or connect failure.
+    pub upstream_errors: u64,
+}
+
+/// The router's own counters. Owned by the event-loop thread.
+#[derive(Clone, Debug, Default)]
+pub struct RouterStats {
+    /// Submit lines accepted for routing (the router-level "requests").
+    pub requests: u64,
+    /// Upstream replies relayed toward a client (counted even when the
+    /// client vanished before the reply arrived — the work was done).
+    pub forwarded: u64,
+    /// Submits answered with an `upstream unavailable` error, either
+    /// immediately (no healthy worker) or when a worker died mid-request.
+    pub upstream_errors: u64,
+    /// Fan-out commands handled (stats/health/models).
+    pub cmds: u64,
+    /// Client lines that failed to parse (answered locally with an error).
+    pub bad_lines: u64,
+    pub per_worker: Vec<WorkerCounters>,
+    /// Per-model attribution of `upstream_errors`, for the per_model half
+    /// of loadgen's reconciliation.
+    pub per_model_errors: BTreeMap<String, u64>,
+}
+
+impl RouterStats {
+    pub fn new(workers: usize) -> RouterStats {
+        RouterStats { per_worker: vec![WorkerCounters::default(); workers], ..Default::default() }
+    }
+}
+
+/// What the merge needs to know about each worker beyond its reply.
+#[derive(Clone, Debug)]
+pub struct WorkerView {
+    /// The upstream address as configured — also the rendezvous identity.
+    pub addr: String,
+    /// At least one live pooled connection (or none attempted yet and the
+    /// breaker closed). A worker whose reply slot is `None` in a fan-out
+    /// was unreachable for THAT command regardless of this flag.
+    pub up: bool,
+}
+
+fn num(v: &Json) -> f64 {
+    v.as_f64().unwrap_or(0.0)
+}
+
+fn key_union<'a>(objs: &[&'a BTreeMap<String, Json>]) -> BTreeSet<&'a str> {
+    objs.iter().flat_map(|o| o.keys().map(String::as_str)).collect()
+}
+
+fn sum_key(objs: &[&BTreeMap<String, Json>], key: &str) -> f64 {
+    objs.iter().filter_map(|o| o.get(key)).map(num).sum()
+}
+
+/// Merge one stats-shaped counter object (the global reply or one
+/// `per_model` entry) across workers, applying the per-key-class rules
+/// from the module doc. Unknown keys default to SUM, so a future worker
+/// counter aggregates sensibly without touching the router.
+fn merge_counters(objs: &[&BTreeMap<String, Json>]) -> BTreeMap<String, Json> {
+    let mut out = BTreeMap::new();
+    for key in key_union(objs) {
+        let merged = match key {
+            "ok" | "per_model" | "eval_occupancy" | "mean_us" => continue,
+            "max_occupancy" | "p50_us" | "p99_us" => {
+                objs.iter().filter_map(|o| o.get(key)).map(num).fold(0.0, f64::max)
+            }
+            _ => sum_key(objs, key),
+        };
+        out.insert(key.to_string(), Json::num(merged));
+    }
+    if objs.iter().any(|o| o.contains_key("eval_occupancy")) {
+        let evals = sum_key(objs, "sched_evals");
+        let reqs = sum_key(objs, "sched_eval_requests");
+        let occ = if evals > 0.0 { reqs / evals } else { 0.0 };
+        out.insert("eval_occupancy".to_string(), Json::num(occ));
+    }
+    if objs.iter().any(|o| o.contains_key("mean_us")) {
+        let total = sum_key(objs, "requests");
+        let weighted: f64 =
+            objs.iter().map(|o| num2(o, "mean_us") * num2(o, "requests")).sum();
+        let mean = if total > 0.0 { weighted / total } else { 0.0 };
+        out.insert("mean_us".to_string(), Json::num(mean));
+    }
+    out
+}
+
+fn num2(obj: &BTreeMap<String, Json>, key: &str) -> f64 {
+    obj.get(key).map(num).unwrap_or(0.0)
+}
+
+/// The `"router"` object embedded in the merged stats reply.
+pub fn router_obj(rs: &RouterStats, views: &[WorkerView]) -> Json {
+    let per_worker: BTreeMap<String, Json> = views
+        .iter()
+        .zip(&rs.per_worker)
+        .map(|(view, w)| {
+            (
+                view.addr.clone(),
+                Json::obj(vec![
+                    ("up", Json::Bool(view.up)),
+                    ("routed", Json::uint(w.routed)),
+                    ("forwarded", Json::uint(w.forwarded)),
+                    ("upstream_errors", Json::uint(w.upstream_errors)),
+                ]),
+            )
+        })
+        .collect();
+    let per_model_errors: BTreeMap<String, Json> =
+        rs.per_model_errors.iter().map(|(m, &n)| (m.clone(), Json::uint(n))).collect();
+    Json::obj(vec![
+        ("workers", Json::uint(views.len() as u64)),
+        ("workers_up", Json::uint(views.iter().filter(|v| v.up).count() as u64)),
+        ("requests", Json::uint(rs.requests)),
+        ("forwarded", Json::uint(rs.forwarded)),
+        ("upstream_errors", Json::uint(rs.upstream_errors)),
+        ("in_flight", Json::uint(rs.requests - rs.forwarded - rs.upstream_errors)),
+        ("cmds", Json::uint(rs.cmds)),
+        ("bad_lines", Json::uint(rs.bad_lines)),
+        ("per_worker", Json::Obj(per_worker)),
+        ("per_model_errors", Json::Obj(per_model_errors)),
+    ])
+}
+
+/// Merge per-worker `{"cmd":"stats"}` replies (slot `None` = that worker
+/// was unreachable) into the aggregated reply.
+pub fn merge_stats(rs: &RouterStats, views: &[WorkerView], replies: &[Option<Json>]) -> Json {
+    let objs: Vec<&BTreeMap<String, Json>> =
+        replies.iter().flatten().filter_map(|r| r.as_obj().ok()).collect();
+    let mut top = merge_counters(&objs);
+    let mut per_model: BTreeMap<String, Vec<&BTreeMap<String, Json>>> = BTreeMap::new();
+    for obj in &objs {
+        if let Some(Json::Obj(models)) = obj.get("per_model") {
+            for (name, entry) in models {
+                if let Ok(m) = entry.as_obj() {
+                    per_model.entry(name.clone()).or_default().push(m);
+                }
+            }
+        }
+    }
+    let merged_pm: BTreeMap<String, Json> = per_model
+        .into_iter()
+        .map(|(name, entries)| (name, Json::Obj(merge_counters(&entries))))
+        .collect();
+    top.insert("per_model".to_string(), Json::Obj(merged_pm));
+    top.insert("ok".to_string(), Json::Bool(true));
+    top.insert("router".to_string(), router_obj(rs, views));
+    Json::Obj(top)
+}
+
+/// Merge `{"cmd":"health"}` replies: `worker_panics` sums, per-model
+/// health ANDs (unhealthy anywhere → unhealthy — conservative, since a
+/// re-home can move traffic onto any worker carrying the model), and
+/// top-level `draining` is true only when every REACHABLE worker is
+/// draining. A `"workers"` object breaks all of it out per upstream.
+pub fn merge_health(views: &[WorkerView], replies: &[Option<Json>]) -> Json {
+    let mut worker_panics: u64 = 0;
+    let mut models: BTreeMap<String, bool> = BTreeMap::new();
+    let mut workers: BTreeMap<String, Json> = BTreeMap::new();
+    let (mut reachable, mut draining_all) = (0u64, true);
+    for (view, reply) in views.iter().zip(replies) {
+        let obj = reply.as_ref().and_then(|r| r.as_obj().ok());
+        let up = obj.is_some();
+        let mut draining = false;
+        let mut panics = 0u64;
+        if let Some(o) = obj {
+            reachable += 1;
+            draining = o.get("draining").and_then(|d| d.as_bool().ok()).unwrap_or(false);
+            panics = o.get("worker_panics").and_then(|p| p.as_u64().ok()).unwrap_or(0);
+            draining_all &= draining;
+            worker_panics += panics;
+            if let Some(Json::Obj(m)) = o.get("models") {
+                for (name, healthy) in m {
+                    let h = healthy.as_bool().unwrap_or(false);
+                    models.entry(name.clone()).and_modify(|cur| *cur &= h).or_insert(h);
+                }
+            }
+        }
+        workers.insert(
+            view.addr.clone(),
+            Json::obj(vec![
+                ("up", Json::Bool(up && view.up)),
+                ("draining", Json::Bool(draining)),
+                ("worker_panics", Json::uint(panics)),
+            ]),
+        );
+    }
+    let model_health: BTreeMap<String, Json> =
+        models.into_iter().map(|(n, h)| (n, Json::Bool(h))).collect();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("draining", Json::Bool(reachable > 0 && draining_all)),
+        ("worker_panics", Json::uint(worker_panics)),
+        ("models", Json::Obj(model_health)),
+        ("workers", Json::Obj(workers)),
+    ])
+}
+
+/// Merge `{"cmd":"models"}` replies: sorted union.
+pub fn merge_models(replies: &[Option<Json>]) -> Json {
+    let mut names: BTreeSet<String> = BTreeSet::new();
+    for reply in replies.iter().flatten() {
+        if let Some(Json::Arr(list)) = reply.opt("models") {
+            for m in list {
+                if let Ok(s) = m.as_str() {
+                    names.insert(s.to_string());
+                }
+            }
+        }
+    }
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("models", Json::Arr(names.into_iter().map(|n| Json::str(&n)).collect())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn worker_stats(requests: f64, p99: f64, mean: f64, models: Vec<(&str, f64)>) -> Json {
+        let per_model: BTreeMap<String, Json> = models
+            .into_iter()
+            .map(|(name, req)| {
+                (
+                    name.to_string(),
+                    Json::obj(vec![
+                        ("requests", Json::num(req)),
+                        ("completed", Json::num(req)),
+                        ("sched_evals", Json::num(2.0)),
+                        ("sched_eval_requests", Json::num(req)),
+                        ("eval_occupancy", Json::num(req / 2.0)),
+                        ("max_occupancy", Json::num(req)),
+                    ]),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("requests", Json::num(requests)),
+            ("completed", Json::num(requests)),
+            ("sched_evals", Json::num(10.0)),
+            ("sched_eval_requests", Json::num(requests)),
+            ("eval_occupancy", Json::num(requests / 10.0)),
+            ("max_occupancy", Json::num(requests)),
+            ("p99_us", Json::num(p99)),
+            ("mean_us", Json::num(mean)),
+            ("per_model", Json::Obj(per_model)),
+        ])
+    }
+
+    fn views() -> Vec<WorkerView> {
+        vec![
+            WorkerView { addr: "a:1".into(), up: true },
+            WorkerView { addr: "b:2".into(), up: true },
+        ]
+    }
+
+    #[test]
+    fn stats_merge_sums_maxes_and_weights() {
+        let mut rs = RouterStats::new(2);
+        rs.requests = 30;
+        rs.forwarded = 30;
+        let a = worker_stats(10.0, 500.0, 100.0, vec![("m0", 10.0)]);
+        let b = worker_stats(20.0, 900.0, 400.0, vec![("m1", 20.0)]);
+        let merged = merge_stats(&rs, &views(), &[Some(a), Some(b)]);
+        assert_eq!(merged.get("requests").unwrap().as_f64().unwrap(), 30.0);
+        assert_eq!(merged.get("completed").unwrap().as_f64().unwrap(), 30.0);
+        // Percentiles take the max; the mean is request-weighted.
+        assert_eq!(merged.get("p99_us").unwrap().as_f64().unwrap(), 900.0);
+        let mean = merged.get("mean_us").unwrap().as_f64().unwrap();
+        assert!((mean - (10.0 * 100.0 + 20.0 * 400.0) / 30.0).abs() < 1e-9);
+        // Occupancy is recomputed from the summed terms, not averaged.
+        let occ = merged.get("eval_occupancy").unwrap().as_f64().unwrap();
+        assert!((occ - 30.0 / 20.0).abs() < 1e-9);
+        // per_model is a disjoint union here.
+        let pm = merged.get("per_model").unwrap();
+        assert_eq!(pm.get("m0").unwrap().get("requests").unwrap().as_f64().unwrap(), 10.0);
+        assert_eq!(pm.get("m1").unwrap().get("requests").unwrap().as_f64().unwrap(), 20.0);
+        // And the router object rides along with its own balance.
+        let r = merged.get("router").unwrap();
+        assert_eq!(r.get("workers").unwrap().as_u64().unwrap(), 2);
+        assert_eq!(r.get("in_flight").unwrap().as_u64().unwrap(), 0);
+    }
+
+    #[test]
+    fn stats_merge_same_model_on_two_workers_sums_the_rows() {
+        let rs = RouterStats::new(2);
+        let a = worker_stats(4.0, 0.0, 0.0, vec![("m", 4.0)]);
+        let b = worker_stats(6.0, 0.0, 0.0, vec![("m", 6.0)]);
+        let merged = merge_stats(&rs, &views(), &[Some(a), Some(b)]);
+        let m = merged.get("per_model").unwrap().get("m").unwrap();
+        assert_eq!(m.get("requests").unwrap().as_f64().unwrap(), 10.0);
+        // The per-entry occupancy recompute: (4+6)/(2+2).
+        assert!((m.get("eval_occupancy").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats_merge_skips_unreachable_workers() {
+        let mut rs = RouterStats::new(2);
+        rs.requests = 7;
+        rs.forwarded = 5;
+        rs.upstream_errors = 2;
+        let a = worker_stats(5.0, 0.0, 0.0, vec![]);
+        let merged = merge_stats(
+            &rs,
+            &[views()[0].clone(), WorkerView { addr: "b:2".into(), up: false }],
+            &[Some(a), None],
+        );
+        assert_eq!(merged.get("requests").unwrap().as_f64().unwrap(), 5.0);
+        let r = merged.get("router").unwrap();
+        assert_eq!(r.get("workers_up").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(r.get("upstream_errors").unwrap().as_u64().unwrap(), 2);
+        let b = r.get("per_worker").unwrap().get("b:2").unwrap();
+        assert!(!b.get("up").unwrap().as_bool().unwrap());
+    }
+
+    fn worker_health(draining: bool, panics: u64, models: Vec<(&str, bool)>) -> Json {
+        let m: BTreeMap<String, Json> =
+            models.into_iter().map(|(n, h)| (n.to_string(), Json::Bool(h))).collect();
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("draining", Json::Bool(draining)),
+            ("worker_panics", Json::uint(panics)),
+            ("models", Json::Obj(m)),
+        ])
+    }
+
+    #[test]
+    fn health_merge_ands_models_and_sums_panics() {
+        let a = worker_health(true, 2, vec![("m", true), ("shared", true)]);
+        let b = worker_health(false, 3, vec![("shared", false)]);
+        let merged = merge_health(&views(), &[Some(a), Some(b)]);
+        assert!(!merged.get("draining").unwrap().as_bool().unwrap());
+        assert_eq!(merged.get("worker_panics").unwrap().as_u64().unwrap(), 5);
+        let models = merged.get("models").unwrap();
+        assert!(models.get("m").unwrap().as_bool().unwrap());
+        assert!(!models.get("shared").unwrap().as_bool().unwrap());
+        let w = merged.get("workers").unwrap().get("a:1").unwrap();
+        assert!(w.get("draining").unwrap().as_bool().unwrap());
+        assert_eq!(w.get("worker_panics").unwrap().as_u64().unwrap(), 2);
+    }
+
+    #[test]
+    fn health_merge_draining_needs_every_reachable_worker() {
+        let a = worker_health(true, 0, vec![]);
+        let b = worker_health(true, 0, vec![]);
+        let merged = merge_health(&views(), &[Some(a), Some(b)]);
+        assert!(merged.get("draining").unwrap().as_bool().unwrap());
+        // One unreachable worker doesn't veto: draining is over REACHABLE.
+        let c = worker_health(true, 0, vec![]);
+        let merged = merge_health(&views(), &[Some(c), None]);
+        assert!(merged.get("draining").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn models_merge_unions_sorted() {
+        let a = Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("models", Json::Arr(vec![Json::str("b"), Json::str("a")])),
+        ]);
+        let b = Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("models", Json::Arr(vec![Json::str("c"), Json::str("a")])),
+        ]);
+        let merged = merge_models(&[Some(a), Some(b)]);
+        let names: Vec<String> = match merged.get("models").unwrap() {
+            Json::Arr(list) => list.iter().map(|m| m.as_str().unwrap().to_string()).collect(),
+            other => panic!("models not an array: {other:?}"),
+        };
+        assert_eq!(names, vec!["a", "b", "c"]);
+    }
+}

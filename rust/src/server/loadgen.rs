@@ -389,8 +389,14 @@ fn check(scope: &str, key: &str, client: u64, server: u64) -> Result<()> {
     Ok(())
 }
 
-fn reconcile_tally(scope: &str, t: &Tally, v: &Json) -> Result<()> {
-    check(scope, "requests", t.sent, stat_u64(v, "requests")?)?;
+/// `err_adjust` is the number of this scope's requests that the ROUTER
+/// answered itself with an `upstream unavailable` error (zero for a direct
+/// server): those requests never reached a worker, so they are missing
+/// from the aggregated worker counters but present in the client's `sent`
+/// (classified `failed`). Adding them to the server side of `requests` and
+/// of the lifecycle sum makes both tiers reconcile with one equation.
+fn reconcile_tally(scope: &str, t: &Tally, v: &Json, err_adjust: u64) -> Result<()> {
+    check(scope, "requests", t.sent, stat_u64(v, "requests")? + err_adjust)?;
     check(scope, "completed", t.completed, stat_u64(v, "completed")?)?;
     check(scope, "expired", t.expired, stat_u64(v, "expired")?)?;
     check(scope, "deadline_hit", t.deadline_hit, stat_u64(v, "deadline_hit")?)?;
@@ -409,9 +415,19 @@ fn reconcile_tally(scope: &str, t: &Tally, v: &Json) -> Result<()> {
     let server_sum = stat_u64(v, "completed")?
         + stat_u64(v, "rejected")?
         + stat_u64(v, "expired")?
-        + stat_u64(v, "failed")?;
+        + stat_u64(v, "failed")?
+        + err_adjust;
     check(scope, "lifecycle sum", client_sum, server_sum)?;
     Ok(())
+}
+
+/// Router-answered errors for one per-model scope, from the `"router"`
+/// object's `per_model_errors` map (0 when absent or direct).
+fn router_model_errors(router: Option<&Json>, model: &str) -> Result<u64> {
+    match router.and_then(|r| r.opt("per_model_errors")).and_then(|pm| pm.opt(model)) {
+        Some(v) => Ok(v.as_f64()? as u64),
+        None => Ok(0),
+    }
 }
 
 /// Cross-check a client-side [`LoadReport`] against the server's stats
@@ -419,14 +435,48 @@ fn reconcile_tally(scope: &str, t: &Tally, v: &Json) -> Result<()> {
 /// (any other traffic shows up as a mismatch) and that every model in the
 /// plan is registered on the server — an unknown model is refused before
 /// a stats shard exists for it, so its per-model entry cannot reconcile.
+///
+/// Works identically against a worker and against a router: a router
+/// stats reply carries a `"router"` object, whose `upstream_errors` /
+/// `per_model_errors` bridge the gap between what the client sent and
+/// what the workers saw (see [`reconcile_tally`]), and whose own balance
+/// `requests == forwarded + upstream_errors + in_flight` is checked too.
 pub fn reconcile(report: &LoadReport, stats: &Json) -> Result<()> {
-    reconcile_tally("global", &report.global, stats)?;
+    let router = stats.opt("router");
+    let global_adjust = match router {
+        Some(r) => stat_u64(r, "upstream_errors")?,
+        None => 0,
+    };
+    reconcile_tally("global", &report.global, stats, global_adjust)?;
     let per_model = stats.get("per_model")?;
     for (model, tally) in &report.per_model {
-        let entry = per_model
-            .get(model)
-            .with_context(|| format!("server stats missing per_model entry '{model}'"))?;
-        reconcile_tally(&format!("per_model.{model}"), tally, entry)?;
+        let adjust = router_model_errors(router, model)?;
+        match per_model.opt(model) {
+            Some(entry) => {
+                reconcile_tally(&format!("per_model.{model}"), tally, entry, adjust)?
+            }
+            // Every request for this model died at the router (worker down
+            // before any was forwarded): no worker shard exists, and the
+            // router's error count must account for the whole tally.
+            None if adjust == tally.sent && tally.failed == tally.sent => {}
+            None => bail!(
+                "server stats missing per_model entry '{model}' \
+                 (router errors cover {adjust} of {} sent)",
+                tally.sent
+            ),
+        }
+    }
+    if let Some(r) = router {
+        let requests = stat_u64(r, "requests")?;
+        let forwarded = stat_u64(r, "forwarded")?;
+        let upstream_errors = stat_u64(r, "upstream_errors")?;
+        let in_flight = stat_u64(r, "in_flight")?;
+        if requests != forwarded + upstream_errors + in_flight {
+            bail!(
+                "router balance violated: requests {requests} != forwarded {forwarded} \
+                 + upstream_errors {upstream_errors} + in_flight {in_flight}"
+            );
+        }
     }
     Ok(())
 }

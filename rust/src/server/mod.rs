@@ -171,6 +171,48 @@
 //! buckets have width 1). `mean_us` stays exact (sum and count are tracked
 //! directly). The keys, types and meaning are otherwise unchanged from the
 //! previous sorted-list implementation; clients need no migration.
+//!
+//! ## Router tier (multi-process sharding)
+//!
+//! `deis router` (see [`crate::router`]) puts this exact wire protocol in
+//! front of N independent worker processes. Clients need no migration:
+//! submit lines, binary frames, pipelining-in-order, and the hygiene
+//! contract above behave identically through the router, and proxied
+//! replies are byte-identical to direct ones (binary payloads are relayed
+//! as raw bytes, never re-encoded).
+//!
+//! *Routing key*: the submit line's `model`, with a `@f32` suffix
+//! stripped — so a model and its f32 sibling land on the SAME worker and
+//! their co-batching opportunity concentrates instead of fragmenting.
+//! Placement is rendezvous (HRW) hashing over the configured upstream
+//! address strings: deterministic, stateless, and minimally disruptive
+//! when the worker set changes (only the models owned by a dead worker
+//! move).
+//!
+//! *Aggregated introspection*: `stats`/`health`/`models` fan out to every
+//! reachable worker and come back as ONE object in the worker schema —
+//! lifecycle and volume counters summed, `eval_occupancy` recomputed from
+//! the summed terms, `mean_us` request-weighted, `p50_us`/`p99_us` the
+//! per-worker max (the wire carries quantiles, not histograms), and
+//! `per_model` unioned. The stats reply additionally carries a `"router"`
+//! object with the router's own accounting: `requests`, `forwarded`,
+//! `upstream_errors`, `in_flight`, `cmds`, `bad_lines`, a `per_worker`
+//! breakdown keyed by upstream address, and `per_model_errors`; its own
+//! balance is `requests == forwarded + upstream_errors + in_flight`.
+//! Merged `health` ANDs per-model breaker states, sums `worker_panics`,
+//! reports `draining` only when every reachable worker is draining, and
+//! breaks all of it out per upstream under `"workers"`.
+//!
+//! *Failure semantics*: a worker connect failure, connection death or
+//! protocol violation fails that worker as a unit — every in-flight
+//! request routed to it is answered immediately with {"ok":false,
+//! "error":"upstream unavailable: ..."} (counted in the router's
+//! `upstream_errors`, never a hang), a threshold-1 breaker opens for the
+//! router's cooldown, and subsequent submits re-home down the rendezvous
+//! rank to the next live worker. Replies the dying worker already
+//! delivered are relayed before the teardown; a request whose binary
+//! payload was only part-delivered tears the client connection down
+//! instead (a late error line would corrupt the byte stream).
 
 pub mod loadgen;
 pub mod poll;

@@ -280,6 +280,25 @@ pub fn error_reply(out: &mut Vec<u8>, msg: &str) {
     out.extend_from_slice(s.as_bytes());
 }
 
+/// Zero-copy scan of one reply line for the binary-frame marker: returns
+/// `Ok(Some(bin_bytes))` for a `"frame":"bin"` header line, `Ok(None)` for
+/// a plain JSON reply. The router's passthrough calls this per relayed
+/// reply line to learn how many raw payload bytes follow — and because
+/// [`write_reply`] emits `bin_bytes` as the alphabetically FIRST key, a
+/// bin header resolves after scanning exactly one key. Errs on malformed
+/// JSON (the caller treats that as upstream protocol corruption).
+pub fn reply_bin_bytes(line: &str) -> Result<Option<u64>> {
+    let mut sc = Scanner::new(line);
+    sc.begin_object()?;
+    while let Some(key) = sc.next_key()? {
+        if key == "bin_bytes" {
+            return Ok(Some(sc.value_num()?.as_u64()?));
+        }
+        sc.skip_value()?;
+    }
+    Ok(None)
+}
+
 /// Row-major f64 samples -> little-endian payload bytes.
 pub fn samples_to_le_bytes(samples: &[f64]) -> Vec<u8> {
     let mut out = Vec::with_capacity(samples.len() * 8);
@@ -462,5 +481,31 @@ mod tests {
         assert_eq!(*out.last().unwrap(), b'\n');
         let j = Json::parse(std::str::from_utf8(&out[..out.len() - 1]).unwrap()).unwrap();
         assert!(j.opt("frame").is_none() && j.opt("bin_bytes").is_none());
+    }
+
+    #[test]
+    fn reply_bin_bytes_classifies_reply_lines() {
+        // A real bin header from the writer resolves to its payload size.
+        let r = sample_result();
+        let meta =
+            ReplyMeta { n: 3, dtype: Precision::F64, return_samples: true, frame: Frame::Bin };
+        let mut out = Vec::new();
+        write_reply(&mut out, &meta, &Ok(r.clone()));
+        let nl = out.iter().position(|&b| b == b'\n').unwrap();
+        let header = std::str::from_utf8(&out[..nl]).unwrap();
+        assert_eq!(reply_bin_bytes(header).unwrap(), Some(r.samples.len() as u64 * 8));
+        // Plain JSON replies and error lines carry no payload.
+        let mut out = Vec::new();
+        write_reply(
+            &mut out,
+            &ReplyMeta { frame: Frame::Json, ..meta },
+            &Ok(sample_result()),
+        );
+        let line = std::str::from_utf8(&out[..out.len() - 1]).unwrap();
+        assert_eq!(reply_bin_bytes(line).unwrap(), None);
+        assert_eq!(reply_bin_bytes(r#"{"error":"boom","ok":false}"#).unwrap(), None);
+        // Malformed lines are protocol corruption, not "no payload".
+        assert!(reply_bin_bytes(r#"{"ok":true"#).is_err());
+        assert!(reply_bin_bytes("not json").is_err());
     }
 }

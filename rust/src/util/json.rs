@@ -124,6 +124,13 @@ impl Json {
         }
     }
 
+    pub fn as_obj(&self) -> Result<&std::collections::BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Ok(m),
+            _ => bail!("not an object"),
+        }
+    }
+
     /// Flat numeric vector.
     pub fn as_f64_vec(&self) -> Result<Vec<f64>> {
         self.as_arr()?.iter().map(|v| v.as_f64()).collect()

@@ -1,0 +1,423 @@
+//! Router-tier integration battery: rendezvous placement, bit-exact proxy
+//! parity (JSON and binary frames), stats/health fan-in, worker death
+//! mid-flight, drain behind the router, error-text parity with the worker
+//! frontend, and the `--spawn-workers` end-to-end path.
+//!
+//! Workers are real in-process servers over the analytic oracles (no
+//! artifacts); the router is the real `deis::router` event loop. The one
+//! synthetic piece is the kill test's stub worker — a raw listener whose
+//! accepted connection we sever on cue, the only way to make "worker dies
+//! with a request in flight" deterministic.
+
+mod common;
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use deis::coordinator::{Coordinator, CoordinatorConfig, ModelRegistry};
+use deis::router::{self, hash, RouterOptions};
+use deis::server::{serve, Client};
+use deis::util::json::Json;
+
+/// One in-process worker over the three-mixture registry (gmm2d / ring6 /
+/// ring5, each a DIFFERENT analytic mixture — wrong-shard routing shows up
+/// as bit-level sample divergence, not just a wrong counter).
+fn boot_worker(stall: Duration) -> (SocketAddr, Arc<Coordinator>) {
+    let coord = Arc::new(Coordinator::new(
+        CoordinatorConfig { workers: 2, ..Default::default() },
+        common::multi_stall_registry(stall),
+    ));
+    let addr = serve(coord.clone(), "127.0.0.1:0").unwrap();
+    (addr, coord)
+}
+
+fn boot_fleet(n: usize, stall: Duration) -> (Vec<String>, Vec<Arc<Coordinator>>) {
+    let mut names = Vec::new();
+    let mut coords = Vec::new();
+    for _ in 0..n {
+        let (addr, coord) = boot_worker(stall);
+        names.push(addr.to_string());
+        coords.push(coord);
+    }
+    (names, coords)
+}
+
+fn submit(model: &str, seed: u64, bin: bool) -> Json {
+    let frame = if bin { r#","frame":"bin""# } else { "" };
+    Json::parse(&format!(
+        r#"{{"model":"{model}","solver":"tab3","nfe":8,"n":6,"seed":{seed},"return_samples":true{frame}}}"#
+    ))
+    .unwrap()
+}
+
+#[test]
+fn proxied_replies_are_bit_exact_with_direct_ones() {
+    let (names, _coords) = boot_fleet(2, Duration::ZERO);
+    let raddr = router::serve(names.clone(), "127.0.0.1:0").unwrap();
+    let mut via_router = Client::connect(raddr).unwrap();
+
+    for (seed, model) in [(1u64, "gmm2d"), (2, "ring6"), (3, "ring5")] {
+        // JSON framing: proxied samples == direct samples == the solo
+        // engine replay, bitwise. Timing fields differ by construction, so
+        // parity is asserted on the payload and the semantic fields.
+        let owner = hash::pick(&names, hash::routing_key(model)).unwrap();
+        let mut direct = Client::connect(names[owner].parse().unwrap()).unwrap();
+        let p = via_router.call(&submit(model, seed, false)).unwrap();
+        let d = direct.call(&submit(model, seed, false)).unwrap();
+        assert!(p.get("ok").unwrap().as_bool().unwrap(), "{p:?}");
+        let ps = p.get("samples").unwrap().as_f64_vec().unwrap();
+        let ds = d.get("samples").unwrap().as_f64_vec().unwrap();
+        assert_eq!(ps, ds, "proxied vs direct samples diverged for {model}");
+        let solo =
+            common::solo_samples(model, deis::solvers::SolverKind::Tab(3), 8, 6, seed);
+        assert_eq!(ps, solo, "proxied samples are not the solo engine's for {model}");
+        for key in ["ok", "n", "dim", "nfe", "model"] {
+            assert_eq!(
+                p.opt(key).map(|v| v.to_string()),
+                d.opt(key).map(|v| v.to_string()),
+                "field '{key}' diverged for {model}"
+            );
+        }
+
+        // Binary framing: the raw payload must survive the passthrough.
+        let (ph, pbin) = via_router.call_bin(&submit(model, seed, true)).unwrap();
+        let (_, dbin) = direct.call_bin(&submit(model, seed, true)).unwrap();
+        assert!(ph.get("ok").unwrap().as_bool().unwrap(), "{ph:?}");
+        assert_eq!(pbin, dbin, "bin payload diverged for {model}");
+        assert_eq!(pbin, solo, "bin payload is not the solo engine's for {model}");
+    }
+}
+
+#[test]
+fn rendezvous_concentrates_each_model_on_its_owner() {
+    let (names, _coords) = boot_fleet(2, Duration::ZERO);
+    let raddr = router::serve(names.clone(), "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(raddr).unwrap();
+
+    let models = ["gmm2d", "ring6", "ring5"];
+    for (i, model) in models.iter().enumerate() {
+        for s in 0..4u64 {
+            let r = client.call(&submit(model, 100 + i as u64 * 10 + s, false)).unwrap();
+            assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
+        }
+    }
+    let stats = client.call(&Json::parse(r#"{"cmd":"stats"}"#).unwrap()).unwrap();
+    let per_worker = stats.get("router").unwrap().get("per_worker").unwrap();
+
+    // Every request for a model must have landed on its rendezvous owner:
+    // the routed counts per worker are exactly 4 * (models owned).
+    let mut expect = vec![0u64; names.len()];
+    for model in models {
+        expect[hash::pick(&names, hash::routing_key(model)).unwrap()] += 4;
+    }
+    for (widx, name) in names.iter().enumerate() {
+        let w = per_worker.get(name).unwrap();
+        assert_eq!(
+            w.get("routed").unwrap().as_u64().unwrap(),
+            expect[widx],
+            "worker {name} routed count off"
+        );
+        assert_eq!(w.get("forwarded").unwrap().as_u64().unwrap(), expect[widx]);
+        assert_eq!(w.get("upstream_errors").unwrap().as_u64().unwrap(), 0);
+    }
+    // And the placement is non-trivial with these three models only if
+    // both workers own something — if not, the test still proved owner
+    // concentration, which is the property under test.
+}
+
+#[test]
+fn stats_fan_in_sums_exactly_and_models_union() {
+    let (names, _coords) = boot_fleet(2, Duration::ZERO);
+    let raddr = router::serve(names.clone(), "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(raddr).unwrap();
+
+    for (i, model) in ["gmm2d", "ring6", "ring5"].iter().enumerate() {
+        for s in 0..(i as u64 + 2) {
+            let r = client.call(&submit(model, 500 + s, false)).unwrap();
+            assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
+        }
+    }
+    let merged = client.call(&Json::parse(r#"{"cmd":"stats"}"#).unwrap()).unwrap();
+
+    // Ground truth: each worker's own stats wire, summed by hand.
+    let mut sum_requests = 0u64;
+    let mut sum_completed = 0u64;
+    let mut pm_requests: std::collections::BTreeMap<String, u64> = Default::default();
+    for name in &names {
+        let mut direct = Client::connect(name.parse().unwrap()).unwrap();
+        let s = direct.call(&Json::parse(r#"{"cmd":"stats"}"#).unwrap()).unwrap();
+        sum_requests += s.get("requests").unwrap().as_f64().unwrap() as u64;
+        sum_completed += s.get("completed").unwrap().as_f64().unwrap() as u64;
+        if let Json::Obj(pm) = s.get("per_model").unwrap() {
+            for (model, entry) in pm {
+                *pm_requests.entry(model.clone()).or_insert(0) +=
+                    entry.get("requests").unwrap().as_f64().unwrap() as u64;
+            }
+        }
+    }
+    assert_eq!(merged.get("requests").unwrap().as_f64().unwrap() as u64, sum_requests);
+    assert_eq!(merged.get("completed").unwrap().as_f64().unwrap() as u64, sum_completed);
+    assert_eq!(sum_requests, 2 + 3 + 4, "the workers saw every routed request");
+    for (model, expected) in &pm_requests {
+        let entry = merged.get("per_model").unwrap().get(model).unwrap();
+        assert_eq!(
+            entry.get("requests").unwrap().as_f64().unwrap() as u64,
+            *expected,
+            "per_model '{model}' mismatch"
+        );
+    }
+    let r = merged.get("router").unwrap();
+    assert_eq!(r.get("requests").unwrap().as_u64().unwrap(), 9);
+    assert_eq!(r.get("forwarded").unwrap().as_u64().unwrap(), 9);
+    assert_eq!(r.get("upstream_errors").unwrap().as_u64().unwrap(), 0);
+    assert_eq!(r.get("in_flight").unwrap().as_u64().unwrap(), 0);
+
+    // models: sorted union across the fleet (both carry all three here).
+    let models = client.call(&Json::parse(r#"{"cmd":"models"}"#).unwrap()).unwrap();
+    let list: Vec<String> = match models.get("models").unwrap() {
+        Json::Arr(l) => l.iter().map(|m| m.as_str().unwrap().to_string()).collect(),
+        other => panic!("not an array: {other:?}"),
+    };
+    assert_eq!(list, vec!["gmm2d", "ring5", "ring6"]);
+
+    // health: reachable fleet, nothing draining, all models healthy.
+    let health = client.call(&Json::parse(r#"{"cmd":"health"}"#).unwrap()).unwrap();
+    assert!(health.get("ok").unwrap().as_bool().unwrap());
+    assert!(!health.get("draining").unwrap().as_bool().unwrap());
+    assert!(health.get("models").unwrap().get("ring6").unwrap().as_bool().unwrap());
+}
+
+/// The acceptance-criteria kill test: one of two workers dies with a
+/// request in flight. The client must get an error reply (never a hang),
+/// the model must re-home to the surviving worker, and every router
+/// counter must balance afterwards.
+#[test]
+fn worker_death_mid_flight_errors_rebalances_and_balances_counters() {
+    // Survivor: a real worker carrying synthetic models m0..m15 (the
+    // standard ring each — the math is irrelevant here, the NAMES give the
+    // rendezvous enough keys that at least one must hash to the victim).
+    let mut reg = ModelRegistry::new();
+    let model_names: Vec<String> = (0..16).map(|i| format!("m{i}")).collect();
+    for name in &model_names {
+        reg.insert(name, Arc::new(common::oracle()));
+    }
+    let coord = Arc::new(Coordinator::new(
+        CoordinatorConfig { workers: 2, ..Default::default() },
+        reg,
+    ));
+    let survivor = serve(coord.clone(), "127.0.0.1:0").unwrap();
+
+    // Victim: a stub listener. It accepts, swallows the request, and its
+    // connection is severed on cue — a deterministic mid-flight death.
+    let stub = TcpListener::bind("127.0.0.1:0").unwrap();
+    let stub_addr = stub.local_addr().unwrap();
+
+    let names = vec![survivor.to_string(), stub_addr.to_string()];
+    let victim_model = model_names
+        .iter()
+        .find(|m| hash::pick(&names, hash::routing_key(m)) == Some(1))
+        .expect("16 keys over 2 workers: at least one must hash to the victim")
+        .clone();
+
+    // Cooldown far beyond the test: the victim must STAY re-homed.
+    let opts = RouterOptions { cooldown: Duration::from_secs(60), ..Default::default() };
+    let raddr = router::serve_with(names.clone(), "127.0.0.1:0", opts).unwrap();
+
+    // In-flight request toward the victim, from its own client thread.
+    let vm = victim_model.clone();
+    let stuck = std::thread::spawn(move || {
+        let mut c = Client::connect(raddr).unwrap();
+        c.call(&submit(&vm, 7, false)).unwrap()
+    });
+
+    // Sever the connection only after the request line has arrived, so the
+    // death is genuinely mid-flight, then drop the listener too (no
+    // reconnect target).
+    let (mut conn, _) = stub.accept().unwrap();
+    let mut first = [0u8; 1];
+    conn.read_exact(&mut first).unwrap();
+    drop(conn);
+    drop(stub);
+
+    let reply = stuck.join().expect("client must get a reply, not a hang");
+    assert!(!reply.get("ok").unwrap().as_bool().unwrap(), "{reply:?}");
+    let err = reply.get("error").unwrap().as_str().unwrap().to_string();
+    assert!(err.contains("upstream unavailable"), "unexpected error: {err}");
+    assert!(err.contains(&victim_model), "error must name the model: {err}");
+
+    // The victim's model re-homes to the survivor and completes there.
+    let mut client = Client::connect(raddr).unwrap();
+    let rehomed = client.call(&submit(&victim_model, 8, false)).unwrap();
+    assert!(rehomed.get("ok").unwrap().as_bool().unwrap(), "{rehomed:?}");
+    let solo =
+        common::solo_samples("gmm2d", deis::solvers::SolverKind::Tab(3), 8, 6, 8);
+    assert_eq!(
+        rehomed.get("samples").unwrap().as_f64_vec().unwrap(),
+        solo,
+        "re-homed request must be served by the survivor's real engine"
+    );
+
+    // Counters balance: 2 requests = 1 forwarded + 1 upstream error.
+    let stats = client.call(&Json::parse(r#"{"cmd":"stats"}"#).unwrap()).unwrap();
+    let r = stats.get("router").unwrap();
+    assert_eq!(r.get("requests").unwrap().as_u64().unwrap(), 2);
+    assert_eq!(r.get("forwarded").unwrap().as_u64().unwrap(), 1);
+    assert_eq!(r.get("upstream_errors").unwrap().as_u64().unwrap(), 1);
+    assert_eq!(r.get("in_flight").unwrap().as_u64().unwrap(), 0);
+    assert_eq!(r.get("workers_up").unwrap().as_u64().unwrap(), 1);
+    assert_eq!(
+        r.get("per_model_errors").unwrap().get(&victim_model).unwrap().as_u64().unwrap(),
+        1
+    );
+    let pw = r.get("per_worker").unwrap();
+    assert_eq!(
+        pw.get(&names[1]).unwrap().get("upstream_errors").unwrap().as_u64().unwrap(),
+        1
+    );
+    assert!(!pw.get(&names[1]).unwrap().get("up").unwrap().as_bool().unwrap());
+    assert_eq!(
+        pw.get(&names[0]).unwrap().get("forwarded").unwrap().as_u64().unwrap(),
+        1
+    );
+}
+
+#[test]
+fn drain_behind_the_router_answers_the_proxied_tail() {
+    // One stalling worker: the in-flight request is parked in an eval when
+    // the drain flag flips.
+    let (names, coords) = boot_fleet(1, Duration::from_millis(60));
+    let raddr = router::serve(names, "127.0.0.1:0").unwrap();
+
+    let parked = std::thread::spawn(move || {
+        let mut c = Client::connect(raddr).unwrap();
+        c.call(&submit("gmm2d", 11, false)).unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(20));
+    coords[0].begin_drain();
+
+    // The parked request completes through the router...
+    let reply = parked.join().expect("drained tail must still be answered");
+    assert!(reply.get("ok").unwrap().as_bool().unwrap(), "{reply:?}");
+
+    // ...new work is refused (an answered refusal, relayed verbatim)...
+    let mut c = Client::connect(raddr).unwrap();
+    let refused = c.call(&submit("gmm2d", 12, false)).unwrap();
+    assert!(!refused.get("ok").unwrap().as_bool().unwrap(), "{refused:?}");
+
+    // ...and the merged health wire reports the drain.
+    let health = c.call(&Json::parse(r#"{"cmd":"health"}"#).unwrap()).unwrap();
+    assert!(health.get("draining").unwrap().as_bool().unwrap());
+}
+
+/// Raw-socket helper: one line out, one line back.
+fn raw_call(addr: SocketAddr, line: &str) -> String {
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writer.write_all(line.as_bytes()).unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    reply
+}
+
+#[test]
+fn local_error_texts_match_the_worker_frontend_byte_for_byte() {
+    let (names, _coords) = boot_fleet(1, Duration::ZERO);
+    let waddr: SocketAddr = names[0].parse().unwrap();
+    let raddr = router::serve(names.clone(), "127.0.0.1:0").unwrap();
+
+    // Lines the router answers itself must be indistinguishable from the
+    // worker's own replies: same parser, same error formatting.
+    for line in ["not json\n", "{\"cmd\":\"nope\"}\n", "{\"cmd\":7}\n", "[1,2]\n"] {
+        assert_eq!(
+            raw_call(raddr, line),
+            raw_call(waddr, line),
+            "reply diverged for line {line:?}"
+        );
+    }
+    // A submit with no model is the WORKER's error (routed under ""):
+    // still byte-identical end to end.
+    let no_model = "{\"solver\":\"tab3\",\"nfe\":2,\"n\":4}\n";
+    assert_eq!(raw_call(raddr, no_model), raw_call(waddr, no_model));
+
+    // Blank lines get no reply from a worker; the router must skip them
+    // too (relaying one would desync the reply FIFO). The next reply on
+    // the connection belongs to the submit AFTER the blanks.
+    let stream = TcpStream::connect(raddr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writer.write_all(b"\n   \n").unwrap();
+    writer
+        .write_all(format!("{}\n", submit("gmm2d", 21, false)).as_bytes())
+        .unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    let v = Json::parse(&reply).unwrap();
+    assert!(v.get("ok").unwrap().as_bool().unwrap(), "blank lines desynced: {reply}");
+}
+
+/// `deis router --spawn-workers 2` end to end: banner, submit, aggregated
+/// stats. The whole process group is killed on exit (workers are children
+/// of the router process).
+#[test]
+fn spawn_workers_end_to_end() {
+    use std::os::unix::process::CommandExt;
+    use std::process::{Child, Command, Stdio};
+
+    extern "C" {
+        fn kill(pid: i32, sig: i32) -> i32;
+    }
+    /// Kills the router's whole process group (router + spawned workers),
+    /// even when an assertion unwinds first.
+    struct Fleet(Child);
+    impl Drop for Fleet {
+        fn drop(&mut self) {
+            unsafe { kill(-(self.0.id() as i32), 9) };
+            let _ = self.0.wait();
+        }
+    }
+
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_deis"));
+    cmd.args([
+        "router",
+        "--spawn-workers",
+        "2",
+        "--addr",
+        "127.0.0.1:0",
+        "--models",
+        "gmm2d_oracle",
+    ]);
+    cmd.stdout(Stdio::piped()).stderr(Stdio::null());
+    cmd.process_group(0);
+    let mut child = cmd.spawn().unwrap();
+    let stdout = child.stdout.take().unwrap();
+    let fleet = Fleet(child);
+    let mut reader = BufReader::new(stdout);
+    let mut banner = String::new();
+    reader.read_line(&mut banner).unwrap();
+    let addr: SocketAddr = banner
+        .trim()
+        .strip_prefix("deis router on ")
+        .unwrap_or_else(|| panic!("bad banner: {banner:?}"))
+        .split_whitespace()
+        .next()
+        .unwrap()
+        .parse()
+        .unwrap();
+
+    let mut client = Client::connect(addr).unwrap();
+    let r = client
+        .call(&Json::parse(r#"{"model":"gmm2d_oracle","solver":"tab3","nfe":6,"n":4}"#).unwrap())
+        .unwrap();
+    assert!(r.get("ok").unwrap().as_bool().unwrap(), "{r:?}");
+
+    let stats = client.call(&Json::parse(r#"{"cmd":"stats"}"#).unwrap()).unwrap();
+    let router = stats.get("router").unwrap();
+    assert_eq!(router.get("workers").unwrap().as_u64().unwrap(), 2);
+    assert_eq!(router.get("requests").unwrap().as_u64().unwrap(), 1);
+    assert_eq!(router.get("forwarded").unwrap().as_u64().unwrap(), 1);
+    assert_eq!(stats.get("requests").unwrap().as_f64().unwrap() as u64, 1);
+    drop(fleet);
+}
