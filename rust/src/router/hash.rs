@@ -70,6 +70,9 @@ pub fn pick(workers: &[String], key: &str) -> Option<usize> {
 
 /// Full failover order for `key`: worker indices sorted by score
 /// descending (ties toward the lower index). `rank(..)[0] == pick(..)`.
+/// Allocates and sorts all N workers — failover-path only; the submit hot
+/// path uses the allocation-free [`pick`] and falls back here when the
+/// owner is unavailable.
 pub fn rank(workers: &[String], key: &str) -> Vec<usize> {
     let mut scored: Vec<(u64, usize)> =
         workers.iter().enumerate().map(|(i, w)| (score(w, key), i)).collect();

@@ -21,8 +21,10 @@
 //! counter is a plain `u64` and every FIFO is a plain `VecDeque`.
 //!
 //! * **Routing** — rendezvous (HRW) hashing over the configured upstream
-//!   address strings ([`hash`]): owner = argmax score, failover = walk the
-//!   rank order past upstreams with open breakers. Stateless, so every
+//!   address strings ([`hash`]): owner = argmax score (the allocation-free
+//!   [`hash::pick`], the per-submit hot path); only when the owner is
+//!   unavailable is the full [`hash::rank`] failover order built and
+//!   walked past upstreams with open breakers. Stateless, so every
 //!   router (and every test) independently agrees on placement.
 //! * **Upstream pooling** ([`pool`]) — per worker, a lazily-grown pool of
 //!   at most `pool_per_worker` pipelined connections; the per-connection
@@ -63,7 +65,10 @@
 //!   loop thread (bounded by `connect_timeout`, default 250ms). The
 //!   threshold-1 breaker caps the stall rate at one probe per cooldown
 //!   per dead worker; localhost/rack connects to a live worker are tens
-//!   of microseconds.
+//!   of microseconds. Fan-out commands additionally probe at most ONE
+//!   connection-less worker each (the rest are skipped with a `None`
+//!   reply slot), so K simultaneously dead-but-cooled-down workers cost
+//!   one stats command at most one probe stall, never K.
 //! * The router imposes no per-request timeout of its own: end-to-end
 //!   latency budgets belong to the request's `deadline_ms` (the worker
 //!   enforces it); a hung worker process is surfaced on connection death
@@ -76,7 +81,7 @@ pub mod hash;
 pub(crate) mod pool;
 pub mod stats;
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::os::fd::AsRawFd;
@@ -141,6 +146,10 @@ fn client_token(idx: u32, gen: u32) -> u64 {
 }
 
 fn upstream_token(widx: usize, pidx: usize, gen: u32) -> u64 {
+    // `serve_with` caps the worker count and the pool clamp caps slots, so
+    // widx/pidx are at most 0xFFFE and the all-ones pattern
+    // ([`LISTENER_TOKEN`]) is unreachable from this encoding.
+    debug_assert!(widx < 0xFFFF && pidx < 0xFFFF, "packed token would collide with the listener");
     UPSTREAM_BIT | ((gen as u64) << 32) | ((widx as u64) << 16) | pidx as u64
 }
 
@@ -399,6 +408,15 @@ pub fn serve_with(
     }
     if upstreams.len() > 0xFFFF {
         bail!("router supports at most 65535 upstream workers");
+    }
+    // Duplicate address strings would get identical rendezvous scores (all
+    // traffic tie-breaking to the lower slot) while fan-out commands hit
+    // both slots of the same worker and double-sum its counters.
+    let mut seen: HashSet<&str> = HashSet::with_capacity(upstreams.len());
+    for name in &upstreams {
+        if !seen.insert(name.as_str()) {
+            bail!("duplicate upstream '{name}': each worker address may be listed once");
+        }
     }
     let pool = opts.pool_per_worker.clamp(1, 0xFFFF);
     let mut ups = Vec::with_capacity(upstreams.len());
@@ -703,8 +721,11 @@ impl Router {
         }
     }
 
-    /// Route one submit line to a healthy worker in rendezvous rank order,
-    /// forwarding the line verbatim.
+    /// Route one submit line to a healthy worker, forwarding the line
+    /// verbatim. Hot path: one allocation-free [`hash::pick`] argmax; the
+    /// full (allocating, sorting) [`hash::rank`] failover order is built
+    /// only when the owner is unavailable — an open breaker or a failed
+    /// connect — which the steady state never hits.
     fn submit_route(
         &mut self,
         conn: &mut ClientConn,
@@ -715,19 +736,17 @@ impl Router {
     ) {
         self.stats.requests += 1;
         let key = hash::routing_key(model);
-        for widx in hash::rank(&self.names, key) {
-            if self.upstreams[widx].breaker.is_open() {
-                continue;
+        if let Some(owner) = hash::pick(&self.names, key) {
+            if self.try_submit(owner, conn, idx, line, model, touched) {
+                return;
             }
-            let Some(pidx) = self.ensure_upstream_conn(widx) else { continue };
-            let Some(uc) = self.upstreams[widx].conns[pidx].as_mut() else { continue };
-            uc.out.extend_from_slice(line.as_bytes());
-            uc.out.push(b'\n');
-            uc.fifo.push_back(Route::Client { idx, gen: conn.gen, model: model.to_string() });
-            self.stats.per_worker[widx].routed += 1;
-            conn.pending = true;
-            touched.push((widx, pidx));
-            return;
+            // rank()[0] == pick(), so skipping the owner walks the rank
+            // order exactly as before, minus the already-failed head.
+            for widx in hash::rank(&self.names, key) {
+                if widx != owner && self.try_submit(widx, conn, idx, line, model, touched) {
+                    return;
+                }
+            }
         }
         // Nothing reachable: answer locally, on the router's own balance.
         self.stats.upstream_errors += 1;
@@ -737,6 +756,31 @@ impl Router {
             &mut conn.out,
             &format!("upstream unavailable: no healthy worker (model '{model}')"),
         );
+    }
+
+    /// Try to enqueue one submit toward `widx`. True = enqueued (the
+    /// client is now pending); false = this worker is unavailable.
+    fn try_submit(
+        &mut self,
+        widx: usize,
+        conn: &mut ClientConn,
+        idx: u32,
+        line: &str,
+        model: &str,
+        touched: &mut Vec<(usize, usize)>,
+    ) -> bool {
+        if self.upstreams[widx].breaker.is_open() {
+            return false;
+        }
+        let Some(pidx) = self.ensure_upstream_conn(widx) else { return false };
+        let Some(uc) = self.upstreams[widx].conns[pidx].as_mut() else { return false };
+        uc.out.extend_from_slice(line.as_bytes());
+        uc.out.push(b'\n');
+        uc.fifo.push_back(Route::Client { idx, gen: conn.gen, model: model.to_string() });
+        self.stats.per_worker[widx].routed += 1;
+        conn.pending = true;
+        touched.push((widx, pidx));
+        true
     }
 
     /// Fan a stats/health/models command out to every reachable worker.
@@ -772,11 +816,30 @@ impl Router {
         self.next_agg += 1;
         let results: Vec<Option<Json>> = (0..self.upstreams.len()).map(|_| None).collect();
         let mut outstanding = 0;
+        // At most ONE connection-less worker gets the blocking connect
+        // probe per fan-out command: with K workers dead-but-cooled-down,
+        // probing them all would stall the loop up to K * connect_timeout
+        // on a single stats command. Skipped workers keep their `None`
+        // reply slot (already legal); successive commands — or any submit
+        // routed their way — probe the rest.
+        let mut probed = false;
         for widx in 0..self.upstreams.len() {
             if self.upstreams[widx].breaker.is_open() {
                 continue;
             }
-            let Some(pidx) = self.ensure_upstream_conn(widx) else { continue };
+            let pidx = if self.upstreams[widx].up() {
+                // A live pool: pipeline onto it; a fan-out leg never needs
+                // to grow the pool (no blocking connect at all here).
+                self.upstreams[widx]
+                    .idle_conn()
+                    .or_else(|| self.upstreams[widx].least_loaded())
+            } else if !probed {
+                probed = true;
+                self.ensure_upstream_conn(widx)
+            } else {
+                None
+            };
+            let Some(pidx) = pidx else { continue };
             let Some(uc) = self.upstreams[widx].conns[pidx].as_mut() else { continue };
             uc.out.extend_from_slice(line.as_bytes());
             uc.fifo.push_back(Route::Agg { id, widx });
@@ -1223,12 +1286,24 @@ mod tests {
         assert_eq!((t & 0xFFFF) as usize, 5);
         assert_eq!(((t >> 32) & GEN_MASK as u64) as u32, 0x7FFF_FFFF);
         assert_ne!(client_token(0, 0), LISTENER_TOKEN);
-        assert_ne!(upstream_token(0xFFFF, 0xFFFF, GEN_MASK), LISTENER_TOKEN);
+        // The maximum REACHABLE packed token: serve_with admits at most
+        // 65535 workers (widx <= 0xFFFE) and clamps the pool to 65535
+        // slots (pidx <= 0xFFFE), which is exactly what keeps the
+        // all-ones LISTENER_TOKEN out of the packed-token space.
+        assert_ne!(upstream_token(0xFFFE, 0xFFFE, GEN_MASK), LISTENER_TOKEN);
     }
 
     #[test]
     fn serve_refuses_an_empty_upstream_list() {
         assert!(serve(Vec::new(), "127.0.0.1:0").is_err());
         assert!(serve(vec!["definitely-not-resolvable.invalid:1".into()], "127.0.0.1:0").is_err());
+    }
+
+    #[test]
+    fn serve_refuses_duplicate_upstreams() {
+        // Duplicates would double-count fan-out merges; rejected up front.
+        let ups = vec!["127.0.0.1:7001".to_string(), "127.0.0.1:7001".to_string()];
+        let err = serve(ups, "127.0.0.1:0").unwrap_err();
+        assert!(err.to_string().contains("duplicate upstream"), "{err:#}");
     }
 }

@@ -145,13 +145,18 @@ pub fn router_obj(rs: &RouterStats, views: &[WorkerView]) -> Json {
         .collect();
     let per_model_errors: BTreeMap<String, Json> =
         rs.per_model_errors.iter().map(|(m, &n)| (m.clone(), Json::uint(n))).collect();
+    // Saturating: if a future edit ever breaks the accounting invariant
+    // (requests >= forwarded + upstream_errors), a stats command must
+    // report a visibly wrong number, not panic the event loop.
+    let in_flight =
+        rs.requests.saturating_sub(rs.forwarded).saturating_sub(rs.upstream_errors);
     Json::obj(vec![
         ("workers", Json::uint(views.len() as u64)),
         ("workers_up", Json::uint(views.iter().filter(|v| v.up).count() as u64)),
         ("requests", Json::uint(rs.requests)),
         ("forwarded", Json::uint(rs.forwarded)),
         ("upstream_errors", Json::uint(rs.upstream_errors)),
-        ("in_flight", Json::uint(rs.requests - rs.forwarded - rs.upstream_errors)),
+        ("in_flight", Json::uint(in_flight)),
         ("cmds", Json::uint(rs.cmds)),
         ("bad_lines", Json::uint(rs.bad_lines)),
         ("per_worker", Json::Obj(per_worker)),
